@@ -1,0 +1,41 @@
+//! Ablation walk-through (a fast, single-dataset rendition of the paper's
+//! Fig. 9): run the optimization ladder base -> R -> R+M -> R+O+P ->
+//! HiFuse (-> HiFuse+stacked extension) on RGCN/aifb and print the
+//! incremental speedups.
+//!
+//!     make artifacts && cargo run --release --example ablation
+
+use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::graph::datasets::{generate, spec_by_name};
+use hifuse::models::step::Dims;
+use hifuse::models::ModelKind;
+use hifuse::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
+    let d = Dims::from_engine(&eng);
+    let spec = spec_by_name("aifb").unwrap();
+    let cfg = TrainCfg { epochs: 1, batch_size: 48, fanout: 4, ..Default::default() };
+
+    let mut ladder = OptConfig::ablation_ladder();
+    ladder.push(("HiFuse+S", OptConfig::parse("hifuse+stacked").unwrap()));
+
+    let mut base_wall = None;
+    println!("{:10} | {:>10} | {:>8} | {:>8} | {:>7}", "config", "wall (ms)", "kernels", "speedup", "loss");
+    for (name, opt) in ladder {
+        let mut graph = generate(&spec, d.f, 1.0, 42);
+        prepare_graph_layout(&mut graph, &opt);
+        let mut tr = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
+        tr.train_epoch(0)?; // warm-up epoch: compiles every module used
+        let m = tr.train_epoch(1)?;
+        let wall = m.wall.as_secs_f64() * 1e3;
+        let base = *base_wall.get_or_insert(wall);
+        println!(
+            "{name:10} | {wall:>10.1} | {:>8} | {:>7.2}x | {:>7.4}",
+            m.kernels_total,
+            base / wall,
+            m.loss
+        );
+    }
+    Ok(())
+}

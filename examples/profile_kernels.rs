@@ -1,0 +1,110 @@
+//! Kernel profiling walk-through (the paper's Fig. 3 methodology): run one
+//! baseline RGCN mini-batch with full event logging, print the kernel
+//! timeline head and the roofline classification, and write
+//! results/profile_timeline.csv + results/profile_roofline.csv.
+//!
+//!     make artifacts && cargo run --release --example profile_kernels
+
+use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::graph::datasets::{generate, spec_by_name};
+use hifuse::models::step::Dims;
+use hifuse::models::ModelKind;
+use hifuse::perf;
+use hifuse::report;
+use hifuse::runtime::Engine;
+use hifuse::sampler::SamplerCfg;
+use hifuse::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
+    let d = Dims::from_engine(&eng);
+    let peaks = perf::calibrate(&eng)?;
+    println!(
+        "peaks: {:.1} GFLOP/s | {:.1} GB/s | dispatch {:.0} us | knee AI {:.2}",
+        peaks.gflops,
+        peaks.membw_gbs,
+        peaks.dispatch_us,
+        peaks.gflops / peaks.membw_gbs
+    );
+
+    // Baseline RGCN on the am schema (the paper's Fig. 3 workload),
+    // node/edge-scaled for a quick run — the kernel *structure* per batch
+    // is scale-independent.
+    let spec = spec_by_name("am").unwrap();
+    let mut graph = generate(&spec, d.f, 0.02, 7);
+    let opt = OptConfig::baseline();
+    prepare_graph_layout(&mut graph, &opt);
+    let cfg = TrainCfg { epochs: 1, batch_size: 64, fanout: 4, ..Default::default() };
+    let mut tr = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
+
+    // Warm up compile caches, then profile exactly one batch.
+    let scfg = SamplerCfg { batch_size: 64, fanout: 4, layers: 2, ns: d.ns, ep: d.ep };
+    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
+    tr.compute_batch(prep)?;
+    eng.reset_counters(true);
+    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
+    tr.compute_batch(prep)?;
+
+    let counters = eng.counters.borrow();
+    println!("\none baseline batch = {} kernel launches", counters.total());
+    println!("first 12 timeline events:");
+    println!("{:>10} {:>9} {:24} {:15}", "t (us)", "dur (us)", "module", "stage");
+    for e in counters.events.iter().take(12) {
+        println!(
+            "{:>10.1} {:>9.1} {:24} {:15}",
+            e.t_start.as_secs_f64() * 1e6,
+            e.dur.as_secs_f64() * 1e6,
+            e.module,
+            e.stage.name()
+        );
+    }
+
+    let rows = perf::roofline_rows(&counters.events, &d, &peaks);
+    let mem_bound = rows.iter().filter(|r| r.memory_bound).count();
+    println!(
+        "\nroofline: {}/{} dispatches are memory-bound (paper Fig. 3b: most are)",
+        mem_bound,
+        rows.len()
+    );
+
+    let timeline: Vec<Vec<String>> = counters
+        .events
+        .iter()
+        .map(|e| {
+            vec![
+                format!("{:.1}", e.t_start.as_secs_f64() * 1e6),
+                format!("{:.1}", e.dur.as_secs_f64() * 1e6),
+                e.module.to_string(),
+                e.stage.name().to_string(),
+                e.bytes_in.to_string(),
+                e.bytes_out.to_string(),
+            ]
+        })
+        .collect();
+    let p1 = report::write_csv(
+        "profile_timeline.csv",
+        &["t_us", "dur_us", "module", "stage", "bytes_in", "bytes_out"],
+        &timeline,
+    )?;
+    let roof: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.module.to_string(),
+                r.stage.name().to_string(),
+                format!("{:.4}", r.ai),
+                format!("{:.3}", r.achieved_gflops),
+                format!("{:.2}", r.compute_pct),
+                format!("{:.2}", r.memory_pct),
+                r.memory_bound.to_string(),
+            ]
+        })
+        .collect();
+    let p2 = report::write_csv(
+        "profile_roofline.csv",
+        &["module", "stage", "ai", "gflops", "compute_pct", "memory_pct", "memory_bound"],
+        &roof,
+    )?;
+    println!("wrote {p1:?} and {p2:?}");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+"""AOT emitter: lower every L2 stage function to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+resulting ``artifacts/<profile>/*.hlo.txt`` via the PJRT C API and never
+touches Python again.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowering converts the StableHLO
+module to an XlaComputation with ``return_tuple=True``; the Rust side unwraps
+the tuple.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--profiles tiny,bench]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .profiles import PROFILES, elp
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    return_tuple=False so single-output modules compile to an array-rooted
+    HLO: the PJRT CPU client then returns a plain array buffer, which the
+    Rust runtime can keep device-resident between dispatches (Engine::run_dev
+    — EXPERIMENTS.md §Perf #5). Multi-output modules still get a tuple root
+    (XLA requires a single root) and are decomposed host-side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def module_table(p):
+    """(name, fn, [(argname, ShapeDtypeStruct), ...]) for one profile.
+
+    Layer dims: l0 projects F->H (fusion: ReLU), l1 projects H->C (fusion:
+    linear logits). ``_h``/``_c`` suffixes are the aggregation feature dims.
+    """
+    ns, ep, rp, tp = p["NS"], p["EP"], p["RPAD"], p["TPAD"]
+    f, h, c = p["F"], p["H"], p["C"]
+    el = elp(p)
+
+    t = []
+
+    def add(name, fn, *args):
+        t.append((name, fn, list(args)))
+
+    # -- semantic graph build (baseline-on-GPU path) ------------------------
+    add("edge_select", model.edge_select,
+        ("edge_type", spec((el,), I32)), ("rel", spec((), I32)))
+
+    # -- feature projection -------------------------------------------------
+    for l, (fin, fout) in (("l0", (f, h)), ("l1", (h, c))):
+        add(f"proj_fwd_{l}", model.proj,
+            ("x", spec((ns, fin))), ("w", spec((fin, fout))))
+        add(f"proj_bwd_{l}", model.proj_bwd,
+            ("x", spec((ns, fin))), ("w", spec((fin, fout))),
+            ("dy", spec((ns, fout))))
+        add(f"proj_stacked_fwd_{l}", model.proj_stacked,
+            ("xs", spec((tp, ns, fin))), ("w", spec((rp, fin, fout))),
+            ("src_type", spec((rp,), I32)))
+        add(f"proj_stacked_bwd_{l}", model.proj_stacked_bwd,
+            ("xs", spec((tp, ns, fin))), ("w", spec((rp, fin, fout))),
+            ("src_type", spec((rp,), I32)), ("dy", spec((rp, ns, fout))))
+
+    # -- neighbor aggregation (RGCN mean) -----------------------------------
+    for sfx, fd in (("h", h), ("c", c)):
+        add(f"agg_mean_fwd_{sfx}", model.agg_mean,
+            ("feat", spec((ns, fd))), ("src", spec((ep,), I32)),
+            ("dst", spec((ep,), I32)), ("valid", spec((ep,))))
+        add(f"agg_mean_bwd_{sfx}", model.agg_mean_bwd,
+            ("feat", spec((ns, fd))), ("src", spec((ep,), I32)),
+            ("dst", spec((ep,), I32)), ("valid", spec((ep,))),
+            ("dout", spec((ns, fd))))
+        add(f"agg_merged_fwd_{sfx}", model.agg_merged,
+            ("feat", spec((rp, ns, fd))), ("src", spec((rp, ep), I32)),
+            ("dst", spec((rp, ep), I32)), ("valid", spec((rp, ep))))
+        add(f"agg_merged_bwd_{sfx}", model.agg_merged_bwd,
+            ("src", spec((rp, ep), I32)), ("dst", spec((rp, ep), I32)),
+            ("valid", spec((rp, ep))), ("dout", spec((rp, ns, fd))))
+
+    # -- neighbor aggregation (RGAT attention) ------------------------------
+    for sfx, fd in (("h", h), ("c", c)):
+        per = [("feat_src", spec((ns, fd))), ("feat_dst", spec((ns, fd))),
+               ("a_src", spec((fd,))), ("a_dst", spec((fd,))),
+               ("src", spec((ep,), I32)), ("dst", spec((ep,), I32)),
+               ("valid", spec((ep,)))]
+        add(f"att_agg_fwd_{sfx}", model.att_agg, *per)
+        add(f"att_agg_bwd_{sfx}", model.att_agg_bwd, *per,
+            ("dout", spec((ns, fd))))
+        mrg = [("feat_src", spec((rp, ns, fd))), ("feat_dst", spec((rp, ns, fd))),
+               ("a_src", spec((rp, fd))), ("a_dst", spec((rp, fd))),
+               ("src", spec((rp, ep), I32)), ("dst", spec((rp, ep), I32)),
+               ("valid", spec((rp, ep)))]
+        add(f"att_merged_fwd_{sfx}", model.att_merged, *mrg)
+        add(f"att_merged_bwd_{sfx}", model.att_merged_bwd, *mrg,
+            ("dout", spec((rp, ns, fd))))
+
+    # -- semantic fusion (dst_type-indexed segment scatter; tpad closed over)
+    add("fuse_relu_fwd_h", lambda dt, agg: model.fuse_relu(dt, agg, tp),
+        ("dst_type", spec((rp,), I32)), ("agg", spec((rp, ns, h))))
+    add("fuse_relu_bwd_h", lambda dt, agg, dout: model.fuse_relu_bwd(dt, agg, dout, tp),
+        ("dst_type", spec((rp,), I32)), ("agg", spec((rp, ns, h))),
+        ("dout", spec((tp, ns, h))))
+    add("fuse_lin_fwd_c", lambda dt, agg: model.fuse_lin(dt, agg, tp),
+        ("dst_type", spec((rp,), I32)), ("agg", spec((rp, ns, c))))
+    add("fuse_lin_bwd_c", lambda dt, agg, dout: model.fuse_lin_bwd(dt, agg, dout, tp),
+        ("dst_type", spec((rp,), I32)), ("agg", spec((rp, ns, c))),
+        ("dout", spec((tp, ns, c))))
+
+    # -- head ----------------------------------------------------------------
+    add("head", model.head,
+        ("logits", spec((ns, c))), ("labels", spec((ns,), I32)),
+        ("seed_mask", spec((ns,))))
+
+    return t
+
+
+_DTYPE = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def _shape_str(s):
+    return ",".join(str(d) for d in s.shape) if s.shape else "-"
+
+
+def emit_profile(pname, out_root):
+    p = PROFILES[pname]
+    out_dir = os.path.join(out_root, pname)
+    os.makedirs(out_dir, exist_ok=True)
+    lines = [f"profile {pname}"]
+    for k, v in p.items():
+        lines.append(f"const {k} {v}")
+    lines.append(f"const ELP {elp(p)}")
+
+    for name, fn, args in module_table(p):
+        specs = [s for _, s in args]
+        # keep_unused=True: linear VJPs ignore some inputs (e.g. feat in the
+        # mean-aggregation backward); the manifest interface must still match
+        # the compiled parameter list exactly.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        outs = outs if isinstance(outs, (tuple, list)) else (outs,)
+        lines.append(f"module {name}")
+        for an, s in args:
+            lines.append(f"arg {an} {_DTYPE[s.dtype]} {_shape_str(s)}")
+        for i, s in enumerate(outs):
+            lines.append(f"ret out{i} {_DTYPE[s.dtype]} {_shape_str(s)}")
+        lines.append(f"file {fname}")
+        lines.append("end")
+        print(f"[aot] {pname}/{name}: {len(text)} chars, "
+              f"{len(args)} args -> {len(outs)} outs")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    print(f"[aot] wrote {out_dir}/manifest.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,bench")
+    args = ap.parse_args()
+    for pname in args.profiles.split(","):
+        emit_profile(pname.strip(), args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

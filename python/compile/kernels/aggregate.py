@@ -1,0 +1,179 @@
+"""L1 Pallas kernel: merged mean neighbor aggregation (HiFuse Algorithm 1).
+
+The paper's key data-side optimization is *merging*: instead of launching one
+scatter/gather kernel per semantic graph (R launches), the features and edge
+lists of all R semantic graphs are combined so a **single** kernel performs
+the whole neighbor-aggregation stage. The Pallas grid iterates relations;
+each grid step owns one relation's node slab and edge block in VMEM.
+
+Two kernel-body formulations, selected by `mxu=`:
+
+* ``mxu=False`` (default, what the AOT artifacts ship): gather + segment
+  scatter-add, the direct expression of Algorithm 1. Under ``interpret=True``
+  this lowers to HLO gather/scatter, which the CPU PJRT backend executes at
+  memcpy-like speed — the right formulation for this substrate.
+* ``mxu=True``: gather and scatter expressed as dense one-hot matmuls — the
+  TPU adaptation (DESIGN.md §3): data-dependent indexing becomes MXU work,
+  the native way a real Mosaic lowering would tile this. Kept (and tested)
+  as the documented TPU design point; per-step VMEM for the bench profile:
+
+      feat block   512*64*4   = 128 KiB
+      one-hots   2*256*512*4  = 512 KiB
+      out block    512*64*4   = 128 KiB          total < 1 MiB  (<< 16 MiB)
+
+Kernels are lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls); numerics are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot(idx, n, dtype):
+    """[E] int32 -> [E, n] one-hot via broadcasted iota (TPU needs >=2D
+    iota; this is the MXU-formulation building block)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    return (idx[:, None] == cols).astype(dtype)
+
+
+def _global_ids(idx, ns):
+    """[R, EP] per-relation slot ids -> flattened global row ids
+    (r*NS + idx), the merged-tensor coordinates of Algorithm 1."""
+    r, ep = idx.shape
+    base = jax.lax.broadcasted_iota(jnp.int32, (r, ep), 0) * ns
+    return (idx + base).reshape(-1)
+
+
+def _mean_fwd_scatter(feat_ref, src_ref, dst_ref, valid_ref, out_ref):
+    """Single-step merged body: flatten all relations into one global
+    gather + one segment scatter-add — Algorithm 1 verbatim (Concat, then
+    one Aggregate over the merged tensors)."""
+    feat = feat_ref[...]  # [R, NS, F]
+    src = src_ref[...]  # [R, EP]
+    dst = dst_ref[...]  # [R, EP]
+    valid = valid_ref[...]  # [R, EP]
+    r, ns, f = feat.shape
+    flat = feat.reshape(r * ns, f)
+    gsrc = _global_ids(src, ns)
+    gdst = _global_ids(dst, ns)
+    v = valid.reshape(-1)
+    gathered = flat[gsrc] * v[:, None]  # [R*EP, F]
+    sums = jnp.zeros_like(flat).at[gdst].add(gathered)
+    cnt = jnp.zeros((r * ns,), feat.dtype).at[gdst].add(v)
+    out_ref[...] = (sums / jnp.maximum(cnt, 1.0)[:, None]).reshape(r, ns, f)
+
+
+def _mean_fwd_mxu(feat_ref, src_ref, dst_ref, valid_ref, out_ref):
+    """MXU formulation: gather-by-matmul, scatter-by-matmul."""
+    feat = feat_ref[...]
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+    ns = feat.shape[0]
+    src_oh = _onehot(src, ns, feat.dtype)  # [EP, NS]
+    gathered = jnp.dot(src_oh, feat, preferred_element_type=jnp.float32)  # [EP, F]
+    dst_w = _onehot(dst, ns, feat.dtype) * valid[:, None]  # [EP, NS]
+    sums = jnp.dot(dst_w.T, gathered, preferred_element_type=jnp.float32)  # [NS, F]
+    cnt = jnp.sum(dst_w, axis=0)  # [NS]
+    out_ref[...] = (sums / jnp.maximum(cnt, 1.0)[:, None]).astype(feat.dtype)
+
+
+def _mean_bwd_scatter(src_ref, dst_ref, valid_ref, dout_ref, dfeat_ref):
+    """VJP w.r.t. feat: dfeat[i] += valid_e * dout[dst_e]/cnt[dst_e] for
+    each edge e with src_e == i. Same single-step merged structure."""
+    src = src_ref[...]  # [R, EP]
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+    dout = dout_ref[...]  # [R, NS, F]
+    r, ns, f = dout.shape
+    flat = dout.reshape(r * ns, f)
+    gsrc = _global_ids(src, ns)
+    gdst = _global_ids(dst, ns)
+    v = valid.reshape(-1)
+    cnt = jnp.maximum(jnp.zeros((r * ns,), dout.dtype).at[gdst].add(v), 1.0)
+    dedge = (flat / cnt[:, None])[gdst] * v[:, None]  # [R*EP, F]
+    dfeat_ref[...] = jnp.zeros_like(flat).at[gsrc].add(dedge).reshape(r, ns, f)
+
+
+def _mean_bwd_mxu(src_ref, dst_ref, valid_ref, dout_ref, dfeat_ref):
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+    dout = dout_ref[...]
+    ns = dout.shape[0]
+    dtype = dout.dtype
+    dst_w = _onehot(dst, ns, dtype) * valid[:, None]  # [EP, NS]
+    cnt = jnp.maximum(jnp.sum(dst_w, axis=0), 1.0)  # [NS]
+    dedge = jnp.dot(dst_w, dout / cnt[:, None],
+                    preferred_element_type=jnp.float32)  # [EP, F]
+    src_oh = _onehot(src, ns, dtype)  # [EP, NS]
+    dfeat_ref[...] = jnp.dot(src_oh.T, dedge,
+                             preferred_element_type=jnp.float32).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "mxu"))
+def agg_mean_merged(feat, src, dst, valid, *, interpret=True, mxu=False):
+    """Merged mean aggregation, one Pallas launch for all R relations.
+
+    feat: [R, NS, F] f32; src/dst: [R, EP] i32; valid: [R, EP] f32.
+    Returns [R, NS, F]: per relation, row j = mean of feat[src] over valid
+    edges with dst == j (0 where a row has no incoming valid edge).
+    """
+    r, ns, f = feat.shape
+    ep = src.shape[1]
+    out_shape = jax.ShapeDtypeStruct((r, ns, f), feat.dtype)
+    if mxu:
+        # TPU formulation: grid over relations, per-relation VMEM blocks.
+        return pl.pallas_call(
+            _mean_fwd_mxu,
+            grid=(r,),
+            in_specs=[
+                pl.BlockSpec((None, ns, f), lambda i: (i, 0, 0)),
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, ns, f), lambda i: (i, 0, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(feat, src, dst, valid)
+    # CPU formulation: one step over the fully merged tensors.
+    return pl.pallas_call(
+        _mean_fwd_scatter,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(feat, src, dst, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "mxu"))
+def agg_mean_merged_bwd(src, dst, valid, dout, *, interpret=True, mxu=False):
+    """VJP of :func:`agg_mean_merged` w.r.t. ``feat`` (feat not needed: the
+    op is linear in feat). src/dst: [R, EP] i32; valid: [R, EP]; dout:
+    [R, NS, F]. Returns dfeat [R, NS, F]."""
+    r, ns, f = dout.shape
+    ep = src.shape[1]
+    out_shape = jax.ShapeDtypeStruct((r, ns, f), dout.dtype)
+    if mxu:
+        return pl.pallas_call(
+            _mean_bwd_mxu,
+            grid=(r,),
+            in_specs=[
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+                pl.BlockSpec((None, ep), lambda i: (i, 0)),
+                pl.BlockSpec((None, ns, f), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, ns, f), lambda i: (i, 0, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(src, dst, valid, dout)
+    return pl.pallas_call(
+        _mean_bwd_scatter,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(src, dst, valid, dout)

@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: merged attention (RGAT) neighbor aggregation.
+
+Same merging idea as ``aggregate.py`` but for RGAT's edge-softmax
+aggregation: one Pallas launch replaces the R per-semantic-graph attention
+kernel sets. Grid iterates relations; each step computes, on its VMEM block:
+
+    e_ij   = LeakyReLU(a_src . h_i + a_dst . h_j)           (edge scores)
+    alpha  = segment-softmax of e over incoming edges of j   (valid only)
+    out_j  = sum_i alpha_ij * h_i
+
+As in ``aggregate.py`` there are two formulations: the default
+segment-scatter body (what the CPU-PJRT artifacts ship) and an ``mxu=True``
+one-hot-matmul body (the TPU/MXU adaptation, DESIGN.md §3), both validated
+against ``ref.py``. A finite NEG_INF keeps fully-padded segments NaN-free.
+
+The backward pass for attention is emitted from ``jax.vjp`` of the pure-jnp
+reference (one HLO module = still one launch); writing it as a hand-derived
+Pallas kernel is possible but buys nothing under interpret=True. DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LEAKY_SLOPE, NEG_INF
+
+
+def _onehot(idx, n, dtype):
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    return (idx[:, None] == cols).astype(dtype)
+
+
+def _att_fwd_scatter(fs_ref, fd_ref, asrc_ref, adst_ref, src_ref, dst_ref,
+                     valid_ref, out_ref):
+    """Single-step merged body over globally-flattened indices (one launch
+    = one segment-softmax aggregation over ALL relations, Algorithm 1)."""
+    fs = fs_ref[...]  # [R, NS, F] projected source-type features
+    fd = fd_ref[...]  # [R, NS, F] projected dest-type features
+    a_s = asrc_ref[...]  # [R, F]
+    a_d = adst_ref[...]  # [R, F]
+    src = src_ref[...]  # [R, EP]
+    dst = dst_ref[...]  # [R, EP]
+    valid = valid_ref[...]  # [R, EP]
+    r, ns, f = fs.shape
+    dtype = fs.dtype
+
+    # Per-relation attention logits for every slot (batched matvec), then
+    # flatten everything into global (r*NS + slot) coordinates.
+    es = jnp.einsum("rnf,rf->rn", fs, a_s,
+                    preferred_element_type=jnp.float32).reshape(-1)
+    ed = jnp.einsum("rnf,rf->rn", fd, a_d,
+                    preferred_element_type=jnp.float32).reshape(-1)
+    base = jax.lax.broadcasted_iota(jnp.int32, src.shape, 0) * ns
+    gsrc = (src + base).reshape(-1)
+    gdst = (dst + base).reshape(-1)
+    v = valid.reshape(-1)
+    flat = fs.reshape(r * ns, f)
+
+    e = es[gsrc] + ed[gdst]  # [R*EP]
+    neg = jnp.asarray(LEAKY_SLOPE, dtype)
+    e = jnp.where(e >= 0, e, e * neg)
+    e = jnp.where(v > 0, e, jnp.asarray(NEG_INF, dtype))
+    seg_max = jnp.full((r * ns,), NEG_INF, dtype).at[gdst].max(e)
+    w = jnp.exp(e - seg_max[gdst]) * v  # [R*EP]
+    denom = jnp.zeros((r * ns,), dtype).at[gdst].add(w)
+    num = jnp.zeros_like(flat).at[gdst].add(w[:, None] * flat[gsrc])
+    out_ref[...] = (num / jnp.maximum(denom, 1e-16)[:, None]).reshape(r, ns, f)
+
+
+def _att_fwd_mxu(fs_ref, fd_ref, asrc_ref, adst_ref, src_ref, dst_ref,
+                 valid_ref, out_ref):
+    fs = fs_ref[...]
+    fd = fd_ref[...]
+    a_s = asrc_ref[...]
+    a_d = adst_ref[...]
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+    ns = fs.shape[0]
+    dtype = fs.dtype
+
+    es = jnp.dot(fs, a_s, preferred_element_type=jnp.float32)
+    ed = jnp.dot(fd, a_d, preferred_element_type=jnp.float32)
+    src_oh = _onehot(src, ns, dtype)  # [EP, NS]
+    dst_oh = _onehot(dst, ns, dtype)  # [EP, NS]
+    e = jnp.dot(src_oh, es) + jnp.dot(dst_oh, ed)  # [EP]
+    neg = jnp.asarray(LEAKY_SLOPE, dtype)
+    e = jnp.where(e >= 0, e, e * neg)
+    e = jnp.where(valid > 0, e, jnp.asarray(NEG_INF, dtype))
+
+    masked = jnp.where(dst_oh > 0, e[:, None], jnp.asarray(NEG_INF, dtype))
+    seg_max = jnp.max(masked, axis=0)  # [NS]
+    w = jnp.exp(e - jnp.dot(dst_oh, seg_max)) * valid  # [EP]
+
+    dst_w = dst_oh * w[:, None]  # [EP, NS]
+    denom = jnp.sum(dst_w, axis=0)  # [NS]
+    gathered = jnp.dot(src_oh, fs, preferred_element_type=jnp.float32)  # [EP, F]
+    num = jnp.dot(dst_w.T, gathered, preferred_element_type=jnp.float32)  # [NS, F]
+    out_ref[...] = (num / jnp.maximum(denom, 1e-16)[:, None]).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "mxu"))
+def att_agg_merged(feat_src, feat_dst, a_src, a_dst, src, dst, valid, *,
+                   interpret=True, mxu=False):
+    """Merged RGAT attention aggregation, one Pallas launch for R relations.
+
+    feat_src/feat_dst: [R, NS, F] f32; a_src/a_dst: [R, F] f32;
+    src/dst: [R, EP] i32; valid: [R, EP] f32. Returns [R, NS, F].
+    """
+    r, ns, f = feat_src.shape
+    ep = src.shape[1]
+    out_shape = jax.ShapeDtypeStruct((r, ns, f), feat_src.dtype)
+    if mxu:
+        vec = pl.BlockSpec((None, ep), lambda i: (i, 0))
+        mat = pl.BlockSpec((None, ns, f), lambda i: (i, 0, 0))
+        att = pl.BlockSpec((None, f), lambda i: (i, 0))
+        return pl.pallas_call(
+            _att_fwd_mxu,
+            grid=(r,),
+            in_specs=[mat, mat, att, att, vec, vec, vec],
+            out_specs=mat,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(feat_src, feat_dst, a_src, a_dst, src, dst, valid)
+    return pl.pallas_call(
+        _att_fwd_scatter,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(feat_src, feat_dst, a_src, a_dst, src, dst, valid)

@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracles for the HiFuse aggregation kernels.
+
+These are the CORE correctness signal for the Pallas kernels in
+``aggregate.py`` / ``attention.py``: pytest asserts allclose between the
+Pallas (interpret=True) outputs and these functions over hypothesis-driven
+shape/value sweeps.
+
+Conventions (shared with the Rust coordinator — see DESIGN.md §5):
+  * Per-relation node slabs are padded to ``NS`` rows; invalid rows are zero.
+  * Per-relation edge lists are padded to ``EP`` entries; padding edges have
+    ``valid == 0`` and ``src == dst == 0`` (they must not contribute).
+  * Merged tensors stack the relation axis first: ``feat[R, NS, F]``,
+    ``src/dst/valid[R, EP]``.
+  * Mean aggregation divides by ``max(1, degree)`` so isolated vertices
+    produce zeros rather than NaNs (matches PyG's ``scatter(reduce='mean')``
+    on empty rows).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2  # GAT / RGAT LeakyReLU negative slope.
+NEG_INF = -1e30  # Finite stand-in for -inf: keeps padded segments NaN-free.
+
+
+# --------------------------------------------------------------------------
+# Per-relation primitives (the "PyG scatter/gather kernel" equivalents).
+# --------------------------------------------------------------------------
+
+def agg_mean_ref(feat, src, dst, valid):
+    """Mean-aggregate ``feat[src[e]]`` onto ``dst[e]`` for one relation.
+
+    feat: [NS, F] float; src/dst: [EP] int32; valid: [EP] float (0/1).
+    Returns [NS, F]: row j = mean over valid edges with dst == j.
+    """
+    ns = feat.shape[0]
+    gathered = feat[src] * valid[:, None]  # [EP, F]
+    sums = jnp.zeros((ns, feat.shape[1]), feat.dtype).at[dst].add(gathered)
+    cnt = jnp.zeros((ns,), feat.dtype).at[dst].add(valid)
+    return sums / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def agg_mean_bwd_ref(feat, src, dst, valid, dout):
+    """VJP of :func:`agg_mean_ref` w.r.t. ``feat`` (linear, so exact)."""
+    _, vjp = jax.vjp(lambda f: agg_mean_ref(f, src, dst, valid), feat)
+    return vjp(dout)[0]
+
+
+def att_agg_ref(feat_src, feat_dst, a_src, a_dst, src, dst, valid):
+    """GAT-style attention aggregation for one relation.
+
+    e_ij = LeakyReLU(a_src . h_i + a_dst . h_j)  for edge i->j,
+    alpha = segment-softmax over incoming edges of j (valid edges only),
+    out_j = sum_i alpha_ij h_i.
+
+    feat_src/feat_dst: [NS, F]; a_src/a_dst: [F]; src/dst: [EP]; valid: [EP].
+    """
+    ns = feat_src.shape[0]
+    es = feat_src @ a_src  # [NS]
+    ed = feat_dst @ a_dst  # [NS]
+    e = jax.nn.leaky_relu(es[src] + ed[dst], LEAKY_SLOPE)  # [EP]
+    e = jnp.where(valid > 0, e, NEG_INF)
+    seg_max = jnp.full((ns,), NEG_INF, feat_src.dtype).at[dst].max(e)
+    w = jnp.exp(e - seg_max[dst]) * valid  # [EP]
+    denom = jnp.zeros((ns,), feat_src.dtype).at[dst].add(w)
+    num = jnp.zeros_like(feat_src).at[dst].add(w[:, None] * feat_src[src])
+    return num / jnp.maximum(denom, 1e-16)[:, None]
+
+
+# --------------------------------------------------------------------------
+# Merged (all-relations-in-one) forms — oracles for the Pallas kernels.
+# --------------------------------------------------------------------------
+
+def agg_mean_merged_ref(feat, src, dst, valid):
+    """Merged mean aggregation: vmap of :func:`agg_mean_ref` over relations.
+
+    feat: [R, NS, F]; src/dst: [R, EP]; valid: [R, EP] -> [R, NS, F].
+    """
+    return jax.vmap(agg_mean_ref)(feat, src, dst, valid)
+
+
+def agg_mean_merged_bwd_ref(feat, src, dst, valid, dout):
+    """VJP of the merged mean aggregation w.r.t. ``feat``."""
+    _, vjp = jax.vjp(lambda f: agg_mean_merged_ref(f, src, dst, valid), feat)
+    return vjp(dout)[0]
+
+
+def att_agg_merged_ref(feat_src, feat_dst, a_src, a_dst, src, dst, valid):
+    """Merged attention aggregation: vmap of :func:`att_agg_ref`.
+
+    feat_src/feat_dst: [R, NS, F]; a_src/a_dst: [R, F]; src/dst/valid: [R, EP].
+    """
+    return jax.vmap(att_agg_ref)(feat_src, feat_dst, a_src, a_dst, src, dst, valid)

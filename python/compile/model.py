@@ -1,0 +1,173 @@
+"""L2: stage functions of the 2-layer RGCN / RGAT mini-batch training step.
+
+Each function below becomes one AOT-compiled HLO module (plus a VJP module
+where the backward pass needs it). The Rust coordinator (L3) chains these
+modules per its execution plan — per-relation loops for the PyG-style
+baseline, merged single launches for HiFuse (DESIGN.md §5).
+
+Model math (per layer l, relations r: src_type s_r -> dst_type d_r):
+
+    p_r = h[s_r] @ W_r                       feature projection
+    a_r = Aggregate_r(p_r)                   neighbor aggregation
+          RGCN: per-dst mean  |  RGAT: edge-softmax attention
+    h'  = act( sum_{r: d_r = t} a_r )        semantic fusion (per type t)
+
+followed by softmax cross-entropy on the seed rows of the target type.
+Backward modules recompute the forward internally (rematerialization) so no
+residual tensors cross module boundaries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.aggregate import agg_mean_merged, agg_mean_merged_bwd
+from .kernels.attention import att_agg_merged
+
+
+# --------------------------------------------------------------------------
+# Semantic-graph build: edge index selection (the paper's Algorithm 2).
+# Baseline runs this as GPU modules (the 'compare' + 'index_select' CUDA
+# kernels); HiFuse moves it to CPU threads in rust/src/semantic/.
+# --------------------------------------------------------------------------
+
+def edge_select(edge_type, rel):
+    """Select positions of edges whose type == rel from a tagged edge list.
+
+    edge_type: [ELP] i32; rel: scalar i32.
+    Returns (pos [ELP] i32, count i32): pos[:count] = ascending positions of
+    matching edges; pos[count:] = ELP (sentinel). Static shapes via a
+    sort-based stable compaction (XLA cannot return dynamic sizes).
+    NOTE (EXPERIMENTS.md §Perf #3): an O(E) cumsum-scatter compaction was
+    tried and reverted — `cumsum` lowers to a quadratic reduce-window on
+    this CPU backend (340 ms/call vs the sort's 2.2 ms).
+    """
+    elp_ = edge_type.shape[0]
+    mask = edge_type == rel
+    iota = jnp.arange(elp_, dtype=jnp.int32)
+    pos = jnp.sort(jnp.where(mask, iota, jnp.int32(elp_)))
+    count = jnp.sum(mask.astype(jnp.int32))
+    return pos, count
+
+
+# --------------------------------------------------------------------------
+# Feature projection.
+# --------------------------------------------------------------------------
+
+def proj(x, w):
+    """Per-relation projection: [NS, Fin] @ [Fin, Fout] -> [NS, Fout]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def proj_stacked(xs, w, src_type):
+    """All-relations projection in one launch (extension config `R+M+S`,
+    DESIGN.md §5): gather each relation's source-type slab, batched matmul.
+
+    xs: [TPAD, NS, Fin]; w: [RPAD, Fin, Fout]; src_type: [RPAD] i32.
+    Returns [RPAD, NS, Fout].
+    """
+    gathered = xs[src_type]  # [RPAD, NS, Fin]
+    return jnp.einsum("rni,rio->rno", gathered, w,
+                      preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Neighbor aggregation. Per-relation forms come from ref.py (they model the
+# PyG scatter/gather kernels); merged forms are the L1 Pallas kernels.
+# --------------------------------------------------------------------------
+
+agg_mean = ref.agg_mean_ref
+agg_mean_bwd = ref.agg_mean_bwd_ref
+att_agg = ref.att_agg_ref
+agg_merged = agg_mean_merged
+agg_merged_bwd = agg_mean_merged_bwd
+att_merged = att_agg_merged
+
+
+def att_agg_bwd(feat_src, feat_dst, a_src, a_dst, src, dst, valid, dout):
+    """VJP of the per-relation attention aggregation w.r.t.
+    (feat_src, feat_dst, a_src, a_dst); recomputes forward internally."""
+    _, vjp = jax.vjp(
+        lambda fs, fd, as_, ad: ref.att_agg_ref(fs, fd, as_, ad, src, dst, valid),
+        feat_src, feat_dst, a_src, a_dst)
+    return vjp(dout)
+
+
+def att_merged_bwd(feat_src, feat_dst, a_src, a_dst, src, dst, valid, dout):
+    """VJP of the merged attention aggregation (one launch for all R)."""
+    _, vjp = jax.vjp(
+        lambda fs, fd, as_, ad: ref.att_agg_merged_ref(fs, fd, as_, ad, src,
+                                                       dst, valid),
+        feat_src, feat_dst, a_src, a_dst)
+    return vjp(dout)
+
+
+# --------------------------------------------------------------------------
+# Semantic fusion: per-type sum of the relation results that target the type.
+# dst_type[r] is the destination vertex type of relation r. Implemented as a
+# segment scatter-add over relations (O(RPAD*NS*Fd)); the earlier dense
+# [TPAD,RPAD] incidence-matrix einsum did TPAD x more work and was the #2
+# hot spot of every execution mode (EXPERIMENTS.md §Perf #4).
+# --------------------------------------------------------------------------
+
+def fuse_relu(dst_type, agg, tpad):
+    """Hidden-layer fusion: out[t] = ReLU(sum_{r: dst_type[r]=t} agg[r]).
+
+    dst_type: [RPAD] i32; agg: [RPAD, NS, Fd] -> [TPAD, NS, Fd].
+    Padded relations must carry zero rows in `agg` (they do: no valid
+    edges -> aggregation emits zeros), so their scatter-add is a no-op."""
+    s = jnp.zeros((tpad,) + agg.shape[1:], agg.dtype).at[dst_type].add(agg)
+    return jax.nn.relu(s)
+
+
+def fuse_lin(dst_type, agg, tpad):
+    """Output-layer fusion (logits): no activation."""
+    return jnp.zeros((tpad,) + agg.shape[1:], agg.dtype).at[dst_type].add(agg)
+
+
+def fuse_relu_bwd(dst_type, agg, dout, tpad):
+    """VJP w.r.t. agg: dagg[r] = dout[dst_type[r]] * relu-mask (recomputed)."""
+    _, vjp = jax.vjp(lambda a: fuse_relu(dst_type, a, tpad), agg)
+    return vjp(dout)[0]
+
+
+def fuse_lin_bwd(dst_type, agg, dout, tpad):
+    _, vjp = jax.vjp(lambda a: fuse_lin(dst_type, a, tpad), agg)
+    return vjp(dout)[0]
+
+
+# --------------------------------------------------------------------------
+# Head: softmax cross-entropy loss + gradient + accuracy in one module.
+# --------------------------------------------------------------------------
+
+def head(logits, labels, seed_mask):
+    """logits: [NS, C]; labels: [NS] i32; seed_mask: [NS] f32 (1 on seed
+    rows). Returns (loss scalar, dlogits [NS, C], ncorrect scalar)."""
+    c = logits.shape[1]
+    z = logits - jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    onehot = (labels[:, None] == jnp.arange(c, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(logits.dtype)
+    n = jnp.maximum(jnp.sum(seed_mask), 1.0)
+    loss = -jnp.sum(jnp.sum(z * onehot, axis=1) * seed_mask) / n
+    dlogits = (jnp.exp(z) - onehot) * seed_mask[:, None] / n
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    ncorrect = jnp.sum((pred == labels).astype(logits.dtype) * seed_mask)
+    return loss, dlogits, ncorrect
+
+
+# --------------------------------------------------------------------------
+# Generic projection backward (shared by per-relation and stacked forms).
+# --------------------------------------------------------------------------
+
+def proj_bwd(x, w, dy):
+    """VJP of ``proj``: returns (dx, dw)."""
+    _, vjp = jax.vjp(lambda a, b: proj(a, b), x, w)
+    return vjp(dy)
+
+
+def proj_stacked_bwd(xs, w, src_type, dy):
+    """VJP of ``proj_stacked`` w.r.t. (xs, w)."""
+    _, vjp = jax.vjp(lambda a, b: proj_stacked(a, b, src_type), xs, w)
+    return vjp(dy)

@@ -1,0 +1,29 @@
+"""Shape profiles shared between the AOT emitter and the Rust coordinator.
+
+All HLO modules have static shapes; the Rust coordinator pads mini-batches to
+these buckets (DESIGN.md §7). Constants are exported into the artifact
+manifest so Rust never hard-codes them.
+
+  NS     node slots per vertex type (per-type slab rows)
+  EP     edge slots per relation (per semantic graph)
+  RPAD   padded relation count; >= max dataset relation count (am=108,
+         bgs=122, aifb=104, mutag=50 -> 128 covers all four)
+  TPAD   padded vertex-type count (bgs has 27 -> 32)
+  F/H/C  raw-feature / hidden / class dims (2-layer RGCN & RGAT)
+  ELP    merged edge-list length = RPAD*EP (edge-type tagged batch edge list
+         over which the semantic-graph-build stage selects)
+"""
+
+PROFILES = {
+    # CI / pytest / cargo-test profile: small enough that every module runs
+    # in milliseconds under the CPU PJRT client.
+    "tiny": dict(NS=32, EP=16, RPAD=8, TPAD=8, F=8, H=16, C=4),
+    # Benchmark profile used for all paper tables/figures: RPAD=128 >= every
+    # dataset's relation count so one artifact set serves aifb/mutag/bgs/am.
+    # C=16 >= am's 11 classes (largest label space in Table 2).
+    "bench": dict(NS=512, EP=256, RPAD=128, TPAD=32, F=32, H=64, C=16),
+}
+
+
+def elp(p: dict) -> int:
+    return p["RPAD"] * p["EP"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-time package importable when pytest runs from the repo
+# root (the canonical `pytest python/tests/` invocation).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

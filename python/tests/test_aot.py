@@ -1,0 +1,108 @@
+"""AOT emitter tests: manifest structure, module inventory, HLO text sanity.
+
+Uses the already-emitted ``artifacts/tiny`` when present (``make artifacts``),
+otherwise emits it into a tmp dir (slow path, still < 1 min).
+"""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile.profiles import PROFILES, elp
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def tiny_dir(tmp_path_factory):
+    if os.path.exists(os.path.join(ART, "manifest.txt")):
+        return ART
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.emit_profile("tiny", str(out))
+    return os.path.join(str(out), "tiny")
+
+
+def parse_manifest(path):
+    consts, modules = {}, {}
+    cur = None
+    with open(path) as fh:
+        for line in fh:
+            parts = line.split()
+            if not parts:
+                continue
+            if parts[0] == "const":
+                consts[parts[1]] = int(parts[2])
+            elif parts[0] == "module":
+                cur = {"args": [], "rets": [], "file": None}
+                modules[parts[1]] = cur
+            elif parts[0] == "arg":
+                cur["args"].append((parts[1], parts[2], parts[3]))
+            elif parts[0] == "ret":
+                cur["rets"].append((parts[1], parts[2], parts[3]))
+            elif parts[0] == "file":
+                cur["file"] = parts[1]
+    return consts, modules
+
+
+EXPECTED_MODULES = [
+    "edge_select", "head",
+    "proj_fwd_l0", "proj_fwd_l1", "proj_bwd_l0", "proj_bwd_l1",
+    "proj_stacked_fwd_l0", "proj_stacked_fwd_l1",
+    "proj_stacked_bwd_l0", "proj_stacked_bwd_l1",
+    "agg_mean_fwd_h", "agg_mean_fwd_c", "agg_mean_bwd_h", "agg_mean_bwd_c",
+    "agg_merged_fwd_h", "agg_merged_fwd_c",
+    "agg_merged_bwd_h", "agg_merged_bwd_c",
+    "att_agg_fwd_h", "att_agg_fwd_c", "att_agg_bwd_h", "att_agg_bwd_c",
+    "att_merged_fwd_h", "att_merged_fwd_c",
+    "att_merged_bwd_h", "att_merged_bwd_c",
+    "fuse_relu_fwd_h", "fuse_relu_bwd_h", "fuse_lin_fwd_c", "fuse_lin_bwd_c",
+]
+
+
+def test_profiles_cover_all_datasets():
+    # RPAD must cover the largest relation count (bgs: 122) and TPAD the
+    # largest type count (bgs: 27) from the paper's Table 2.
+    b = PROFILES["bench"]
+    assert b["RPAD"] >= 122 and b["TPAD"] >= 27
+    assert elp(b) == b["RPAD"] * b["EP"]
+
+
+def test_manifest_complete(tiny_dir):
+    consts, modules = parse_manifest(os.path.join(tiny_dir, "manifest.txt"))
+    for k in ("NS", "EP", "RPAD", "TPAD", "F", "H", "C", "ELP"):
+        assert k in consts, k
+    for m in EXPECTED_MODULES:
+        assert m in modules, f"missing module {m}"
+        assert modules[m]["file"], m
+        assert os.path.exists(os.path.join(tiny_dir, modules[m]["file"])), m
+
+
+def test_manifest_shapes_match_profile(tiny_dir):
+    consts, modules = parse_manifest(os.path.join(tiny_dir, "manifest.txt"))
+    ns, ep, rp = consts["NS"], consts["EP"], consts["RPAD"]
+    h = consts["H"]
+    agg = modules["agg_merged_fwd_h"]
+    assert agg["args"][0] == ("feat", "f32", f"{rp},{ns},{h}")
+    assert agg["args"][1] == ("src", "i32", f"{rp},{ep}")
+    assert agg["rets"][0][2] == f"{rp},{ns},{h}"
+    sel = modules["edge_select"]
+    assert sel["args"][0] == ("edge_type", "i32", str(consts["ELP"]))
+    assert sel["args"][1][2] == "-"  # scalar
+    assert len(sel["rets"]) == 2
+
+
+def test_hlo_text_is_parseable_prelude(tiny_dir):
+    # HLO text always begins with `HloModule`; a serialized proto would not.
+    # (Guards against regressions to .serialize(), which xla 0.5.1 rejects.)
+    for name in ("edge_select", "agg_merged_fwd_h", "head"):
+        with open(os.path.join(tiny_dir, f"{name}.hlo.txt")) as fh:
+            head_ = fh.read(64)
+        assert head_.startswith("HloModule"), name
+
+
+def test_multi_output_modules_declare_all_returns(tiny_dir):
+    _, modules = parse_manifest(os.path.join(tiny_dir, "manifest.txt"))
+    assert len(modules["head"]["rets"]) == 3
+    assert len(modules["proj_bwd_l0"]["rets"]) == 2
+    assert len(modules["att_merged_bwd_h"]["rets"]) == 4

@@ -1,0 +1,220 @@
+"""L2 stage-function tests: shapes, math identities, and a full train-step
+composition check (chained stage functions == monolithic jax.grad model)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestEdgeSelect:
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 200), ntypes=st.integers(1, 12),
+           rel=st.integers(0, 11), seed=st.integers(0, 2**31 - 1))
+    def test_matches_numpy_oracle(self, n, ntypes, rel, seed):
+        rng = np.random.default_rng(seed)
+        et = rng.integers(0, ntypes, size=n).astype(np.int32)
+        pos, count = model.edge_select(et, np.int32(rel))
+        exp = np.where(et == rel)[0]
+        assert int(count) == len(exp)
+        np.testing.assert_array_equal(np.asarray(pos)[: len(exp)], exp)
+        assert np.all(np.asarray(pos)[len(exp):] == n)
+
+    def test_empty_selection(self):
+        et = np.zeros(16, np.int32)
+        pos, count = model.edge_select(et, np.int32(5))
+        assert int(count) == 0
+        assert np.all(np.asarray(pos) == 16)
+
+    def test_positions_are_sorted_stable(self):
+        et = np.array([1, 0, 1, 1, 0, 1], np.int32)
+        pos, count = model.edge_select(et, np.int32(1))
+        np.testing.assert_array_equal(np.asarray(pos)[:4], [0, 2, 3, 5])
+
+
+class TestProjection:
+    def test_proj_and_bwd(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(8, 4)).astype(np.float32)
+        w = rng.normal(size=(4, 6)).astype(np.float32)
+        dy = rng.normal(size=(8, 6)).astype(np.float32)
+        np.testing.assert_allclose(model.proj(x, w), x @ w, rtol=1e-5)
+        dx, dw = model.proj_bwd(x, w, dy)
+        np.testing.assert_allclose(dx, dy @ w.T, rtol=1e-5)
+        np.testing.assert_allclose(dw, x.T @ dy, rtol=1e-5)
+
+    def test_stacked_matches_per_relation(self):
+        rng = np.random.default_rng(1)
+        tp, rp, ns, fin, fout = 3, 5, 6, 4, 7
+        xs = rng.normal(size=(tp, ns, fin)).astype(np.float32)
+        w = rng.normal(size=(rp, fin, fout)).astype(np.float32)
+        st_ = rng.integers(0, tp, size=rp).astype(np.int32)
+        y = np.asarray(model.proj_stacked(xs, w, st_))
+        for r in range(rp):
+            np.testing.assert_allclose(y[r], xs[st_[r]] @ w[r], rtol=1e-4,
+                                       atol=1e-5)
+
+    def test_stacked_bwd_matches_autodiff(self):
+        rng = np.random.default_rng(2)
+        tp, rp, ns, fin, fout = 2, 4, 5, 3, 6
+        xs = rng.normal(size=(tp, ns, fin)).astype(np.float32)
+        w = rng.normal(size=(rp, fin, fout)).astype(np.float32)
+        st_ = rng.integers(0, tp, size=rp).astype(np.int32)
+        dy = rng.normal(size=(rp, ns, fout)).astype(np.float32)
+        dxs, dw = model.proj_stacked_bwd(xs, w, st_, dy)
+        f = lambda a, b: jnp.sum(model.proj_stacked(a, b, st_) * dy)
+        exp_dxs, exp_dw = jax.grad(f, argnums=(0, 1))(xs, w)
+        np.testing.assert_allclose(dxs, exp_dxs, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw, exp_dw, rtol=1e-4, atol=1e-5)
+
+
+class TestFusion:
+    def test_fuse_relu_is_segment_sum(self):
+        rng = np.random.default_rng(3)
+        tp, rp, ns, f = 3, 4, 5, 2
+        dst_type = rng.integers(0, tp, size=rp).astype(np.int32)
+        agg = rng.normal(size=(rp, ns, f)).astype(np.float32)
+        out = np.asarray(model.fuse_relu(dst_type, agg, tp))
+        m = np.zeros((tp, rp), np.float32)
+        m[dst_type, np.arange(rp)] = 1.0
+        exp = np.maximum(np.einsum("tr,rnf->tnf", m, agg), 0.0)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+
+    def test_fuse_bwds_match_autodiff(self):
+        rng = np.random.default_rng(4)
+        tp, rp, ns, f = 2, 3, 4, 2
+        dst_type = rng.integers(0, tp, size=rp).astype(np.int32)
+        agg = rng.normal(size=(rp, ns, f)).astype(np.float32)
+        dout = rng.normal(size=(tp, ns, f)).astype(np.float32)
+        for fwd, bwd in ((model.fuse_relu, model.fuse_relu_bwd),
+                         (model.fuse_lin, model.fuse_lin_bwd)):
+            got = bwd(dst_type, agg, dout, tp)
+            exp = jax.grad(lambda a: jnp.sum(fwd(dst_type, a, tp) * dout))(agg)
+            np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-5)
+
+
+class TestHead:
+    def test_loss_and_grad_match_autodiff(self):
+        rng = np.random.default_rng(5)
+        ns, c = 10, 4
+        logits = rng.normal(size=(ns, c)).astype(np.float32)
+        labels = rng.integers(0, c, size=ns).astype(np.int32)
+        mask = (rng.random(ns) < 0.5).astype(np.float32)
+        mask[0] = 1.0
+        loss, dlogits, ncorr = model.head(logits, labels, mask)
+
+        def ce(lg):
+            z = lg - jax.scipy.special.logsumexp(lg, axis=1, keepdims=True)
+            oh = jax.nn.one_hot(labels, c)
+            return -jnp.sum(jnp.sum(z * oh, 1) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+        np.testing.assert_allclose(loss, ce(logits), rtol=1e-5)
+        np.testing.assert_allclose(dlogits, jax.grad(ce)(logits), rtol=1e-4,
+                                   atol=1e-6)
+        pred = np.argmax(logits, 1)
+        np.testing.assert_allclose(ncorr, np.sum((pred == labels) * mask))
+
+    def test_perfect_logits_give_zero_grad_direction(self):
+        ns, c = 4, 3
+        labels = np.array([0, 1, 2, 0], np.int32)
+        logits = np.full((ns, c), -100.0, np.float32)
+        logits[np.arange(ns), labels] = 100.0
+        mask = np.ones(ns, np.float32)
+        loss, dlogits, ncorr = model.head(logits, labels, mask)
+        assert float(loss) < 1e-3
+        assert float(ncorr) == ns
+        np.testing.assert_allclose(np.asarray(dlogits), 0.0, atol=1e-6)
+
+
+def _rand_batch(rng, tp, rp, ns, ep, f):
+    """Random but structurally valid mini-batch for composition tests."""
+    xs = rng.normal(size=(tp, ns, f)).astype(np.float32)
+    src_type = rng.integers(0, tp, size=rp).astype(np.int32)
+    dst_type = rng.integers(0, tp, size=rp).astype(np.int32)
+    src = rng.integers(0, ns, size=(2, rp, ep)).astype(np.int32)
+    dst = rng.integers(0, ns, size=(2, rp, ep)).astype(np.int32)
+    valid = (rng.random((2, rp, ep)) < 0.7).astype(np.float32)
+    return xs, src_type, dst_type, src, dst, valid
+
+
+class TestTrainStepComposition:
+    """Chained stage modules == monolithic jax model. This validates that the
+    Rust coordinator's module chaining computes the true RGCN gradient."""
+
+    def test_rgcn_two_layer_forward_and_grads(self):
+        rng = np.random.default_rng(7)
+        tp, rp, ns, ep, f, h, c = 3, 5, 8, 12, 4, 6, 3
+        xs, src_type, dst_type, src, dst, valid = _rand_batch(
+            rng, tp, rp, ns, ep, f)
+        w0 = (rng.normal(size=(rp, f, h)) * 0.3).astype(np.float32)
+        w1 = (rng.normal(size=(rp, h, c)) * 0.3).astype(np.float32)
+        labels = rng.integers(0, c, size=ns).astype(np.int32)
+        mask = np.zeros(ns, np.float32)
+        mask[:3] = 1.0
+        seed_t = 0
+
+        def monolithic(w0_, w1_):
+            p0 = jnp.stack([xs[src_type[r]] @ w0_[r] for r in range(rp)])
+            a0 = ref.agg_mean_merged_ref(p0, src[0], dst[0], valid[0])
+            h1 = model.fuse_relu(dst_type, a0, tp)
+            p1 = jnp.stack([h1[src_type[r]] @ w1_[r] for r in range(rp)])
+            a1 = ref.agg_mean_merged_ref(p1, src[1], dst[1], valid[1])
+            h2 = model.fuse_lin(dst_type, a1, tp)
+            return model.head(h2[seed_t], labels, mask)[0]
+
+        # --- staged execution, the way the Rust coordinator chains modules
+        p0 = np.stack([np.asarray(model.proj(xs[src_type[r]], w0[r]))
+                       for r in range(rp)])
+        a0 = np.asarray(model.agg_merged(p0, src[0], dst[0], valid[0]))
+        h1 = np.asarray(model.fuse_relu(dst_type, a0, tp))
+        p1 = np.stack([np.asarray(model.proj(h1[src_type[r]], w1[r]))
+                       for r in range(rp)])
+        a1 = np.asarray(model.agg_merged(p1, src[1], dst[1], valid[1]))
+        h2 = np.asarray(model.fuse_lin(dst_type, a1, tp))
+        loss, dlogits, _ = model.head(h2[seed_t], labels, mask)
+
+        np.testing.assert_allclose(loss, monolithic(w0, w1), rtol=1e-4)
+
+        # backward chain
+        dh2 = np.zeros_like(h2)
+        dh2[seed_t] = np.asarray(dlogits)
+        da1 = np.asarray(model.fuse_lin_bwd(dst_type, a1, dh2, tp))
+        dp1 = np.asarray(model.agg_merged_bwd(src[1], dst[1], valid[1], da1))
+        dh1 = np.zeros_like(h1)
+        dw1 = np.zeros_like(w1)
+        for r in range(rp):
+            dx, dwr = model.proj_bwd(h1[src_type[r]], w1[r], dp1[r])
+            dh1[src_type[r]] += np.asarray(dx)
+            dw1[r] = np.asarray(dwr)
+        da0 = np.asarray(model.fuse_relu_bwd(dst_type, a0, dh1, tp))
+        dp0 = np.asarray(model.agg_merged_bwd(src[0], dst[0], valid[0], da0))
+        dw0 = np.zeros_like(w0)
+        for r in range(rp):
+            _, dwr = model.proj_bwd(xs[src_type[r]], w0[r], dp0[r])
+            dw0[r] = np.asarray(dwr)
+
+        exp_dw0, exp_dw1 = jax.grad(monolithic, argnums=(0, 1))(w0, w1)
+        np.testing.assert_allclose(dw0, exp_dw0, rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(dw1, exp_dw1, rtol=1e-3, atol=1e-5)
+
+    def test_rgat_layer_grads_via_staged_bwd(self):
+        rng = np.random.default_rng(8)
+        rp, ns, ep, f = 3, 8, 10, 4
+        fs = rng.normal(size=(rp, ns, f)).astype(np.float32)
+        fd = rng.normal(size=(rp, ns, f)).astype(np.float32)
+        a_s = rng.normal(size=(rp, f)).astype(np.float32)
+        a_d = rng.normal(size=(rp, f)).astype(np.float32)
+        src = rng.integers(0, ns, size=(rp, ep)).astype(np.int32)
+        dst = rng.integers(0, ns, size=(rp, ep)).astype(np.int32)
+        valid = (rng.random((rp, ep)) < 0.7).astype(np.float32)
+        dout = rng.normal(size=(rp, ns, f)).astype(np.float32)
+        got = model.att_merged_bwd(fs, fd, a_s, a_d, src, dst, valid, dout)
+        fn = lambda a, b, c_, d: jnp.sum(
+            ref.att_agg_merged_ref(a, b, c_, d, src, dst, valid) * dout)
+        exp = jax.grad(fn, argnums=(0, 1, 2, 3))(fs, fd, a_s, a_d)
+        for g, e in zip(got, exp):
+            np.testing.assert_allclose(g, e, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,128 @@
+//! Run configuration + a dependency-free CLI argument parser (clap is not
+//! available offline).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{OptConfig, TrainCfg};
+use crate::graph::{self, HeteroGraph};
+use crate::models::ModelKind;
+
+/// Everything a training / benchmark run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub model: ModelKind,
+    pub mode_name: String,
+    pub opt: OptConfig,
+    pub train: TrainCfg,
+    /// Dataset scale factor (DESIGN.md §2: schema never scales).
+    pub scale: f64,
+    /// Profile directory, e.g. `artifacts/bench`.
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "aifb".into(),
+            model: ModelKind::Rgcn,
+            mode_name: "hifuse".into(),
+            opt: OptConfig::hifuse(),
+            train: TrainCfg::default(),
+            scale: 1.0,
+            artifacts: PathBuf::from("artifacts/bench"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `--key value` style flags.
+    pub fn from_args(args: &[String]) -> Result<RunConfig> {
+        let mut kv = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a:?}"))?;
+            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
+            kv.insert(key.to_string(), val.clone());
+        }
+        let mut cfg = RunConfig::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "dataset" => cfg.dataset = v,
+                "model" => {
+                    cfg.model = ModelKind::parse(&v)
+                        .with_context(|| format!("unknown model {v:?} (rgcn|rgat)"))?
+                }
+                "mode" => {
+                    cfg.opt = OptConfig::parse(&v)
+                        .with_context(|| format!("unknown mode {v:?}"))?;
+                    cfg.mode_name = v;
+                }
+                "epochs" => cfg.train.epochs = v.parse().context("--epochs")?,
+                "batch-size" => cfg.train.batch_size = v.parse().context("--batch-size")?,
+                "fanout" => cfg.train.fanout = v.parse().context("--fanout")?,
+                "lr" => cfg.train.lr = v.parse().context("--lr")?,
+                "seed" => cfg.train.seed = v.parse().context("--seed")?,
+                "threads" => cfg.train.threads = v.parse().context("--threads")?,
+                "scale" => cfg.scale = v.parse().context("--scale")?,
+                "artifacts" => cfg.artifacts = PathBuf::from(v),
+                other => bail!("unknown flag --{other}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Build the dataset this config names. `feat_dim` must equal the
+    /// profile's F (checked by `Trainer::new`).
+    pub fn load_graph(&self, feat_dim: usize) -> Result<HeteroGraph> {
+        if self.dataset == "tiny" {
+            return Ok(graph::datasets::tiny_graph(self.train.seed));
+        }
+        let spec = graph::datasets::spec_by_name(&self.dataset)
+            .with_context(|| format!("unknown dataset {:?}", self.dataset))?;
+        Ok(graph::datasets::generate(&spec, feat_dim, self.scale, self.train.seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let c = RunConfig::from_args(&argv(
+            "--dataset bgs --model rgat --mode base --epochs 3 --batch-size 16 --scale 0.5",
+        ))
+        .unwrap();
+        assert_eq!(c.dataset, "bgs");
+        assert_eq!(c.model, ModelKind::Rgat);
+        assert_eq!(c.opt, OptConfig::baseline());
+        assert_eq!(c.train.epochs, 3);
+        assert_eq!(c.train.batch_size, 16);
+        assert_eq!(c.scale, 0.5);
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_values() {
+        assert!(RunConfig::from_args(&argv("--nope 1")).is_err());
+        assert!(RunConfig::from_args(&argv("--model nope")).is_err());
+        assert!(RunConfig::from_args(&argv("--epochs")).is_err());
+        assert!(RunConfig::from_args(&argv("positional")).is_err());
+    }
+
+    #[test]
+    fn defaults_are_hifuse_aifb() {
+        let c = RunConfig::from_args(&[]).unwrap();
+        assert_eq!(c.dataset, "aifb");
+        assert_eq!(c.opt, OptConfig::hifuse());
+    }
+}

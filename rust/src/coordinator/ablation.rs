@@ -1,0 +1,132 @@
+//! Ablation configurations (the paper's Fig. 9 study) — which of HiFuse's
+//! optimizations are active.
+
+/// Optimization switches. `OptConfig::baseline()` reproduces the PyG-style
+/// execution; `OptConfig::hifuse()` enables everything the paper ships.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptConfig {
+    /// Reorganization (Fig. 4b): type-major feature layout for collection.
+    pub reorg: bool,
+    /// Merging (Alg. 1): single merged aggregation launch per layer.
+    pub merge: bool,
+    /// Offloading (§4.3): edge-index selection on CPU instead of GPU.
+    pub offload: bool,
+    /// Parallelization: multi-threaded CPU selection (implies `offload`).
+    pub parallel: bool,
+    /// Asynchronous pipeline (Fig. 6): CPU stages overlap GPU compute.
+    pub pipeline: bool,
+    /// EXTENSION (beyond the paper): merge the projection stage too, via
+    /// the stacked-einsum module (DESIGN.md §5).
+    pub stacked_proj: bool,
+}
+
+impl OptConfig {
+    /// PyG-style baseline: everything on GPU, per-relation kernels,
+    /// index-major features, sequential CPU/GPU.
+    pub fn baseline() -> Self {
+        OptConfig {
+            reorg: false,
+            merge: false,
+            offload: false,
+            parallel: false,
+            pipeline: false,
+            stacked_proj: false,
+        }
+    }
+
+    /// Full HiFuse (paper configuration).
+    pub fn hifuse() -> Self {
+        OptConfig {
+            reorg: true,
+            merge: true,
+            offload: true,
+            parallel: true,
+            pipeline: true,
+            stacked_proj: false,
+        }
+    }
+
+    /// The Fig. 9 ablation ladder, in the paper's order:
+    /// base, R, R+M, R+O+P, R+M+O+P+Pipe(=HiFuse).
+    pub fn ablation_ladder() -> Vec<(&'static str, OptConfig)> {
+        let base = Self::baseline();
+        vec![
+            ("base", base),
+            ("R", OptConfig { reorg: true, ..base }),
+            ("R+M", OptConfig { reorg: true, merge: true, ..base }),
+            ("R+O+P", OptConfig { reorg: true, offload: true, parallel: true, ..base }),
+            ("HiFuse", Self::hifuse()),
+        ]
+    }
+
+    /// Parse a config name (CLI). Accepts the ladder names plus
+    /// "baseline"/"hifuse"/"hifuse+stacked".
+    pub fn parse(name: &str) -> Option<OptConfig> {
+        match name {
+            "base" | "baseline" => Some(Self::baseline()),
+            "hifuse" => Some(Self::hifuse()),
+            "hifuse+stacked" => Some(OptConfig { stacked_proj: true, ..Self::hifuse() }),
+            _ => Self::ablation_ladder()
+                .into_iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, c)| c),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if *self == Self::baseline() {
+            return "base".into();
+        }
+        let mut parts = Vec::new();
+        if self.reorg {
+            parts.push("R");
+        }
+        if self.merge {
+            parts.push("M");
+        }
+        if self.offload {
+            parts.push("O");
+        }
+        if self.parallel {
+            parts.push("P");
+        }
+        if self.pipeline {
+            parts.push("Pipe");
+        }
+        if self.stacked_proj {
+            parts.push("S");
+        }
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_monotone_in_optimizations() {
+        let ladder = OptConfig::ablation_ladder();
+        assert_eq!(ladder.len(), 5);
+        assert_eq!(ladder[0].1, OptConfig::baseline());
+        assert_eq!(ladder[4].1, OptConfig::hifuse());
+        assert!(ladder[1].1.reorg && !ladder[1].1.merge);
+        assert!(ladder[2].1.merge && !ladder[2].1.offload);
+        assert!(ladder[3].1.offload && ladder[3].1.parallel && !ladder[3].1.merge);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for (name, cfg) in OptConfig::ablation_ladder() {
+            assert_eq!(OptConfig::parse(name), Some(cfg), "{name}");
+        }
+        assert!(OptConfig::parse("hifuse+stacked").unwrap().stacked_proj);
+        assert!(OptConfig::parse("nope").is_none());
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert_eq!(OptConfig::baseline().label(), "base");
+        assert_eq!(OptConfig::hifuse().label(), "R+M+O+P+Pipe");
+    }
+}

@@ -1,0 +1,286 @@
+//! The coordinator: drives mini-batch HGNN training end-to-end (Fig. 2
+//! workflow), switching between the PyG-style baseline plan and HiFuse
+//! optimizations per `OptConfig`, sequentially or pipelined (Fig. 6).
+
+pub mod ablation;
+pub mod pipeline;
+
+pub use ablation::OptConfig;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::{HeteroGraph, Layout};
+use crate::models::step::{
+    pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
+};
+use crate::models::{ModelKind, Params};
+use crate::runtime::{Engine, Phase, Stage};
+use crate::sampler::{collect, MiniBatch, NeighborSampler, RelEdges, SamplerCfg, TaggedEdges};
+use crate::semantic;
+use crate::util::{HostTensor, Rng};
+
+/// Training-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub fanout: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// CPU selection threads (the paper's OpenMP worker count).
+    pub threads: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { epochs: 1, batch_size: 64, fanout: 4, lr: 0.05, seed: 42, threads: 4 }
+    }
+}
+
+/// Per-epoch measurements (feeds Tables 1/3 and Figs 7-11).
+#[derive(Clone, Debug, Default)]
+pub struct EpochMetrics {
+    pub loss: f64,
+    pub acc: f64,
+    pub wall: Duration,
+    /// Host-side stage time: sampling + CPU selection + collection.
+    pub cpu_time: Duration,
+    /// Device-side time: sum of dispatch durations ("GPU time").
+    pub gpu_time: Duration,
+    pub kernels_total: usize,
+    pub kernels_fwd_semantic: usize,
+    pub kernels_fwd_agg: usize,
+    pub kernels_by_stage: Vec<(Stage, usize)>,
+    pub batches: usize,
+    pub dropped_nodes: usize,
+    pub dropped_edges: usize,
+}
+
+/// CPU-side product of batch preparation (safe to build on a producer
+/// thread; contains no PJRT handles).
+pub struct PreparedCpu {
+    pub collected: collect::Collected,
+    /// `Some` when selection ran on CPU (offload path).
+    pub selected: Option<Vec<Vec<RelEdges>>>,
+    /// `Some` when selection must run on "GPU" (baseline path).
+    pub tagged: Option<Vec<TaggedEdges>>,
+    pub cpu_time: Duration,
+    pub dropped_nodes: usize,
+    pub dropped_edges: usize,
+}
+
+/// Materialize the feature layout an `OptConfig` requires (the paper's
+/// reorganization): call before constructing a `Trainer`.
+pub fn prepare_graph_layout(g: &mut HeteroGraph, opt: &OptConfig) {
+    let want = if opt.reorg { Layout::TypeMajor } else { Layout::IndexMajor };
+    g.features.ensure_layout(want);
+}
+
+pub struct Trainer<'g, 'e> {
+    pub eng: &'e Engine,
+    pub graph: &'g HeteroGraph,
+    pub exec: StepExecutor<'e>,
+    pub schema: SchemaTensors,
+    pub params: Params,
+    pub cfg: TrainCfg,
+    pub opt: OptConfig,
+    rng: Rng,
+}
+
+impl<'g, 'e> Trainer<'g, 'e> {
+    pub fn new(
+        eng: &'e Engine,
+        graph: &'g HeteroGraph,
+        model: ModelKind,
+        opt: OptConfig,
+        cfg: TrainCfg,
+    ) -> Result<Self> {
+        let d = Dims::from_engine(eng);
+        assert_eq!(graph.feat_dim, d.f, "graph feature dim != profile F");
+        assert!(graph.num_classes <= d.c, "dataset classes exceed profile C");
+        let schema = schema_tensors(graph, &d);
+        let exec = StepExecutor::new(eng, model, opt);
+        let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
+        Ok(Trainer { eng, graph, exec, schema, params, cfg, opt, rng: Rng::new(cfg.seed) })
+    }
+
+    pub fn dims(&self) -> Dims {
+        self.exec.d
+    }
+
+    fn sampler_cfg(&self) -> SamplerCfg {
+        let d = self.exec.d;
+        SamplerCfg {
+            batch_size: self.cfg.batch_size,
+            fanout: self.cfg.fanout,
+            layers: 2,
+            ns: d.ns,
+            ep: d.ep,
+        }
+    }
+
+    /// CPU half of batch preparation (runs on the producer thread in
+    /// pipeline mode): sample, (optionally) select on CPU, collect.
+    pub fn prepare_cpu(
+        graph: &HeteroGraph,
+        scfg: SamplerCfg,
+        d: &Dims,
+        opt: &OptConfig,
+        threads: usize,
+        rng: &Rng,
+        epoch: u64,
+        batch_idx: usize,
+    ) -> PreparedCpu {
+        let t0 = Instant::now();
+        let sampler = NeighborSampler::new(graph, scfg);
+        let mb: MiniBatch = sampler.sample(rng, epoch, batch_idx);
+        let n_rel = graph.n_relations();
+        let selected = if opt.offload {
+            Some(
+                mb.tagged
+                    .iter()
+                    .map(|t| {
+                        if opt.parallel {
+                            semantic::select_parallel(t, n_rel, threads)
+                        } else {
+                            semantic::select_serial(t, n_rel)
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        } else {
+            None
+        };
+        let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f);
+        PreparedCpu {
+            collected,
+            selected,
+            tagged: if opt.offload { None } else { Some(mb.tagged) },
+            cpu_time: t0.elapsed(),
+            dropped_nodes: mb.dropped_nodes,
+            dropped_edges: mb.dropped_edges,
+        }
+    }
+
+    /// "GPU" edge-index selection (baseline): one `edge_select` dispatch
+    /// per relation per layer (the compare+index_select kernel pair), then
+    /// host extraction of the selected endpoints.
+    pub fn gpu_select(
+        eng: &Engine,
+        d: &Dims,
+        tagged: &TaggedEdges,
+        n_rel: usize,
+    ) -> Result<Vec<RelEdges>> {
+        // Pad the tagged type column to ELP with a sentinel (RPAD never
+        // matches a real relation id).
+        let mut et = vec![d.rpad as i32; d.elp];
+        for (i, &r) in tagged.rel.iter().enumerate() {
+            et[i] = r as i32;
+        }
+        let et = HostTensor::i32(et, &[d.elp]);
+        let mut out = Vec::with_capacity(n_rel);
+        for r in 0..n_rel {
+            let rel = HostTensor::scalar_i32(r as i32);
+            let mut res = eng
+                .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[&et, &rel])?
+                .into_iter();
+            let pos = res.next().unwrap().into_i32()?;
+            let count = res.next().unwrap().scalar()? as usize;
+            let mut e = RelEdges::default();
+            for &p in &pos[..count] {
+                e.src.push(tagged.src[p as usize]);
+                e.dst.push(tagged.dst[p as usize]);
+            }
+            out.push(e);
+        }
+        Ok(out)
+    }
+
+    /// Device half of batch preparation + the training step itself.
+    pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize)> {
+        let d = self.exec.d;
+        let selected: Vec<Vec<RelEdges>> = match (prep.selected, prep.tagged) {
+            (Some(s), _) => s,
+            (None, Some(tagged)) => tagged
+                .iter()
+                .map(|t| Self::gpu_select(self.eng, &d, t, self.schema.n_rel))
+                .collect::<Result<_>>()?,
+            _ => unreachable!("prepare_cpu always sets one of selected/tagged"),
+        };
+        let layers = selected.iter().map(|rels| pad_layer_edges(rels, &d)).collect();
+        let batch = BatchData {
+            xs: prep.collected.xs,
+            labels: prep.collected.labels,
+            seed_mask: prep.collected.seed_mask,
+            n_seed: prep.collected.n_seed,
+            layers,
+        };
+        let res = self.exec.train_step(&mut self.params, &self.schema, &batch, self.cfg.lr)?;
+        Ok((res.loss, res.ncorrect, res.n_seed))
+    }
+
+    /// Train one epoch; dispatches to the pipelined loop when enabled.
+    pub fn train_epoch(&mut self, epoch: u64) -> Result<EpochMetrics> {
+        if self.opt.pipeline {
+            pipeline::train_epoch_pipelined(self, epoch)
+        } else {
+            self.train_epoch_sequential(epoch)
+        }
+    }
+
+    fn train_epoch_sequential(&mut self, epoch: u64) -> Result<EpochMetrics> {
+        let scfg = self.sampler_cfg();
+        let n_batches = NeighborSampler::new(self.graph, scfg).batches_per_epoch();
+        let d = self.exec.d;
+        let wall0 = Instant::now();
+        let mut m = EpochMetrics { batches: n_batches, ..Default::default() };
+        self.eng.reset_counters(false);
+        let mut total_correct = 0.0f64;
+        let mut total_seed = 0usize;
+        for b in 0..n_batches {
+            let prep = Self::prepare_cpu(
+                self.graph, scfg, &d, &self.opt, self.cfg.threads, &self.rng, epoch, b,
+            );
+            m.cpu_time += prep.cpu_time;
+            m.dropped_nodes += prep.dropped_nodes;
+            m.dropped_edges += prep.dropped_edges;
+            let (loss, ncorrect, n_seed) = self.compute_batch(prep)?;
+            m.loss += loss as f64;
+            total_correct += ncorrect as f64;
+            total_seed += n_seed;
+        }
+        self.finish_metrics(&mut m, wall0, total_correct, total_seed);
+        Ok(m)
+    }
+
+    pub(crate) fn finish_metrics(
+        &self,
+        m: &mut EpochMetrics,
+        wall0: Instant,
+        total_correct: f64,
+        total_seed: usize,
+    ) {
+        m.wall = wall0.elapsed();
+        m.loss /= m.batches.max(1) as f64;
+        m.acc = total_correct / total_seed.max(1) as f64;
+        let c = self.eng.counters.borrow();
+        m.gpu_time = c.gpu_time;
+        m.kernels_total = c.total();
+        m.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);
+        m.kernels_fwd_agg = c.count_phase(Stage::Aggregation, Phase::Fwd);
+        m.kernels_by_stage = c.by_stage();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cfg_is_sane() {
+        let c = TrainCfg::default();
+        assert!(c.batch_size > 0 && c.lr > 0.0 && c.threads >= 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! Asynchronous CPU/GPU pipeline (the paper's Fig. 6).
+//!
+//! A producer thread runs the CPU stages — mini-batch sampling, CPU
+//! edge-index selection, feature collection — while the main thread runs
+//! model computation on the PJRT "device". A bounded channel (depth 2)
+//! provides the backpressure: the CPU may run at most two batches ahead,
+//! like the paper's dedicated transfer stream feeding the compute stream.
+//!
+//! `PjRtClient` is `!Send`, so compute stays on the calling thread and only
+//! plain host data crosses the channel — the design reason `PreparedCpu`
+//! contains no runtime handles.
+
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{EpochMetrics, PreparedCpu, Trainer};
+use crate::sampler::NeighborSampler;
+
+/// Depth of the producer->consumer channel (batches in flight).
+pub const PIPELINE_DEPTH: usize = 2;
+
+pub fn train_epoch_pipelined(tr: &mut Trainer, epoch: u64) -> Result<EpochMetrics> {
+    let scfg = tr.sampler_cfg();
+    let n_batches = NeighborSampler::new(tr.graph, scfg).batches_per_epoch();
+    let d = tr.exec.d;
+    let opt = tr.opt;
+    let threads = tr.cfg.threads;
+    let rng = tr.rng.clone();
+    let graph = tr.graph;
+
+    let wall0 = Instant::now();
+    tr.eng.reset_counters(false);
+    let mut m = EpochMetrics { batches: n_batches, ..Default::default() };
+    let mut total_correct = 0.0f64;
+    let mut total_seed = 0usize;
+
+    let mut result: Result<()> = Ok(());
+    std::thread::scope(|s| {
+        let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
+        s.spawn(move || {
+            for b in 0..n_batches {
+                let prep =
+                    Trainer::prepare_cpu(graph, scfg, &d, &opt, threads, &rng, epoch, b);
+                if tx.send(prep).is_err() {
+                    return; // consumer bailed
+                }
+            }
+        });
+        for _ in 0..n_batches {
+            let prep = match rx.recv() {
+                Ok(p) => p,
+                Err(_) => break,
+            };
+            m.cpu_time += prep.cpu_time;
+            m.dropped_nodes += prep.dropped_nodes;
+            m.dropped_edges += prep.dropped_edges;
+            match tr.compute_batch(prep) {
+                Ok((loss, ncorrect, n_seed)) => {
+                    m.loss += loss as f64;
+                    total_correct += ncorrect as f64;
+                    total_seed += n_seed;
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break; // dropping rx unblocks the producer
+                }
+            }
+        }
+        drop(rx);
+    });
+    result?;
+    tr.finish_metrics(&mut m, wall0, total_correct, total_seed);
+    Ok(m)
+}

@@ -1,0 +1,244 @@
+//! Vertex feature storage in the two layouts the paper contrasts (Fig. 4).
+//!
+//! * **Index-major** (Fig. 4a, the PyG-style baseline): one flat buffer over
+//!   *global* vertex ids, with the types interleaved in RDF-dump order. A
+//!   per-type gather therefore touches scattered cache lines across the
+//!   whole buffer — the poor spatial/temporal locality the paper profiles.
+//! * **Type-major** (Fig. 4b, HiFuse's reorganization): one contiguous
+//!   buffer per type, ordered by type-local index. Per-type gathers stay
+//!   inside a compact region (the "coalesced access" analogue on CPU is
+//!   cache-line/page locality).
+//!
+//! Both layouts serve reads through the same API so the collector code in
+//! `sampler::collect` is layout-agnostic; an ablation flag picks the layout.
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    IndexMajor,
+    TypeMajor,
+}
+
+/// Vertex features for all types, materialized in one layout at a time
+/// (`ensure_layout` converts; datasets can be hundreds of MB so we avoid
+/// holding both buffers unless a bench explicitly compares them).
+pub struct FeatureStore {
+    pub dim: usize,
+    num_nodes: Vec<usize>,
+    layout: Layout,
+    /// Type-major: `tm[t][v*dim ..]` = features of type-local vertex v.
+    tm: Vec<Vec<f32>>,
+    /// Index-major: flat buffer indexed by global id * dim.
+    im: Vec<f32>,
+    /// Per type: type-local vertex -> global id (interleaved assignment).
+    global_of: Vec<Vec<u32>>,
+}
+
+impl FeatureStore {
+    /// Generate synthetic features. Target-type vertices are drawn from
+    /// per-class Gaussian centroids (so the classification task is actually
+    /// learnable and the E2E loss curve decreases); other types are noise.
+    pub fn synth(
+        num_nodes: &[usize],
+        dim: usize,
+        target_type: usize,
+        labels: &[u8],
+        num_classes: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        // Class centroids, unit-ish separation.
+        let mut centroids = vec![0.0f32; num_classes * dim];
+        for c in centroids.iter_mut() {
+            *c = rng.normal() * 1.5;
+        }
+        let mut tm = Vec::with_capacity(num_nodes.len());
+        for (t, &n) in num_nodes.iter().enumerate() {
+            let mut buf = vec![0.0f32; n * dim];
+            if t == target_type {
+                for v in 0..n {
+                    let cls = labels[v] as usize;
+                    for d in 0..dim {
+                        buf[v * dim + d] = centroids[cls * dim + d] + 0.5 * rng.normal();
+                    }
+                }
+            } else {
+                for x in buf.iter_mut() {
+                    *x = rng.normal() * 0.5;
+                }
+            }
+            tm.push(buf);
+        }
+        // Interleaved global-id assignment models the RDF-dump vertex order
+        // the paper's Fig. 4a describes: round-robin across types.
+        let global_of = interleaved_global_ids(num_nodes);
+        FeatureStore {
+            dim,
+            num_nodes: num_nodes.to_vec(),
+            layout: Layout::TypeMajor,
+            tm,
+            im: Vec::new(),
+            global_of,
+        }
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.num_nodes.iter().sum()
+    }
+
+    /// Materialize the requested layout (drops the other buffer).
+    pub fn ensure_layout(&mut self, want: Layout) {
+        if self.layout == want && (want == Layout::TypeMajor || !self.im.is_empty()) {
+            return;
+        }
+        match want {
+            Layout::TypeMajor => {
+                if self.tm.is_empty() {
+                    let mut tm = Vec::with_capacity(self.num_nodes.len());
+                    for (t, &n) in self.num_nodes.iter().enumerate() {
+                        let mut buf = vec![0.0f32; n * self.dim];
+                        for v in 0..n {
+                            let g = self.global_of[t][v] as usize;
+                            buf[v * self.dim..(v + 1) * self.dim]
+                                .copy_from_slice(&self.im[g * self.dim..(g + 1) * self.dim]);
+                        }
+                        tm.push(buf);
+                    }
+                    self.tm = tm;
+                }
+                self.im = Vec::new();
+            }
+            Layout::IndexMajor => {
+                if self.im.is_empty() {
+                    let mut im = vec![0.0f32; self.total_nodes() * self.dim];
+                    for (t, buf) in self.tm.iter().enumerate() {
+                        for v in 0..self.num_nodes[t] {
+                            let g = self.global_of[t][v] as usize;
+                            im[g * self.dim..(g + 1) * self.dim]
+                                .copy_from_slice(&buf[v * self.dim..(v + 1) * self.dim]);
+                        }
+                    }
+                    self.im = im;
+                }
+                self.tm = Vec::new();
+            }
+        }
+        self.layout = want;
+    }
+
+    /// Read the feature row of type-local vertex `(t, v)` into `out`.
+    /// This is the hot path of feature collection; index-major incurs the
+    /// scattered global-id indirection the paper's reorganization removes.
+    #[inline]
+    pub fn copy_row(&self, t: usize, v: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        match self.layout {
+            Layout::TypeMajor => {
+                let buf = &self.tm[t];
+                out.copy_from_slice(&buf[v * self.dim..(v + 1) * self.dim]);
+            }
+            Layout::IndexMajor => {
+                let g = self.global_of[t][v] as usize;
+                out.copy_from_slice(&self.im[g * self.dim..(g + 1) * self.dim]);
+            }
+        }
+    }
+}
+
+/// Round-robin global id assignment across types (the interleaved order of
+/// Fig. 4a). Types with more vertices keep receiving ids after shorter
+/// types are exhausted.
+fn interleaved_global_ids(num_nodes: &[usize]) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = num_nodes.iter().map(|&n| Vec::with_capacity(n)).collect();
+    let max_n = num_nodes.iter().copied().max().unwrap_or(0);
+    let mut g = 0u32;
+    for v in 0..max_n {
+        for (t, &n) in num_nodes.iter().enumerate() {
+            if v < n {
+                out[t].push(g);
+                g += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> FeatureStore {
+        let mut rng = Rng::new(11);
+        let labels = vec![0, 1, 0, 1, 1];
+        FeatureStore::synth(&[5, 3, 7], 4, 0, &labels, 2, &mut rng)
+    }
+
+    #[test]
+    fn interleaving_is_a_bijection() {
+        let ids = interleaved_global_ids(&[3, 1, 2]);
+        let mut all: Vec<u32> = ids.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+        // Round-robin: first ids go type0, type1, type2, then type0/type2...
+        assert_eq!(ids[0][0], 0);
+        assert_eq!(ids[1][0], 1);
+        assert_eq!(ids[2][0], 2);
+    }
+
+    #[test]
+    fn layouts_agree_row_for_row() {
+        let mut s = store();
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        let mut expect = Vec::new();
+        for t in 0..3 {
+            for v in 0..[5, 3, 7][t] {
+                s.copy_row(t, v, &mut a);
+                expect.push((t, v, a.clone()));
+            }
+        }
+        s.ensure_layout(Layout::IndexMajor);
+        assert_eq!(s.layout(), Layout::IndexMajor);
+        for (t, v, want) in &expect {
+            s.copy_row(*t, *v, &mut b);
+            assert_eq!(&b, want, "mismatch at ({t},{v})");
+        }
+        // And back again.
+        s.ensure_layout(Layout::TypeMajor);
+        for (t, v, want) in &expect {
+            s.copy_row(*t, *v, &mut b);
+            assert_eq!(&b, want, "mismatch after roundtrip at ({t},{v})");
+        }
+    }
+
+    #[test]
+    fn target_type_features_cluster_by_class() {
+        let mut rng = Rng::new(3);
+        let n = 200;
+        let labels: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+        let s = FeatureStore::synth(&[n, 10], 8, 0, &labels, 2, &mut rng);
+        // Mean intra-class distance should be well below inter-class.
+        let mut row = vec![0.0f32; 8];
+        let mut means = vec![vec![0.0f32; 8]; 2];
+        let mut counts = [0usize; 2];
+        for v in 0..n {
+            s.copy_row(0, v, &mut row);
+            let c = labels[v] as usize;
+            for d in 0..8 {
+                means[c][d] += row[d];
+            }
+            counts[c] += 1;
+        }
+        for c in 0..2 {
+            for d in 0..8 {
+                means[c][d] /= counts[c] as f32;
+            }
+        }
+        let sep: f32 = means[0].iter().zip(&means[1]).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(sep > 1.0, "class centroids not separated: {sep}");
+    }
+}

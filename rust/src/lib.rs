@@ -1,0 +1,34 @@
+//! # HiFuse-RS
+//!
+//! Reproduction of *"Accelerating Mini-batch HGNN Training by Reducing CUDA
+//! Kernels"* (Wu et al., 2024) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: heterogeneous graph store,
+//!   synthetic RDF-style dataset generators, mini-batch neighbor sampler,
+//!   CPU-offloaded parallel edge-index selection (the paper's Algorithm 2),
+//!   execution planner (PyG-style baseline vs HiFuse), asynchronous
+//!   CPU/GPU pipeline, metrics and roofline accounting.
+//! * **L2** — JAX stage functions AOT-lowered to HLO text (`python/compile`),
+//!   loaded and executed here through the PJRT C API (`runtime`).
+//! * **L1** — Pallas kernels for the merged neighbor aggregation
+//!   (`python/compile/kernels`), the paper's key data-side optimization.
+//!
+//! Python never runs on the training path: `make artifacts` emits the HLO
+//! modules once, then the `repro` binary is self-contained.
+//!
+//! See `DESIGN.md` for the substitution table (T4 GPU -> CPU PJRT, CUDA
+//! kernel launch -> PJRT dispatch) and the per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod models;
+pub mod perf;
+pub mod report;
+pub mod runtime;
+pub mod sampler;
+pub mod semantic;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,135 @@
+//! Parameter checkpointing: a small self-describing binary format (no
+//! serde offline). Layout: magic, version, the five dims, then each
+//! parameter tensor as little-endian f32, in a fixed order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Params;
+
+const MAGIC: &[u8; 8] = b"HIFUSEck";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u32(w, xs.len() as u32)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u32(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save trainable parameters to `path`.
+pub fn save(params: &Params, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    for d in [params.rpad, params.f, params.h, params.c] {
+        write_u32(&mut w, d as u32)?;
+    }
+    for t in [&params.w0, &params.w1, &params.a_src0, &params.a_dst0, &params.a_src1,
+              &params.a_dst1] {
+        write_f32s(&mut w, t)?;
+    }
+    Ok(())
+}
+
+/// Load parameters from `path`; dims must match the running profile.
+pub fn load(path: &Path) -> Result<Params> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a hifuse checkpoint");
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {ver}");
+    }
+    let rpad = read_u32(&mut r)? as usize;
+    let fdim = read_u32(&mut r)? as usize;
+    let h = read_u32(&mut r)? as usize;
+    let c = read_u32(&mut r)? as usize;
+    let mut p = Params::init(rpad, fdim, h, c, 0);
+    p.w0 = read_f32s(&mut r)?;
+    p.w1 = read_f32s(&mut r)?;
+    p.a_src0 = read_f32s(&mut r)?;
+    p.a_dst0 = read_f32s(&mut r)?;
+    p.a_src1 = read_f32s(&mut r)?;
+    p.a_dst1 = read_f32s(&mut r)?;
+    for (name, t, want) in [
+        ("w0", p.w0.len(), rpad * fdim * h),
+        ("w1", p.w1.len(), rpad * h * c),
+        ("a_src0", p.a_src0.len(), rpad * h),
+        ("a_dst0", p.a_dst0.len(), rpad * h),
+        ("a_src1", p.a_src1.len(), rpad * c),
+        ("a_dst1", p.a_dst1.len(), rpad * c),
+    ] {
+        if t != want {
+            bail!("{path:?}: tensor {name} has {t} elements, expected {want}");
+        }
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_every_tensor() {
+        let p = Params::init(4, 8, 16, 4, 123);
+        let path = std::env::temp_dir().join("hifuse_ckpt_test.bin");
+        save(&p, &path).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.w0, q.w0);
+        assert_eq!(p.w1, q.w1);
+        assert_eq!(p.a_src0, q.a_src0);
+        assert_eq!(p.a_dst1, q.a_dst1);
+        assert_eq!((q.rpad, q.f, q.h, q.c), (4, 8, 16, 4));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let path = std::env::temp_dir().join("hifuse_ckpt_garbage.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_files() {
+        let p = Params::init(2, 4, 8, 2, 7);
+        let path = std::env::temp_dir().join("hifuse_ckpt_trunc.bin");
+        save(&p, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,162 @@
+//! Model layer: RGCN / RGAT parameters, the per-step execution engine
+//! (baseline vs HiFuse plans), and the analytic kernel-count model.
+
+pub mod checkpoint;
+pub mod plan;
+pub mod step;
+
+use crate::util::{tensor, Rng};
+
+/// The two HGNN models the paper evaluates (§5.1): RGCN (simple
+/// architecture, mean aggregation) and RGAT (complex architecture,
+/// per-relation attention aggregation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Rgcn,
+    Rgat,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Rgcn => "rgcn",
+            ModelKind::Rgat => "rgat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rgcn" => Some(ModelKind::Rgcn),
+            "rgat" => Some(ModelKind::Rgat),
+            _ => None,
+        }
+    }
+}
+
+/// Host-resident trainable parameters (padded to RPAD relations; dead
+/// relations receive zero gradients and never move).
+///
+/// The SGD update runs host-side in both execution modes (identical cost,
+/// so it cancels out of every comparison; DESIGN.md §5).
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub rpad: usize,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+    /// `[RPAD, F, H]` layer-0 per-relation projection.
+    pub w0: Vec<f32>,
+    /// `[RPAD, H, C]` layer-1 per-relation projection.
+    pub w1: Vec<f32>,
+    /// RGAT attention vectors, `[RPAD, H]` and `[RPAD, C]`.
+    pub a_src0: Vec<f32>,
+    pub a_dst0: Vec<f32>,
+    pub a_src1: Vec<f32>,
+    pub a_dst1: Vec<f32>,
+}
+
+impl Params {
+    /// Glorot-ish init, deterministic in `seed`.
+    pub fn init(rpad: usize, f: usize, h: usize, c: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9A1A_77);
+        let mut mat = |n: usize, fin: usize, fout: usize| -> Vec<f32> {
+            let s = (2.0 / (fin + fout) as f32).sqrt();
+            (0..n).map(|_| rng.normal() * s).collect()
+        };
+        Params {
+            rpad,
+            f,
+            h,
+            c,
+            w0: mat(rpad * f * h, f, h),
+            w1: mat(rpad * h * c, h, c),
+            a_src0: mat(rpad * h, h, 1),
+            a_dst0: mat(rpad * h, h, 1),
+            a_src1: mat(rpad * c, c, 1),
+            a_dst1: mat(rpad * c, c, 1),
+        }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Params {
+            rpad: self.rpad,
+            f: self.f,
+            h: self.h,
+            c: self.c,
+            w0: vec![0.0; self.w0.len()],
+            w1: vec![0.0; self.w1.len()],
+            a_src0: vec![0.0; self.a_src0.len()],
+            a_dst0: vec![0.0; self.a_dst0.len()],
+            a_src1: vec![0.0; self.a_src1.len()],
+            a_dst1: vec![0.0; self.a_dst1.len()],
+        }
+    }
+
+    /// `self -= lr * g`.
+    pub fn sgd(&mut self, g: &Params, lr: f32) {
+        tensor::sgd_step(&mut self.w0, &g.w0, lr);
+        tensor::sgd_step(&mut self.w1, &g.w1, lr);
+        tensor::sgd_step(&mut self.a_src0, &g.a_src0, lr);
+        tensor::sgd_step(&mut self.a_dst0, &g.a_dst0, lr);
+        tensor::sgd_step(&mut self.a_src1, &g.a_src1, lr);
+        tensor::sgd_step(&mut self.a_dst1, &g.a_dst1, lr);
+    }
+
+    /// Slice of `w{layer}` for relation `r`.
+    pub fn w_rel(&self, layer: usize, r: usize) -> &[f32] {
+        match layer {
+            0 => &self.w0[r * self.f * self.h..(r + 1) * self.f * self.h],
+            1 => &self.w1[r * self.h * self.c..(r + 1) * self.h * self.c],
+            _ => panic!("2-layer model"),
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        let s: f32 = [&self.w0, &self.w1, &self.a_src0, &self.a_dst0, &self.a_src1, &self.a_dst1]
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|x| x * x)
+            .sum();
+        s.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = Params::init(4, 8, 16, 4, 1);
+        let b = Params::init(4, 8, 16, 4, 1);
+        assert_eq!(a.w0, b.w0);
+        let c = Params::init(4, 8, 16, 4, 2);
+        assert_ne!(a.w0, c.w0);
+        // Glorot scale keeps values small.
+        assert!(a.w0.iter().all(|x| x.abs() < 2.0));
+        assert_eq!(a.w0.len(), 4 * 8 * 16);
+        assert_eq!(a.w1.len(), 4 * 16 * 4);
+    }
+
+    #[test]
+    fn sgd_moves_parameters() {
+        let mut p = Params::init(2, 4, 8, 2, 3);
+        let before = p.w0.clone();
+        let mut g = p.zeros_like();
+        g.w0.iter_mut().for_each(|x| *x = 1.0);
+        p.sgd(&g, 0.1);
+        for (a, b) in p.w0.iter().zip(&before) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+        // Untouched params stay put.
+        assert_eq!(p.a_src0, Params::init(2, 4, 8, 2, 3).a_src0);
+    }
+
+    #[test]
+    fn w_rel_slices_are_disjoint_and_cover() {
+        let p = Params::init(3, 2, 5, 4, 7);
+        let total: usize = (0..3).map(|r| p.w_rel(0, r).len()).sum();
+        assert_eq!(total, p.w0.len());
+        assert_eq!(p.w_rel(1, 2).len(), 5 * 4);
+    }
+}

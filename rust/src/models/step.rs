@@ -1,0 +1,782 @@
+//! The training-step executor: chains AOT modules according to the active
+//! execution plan (DESIGN.md §5).
+//!
+//! * **Baseline ("PyG")**: per-relation projection + per-relation
+//!   aggregation dispatches, semantic-graph build on "GPU".
+//! * **HiFuse**: merged aggregation (single Pallas launch per layer,
+//!   Algorithm 1), selection already done on CPU, optionally stacked
+//!   projection (extension).
+//!
+//! Both plans compute the *same* gradients (integration-tested against each
+//! other and against jax.grad via the Python composition test), so every
+//! performance comparison is apples-to-apples.
+
+use anyhow::Result;
+
+use crate::coordinator::ablation::OptConfig;
+use crate::graph::HeteroGraph;
+use crate::models::{ModelKind, Params};
+use crate::runtime::{Arg, DevTensor, Engine, Phase, Stage};
+use crate::sampler::RelEdges;
+use crate::util::{tensor, HostTensor};
+
+/// Profile dims, read once from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub ns: usize,
+    pub ep: usize,
+    pub rpad: usize,
+    pub tpad: usize,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+    pub elp: usize,
+}
+
+impl Dims {
+    pub fn from_engine(eng: &Engine) -> Dims {
+        Dims {
+            ns: eng.cst("NS"),
+            ep: eng.cst("EP"),
+            rpad: eng.cst("RPAD"),
+            tpad: eng.cst("TPAD"),
+            f: eng.cst("F"),
+            h: eng.cst("H"),
+            c: eng.cst("C"),
+            elp: eng.cst("ELP"),
+        }
+    }
+
+    /// Aggregation feature width of layer `l` (l0 -> H, l1 -> C).
+    pub fn fd(&self, l: usize) -> usize {
+        if l == 0 {
+            self.h
+        } else {
+            self.c
+        }
+    }
+}
+
+/// Graph-schema tensors shared by every batch.
+#[derive(Clone, Debug)]
+pub struct SchemaTensors {
+    pub src_type: Vec<usize>,
+    pub dst_type: Vec<usize>,
+    /// `[RPAD]` i32 src types (stacked-projection gather index).
+    pub src_type_i32: HostTensor,
+    /// `[RPAD]` i32 dst types (semantic-fusion segment ids).
+    pub dst_type_i32: HostTensor,
+    pub target_type: usize,
+    pub n_rel: usize,
+}
+
+pub fn schema_tensors(g: &HeteroGraph, d: &Dims) -> SchemaTensors {
+    assert!(g.n_relations() <= d.rpad, "schema exceeds RPAD");
+    assert!(g.n_types() <= d.tpad, "schema exceeds TPAD");
+    let mut src_type = vec![0usize; d.rpad];
+    let mut dst_type = vec![0usize; d.rpad];
+    for (r, rel) in g.relations.iter().enumerate() {
+        src_type[r] = rel.src_type;
+        dst_type[r] = rel.dst_type;
+    }
+    SchemaTensors {
+        src_type_i32: HostTensor::i32(src_type.iter().map(|&t| t as i32).collect(), &[d.rpad]),
+        dst_type_i32: HostTensor::i32(dst_type.iter().map(|&t| t as i32).collect(), &[d.rpad]),
+        src_type,
+        dst_type,
+        target_type: g.target_type,
+        n_rel: g.n_relations(),
+    }
+}
+
+/// One layer's edges in every padded form the modules need.
+#[derive(Clone, Debug)]
+pub struct LayerEdges {
+    /// Per relation: (`[EP]` src, `[EP]` dst, `[EP]` valid); padded zeros.
+    pub per_rel: Vec<(HostTensor, HostTensor, HostTensor)>,
+    /// Relations with at least one edge this layer.
+    pub live: Vec<usize>,
+    /// Merged `[RPAD, EP]` tensors (the Pallas kernel inputs).
+    pub src: HostTensor,
+    pub dst: HostTensor,
+    pub valid: HostTensor,
+}
+
+/// Pad per-relation edge lists (selection output) into module tensors.
+pub fn pad_layer_edges(rels: &[RelEdges], d: &Dims) -> LayerEdges {
+    assert!(rels.len() <= d.rpad);
+    let mut merged_src = vec![0i32; d.rpad * d.ep];
+    let mut merged_dst = vec![0i32; d.rpad * d.ep];
+    let mut merged_valid = vec![0.0f32; d.rpad * d.ep];
+    let mut per_rel = Vec::with_capacity(d.rpad);
+    let mut live = Vec::new();
+    for r in 0..d.rpad {
+        let (mut s, mut t, mut v) = (vec![0i32; d.ep], vec![0i32; d.ep], vec![0.0f32; d.ep]);
+        if let Some(e) = rels.get(r) {
+            assert!(e.len() <= d.ep, "relation {r} exceeds EP after selection");
+            if !e.is_empty() {
+                live.push(r);
+            }
+            for i in 0..e.len() {
+                s[i] = e.src[i] as i32;
+                t[i] = e.dst[i] as i32;
+                v[i] = 1.0;
+            }
+        }
+        merged_src[r * d.ep..r * d.ep + d.ep].copy_from_slice(&s);
+        merged_dst[r * d.ep..r * d.ep + d.ep].copy_from_slice(&t);
+        merged_valid[r * d.ep..r * d.ep + d.ep].copy_from_slice(&v);
+        per_rel.push((
+            HostTensor::i32(s, &[d.ep]),
+            HostTensor::i32(t, &[d.ep]),
+            HostTensor::f32(v, &[d.ep]),
+        ));
+    }
+    LayerEdges {
+        per_rel,
+        live,
+        src: HostTensor::i32(merged_src, &[d.rpad, d.ep]),
+        dst: HostTensor::i32(merged_dst, &[d.rpad, d.ep]),
+        valid: HostTensor::f32(merged_valid, &[d.rpad, d.ep]),
+    }
+}
+
+/// A fully prepared batch: everything `train_step` needs.
+pub struct BatchData {
+    /// `[TPAD, NS, F]` raw features.
+    pub xs: HostTensor,
+    pub labels: HostTensor,
+    pub seed_mask: HostTensor,
+    pub n_seed: usize,
+    pub layers: Vec<LayerEdges>,
+}
+
+pub struct StepResult {
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub n_seed: usize,
+}
+
+// --------------------------------------------------------------------------
+// host tensor helpers
+// --------------------------------------------------------------------------
+
+/// Copy type slab `t` (`[NS, F]`) out of a `[TPAD, NS, F]` tensor.
+fn slab(h: &HostTensor, t: usize, ns: usize, f: usize) -> Result<HostTensor> {
+    let d = h.as_f32()?;
+    Ok(HostTensor::f32(d[t * ns * f..(t + 1) * ns * f].to_vec(), &[ns, f]))
+}
+
+/// View relation `r`'s `[NS, Fd]` block of a `[RPAD, NS, Fd]` stack.
+fn stack_block(stack: &[f32], r: usize, ns: usize, fd: usize) -> &[f32] {
+    &stack[r * ns * fd..(r + 1) * ns * fd]
+}
+
+/// An activation that is either host-resident (per-relation plans need to
+/// slice it) or still on the device (the merged plan chains it straight
+/// into the next dispatch — §Perf #5).
+enum Stack {
+    Host(HostTensor),
+    Dev(DevTensor),
+}
+
+impl Stack {
+    fn as_arg(&self) -> Arg<'_> {
+        match self {
+            Stack::Host(h) => Arg::Host(h),
+            Stack::Dev(d) => Arg::Dev(d),
+        }
+    }
+
+    fn as_host(&self) -> &HostTensor {
+        match self {
+            Stack::Host(h) => h,
+            Stack::Dev(_) => panic!("activation unexpectedly device-resident"),
+        }
+    }
+}
+
+struct LayerFwd {
+    /// `[RPAD, NS, Fd]` projected source features (zeros for dead rels).
+    pstack: Vec<f32>,
+    /// RGAT only: projected destination features.
+    pstack_dst: Option<Vec<f32>>,
+    /// `[RPAD, NS, Fd]` aggregated features.
+    astack: Stack,
+    /// `[TPAD, NS, Fd]` fused output.
+    hout: HostTensor,
+}
+
+// --------------------------------------------------------------------------
+// the step executor
+// --------------------------------------------------------------------------
+
+pub struct StepExecutor<'e> {
+    pub eng: &'e Engine,
+    pub d: Dims,
+    pub model: ModelKind,
+    pub opt: OptConfig,
+}
+
+impl<'e> StepExecutor<'e> {
+    pub fn new(eng: &'e Engine, model: ModelKind, opt: OptConfig) -> Self {
+        let d = Dims::from_engine(eng);
+        StepExecutor { eng, d, model, opt }
+    }
+
+    fn proj_name(l: usize, bwd: bool, stacked: bool) -> &'static str {
+        match (l, bwd, stacked) {
+            (0, false, false) => "proj_fwd_l0",
+            (1, false, false) => "proj_fwd_l1",
+            (0, true, false) => "proj_bwd_l0",
+            (1, true, false) => "proj_bwd_l1",
+            (0, false, true) => "proj_stacked_fwd_l0",
+            (1, false, true) => "proj_stacked_fwd_l1",
+            (0, true, true) => "proj_stacked_bwd_l0",
+            (1, true, true) => "proj_stacked_bwd_l1",
+            _ => unreachable!(),
+        }
+    }
+
+    fn agg_name(&self, l: usize, bwd: bool) -> &'static str {
+        let merged = self.opt.merge;
+        match (self.model, merged, l, bwd) {
+            (ModelKind::Rgcn, false, 0, false) => "agg_mean_fwd_h",
+            (ModelKind::Rgcn, false, 1, false) => "agg_mean_fwd_c",
+            (ModelKind::Rgcn, false, 0, true) => "agg_mean_bwd_h",
+            (ModelKind::Rgcn, false, 1, true) => "agg_mean_bwd_c",
+            (ModelKind::Rgcn, true, 0, false) => "agg_merged_fwd_h",
+            (ModelKind::Rgcn, true, 1, false) => "agg_merged_fwd_c",
+            (ModelKind::Rgcn, true, 0, true) => "agg_merged_bwd_h",
+            (ModelKind::Rgcn, true, 1, true) => "agg_merged_bwd_c",
+            (ModelKind::Rgat, false, 0, false) => "att_agg_fwd_h",
+            (ModelKind::Rgat, false, 1, false) => "att_agg_fwd_c",
+            (ModelKind::Rgat, false, 0, true) => "att_agg_bwd_h",
+            (ModelKind::Rgat, false, 1, true) => "att_agg_bwd_c",
+            (ModelKind::Rgat, true, 0, false) => "att_merged_fwd_h",
+            (ModelKind::Rgat, true, 1, false) => "att_merged_fwd_c",
+            (ModelKind::Rgat, true, 0, true) => "att_merged_bwd_h",
+            (ModelKind::Rgat, true, 1, true) => "att_merged_bwd_c",
+            _ => unreachable!("2-layer model"),
+        }
+    }
+
+    /// Per-relation weight tensor `[Fin, Fout]`.
+    fn w_tensor(&self, params: &Params, l: usize, r: usize) -> HostTensor {
+        let (fin, fout) = if l == 0 { (self.d.f, self.d.h) } else { (self.d.h, self.d.c) };
+        HostTensor::f32(params.w_rel(l, r).to_vec(), &[fin, fout])
+    }
+
+    fn w_full(&self, params: &Params, l: usize) -> HostTensor {
+        let (fin, fout) = if l == 0 { (self.d.f, self.d.h) } else { (self.d.h, self.d.c) };
+        let w = if l == 0 { &params.w0 } else { &params.w1 };
+        HostTensor::f32(w.clone(), &[self.d.rpad, fin, fout])
+    }
+
+    fn att_vecs(&self, params: &Params, l: usize) -> (HostTensor, HostTensor) {
+        let fd = self.d.fd(l);
+        let (s, t) = if l == 0 {
+            (&params.a_src0, &params.a_dst0)
+        } else {
+            (&params.a_src1, &params.a_dst1)
+        };
+        (
+            HostTensor::f32(s.clone(), &[self.d.rpad, fd]),
+            HostTensor::f32(t.clone(), &[self.d.rpad, fd]),
+        )
+    }
+
+    /// Project one endpoint slab stack: per-relation dispatches (baseline &
+    /// paper-HiFuse) or one stacked dispatch (extension). `types` selects
+    /// src or dst endpoint typing.
+    fn project(
+        &self,
+        l: usize,
+        hin: &HostTensor,
+        params: &Params,
+        schema: &SchemaTensors,
+        edges: &LayerEdges,
+        types: &[usize],
+        types_i32: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        let (d, eng) = (&self.d, self.eng);
+        let fd = d.fd(l);
+        if self.opt.stacked_proj {
+            let w = self.w_full(params, l);
+            let out = eng.run(
+                Self::proj_name(l, false, true),
+                Stage::Projection,
+                Phase::Fwd,
+                &[hin, &w, types_i32],
+            )?;
+            return out.into_iter().next().unwrap().into_f32();
+        }
+        let _ = schema;
+        let mut pstack = vec![0.0f32; d.rpad * d.ns * fd];
+        for &r in &edges.live {
+            let x = slab(hin, types[r], d.ns, if l == 0 { d.f } else { d.h })?;
+            let w = self.w_tensor(params, l, r);
+            let y = eng.run(
+                Self::proj_name(l, false, false),
+                Stage::Projection,
+                Phase::Fwd,
+                &[&x, &w],
+            )?;
+            let y = y.into_iter().next().unwrap().into_f32()?;
+            pstack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&y);
+        }
+        Ok(pstack)
+    }
+
+    fn layer_forward(
+        &self,
+        l: usize,
+        hin: &HostTensor,
+        params: &Params,
+        schema: &SchemaTensors,
+        edges: &LayerEdges,
+    ) -> Result<LayerFwd> {
+        let (d, eng) = (&self.d, self.eng);
+        let fd = d.fd(l);
+
+        let pstack = self.project(l, hin, params, schema, edges, &schema.src_type,
+                                  &schema.src_type_i32)?;
+        let pstack_dst = if self.model == ModelKind::Rgat {
+            Some(self.project(l, hin, params, schema, edges, &schema.dst_type,
+                              &schema.dst_type_i32)?)
+        } else {
+            None
+        };
+
+        let pst = HostTensor::f32(pstack.clone(), &[d.rpad, d.ns, fd]);
+        let astack = if self.opt.merge {
+            match self.model {
+                ModelKind::Rgcn => {
+                    // Device-resident: the merged aggregation output feeds
+                    // fusion directly without a host round-trip (§Perf #5).
+                    Stack::Dev(eng.run_dev(
+                        self.agg_name(l, false),
+                        Stage::Aggregation,
+                        Phase::Fwd,
+                        &[
+                            Arg::Host(&pst),
+                            Arg::Host(&edges.src),
+                            Arg::Host(&edges.dst),
+                            Arg::Host(&edges.valid),
+                        ],
+                    )?)
+                }
+                ModelKind::Rgat => {
+                    let pdst =
+                        HostTensor::f32(pstack_dst.clone().unwrap(), &[d.rpad, d.ns, fd]);
+                    let (a_s, a_d) = self.att_vecs(params, l);
+                    Stack::Dev(eng.run_dev(
+                        self.agg_name(l, false),
+                        Stage::Aggregation,
+                        Phase::Fwd,
+                        &[
+                            Arg::Host(&pst),
+                            Arg::Host(&pdst),
+                            Arg::Host(&a_s),
+                            Arg::Host(&a_d),
+                            Arg::Host(&edges.src),
+                            Arg::Host(&edges.dst),
+                            Arg::Host(&edges.valid),
+                        ],
+                    )?)
+                }
+            }
+        } else {
+            let mut astack = vec![0.0f32; d.rpad * d.ns * fd];
+            for &r in &edges.live {
+                let feat =
+                    HostTensor::f32(stack_block(&pstack, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+                let (src, dst, valid) = &edges.per_rel[r];
+                let out = match self.model {
+                    ModelKind::Rgcn => eng.run(
+                        self.agg_name(l, false),
+                        Stage::Aggregation,
+                        Phase::Fwd,
+                        &[&feat, src, dst, valid],
+                    )?,
+                    ModelKind::Rgat => {
+                        let pd = pstack_dst.as_ref().unwrap();
+                        let fdst =
+                            HostTensor::f32(stack_block(pd, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+                        let (a_s, a_d) = self.att_vecs(params, l);
+                        let asl = HostTensor::f32(a_s.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
+                        let adl = HostTensor::f32(a_d.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
+                        eng.run(
+                            self.agg_name(l, false),
+                            Stage::Aggregation,
+                            Phase::Fwd,
+                            &[&feat, &fdst, &asl, &adl, src, dst, valid],
+                        )?
+                    }
+                };
+                let out = out.into_iter().next().unwrap().into_f32()?;
+                astack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&out);
+            }
+            Stack::Host(HostTensor::f32(astack, &[d.rpad, d.ns, fd]))
+        };
+
+        let fuse_name = if l == 0 { "fuse_relu_fwd_h" } else { "fuse_lin_fwd_c" };
+        let hout = eng
+            .run_dev(
+                fuse_name,
+                Stage::Fusion,
+                Phase::Fwd,
+                &[Arg::Host(&schema.dst_type_i32), astack.as_arg()],
+            )?
+            .to_host()?;
+
+        Ok(LayerFwd { pstack, pstack_dst, astack, hout })
+    }
+
+    /// Backward through one layer: consumes `dhout`, returns `dhin` and
+    /// fills this layer's weight gradients.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_backward(
+        &self,
+        l: usize,
+        hin: &HostTensor,
+        fwd: &LayerFwd,
+        dhout: &HostTensor,
+        params: &Params,
+        grads: &mut Params,
+        schema: &SchemaTensors,
+        edges: &LayerEdges,
+    ) -> Result<HostTensor> {
+        let (d, eng) = (&self.d, self.eng);
+        let fd = d.fd(l);
+        let fin = if l == 0 { d.f } else { d.h };
+
+        let fuse_name = if l == 0 { "fuse_relu_bwd_h" } else { "fuse_lin_bwd_c" };
+        // Merged plan: fusion backward and (RGCN) aggregation backward chain
+        // device-resident; only the final dp comes back to the host for
+        // per-relation projection slicing (§Perf #5).
+        let da: Stack = if self.opt.merge {
+            Stack::Dev(eng.run_dev(
+                fuse_name,
+                Stage::Fusion,
+                Phase::Bwd,
+                &[Arg::Host(&schema.dst_type_i32), fwd.astack.as_arg(), Arg::Host(dhout)],
+            )?)
+        } else {
+            Stack::Host(
+                eng.run(
+                    fuse_name,
+                    Stage::Fusion,
+                    Phase::Bwd,
+                    &[&schema.dst_type_i32, fwd.astack.as_host(), dhout],
+                )?
+                .into_iter()
+                .next()
+                .unwrap(),
+            )
+        };
+
+        // --- aggregation backward: dp (and attention grads for RGAT).
+        let pst = HostTensor::f32(fwd.pstack.clone(), &[d.rpad, d.ns, fd]);
+        let (dp, dp_dst): (Vec<f32>, Option<Vec<f32>>) = if self.opt.merge {
+            match self.model {
+                ModelKind::Rgcn => {
+                    let dp_dev = eng.run_dev(
+                        self.agg_name(l, true),
+                        Stage::Aggregation,
+                        Phase::Bwd,
+                        &[
+                            Arg::Host(&edges.src),
+                            Arg::Host(&edges.dst),
+                            Arg::Host(&edges.valid),
+                            da.as_arg(),
+                        ],
+                    )?;
+                    (dp_dev.to_host()?.into_f32()?, None)
+                }
+                ModelKind::Rgat => {
+                    // The attention VJP module is multi-output, so its da
+                    // input must be host-resident.
+                    let da_host = match &da {
+                        Stack::Dev(dev) => dev.to_host()?,
+                        Stack::Host(h) => h.clone(),
+                    };
+                    let pdst =
+                        HostTensor::f32(fwd.pstack_dst.clone().unwrap(), &[d.rpad, d.ns, fd]);
+                    let (a_s, a_d) = self.att_vecs(params, l);
+                    let mut out = eng
+                        .run(
+                            self.agg_name(l, true),
+                            Stage::Aggregation,
+                            Phase::Bwd,
+                            &[&pst, &pdst, &a_s, &a_d, &edges.src, &edges.dst, &edges.valid,
+                              &da_host],
+                        )?
+                        .into_iter();
+                    let dfs = out.next().unwrap().into_f32()?;
+                    let dfd = out.next().unwrap().into_f32()?;
+                    let das = out.next().unwrap().into_f32()?;
+                    let dad = out.next().unwrap().into_f32()?;
+                    self.store_att_grads(l, grads, &das, &dad);
+                    (dfs, Some(dfd))
+                }
+            }
+        } else {
+            let mut dp = vec![0.0f32; d.rpad * d.ns * fd];
+            let mut dpd = vec![0.0f32; d.rpad * d.ns * fd];
+            let da_flat = da.as_host().as_f32()?;
+            for &r in &edges.live {
+                let da_r =
+                    HostTensor::f32(stack_block(da_flat, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+                let (src, dst, valid) = &edges.per_rel[r];
+                match self.model {
+                    ModelKind::Rgcn => {
+                        let feat = HostTensor::f32(
+                            stack_block(&fwd.pstack, r, d.ns, fd).to_vec(),
+                            &[d.ns, fd],
+                        );
+                        let out = eng.run(
+                            self.agg_name(l, true),
+                            Stage::Aggregation,
+                            Phase::Bwd,
+                            &[&feat, src, dst, valid, &da_r],
+                        )?;
+                        let g = out.into_iter().next().unwrap().into_f32()?;
+                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&g);
+                    }
+                    ModelKind::Rgat => {
+                        let feat = HostTensor::f32(
+                            stack_block(&fwd.pstack, r, d.ns, fd).to_vec(),
+                            &[d.ns, fd],
+                        );
+                        let pdall = fwd.pstack_dst.as_ref().unwrap();
+                        let fdst = HostTensor::f32(
+                            stack_block(pdall, r, d.ns, fd).to_vec(),
+                            &[d.ns, fd],
+                        );
+                        let (a_s_all, a_d_all) = self.att_vecs(params, l);
+                        let asl = HostTensor::f32(
+                            a_s_all.as_f32()?[r * fd..(r + 1) * fd].to_vec(),
+                            &[fd],
+                        );
+                        let adl = HostTensor::f32(
+                            a_d_all.as_f32()?[r * fd..(r + 1) * fd].to_vec(),
+                            &[fd],
+                        );
+                        let mut out = eng
+                            .run(
+                                self.agg_name(l, true),
+                                Stage::Aggregation,
+                                Phase::Bwd,
+                                &[&feat, &fdst, &asl, &adl, src, dst, valid, &da_r],
+                            )?
+                            .into_iter();
+                        let dfs = out.next().unwrap().into_f32()?;
+                        let dfd = out.next().unwrap().into_f32()?;
+                        let das = out.next().unwrap().into_f32()?;
+                        let dad = out.next().unwrap().into_f32()?;
+                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&dfs);
+                        dpd[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&dfd);
+                        let (gs, gd) = self.att_grad_slices(l, grads);
+                        gs[r * fd..(r + 1) * fd].copy_from_slice(&das);
+                        gd[r * fd..(r + 1) * fd].copy_from_slice(&dad);
+                    }
+                }
+            }
+            (dp, (self.model == ModelKind::Rgat).then_some(dpd))
+        };
+
+        // --- projection backward: dhin + dW.
+        let mut dhin = vec![0.0f32; d.tpad * d.ns * fin];
+        self.project_backward(l, hin, params, grads, schema, edges, &dp,
+                              &schema.src_type, &schema.src_type_i32, &mut dhin, false)?;
+        if let Some(dpd) = &dp_dst {
+            self.project_backward(l, hin, params, grads, schema, edges, dpd,
+                                  &schema.dst_type, &schema.dst_type_i32, &mut dhin, true)?;
+        }
+        Ok(HostTensor::f32(dhin, &[d.tpad, d.ns, fin]))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn project_backward(
+        &self,
+        l: usize,
+        hin: &HostTensor,
+        params: &Params,
+        grads: &mut Params,
+        schema: &SchemaTensors,
+        edges: &LayerEdges,
+        dp: &[f32],
+        types: &[usize],
+        types_i32: &HostTensor,
+        dhin: &mut [f32],
+        accumulate_w: bool,
+    ) -> Result<()> {
+        let (d, eng) = (&self.d, self.eng);
+        let fd = d.fd(l);
+        let fin = if l == 0 { d.f } else { d.h };
+        if self.opt.stacked_proj {
+            let w = self.w_full(params, l);
+            let dpt = HostTensor::f32(dp.to_vec(), &[d.rpad, d.ns, fd]);
+            let mut out = eng
+                .run(
+                    Self::proj_name(l, true, true),
+                    Stage::Projection,
+                    Phase::Bwd,
+                    &[hin, &w, types_i32, &dpt],
+                )?
+                .into_iter();
+            let dxs = out.next().unwrap().into_f32()?;
+            let dw = out.next().unwrap().into_f32()?;
+            tensor::add_assign(dhin, &dxs);
+            let gw = if l == 0 { &mut grads.w0 } else { &mut grads.w1 };
+            tensor::add_assign(gw, &dw);
+            return Ok(());
+        }
+        let _ = schema;
+        for &r in &edges.live {
+            let x = slab(hin, types[r], d.ns, fin)?;
+            let w = self.w_tensor(params, l, r);
+            let dy = HostTensor::f32(stack_block(dp, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+            let mut out = eng
+                .run(Self::proj_name(l, true, false), Stage::Projection, Phase::Bwd,
+                     &[&x, &w, &dy])?
+                .into_iter();
+            let dx = out.next().unwrap().into_f32()?;
+            let dw = out.next().unwrap().into_f32()?;
+            let t = types[r];
+            tensor::add_assign(&mut dhin[t * d.ns * fin..(t + 1) * d.ns * fin], &dx);
+            let gw = if l == 0 { &mut grads.w0 } else { &mut grads.w1 };
+            let gw_r = &mut gw[r * fin * fd..(r + 1) * fin * fd];
+            if accumulate_w {
+                tensor::add_assign(gw_r, &dw);
+            } else {
+                gw_r.copy_from_slice(&dw);
+            }
+        }
+        Ok(())
+    }
+
+    fn store_att_grads(&self, l: usize, grads: &mut Params, das: &[f32], dad: &[f32]) {
+        let (gs, gd) = self.att_grad_slices(l, grads);
+        gs.copy_from_slice(das);
+        gd.copy_from_slice(dad);
+    }
+
+    fn att_grad_slices<'g>(&self, l: usize, grads: &'g mut Params) -> (&'g mut [f32], &'g mut [f32]) {
+        if l == 0 {
+            (&mut grads.a_src0, &mut grads.a_dst0)
+        } else {
+            (&mut grads.a_src1, &mut grads.a_dst1)
+        }
+    }
+
+    /// Run one full training step (forward, loss, backward, SGD update).
+    pub fn train_step(
+        &self,
+        params: &mut Params,
+        schema: &SchemaTensors,
+        batch: &BatchData,
+        lr: f32,
+    ) -> Result<StepResult> {
+        let (d, eng) = (&self.d, self.eng);
+        assert_eq!(batch.layers.len(), 2, "2-layer model");
+
+        // ---- forward
+        let l0 = self.layer_forward(0, &batch.xs, params, schema, &batch.layers[0])?;
+        let l1 = self.layer_forward(1, &l0.hout, params, schema, &batch.layers[1])?;
+
+        // ---- head (loss + dlogits + accuracy in one dispatch)
+        let logits = slab(&l1.hout, schema.target_type, d.ns, d.c)?;
+        let mut out = eng
+            .run("head", Stage::Head, Phase::Fwd,
+                 &[&logits, &batch.labels, &batch.seed_mask])?
+            .into_iter();
+        let loss = out.next().unwrap().scalar()?;
+        let dlogits = out.next().unwrap().into_f32()?;
+        let ncorrect = out.next().unwrap().scalar()?;
+
+        // ---- backward
+        let mut grads = params.zeros_like();
+        let mut dh2 = vec![0.0f32; d.tpad * d.ns * d.c];
+        let t = schema.target_type;
+        dh2[t * d.ns * d.c..(t + 1) * d.ns * d.c].copy_from_slice(&dlogits);
+        let dh2 = HostTensor::f32(dh2, &[d.tpad, d.ns, d.c]);
+
+        let dh1 = self.layer_backward(1, &l0.hout, &l1, &dh2, params, &mut grads, schema,
+                                      &batch.layers[1])?;
+        let _dx = self.layer_backward(0, &batch.xs, &l0, &dh1, params, &mut grads, schema,
+                                      &batch.layers[0])?;
+
+        params.sgd(&grads, lr);
+        Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
+    }
+
+    /// Forward-only pass returning (loss, ncorrect) — evaluation helper.
+    pub fn eval_step(
+        &self,
+        params: &Params,
+        schema: &SchemaTensors,
+        batch: &BatchData,
+    ) -> Result<StepResult> {
+        let (d, eng) = (&self.d, self.eng);
+        let l0 = self.layer_forward(0, &batch.xs, params, schema, &batch.layers[0])?;
+        let l1 = self.layer_forward(1, &l0.hout, params, schema, &batch.layers[1])?;
+        let logits = slab(&l1.hout, schema.target_type, d.ns, d.c)?;
+        let mut out = eng
+            .run("head", Stage::Head, Phase::Fwd,
+                 &[&logits, &batch.labels, &batch.seed_mask])?
+            .into_iter();
+        let loss = out.next().unwrap().scalar()?;
+        let _ = out.next();
+        let ncorrect = out.next().unwrap().scalar()?;
+        Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::RelEdges;
+
+    fn dims() -> Dims {
+        Dims { ns: 4, ep: 3, rpad: 3, tpad: 2, f: 2, h: 3, c: 2, elp: 9 }
+    }
+
+    #[test]
+    fn pad_layer_edges_builds_consistent_tensors() {
+        let d = dims();
+        let rels = vec![
+            RelEdges { src: vec![1, 2], dst: vec![0, 3] },
+            RelEdges::default(),
+            RelEdges { src: vec![3], dst: vec![1] },
+        ];
+        let le = pad_layer_edges(&rels, &d);
+        assert_eq!(le.live, vec![0, 2]);
+        let (s0, d0, v0) = &le.per_rel[0];
+        assert_eq!(s0.as_i32().unwrap(), &[1, 2, 0]);
+        assert_eq!(d0.as_i32().unwrap(), &[0, 3, 0]);
+        assert_eq!(v0.as_f32().unwrap(), &[1.0, 1.0, 0.0]);
+        // Merged rows mirror per-rel rows.
+        let ms = le.src.as_i32().unwrap();
+        assert_eq!(&ms[0..3], s0.as_i32().unwrap());
+        assert_eq!(&ms[6..9], le.per_rel[2].0.as_i32().unwrap());
+        let mv = le.valid.as_f32().unwrap();
+        assert_eq!(&mv[3..6], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds EP")]
+    fn pad_layer_edges_rejects_overflow() {
+        let d = dims();
+        let rels = vec![RelEdges { src: vec![0, 1, 2, 3], dst: vec![0, 1, 2, 3] }];
+        pad_layer_edges(&rels, &d);
+    }
+
+    #[test]
+    fn dims_fd_maps_layers() {
+        let d = dims();
+        assert_eq!(d.fd(0), 3);
+        assert_eq!(d.fd(1), 2);
+    }
+}

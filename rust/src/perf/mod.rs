@@ -1,0 +1,210 @@
+//! Performance accounting: analytic FLOP/byte cost model per module,
+//! machine-peak calibration, and the roofline rows behind Fig. 3(b) and
+//! Table 3.
+//!
+//! Peaks are *measured on this machine* (a dense matmul for compute, a
+//! large memcpy for bandwidth, a minimal dispatch for launch overhead), so
+//! "throughput %" numbers are relative to the same substrate the kernels
+//! run on — the CPU-PJRT analogue of Nsight Compute's SOL metrics.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::models::step::Dims;
+use crate::runtime::{Engine, Event, Phase, Stage};
+use crate::util::HostTensor;
+
+/// Calibrated machine peaks.
+#[derive(Clone, Copy, Debug)]
+pub struct Peaks {
+    pub gflops: f64,
+    pub membw_gbs: f64,
+    pub dispatch_us: f64,
+}
+
+/// Analytic cost of one dispatch of `module`: (flops, bytes moved).
+/// Algorithmic costs (what the op must do), not implementation costs — the
+/// same convention roofline studies use.
+pub fn module_cost(module: &str, d: &Dims) -> (f64, f64) {
+    let (ns, ep, rp, tp, f, h, c, elp) = (
+        d.ns as f64,
+        d.ep as f64,
+        d.rpad as f64,
+        d.tpad as f64,
+        d.f as f64,
+        d.h as f64,
+        d.c as f64,
+        d.elp as f64,
+    );
+    let fd = |sfx: &str| if sfx.ends_with('h') { h } else { c };
+    let b = 4.0; // f32/i32 bytes
+    match module {
+        "edge_select" => (elp * 16.0, 2.0 * elp * b), // compare + bitonic-ish sort
+        "proj_fwd_l0" => (2.0 * ns * f * h, (ns * f + f * h + ns * h) * b),
+        "proj_fwd_l1" => (2.0 * ns * h * c, (ns * h + h * c + ns * c) * b),
+        "proj_bwd_l0" => (4.0 * ns * f * h, (2.0 * ns * f + 2.0 * f * h + ns * h) * b),
+        "proj_bwd_l1" => (4.0 * ns * h * c, (2.0 * ns * h + 2.0 * h * c + ns * c) * b),
+        "proj_stacked_fwd_l0" => (2.0 * rp * ns * f * h, (tp * ns * f + rp * f * h + rp * ns * h) * b),
+        "proj_stacked_fwd_l1" => (2.0 * rp * ns * h * c, (tp * ns * h + rp * h * c + rp * ns * c) * b),
+        "proj_stacked_bwd_l0" => (4.0 * rp * ns * f * h, (tp * ns * f + 2.0 * rp * f * h + rp * ns * h) * b),
+        "proj_stacked_bwd_l1" => (4.0 * rp * ns * h * c, (tp * ns * h + 2.0 * rp * h * c + rp * ns * c) * b),
+        m if m.starts_with("agg_mean_fwd") => {
+            let fd = fd(m);
+            (2.0 * ep * fd + ns * fd, (ns * fd + ep * fd + 3.0 * ep + ns * fd) * b)
+        }
+        m if m.starts_with("agg_mean_bwd") => {
+            let fd = fd(m);
+            (2.0 * ep * fd + ns * fd, (2.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("agg_merged_fwd") => {
+            let fd = fd(m);
+            (rp * (2.0 * ep * fd + ns * fd), rp * (2.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("agg_merged_bwd") => {
+            let fd = fd(m);
+            (rp * (2.0 * ep * fd + ns * fd), rp * (2.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("att_agg_fwd") => {
+            let fd = fd(m);
+            (4.0 * ns * fd + 10.0 * ep + 2.0 * ep * fd, (2.0 * ns * fd + ep * fd + 3.0 * ep + ns * fd) * b)
+        }
+        m if m.starts_with("att_agg_bwd") => {
+            let fd = fd(m);
+            (2.0 * (4.0 * ns * fd + 10.0 * ep + 2.0 * ep * fd), 2.0 * (3.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("att_merged_fwd") => {
+            let fd = fd(m);
+            (rp * (4.0 * ns * fd + 10.0 * ep + 2.0 * ep * fd), rp * (3.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("att_merged_bwd") => {
+            let fd = fd(m);
+            (2.0 * rp * (4.0 * ns * fd + 10.0 * ep + 2.0 * ep * fd), 2.0 * rp * (3.0 * ns * fd + ep * fd + 3.0 * ep) * b)
+        }
+        m if m.starts_with("fuse_relu") || m.starts_with("fuse_lin") => {
+            // Segment scatter-add over relations (dst_type-indexed).
+            let fd = if m.contains("_h") { h } else { c };
+            (rp * ns * fd, (rp * ns * fd + rp + tp * ns * fd) * b)
+        }
+        "head" => (10.0 * ns * c, (2.0 * ns * c + 2.0 * ns) * b),
+        _ => (0.0, 0.0),
+    }
+}
+
+/// Calibrate machine peaks. Compute peak via the biggest matmul module in
+/// the profile; bandwidth via a 64 MB memcpy; dispatch overhead via the
+/// engine's probe.
+pub fn calibrate(eng: &Engine) -> Result<Peaks> {
+    let d = Dims::from_engine(eng);
+    // -- compute peak: stacked projection is the densest matmul we ship.
+    let xs = HostTensor::zeros_f32(&[d.tpad, d.ns, d.f]);
+    let w = HostTensor::zeros_f32(&[d.rpad, d.f, d.h]);
+    let st = HostTensor::i32(vec![0; d.rpad], &[d.rpad]);
+    eng.run("proj_stacked_fwd_l0", Stage::Calib, Phase::Fwd, &[&xs, &w, &st])?; // warm+compile
+    let (flops, _) = module_cost("proj_stacked_fwd_l0", &d);
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        eng.run("proj_stacked_fwd_l0", Stage::Calib, Phase::Fwd, &[&xs, &w, &st])?;
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    let gflops = flops / dt / 1e9;
+
+    // -- memory bandwidth: big out-of-cache copy.
+    let n = 16 * 1024 * 1024; // 64 MB of f32
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let t0 = Instant::now();
+    dst.copy_from_slice(&src);
+    let bw = (2.0 * n as f64 * 4.0) / t0.elapsed().as_secs_f64() / 1e9;
+    std::hint::black_box(&dst);
+
+    let dispatch_us = eng.measure_dispatch_overhead(20)?.as_secs_f64() * 1e6;
+    Ok(Peaks { gflops: gflops.max(1e-9), membw_gbs: bw.max(1e-9), dispatch_us })
+}
+
+/// One roofline point (Fig. 3b): a dispatched kernel's arithmetic
+/// intensity vs achieved compute, plus its bound classification.
+#[derive(Clone, Debug)]
+pub struct RooflineRow {
+    pub module: &'static str,
+    pub stage: Stage,
+    pub ai: f64,
+    pub achieved_gflops: f64,
+    pub compute_pct: f64,
+    pub memory_pct: f64,
+    pub memory_bound: bool,
+    pub dur_us: f64,
+}
+
+pub fn roofline_rows(events: &[Event], d: &Dims, peaks: &Peaks) -> Vec<RooflineRow> {
+    events
+        .iter()
+        .filter(|e| e.stage != Stage::Calib)
+        .map(|e| {
+            let (flops, bytes) = module_cost(e.module, d);
+            let secs = e.dur.as_secs_f64().max(1e-9);
+            let achieved = flops / secs / 1e9;
+            let achieved_bw = bytes / secs / 1e9;
+            let ai = flops / bytes.max(1.0);
+            // Roofline knee: memory-bound iff AI < peak_flops / peak_bw.
+            let knee = peaks.gflops / peaks.membw_gbs;
+            RooflineRow {
+                module: e.module,
+                stage: e.stage,
+                ai,
+                achieved_gflops: achieved,
+                compute_pct: 100.0 * achieved / peaks.gflops,
+                memory_pct: 100.0 * achieved_bw / peaks.membw_gbs,
+                memory_bound: ai < knee,
+                dur_us: e.dur.as_secs_f64() * 1e6,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims { ns: 512, ep: 256, rpad: 128, tpad: 32, f: 32, h: 64, c: 16, elp: 32768 }
+    }
+
+    #[test]
+    fn aggregation_is_low_intensity_projection_is_high() {
+        let d = dims();
+        let (af, ab) = module_cost("agg_mean_fwd_h", &d);
+        let (pf, pb) = module_cost("proj_fwd_l0", &d);
+        let agg_ai = af / ab;
+        let proj_ai = pf / pb;
+        // The paper's Fig. 3b: scatter/gather kernels are memory-bound
+        // (AI << 1), dense projection is much denser.
+        assert!(agg_ai < 0.5, "agg AI {agg_ai}");
+        assert!(proj_ai > 5.0 * agg_ai, "proj AI {proj_ai} vs agg {agg_ai}");
+    }
+
+    #[test]
+    fn merged_cost_is_rpad_times_per_relation() {
+        let d = dims();
+        let (mf, mb) = module_cost("agg_merged_fwd_h", &d);
+        let (sf, _) = module_cost("agg_mean_fwd_h", &d);
+        assert!((mf / sf - d.rpad as f64).abs() < 1.0);
+        assert!(mb > 0.0);
+    }
+
+    #[test]
+    fn every_shipping_module_has_a_cost() {
+        let d = dims();
+        for m in [
+            "edge_select", "head", "proj_fwd_l0", "proj_fwd_l1", "proj_bwd_l0",
+            "proj_bwd_l1", "proj_stacked_fwd_l0", "proj_stacked_bwd_l1",
+            "agg_mean_fwd_h", "agg_mean_bwd_c", "agg_merged_fwd_h", "agg_merged_bwd_c",
+            "att_agg_fwd_h", "att_agg_bwd_c", "att_merged_fwd_h", "att_merged_bwd_c",
+            "fuse_relu_fwd_h", "fuse_lin_bwd_c",
+        ] {
+            let (f, b) = module_cost(m, &d);
+            assert!(f > 0.0 && b > 0.0, "{m} has no cost model");
+        }
+    }
+}

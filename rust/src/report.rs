@@ -1,0 +1,86 @@
+//! Result writers: CSV + markdown tables into `results/` (the bench
+//! harness regenerates every paper table/figure as one of these files).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// Results directory (created on demand), honoring `HIFUSE_RESULTS_DIR`.
+pub fn results_dir() -> Result<PathBuf> {
+    let dir = std::env::var("HIFUSE_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    let p = PathBuf::from(dir);
+    std::fs::create_dir_all(&p).with_context(|| format!("creating {p:?}"))?;
+    Ok(p)
+}
+
+/// Write a CSV file under results/.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+    let path = results_dir()?.join(name);
+    let mut out = String::new();
+    writeln!(out, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(out, "{}", r.join(","))?;
+    }
+    std::fs::write(&path, out).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Write a markdown table under results/ and echo it to stdout.
+pub fn write_md_table(
+    name: &str,
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<PathBuf> {
+    let mut out = String::new();
+    writeln!(out, "# {title}\n")?;
+    writeln!(out, "| {} |", header.join(" | "))?;
+    writeln!(out, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"))?;
+    for r in rows {
+        writeln!(out, "| {} |", r.join(" | "))?;
+    }
+    let path = results_dir()?.join(name);
+    std::fs::write(&path, &out).with_context(|| format!("writing {path:?}"))?;
+    println!("{out}");
+    Ok(path)
+}
+
+/// Geometric mean (the paper's GM bars).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Format helper: fixed 2-decimals.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_matches_hand_calc() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-9);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        std::env::set_var("HIFUSE_RESULTS_DIR", std::env::temp_dir().join("hifuse_test_results"));
+        let p = write_csv(
+            "unit_test.csv",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::env::remove_var("HIFUSE_RESULTS_DIR");
+    }
+}

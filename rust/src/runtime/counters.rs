@@ -1,0 +1,175 @@
+//! Kernel-launch accounting and the dispatch event log.
+//!
+//! One PJRT executable dispatch ≙ one "CUDA kernel launch" of the paper
+//! (DESIGN.md §2). Everything the paper's evaluation counts — Fig. 8
+//! (kernels per epoch), Fig. 11 (per-stage reduction), Fig. 3a (timeline) —
+//! is derived from this log, so counts are *measured*, not modeled.
+
+use std::time::Duration;
+
+/// Which pipeline stage issued a dispatch (paper's stage taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// Semantic graph build (edge index selection on "GPU" — baseline only).
+    SemanticBuild,
+    /// Feature projection.
+    Projection,
+    /// Neighbor aggregation (the scatter/gather kernels).
+    Aggregation,
+    /// Semantic fusion.
+    Fusion,
+    /// Loss/accuracy head.
+    Head,
+    /// Calibration / microbenchmarks (excluded from epoch counts).
+    Calib,
+}
+
+pub const STAGES: [Stage; 5] = [
+    Stage::SemanticBuild,
+    Stage::Projection,
+    Stage::Aggregation,
+    Stage::Fusion,
+    Stage::Head,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::SemanticBuild => "semantic_build",
+            Stage::Projection => "projection",
+            Stage::Aggregation => "aggregation",
+            Stage::Fusion => "fusion",
+            Stage::Head => "head",
+            Stage::Calib => "calib",
+        }
+    }
+}
+
+/// Forward or backward half of the training step (Fig. 11 reports the
+/// forward pass only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Fwd,
+    Bwd,
+}
+
+/// One dispatch event (Fig. 3a timeline row).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub module: &'static str,
+    pub stage: Stage,
+    pub phase: Phase,
+    /// Start offset since counter reset.
+    pub t_start: Duration,
+    pub dur: Duration,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+}
+
+/// Dispatch counters + event log. Owned by the `Engine`; reset per
+/// measurement window (epoch / batch).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub events: Vec<Event>,
+    /// Log full events (timeline benches) or just counts (training loops).
+    pub keep_events: bool,
+    counts: std::collections::HashMap<(Stage, Phase), usize>,
+    pub gpu_time: Duration,
+    epoch_start: Option<std::time::Instant>,
+}
+
+impl Counters {
+    pub fn new(keep_events: bool) -> Self {
+        Counters { keep_events, ..Default::default() }
+    }
+
+    pub fn reset(&mut self) {
+        self.events.clear();
+        self.counts.clear();
+        self.gpu_time = Duration::ZERO;
+        self.epoch_start = Some(std::time::Instant::now());
+    }
+
+    pub fn record(
+        &mut self,
+        module: &'static str,
+        stage: Stage,
+        phase: Phase,
+        dur: Duration,
+        bytes_in: usize,
+        bytes_out: usize,
+    ) {
+        if stage != Stage::Calib {
+            *self.counts.entry((stage, phase)).or_insert(0) += 1;
+            self.gpu_time += dur;
+        }
+        if self.keep_events {
+            let t_start = self
+                .epoch_start
+                .map(|s| s.elapsed().saturating_sub(dur))
+                .unwrap_or_default();
+            self.events.push(Event { module, stage, phase, t_start, dur, bytes_in, bytes_out });
+        }
+    }
+
+    /// Total dispatches ("kernel launches") excluding calibration.
+    pub fn total(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    pub fn count(&self, stage: Stage) -> usize {
+        self.counts
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(_, c)| c)
+            .sum()
+    }
+
+    pub fn count_phase(&self, stage: Stage, phase: Phase) -> usize {
+        self.counts.get(&(stage, phase)).copied().unwrap_or(0)
+    }
+
+    pub fn by_stage(&self) -> Vec<(Stage, usize)> {
+        STAGES.iter().map(|&s| (s, self.count(s))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_by_stage_and_phase() {
+        let mut c = Counters::new(false);
+        c.reset();
+        c.record("a", Stage::Aggregation, Phase::Fwd, Duration::from_micros(5), 10, 10);
+        c.record("a", Stage::Aggregation, Phase::Bwd, Duration::from_micros(5), 10, 10);
+        c.record("p", Stage::Projection, Phase::Fwd, Duration::from_micros(2), 4, 4);
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.count(Stage::Aggregation), 2);
+        assert_eq!(c.count_phase(Stage::Aggregation, Phase::Fwd), 1);
+        assert_eq!(c.gpu_time, Duration::from_micros(12));
+    }
+
+    #[test]
+    fn calib_excluded_from_counts() {
+        let mut c = Counters::new(false);
+        c.reset();
+        c.record("x", Stage::Calib, Phase::Fwd, Duration::from_micros(50), 1, 1);
+        assert_eq!(c.total(), 0);
+        assert_eq!(c.gpu_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn events_kept_only_when_enabled() {
+        let mut on = Counters::new(true);
+        on.reset();
+        on.record("m", Stage::Head, Phase::Fwd, Duration::from_micros(1), 2, 2);
+        assert_eq!(on.events.len(), 1);
+        let mut off = Counters::new(false);
+        off.reset();
+        off.record("m", Stage::Head, Phase::Fwd, Duration::from_micros(1), 2, 2);
+        assert!(off.events.is_empty());
+        assert_eq!(off.total(), 1);
+    }
+}

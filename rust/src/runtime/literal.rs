@@ -1,0 +1,64 @@
+//! `HostTensor` <-> `xla::Literal` bridge (the "host <-> device transfer"
+//! of the CPU-PJRT substitution).
+
+use anyhow::{bail, Result};
+
+use crate::util::HostTensor;
+
+/// Upload a host tensor as an XLA literal of the right shape.
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(d, s) => {
+            if s.is_empty() {
+                return Ok(xla::Literal::scalar(d[0]));
+            }
+            xla::Literal::vec1(d).reshape(&dims)?
+        }
+        HostTensor::I32(d, s) => {
+            if s.is_empty() {
+                return Ok(xla::Literal::scalar(d[0]));
+            }
+            xla::Literal::vec1(d).reshape(&dims)?
+        }
+    };
+    Ok(lit)
+}
+
+/// Download an XLA literal back into a host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+        xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+        other => bail!("unsupported element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = to_literal(&t).unwrap();
+        assert_eq!(from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::i32(vec![7, -1, 0], &[3]);
+        let lit = to_literal(&t).unwrap();
+        assert_eq!(from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        for t in [HostTensor::scalar_i32(5), HostTensor::scalar_f32(2.5)] {
+            let lit = to_literal(&t).unwrap();
+            assert_eq!(from_literal(&lit).unwrap(), t);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Artifact manifest parser.
+//!
+//! `python/compile/aot.py` writes a line-based manifest (no serde offline)
+//! describing every AOT module: argument/return names, dtypes, shapes, and
+//! the profile constants (NS, EP, RPAD, ...). The runtime type-checks every
+//! dispatch against this, so a profile/artifact mismatch fails loudly at
+//! the call site instead of inside XLA.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+/// One declared tensor (argument or return) of a module.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty = scalar (rank 0).
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT module: its interface and HLO file.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub args: Vec<TensorSpec>,
+    pub rets: Vec<TensorSpec>,
+    pub file: PathBuf,
+}
+
+/// A parsed profile manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub profile: String,
+    pub consts: BTreeMap<String, usize>,
+    pub modules: BTreeMap<String, ModuleSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut profile = String::new();
+        let mut consts = BTreeMap::new();
+        let mut modules = BTreeMap::new();
+        let mut cur: Option<ModuleSpec> = None;
+
+        let parse_tensor = |parts: &[&str]| -> Result<TensorSpec> {
+            let dtype = DType::parse(parts[1])?;
+            let shape = if parts[2] == "-" {
+                vec![]
+            } else {
+                parts[2]
+                    .split(',')
+                    .map(|d| d.parse::<usize>().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?
+            };
+            Ok(TensorSpec { name: parts[0].to_string(), dtype, shape })
+        };
+
+        for (ln, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            let ctx = || format!("manifest line {}: {line:?}", ln + 1);
+            match parts[0] {
+                "profile" => profile = parts.get(1).map(|s| s.to_string()).unwrap_or_default(),
+                "const" => {
+                    if parts.len() != 3 {
+                        bail!("{}: malformed const", ctx());
+                    }
+                    consts.insert(parts[1].to_string(), parts[2].parse().with_context(ctx)?);
+                }
+                "module" => {
+                    if cur.is_some() {
+                        bail!("{}: nested module", ctx());
+                    }
+                    cur = Some(ModuleSpec {
+                        name: parts[1].to_string(),
+                        args: vec![],
+                        rets: vec![],
+                        file: PathBuf::new(),
+                    });
+                }
+                "arg" => {
+                    let m = cur.as_mut().with_context(ctx)?;
+                    m.args.push(parse_tensor(&parts[1..]).with_context(ctx)?);
+                }
+                "ret" => {
+                    let m = cur.as_mut().with_context(ctx)?;
+                    m.rets.push(parse_tensor(&parts[1..]).with_context(ctx)?);
+                }
+                "file" => {
+                    let m = cur.as_mut().with_context(ctx)?;
+                    m.file = dir.join(parts[1]);
+                }
+                "end" => {
+                    let m = cur.take().with_context(ctx)?;
+                    if m.file.as_os_str().is_empty() {
+                        bail!("{}: module {} missing file", ctx(), m.name);
+                    }
+                    modules.insert(m.name.clone(), m);
+                }
+                other => bail!("{}: unknown directive {other:?}", ctx()),
+            }
+        }
+        if let Some(m) = cur {
+            bail!("unterminated module {}", m.name);
+        }
+        if profile.is_empty() {
+            bail!("manifest missing profile line");
+        }
+        Ok(Manifest { profile, consts, modules, dir: dir.to_path_buf() })
+    }
+
+    pub fn cst(&self, name: &str) -> usize {
+        *self
+            .consts
+            .get(name)
+            .unwrap_or_else(|| panic!("manifest missing const {name}"))
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not in manifest (profile {})", self.profile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+profile tiny
+const NS 32
+const EP 16
+module proj_fwd_l0
+arg x f32 32,8
+arg w f32 8,16
+ret out0 f32 32,16
+file proj_fwd_l0.hlo.txt
+end
+module edge_select
+arg edge_type i32 128
+arg rel i32 -
+ret out0 i32 128
+ret out1 i32 -
+file edge_select.hlo.txt
+end
+";
+
+    #[test]
+    fn parses_consts_and_modules() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.profile, "tiny");
+        assert_eq!(m.cst("NS"), 32);
+        let p = m.module("proj_fwd_l0").unwrap();
+        assert_eq!(p.args.len(), 2);
+        assert_eq!(p.args[0].shape, vec![32, 8]);
+        assert_eq!(p.rets[0].dtype, DType::F32);
+        assert_eq!(p.file, Path::new("/tmp/x/proj_fwd_l0.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_shape_is_empty() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/x")).unwrap();
+        let e = m.module("edge_select").unwrap();
+        assert!(e.args[1].shape.is_empty());
+        assert_eq!(e.args[1].numel(), 1);
+        assert_eq!(e.rets.len(), 2);
+    }
+
+    #[test]
+    fn unknown_module_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/x")).unwrap();
+        assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_fails() {
+        assert!(Manifest::parse("module a\narg x f32 3\n", Path::new("/t")).is_err()); // unterminated
+        assert!(Manifest::parse("profile t\nconst NS abc\n", Path::new("/t")).is_err());
+        assert!(Manifest::parse("wat 1 2\n", Path::new("/t")).is_err());
+    }
+}

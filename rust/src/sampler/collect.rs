@@ -1,0 +1,131 @@
+//! Feature collection (workflow step ②, Fig. 2): gather the raw features of
+//! every sampled vertex into the padded `[TPAD, NS, F]` slab tensor the AOT
+//! modules consume.
+//!
+//! The collector is layout-agnostic (it reads through
+//! `FeatureStore::copy_row`), so the paper's *reorganization* ablation is
+//! purely a question of which layout the store materializes: index-major
+//! collection chases interleaved global ids across the whole feature buffer
+//! (cache-hostile, Fig. 4a), type-major collection streams per-type regions
+//! (Fig. 4b).
+
+use crate::graph::HeteroGraph;
+use crate::sampler::MiniBatch;
+use crate::util::HostTensor;
+
+/// Collected batch tensors, ready for upload.
+pub struct Collected {
+    /// `[TPAD, NS, F]` raw-feature slabs, zero-padded.
+    pub xs: HostTensor,
+    /// `[NS]` i32 labels of target-type slots (0 where unused).
+    pub labels: HostTensor,
+    /// `[NS]` f32, 1.0 on seed rows of the target type.
+    pub seed_mask: HostTensor,
+    /// Number of distinct seeds (mask population).
+    pub n_seed: usize,
+}
+
+/// Gather raw features + labels + seed mask for a mini-batch.
+///
+/// `tpad`/`ns` are the profile paddings; `f` is the raw feature dim.
+pub fn collect(g: &HeteroGraph, mb: &MiniBatch, tpad: usize, ns: usize, f: usize) -> Collected {
+    assert!(g.n_types() <= tpad, "graph has more types than TPAD");
+    assert_eq!(g.feat_dim, f);
+    let mut xs = vec![0.0f32; tpad * ns * f];
+    for (t, slot_list) in mb.slots.iter().enumerate() {
+        let base = t * ns * f;
+        for (s, &v) in slot_list.iter().enumerate() {
+            let out = &mut xs[base + s * f..base + (s + 1) * f];
+            g.features.copy_row(t, v as usize, out);
+        }
+    }
+
+    let mut labels = vec![0i32; ns];
+    for (s, &v) in mb.slots[g.target_type].iter().enumerate() {
+        labels[s] = g.labels[v as usize] as i32;
+    }
+
+    // Seeds occupy the leading target-type slots (sampler contract); the
+    // batch may contain duplicate seeds when the train split wraps, so the
+    // mask population is the number of *distinct* seeds.
+    let mut seed_mask = vec![0.0f32; ns];
+    let mut n_seed = 0usize;
+    let mut seen = std::collections::HashSet::new();
+    for &v in &mb.seeds {
+        if seen.insert(v) {
+            seed_mask[n_seed] = 1.0;
+            n_seed += 1;
+        }
+    }
+
+    Collected {
+        xs: HostTensor::f32(xs, &[tpad, ns, f]),
+        labels: HostTensor::i32(labels, &[ns]),
+        seed_mask: HostTensor::f32(seed_mask, &[ns]),
+        n_seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_graph;
+    use crate::graph::Layout;
+    use crate::sampler::{NeighborSampler, SamplerCfg};
+    use crate::util::Rng;
+
+    fn setup() -> (HeteroGraph, MiniBatch) {
+        let g = tiny_graph(17);
+        let s = NeighborSampler::new(
+            &g,
+            SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: 32, ep: 16 },
+        );
+        let mb = s.sample(&Rng::new(5), 0, 0);
+        (g, mb)
+    }
+
+    #[test]
+    fn slab_rows_match_store() {
+        let (g, mb) = setup();
+        let c = collect(&g, &mb, 8, 32, 8);
+        let xs = c.xs.as_f32().unwrap();
+        let mut row = vec![0.0f32; 8];
+        for (t, slots) in mb.slots.iter().enumerate() {
+            for (s, &v) in slots.iter().enumerate() {
+                g.features.copy_row(t, v as usize, &mut row);
+                let got = &xs[t * 32 * 8 + s * 8..t * 32 * 8 + (s + 1) * 8];
+                assert_eq!(got, &row[..], "row mismatch ({t},{s})");
+            }
+            // Padding rows are zero.
+            for s in slots.len()..32 {
+                let got = &xs[t * 32 * 8 + s * 8..t * 32 * 8 + (s + 1) * 8];
+                assert!(got.iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn both_layouts_collect_identically() {
+        let (mut g, mb) = setup();
+        let a = collect(&g, &mb, 8, 32, 8);
+        g.features.ensure_layout(Layout::IndexMajor);
+        let b = collect(&g, &mb, 8, 32, 8);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn labels_and_mask_line_up_with_seeds() {
+        let (g, mb) = setup();
+        let c = collect(&g, &mb, 8, 32, 8);
+        let labels = c.labels.as_i32().unwrap();
+        let mask = c.seed_mask.as_f32().unwrap();
+        assert_eq!(c.n_seed, 8); // tiny graph train split > batch, no dups
+        for s in 0..c.n_seed {
+            assert_eq!(mask[s], 1.0);
+            let v = mb.slots[g.target_type][s] as usize;
+            assert_eq!(labels[s], g.labels[v] as i32);
+        }
+        assert!(mask[c.n_seed..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,372 @@
+//! Mini-batch heterogeneous neighbor sampling (workflow step ①, Fig. 2).
+//!
+//! Standard PyG-style layered sampling with *nested frontiers*: seeds (of
+//! the target type) form the output frontier; for each GNN layer, walking
+//! output-to-input, every relation samples up to `fanout` incoming edges
+//! for each frontier vertex of its destination type, and the sources join
+//! the frontier. Nesting (lower layers aggregate into every vertex known so
+//! far) keeps one node-slot assignment valid across layers, which is what
+//! lets the AOT modules use a single static `[NS]` slab per type.
+//!
+//! Static-shape discipline: per-type slots are capped at `ns`, per-relation
+//! per-layer edges at `ep`; overflow is *dropped and counted* (the
+//! `dropped_*` fields), mirroring the bucket-padding contract in DESIGN.md
+//! §5. The caps come from the AOT profile, so the sampler can never emit a
+//! batch the compiled modules cannot hold.
+
+pub mod collect;
+
+use crate::graph::HeteroGraph;
+use crate::util::Rng;
+
+/// Per-relation edges of one layer, in *slot* coordinates.
+#[derive(Clone, Debug, Default)]
+pub struct RelEdges {
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+impl RelEdges {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+}
+
+/// The shuffled, type-tagged edge list of one layer — the COO tensor the
+/// semantic-graph-build stage selects from (paper §4.3: "edge indices are
+/// stored in a 2xN tensor in coordinate format ... for all relations").
+#[derive(Clone, Debug, Default)]
+pub struct TaggedEdges {
+    pub rel: Vec<u32>,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+impl TaggedEdges {
+    pub fn len(&self) -> usize {
+        self.rel.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rel.is_empty()
+    }
+}
+
+/// A sampled mini-batch.
+pub struct MiniBatch {
+    /// Seed vertices (type-local ids of the target type); slot i of the
+    /// target type holds seeds[i].
+    pub seeds: Vec<u32>,
+    /// Per type: slot -> type-local vertex id.
+    pub slots: Vec<Vec<u32>>,
+    /// Per layer: the tagged COO edge list (input to semantic-graph build).
+    pub tagged: Vec<TaggedEdges>,
+    /// Per layer, per relation: ground-truth per-relation edges (the
+    /// sampler knows them; used as the selection oracle in tests — the
+    /// trainer must derive them through `semantic::*`).
+    pub oracle_edges: Vec<Vec<RelEdges>>,
+    pub dropped_nodes: usize,
+    pub dropped_edges: usize,
+}
+
+/// Sampler configuration: caps come from the AOT profile.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerCfg {
+    pub batch_size: usize,
+    /// Incoming-edge fanout per (vertex, relation), per layer.
+    pub fanout: usize,
+    pub layers: usize,
+    /// Node-slot cap per type (profile NS).
+    pub ns: usize,
+    /// Edge cap per relation per layer (profile EP).
+    pub ep: usize,
+}
+
+pub struct NeighborSampler<'g> {
+    pub graph: &'g HeteroGraph,
+    pub cfg: SamplerCfg,
+}
+
+impl<'g> NeighborSampler<'g> {
+    pub fn new(graph: &'g HeteroGraph, cfg: SamplerCfg) -> Self {
+        assert!(cfg.batch_size <= cfg.ns, "batch larger than node slab");
+        NeighborSampler { graph, cfg }
+    }
+
+    /// Number of batches per epoch over the train split.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.graph.train_idx.len().div_ceil(self.cfg.batch_size)
+    }
+
+    /// Sample the `batch_idx`-th mini-batch of an epoch. Deterministic in
+    /// (`rng` seed, batch_idx) so baseline and HiFuse runs see identical
+    /// batches.
+    pub fn sample(&self, rng: &Rng, epoch: u64, batch_idx: usize) -> MiniBatch {
+        let g = self.graph;
+        let cfg = self.cfg;
+        // Epoch-shuffled train split: derived from (base rng, epoch) ONLY,
+        // so every batch of an epoch agrees on the permutation.
+        let mut order: Vec<u32> = g.train_idx.clone();
+        let mut epoch_rng = rng.fork(0xE90C ^ epoch);
+        epoch_rng.shuffle(&mut order);
+        // Everything below is per-(epoch, batch) randomness.
+        let rng = rng.fork(epoch.wrapping_mul(1_000_003) + batch_idx as u64 + 1);
+        let start = batch_idx * cfg.batch_size;
+        let seeds: Vec<u32> = order
+            .iter()
+            .copied()
+            .cycle() // wrap the tail batch to keep batch size static
+            .skip(start)
+            .take(cfg.batch_size)
+            .collect();
+
+        // Slot maps: per type, vertex -> slot. HashMap per type.
+        let mut slots: Vec<Vec<u32>> = vec![Vec::new(); g.n_types()];
+        let mut slot_of: Vec<std::collections::HashMap<u32, u32>> =
+            vec![std::collections::HashMap::new(); g.n_types()];
+        let mut dropped_nodes = 0usize;
+        let assign = |t: usize,
+                          v: u32,
+                          slots: &mut Vec<Vec<u32>>,
+                          slot_of: &mut Vec<std::collections::HashMap<u32, u32>>,
+                          dropped: &mut usize|
+         -> Option<u32> {
+            if let Some(&s) = slot_of[t].get(&v) {
+                return Some(s);
+            }
+            if slots[t].len() >= cfg.ns {
+                *dropped += 1;
+                return None;
+            }
+            let s = slots[t].len() as u32;
+            slots[t].push(v);
+            slot_of[t].insert(v, s);
+            Some(s)
+        };
+
+        for (i, &v) in seeds.iter().enumerate() {
+            let s = assign(g.target_type, v, &mut slots, &mut slot_of, &mut dropped_nodes)
+                .expect("batch_size <= ns");
+            debug_assert!(s as usize <= i);
+        }
+
+        let mut dropped_edges = 0usize;
+        let mut layers_rel: Vec<Vec<RelEdges>> = Vec::with_capacity(cfg.layers);
+        // Sample top layer first (aggregates into seeds), then lower layers
+        // (aggregate into everything sampled so far).
+        for _layer in (0..cfg.layers).rev() {
+            // Snapshot frontier sizes: vertices present before this layer.
+            let frontier: Vec<usize> = slots.iter().map(|s| s.len()).collect();
+            let mut rel_edges: Vec<RelEdges> = vec![RelEdges::default(); g.n_relations()];
+            for (ri, rel) in g.relations.iter().enumerate() {
+                let dt = rel.dst_type;
+                let mut srng = rng.fork((ri as u64) << 8);
+                for dslot in 0..frontier[dt] {
+                    let dv = slots[dt][dslot] as usize;
+                    let neigh = rel.in_neighbors(dv);
+                    if neigh.is_empty() {
+                        continue;
+                    }
+                    // Sample up to fanout without replacement (index set).
+                    let k = cfg.fanout.min(neigh.len());
+                    let picks = sample_indices(neigh.len(), k, &mut srng);
+                    for p in picks {
+                        if rel_edges[ri].len() >= cfg.ep {
+                            dropped_edges += 1;
+                            continue;
+                        }
+                        let sv = neigh[p];
+                        match assign(rel.src_type, sv, &mut slots, &mut slot_of, &mut dropped_nodes)
+                        {
+                            Some(ss) => {
+                                rel_edges[ri].src.push(ss);
+                                rel_edges[ri].dst.push(dslot as u32);
+                            }
+                            None => dropped_edges += 1,
+                        }
+                    }
+                }
+            }
+            layers_rel.push(rel_edges);
+        }
+        // We sampled top-down; store input-layer-first (layer 0 first).
+        layers_rel.reverse();
+
+        // Build the shuffled tagged COO list per layer.
+        let tagged = layers_rel
+            .iter()
+            .enumerate()
+            .map(|(l, rels)| {
+                let total: usize = rels.iter().map(|e| e.len()).sum();
+                let mut t = TaggedEdges {
+                    rel: Vec::with_capacity(total),
+                    src: Vec::with_capacity(total),
+                    dst: Vec::with_capacity(total),
+                };
+                for (ri, e) in rels.iter().enumerate() {
+                    for i in 0..e.len() {
+                        t.rel.push(ri as u32);
+                        t.src.push(e.src[i]);
+                        t.dst.push(e.dst[i]);
+                    }
+                }
+                // Shuffle to a realistic mixed order (the sampler on CPU
+                // emits edges in discovery order; PyG's COO is not grouped).
+                let mut perm: Vec<usize> = (0..total).collect();
+                rng.fork(0xBEEF + l as u64).shuffle(&mut perm);
+                TaggedEdges {
+                    rel: perm.iter().map(|&i| t.rel[i]).collect(),
+                    src: perm.iter().map(|&i| t.src[i]).collect(),
+                    dst: perm.iter().map(|&i| t.dst[i]).collect(),
+                }
+            })
+            .collect();
+
+        MiniBatch { seeds, slots, tagged, oracle_edges: layers_rel, dropped_nodes, dropped_edges }
+    }
+}
+
+/// k distinct indices from [0,n) (partial Fisher-Yates over a scratch vec —
+/// n is a vertex in-degree, small).
+fn sample_indices(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    debug_assert!(k <= n);
+    if k == n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_graph;
+
+    fn cfg() -> SamplerCfg {
+        SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: 32, ep: 16 }
+    }
+
+    #[test]
+    fn batch_is_deterministic() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(42);
+        let a = s.sample(&rng, 0, 0);
+        let b = s.sample(&rng, 0, 0);
+        assert_eq!(a.seeds, b.seeds);
+        assert_eq!(a.slots, b.slots);
+        for (x, y) in a.tagged.iter().zip(&b.tagged) {
+            assert_eq!(x.rel, y.rel);
+            assert_eq!(x.src, y.src);
+            assert_eq!(x.dst, y.dst);
+        }
+    }
+
+    #[test]
+    fn different_batches_differ() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(42);
+        let a = s.sample(&rng, 0, 0);
+        let b = s.sample(&rng, 0, 1);
+        assert_ne!(a.seeds, b.seeds);
+    }
+
+    #[test]
+    fn caps_respected_and_slots_unique() {
+        let g = tiny_graph(2);
+        let s = NeighborSampler::new(&g, cfg());
+        let mb = s.sample(&Rng::new(7), 0, 0);
+        for (t, sl) in mb.slots.iter().enumerate() {
+            assert!(sl.len() <= 32, "type {t} exceeds ns");
+            let mut u = sl.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), sl.len(), "duplicate slot for type {t}");
+            for &v in sl {
+                assert!((v as usize) < g.num_nodes[t]);
+            }
+        }
+        for layer in &mb.oracle_edges {
+            for e in layer {
+                assert!(e.len() <= 16, "relation exceeds ep");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_edges_exist_in_graph() {
+        let g = tiny_graph(3);
+        let s = NeighborSampler::new(&g, cfg());
+        let mb = s.sample(&Rng::new(9), 0, 0);
+        for layer in &mb.oracle_edges {
+            for (ri, e) in layer.iter().enumerate() {
+                let rel = &g.relations[ri];
+                for i in 0..e.len() {
+                    let sv = mb.slots[rel.src_type][e.src[i] as usize];
+                    let dv = mb.slots[rel.dst_type][e.dst[i] as usize];
+                    assert!(
+                        rel.in_neighbors(dv as usize).contains(&sv),
+                        "edge ({sv}->{dv}) of rel {ri} not in graph"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tagged_list_is_permutation_of_oracle() {
+        let g = tiny_graph(4);
+        let s = NeighborSampler::new(&g, cfg());
+        let mb = s.sample(&Rng::new(11), 0, 0);
+        for (l, t) in mb.tagged.iter().enumerate() {
+            let total: usize = mb.oracle_edges[l].iter().map(|e| e.len()).sum();
+            assert_eq!(t.len(), total);
+            // Multiset equality by sorting triples.
+            let mut a: Vec<(u32, u32, u32)> =
+                (0..t.len()).map(|i| (t.rel[i], t.src[i], t.dst[i])).collect();
+            let mut b = Vec::new();
+            for (ri, e) in mb.oracle_edges[l].iter().enumerate() {
+                for i in 0..e.len() {
+                    b.push((ri as u32, e.src[i], e.dst[i]));
+                }
+            }
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn seeds_occupy_leading_target_slots() {
+        let g = tiny_graph(5);
+        let s = NeighborSampler::new(&g, cfg());
+        let mb = s.sample(&Rng::new(13), 0, 0);
+        let tt = g.target_type;
+        // Each distinct seed appears in the leading slots, in first-seen order.
+        let mut expect = Vec::new();
+        for &v in &mb.seeds {
+            if !expect.contains(&v) {
+                expect.push(v);
+            }
+        }
+        assert_eq!(&mb.slots[tt][..expect.len()], &expect[..]);
+    }
+
+    #[test]
+    fn epoch_reshuffles_seed_order() {
+        let g = tiny_graph(6);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(21);
+        let a = s.sample(&rng, 0, 0);
+        let b = s.sample(&rng, 1, 0);
+        assert_ne!(a.seeds, b.seeds, "epoch shuffle had no effect");
+    }
+}

@@ -1,0 +1,194 @@
+//! Semantic-graph build: **edge index selection** (the paper's §4.3,
+//! Algorithm 2).
+//!
+//! Given the mixed, edge-type-tagged COO list of a sampled layer, split it
+//! into per-relation edge lists. The paper's observation is that doing this
+//! on GPU costs `R` pairs of tiny `compare` + `index_select` kernels; HiFuse
+//! *offloads* it to CPU (it is control-intensive integer work) and
+//! *parallelizes* it across relations with OpenMP. Here:
+//!
+//! * [`select_serial`] — Algorithm 2 verbatim: one compare+gather pass per
+//!   relation (what a single CPU thread does).
+//! * [`select_parallel`] — the relations partitioned across a scoped
+//!   `std::thread` pool (the OpenMP analogue). NOTE: this container has one
+//!   core, so the measured gain is ≈1x; `perf::parallel_model` reports the
+//!   work/span-modeled multi-core time alongside (DESIGN.md §2).
+//! * [`select_bucketed`] — a single-pass counting-sort variant (O(E) instead
+//!   of O(R·E)); our perf-pass extension beyond the paper (§Perf).
+//!
+//! The baseline-on-GPU path lives in `models::step` (it dispatches the
+//! `edge_select` HLO module per relation); its results must match these —
+//! covered by integration tests.
+
+use crate::sampler::{RelEdges, TaggedEdges};
+
+/// Algorithm 2, one relation: positions of edges with `rel == r`, in order.
+#[inline]
+fn select_one(t: &TaggedEdges, r: u32) -> RelEdges {
+    let mut out = RelEdges::default();
+    for i in 0..t.len() {
+        if t.rel[i] == r {
+            out.src.push(t.src[i]);
+            out.dst.push(t.dst[i]);
+        }
+    }
+    out
+}
+
+/// Serial CPU edge-index selection: R compare+gather passes (Algorithm 2).
+pub fn select_serial(t: &TaggedEdges, n_rel: usize) -> Vec<RelEdges> {
+    (0..n_rel as u32).map(|r| select_one(t, r)).collect()
+}
+
+/// Parallel CPU edge-index selection: relations are independent, so they
+/// are partitioned across `n_threads` scoped threads (OpenMP
+/// `parallel for` analogue from the paper).
+pub fn select_parallel(t: &TaggedEdges, n_rel: usize, n_threads: usize) -> Vec<RelEdges> {
+    let n_threads = n_threads.max(1).min(n_rel.max(1));
+    if n_threads <= 1 || n_rel == 0 {
+        return select_serial(t, n_rel);
+    }
+    let mut out: Vec<RelEdges> = vec![RelEdges::default(); n_rel];
+    let chunk = n_rel.div_ceil(n_threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [RelEdges] = &mut out;
+        let mut r0 = 0usize;
+        let mut handles = Vec::new();
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = r0;
+            handles.push(s.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    *slot = select_one(t, (base + i) as u32);
+                }
+            }));
+            r0 += take;
+        }
+        for h in handles {
+            h.join().expect("selection worker panicked");
+        }
+    });
+    out
+}
+
+/// Single-pass bucketed selection: O(E + R). Two passes over the tagged
+/// list (count, then fill) with exact preallocation. Perf-pass extension;
+/// produces identical output to Algorithm 2 because the tagged list is
+/// scanned in order.
+pub fn select_bucketed(t: &TaggedEdges, n_rel: usize) -> Vec<RelEdges> {
+    let mut counts = vec![0usize; n_rel];
+    for &r in &t.rel {
+        counts[r as usize] += 1;
+    }
+    let mut out: Vec<RelEdges> = counts
+        .iter()
+        .map(|&c| RelEdges { src: Vec::with_capacity(c), dst: Vec::with_capacity(c) })
+        .collect();
+    for i in 0..t.len() {
+        let r = t.rel[i] as usize;
+        out[r].src.push(t.src[i]);
+        out[r].dst.push(t.dst[i]);
+    }
+    out
+}
+
+/// Work/span accounting for the parallel selection, used to model the
+/// multi-core speedup this 1-core container cannot measure (DESIGN.md §2):
+/// serial work = R·E compares; with `p` threads the span is
+/// `ceil(R/p)·E`, so modeled time = measured_serial / min(p, R).
+pub fn modeled_parallel_speedup(n_rel: usize, n_threads: usize) -> f64 {
+    n_threads.max(1).min(n_rel.max(1)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tagged(n: usize, n_rel: usize, seed: u64) -> TaggedEdges {
+        let mut rng = Rng::new(seed);
+        let mut t = TaggedEdges::default();
+        for _ in 0..n {
+            t.rel.push(rng.below(n_rel) as u32);
+            t.src.push(rng.below(64) as u32);
+            t.dst.push(rng.below(64) as u32);
+        }
+        t
+    }
+
+    fn flatten(v: &[RelEdges]) -> Vec<(usize, u32, u32)> {
+        let mut out = Vec::new();
+        for (r, e) in v.iter().enumerate() {
+            for i in 0..e.len() {
+                out.push((r, e.src[i], e.dst[i]));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn serial_matches_brute_force() {
+        let t = tagged(500, 7, 1);
+        let got = select_serial(&t, 7);
+        for r in 0..7u32 {
+            let expect: Vec<(u32, u32)> = (0..t.len())
+                .filter(|&i| t.rel[i] == r)
+                .map(|i| (t.src[i], t.dst[i]))
+                .collect();
+            let e = &got[r as usize];
+            let pairs: Vec<(u32, u32)> = e.src.iter().copied().zip(e.dst.iter().copied()).collect();
+            assert_eq!(pairs, expect);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_any_thread_count() {
+        let t = tagged(2000, 13, 2);
+        let serial = flatten(&select_serial(&t, 13));
+        for p in [1, 2, 3, 7, 13, 64] {
+            assert_eq!(flatten(&select_parallel(&t, 13, p)), serial, "p={p}");
+        }
+    }
+
+    #[test]
+    fn bucketed_equals_serial() {
+        for seed in 0..5 {
+            let t = tagged(777, 9, seed);
+            assert_eq!(flatten(&select_bucketed(&t, 9)), flatten(&select_serial(&t, 9)));
+        }
+    }
+
+    #[test]
+    fn empty_input_gives_empty_relations() {
+        let t = TaggedEdges::default();
+        for v in [select_serial(&t, 4), select_parallel(&t, 4, 2), select_bucketed(&t, 4)] {
+            assert_eq!(v.len(), 4);
+            assert!(v.iter().all(|e| e.is_empty()));
+        }
+    }
+
+    #[test]
+    fn preserves_within_relation_order() {
+        // Selection must be stable (original COO order within a relation)
+        // so aggregation sees the same edge order on every path.
+        let mut t = TaggedEdges::default();
+        for i in 0..10u32 {
+            t.rel.push(i % 2);
+            t.src.push(i);
+            t.dst.push(100 + i);
+        }
+        for sel in [select_serial(&t, 2), select_bucketed(&t, 2), select_parallel(&t, 2, 2)] {
+            assert_eq!(sel[0].src, vec![0, 2, 4, 6, 8]);
+            assert_eq!(sel[1].src, vec![1, 3, 5, 7, 9]);
+        }
+    }
+
+    #[test]
+    fn modeled_speedup_clamps_to_relations() {
+        assert_eq!(modeled_parallel_speedup(4, 16), 4.0);
+        assert_eq!(modeled_parallel_speedup(100, 8), 8.0);
+        assert_eq!(modeled_parallel_speedup(0, 8), 1.0);
+    }
+}

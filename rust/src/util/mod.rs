@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the offline environment has no `rand`,
+//! `serde`, or `criterion`, so the PRNG, stats, and timing helpers live
+//! here).
+
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+
+pub use rng::Rng;
+pub use stats::Stats;
+pub use tensor::HostTensor;

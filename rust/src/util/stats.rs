@@ -1,0 +1,111 @@
+//! Timing statistics for the hand-rolled benchmark harness (criterion is
+//! not available offline): mean / stddev / percentiles over sample sets.
+
+use std::time::Duration;
+
+/// Accumulates duration samples and reports summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    samples_us: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn push_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn total_us(&self) -> f64 {
+        self.samples_us.iter().sum()
+    }
+
+    pub fn stddev_us(&self) -> f64 {
+        let n = self.samples_us.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean_us();
+        (self.samples_us.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// p in [0,100]; nearest-rank on the sorted samples.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0 * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[idx - 1]
+    }
+
+    pub fn min_us(&self) -> f64 {
+        self.samples_us.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us sd={:.1}us p50={:.1}us p99={:.1}us",
+            self.len(),
+            self.mean_us(),
+            self.stddev_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(99.0)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut s = Stats::new();
+        for i in 1..=100 {
+            s.push_us(i as f64);
+        }
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+        assert_eq!(s.percentile_us(50.0), 50.0);
+        assert_eq!(s.percentile_us(99.0), 99.0);
+        assert_eq!(s.min_us(), 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = Stats::new();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.percentile_us(50.0), 0.0);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let mut s = Stats::new();
+        for _ in 0..10 {
+            s.push_us(5.0);
+        }
+        assert!(s.stddev_us() < 1e-12);
+    }
+}

@@ -1,0 +1,162 @@
+//! Host-side tensors exchanged with the PJRT runtime.
+//!
+//! Deliberately minimal: flat storage + shape, f32 and i32 only (the dtypes
+//! the AOT modules use). Conversion to/from `xla::Literal` lives in
+//! `runtime::literal` so this module stays dependency-free and easily
+//! testable.
+
+use anyhow::{bail, Result};
+
+/// Flat host tensor: row-major data + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32(..) => "f32",
+            HostTensor::I32(..) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32(d, _) if d.len() == 1 => Ok(d[0]),
+            HostTensor::I32(d, _) if d.len() == 1 => Ok(d[0] as f32),
+            _ => bail!("tensor is not a scalar: shape {:?}", self.shape()),
+        }
+    }
+}
+
+/// Row-major offset of `row` in a `[rows, cols]` matrix slice.
+#[inline]
+pub fn row(data: &[f32], r: usize, cols: usize) -> &[f32] {
+    &data[r * cols..(r + 1) * cols]
+}
+
+/// `a += b` elementwise (gradient accumulation on the host).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// `a -= lr * g` (host-side SGD update).
+pub fn sgd_step(a: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(a.len(), g.len());
+    for (x, y) in a.iter_mut().zip(g) {
+        *x -= lr * *y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bytes() {
+        let t = HostTensor::zeros_f32(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.size_bytes(), 48);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(7).scalar().unwrap(), 7.0);
+        assert!(HostTensor::zeros_f32(&[2]).scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn sgd_and_accumulate() {
+        let mut a = vec![1.0, 2.0];
+        add_assign(&mut a, &[0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5]);
+        sgd_step(&mut a, &[1.0, 1.0], 0.5);
+        assert_eq!(a, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the `tiny` AOT profile: full training loops
+//! through the PJRT runtime, equivalence of execution plans, and measured
+//! kernel counts vs the analytic plan.
+//!
+//! Requires `make artifacts` (skips with a clear panic otherwise).
+
+use std::path::PathBuf;
+
+use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::step::Dims;
+use hifuse::models::{plan, ModelKind};
+use hifuse::runtime::{Engine, Phase, Stage};
+use hifuse::sampler::{NeighborSampler, SamplerCfg};
+use hifuse::semantic;
+use hifuse::util::Rng;
+
+fn tiny_dir() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(
+        p.join("manifest.txt").exists(),
+        "artifacts/tiny missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn cfg() -> TrainCfg {
+    TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 }
+}
+
+fn epoch_losses(model: ModelKind, opt: OptConfig, epochs: usize) -> Vec<f64> {
+    let eng = Engine::load(&tiny_dir()).unwrap();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+    (0..epochs).map(|e| tr.train_epoch(e as u64).unwrap().loss).collect()
+}
+
+#[test]
+fn rgcn_baseline_loss_decreases() {
+    let losses = epoch_losses(ModelKind::Rgcn, OptConfig::baseline(), 5);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn rgcn_hifuse_loss_decreases() {
+    let losses = epoch_losses(ModelKind::Rgcn, OptConfig::hifuse(), 5);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn rgat_hifuse_loss_decreases() {
+    let losses = epoch_losses(ModelKind::Rgat, OptConfig::hifuse(), 5);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+/// THE equivalence gate: every execution plan computes the same training
+/// trajectory (same batches, same math) up to float reassociation.
+#[test]
+fn all_plans_agree_on_losses() {
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let base = epoch_losses(model, OptConfig::baseline(), 2);
+        for (name, opt) in OptConfig::ablation_ladder().into_iter().skip(1) {
+            let l = epoch_losses(model, opt, 2);
+            for (a, b) in base.iter().zip(&l) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "{} {name}: losses diverge: base {a} vs {b}",
+                    model.name()
+                );
+            }
+        }
+        // Extension config too.
+        let l = epoch_losses(model, OptConfig::parse("hifuse+stacked").unwrap(), 2);
+        for (a, b) in base.iter().zip(&l) {
+            assert!((a - b).abs() < 1e-3, "{} stacked diverges: {a} vs {b}", model.name());
+        }
+    }
+}
+
+/// GPU-module edge selection must equal the CPU implementations.
+#[test]
+fn gpu_select_matches_cpu_select() {
+    let eng = Engine::load(&tiny_dir()).unwrap();
+    let d = Dims::from_engine(&eng);
+    let g = tiny_graph(7);
+    let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
+    let mb = NeighborSampler::new(&g, scfg).sample(&Rng::new(3), 0, 0);
+    for tagged in &mb.tagged {
+        let gpu = Trainer::gpu_select(&eng, &d, tagged, g.n_relations()).unwrap();
+        let cpu = semantic::select_serial(tagged, g.n_relations());
+        let par = semantic::select_parallel(tagged, g.n_relations(), 3);
+        for r in 0..g.n_relations() {
+            assert_eq!(gpu[r].src, cpu[r].src, "rel {r} src");
+            assert_eq!(gpu[r].dst, cpu[r].dst, "rel {r} dst");
+            assert_eq!(par[r].src, cpu[r].src, "rel {r} parallel src");
+        }
+    }
+}
+
+/// Measured dispatch counts must equal the analytic plan exactly.
+#[test]
+fn measured_kernel_counts_match_plan() {
+    let eng = Engine::load(&tiny_dir()).unwrap();
+    let d = Dims::from_engine(&eng);
+    let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
+
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        for (name, opt) in [
+            ("base", OptConfig::baseline()),
+            ("hifuse", OptConfig::hifuse()),
+            ("stacked", OptConfig::parse("hifuse+stacked").unwrap()),
+        ] {
+            let mut g2 = tiny_graph(5);
+            prepare_graph_layout(&mut g2, &opt);
+            let mut tr = Trainer::new(&eng, &g2, model, opt, cfg()).unwrap();
+            // Live relation counts per layer from the sampler oracle.
+            let mb = NeighborSampler::new(&g2, scfg).sample(&Rng::new(42), 0, 0);
+            let live: Vec<usize> = mb
+                .oracle_edges
+                .iter()
+                .map(|rels| rels.iter().filter(|e| !e.is_empty()).count())
+                .collect();
+            let expect = plan::expected_counts(model, &opt, g2.n_relations(), &live);
+
+            eng.reset_counters(false);
+            let prep = Trainer::prepare_cpu(&g2, scfg, &d, &opt, 2, &Rng::new(42), 0, 0);
+            tr.compute_batch(prep).unwrap();
+            let c = eng.counters.borrow();
+            for stage in [
+                Stage::SemanticBuild,
+                Stage::Projection,
+                Stage::Aggregation,
+                Stage::Fusion,
+                Stage::Head,
+            ] {
+                for phase in [Phase::Fwd, Phase::Bwd] {
+                    assert_eq!(
+                        c.count_phase(stage, phase),
+                        expect.get(stage, phase),
+                        "{} {name}: stage {stage:?} {phase:?}",
+                        model.name()
+                    );
+                }
+            }
+            assert_eq!(c.total(), expect.total(), "{} {name} total", model.name());
+        }
+    }
+}
+
+/// Pipelined execution computes the same losses as sequential.
+#[test]
+fn pipeline_matches_sequential() {
+    let mut seq_opt = OptConfig::hifuse();
+    seq_opt.pipeline = false;
+    let seq = epoch_losses(ModelKind::Rgcn, seq_opt, 3);
+    let pipe = epoch_losses(ModelKind::Rgcn, OptConfig::hifuse(), 3);
+    for (a, b) in seq.iter().zip(&pipe) {
+        assert!((a - b).abs() < 1e-6, "pipeline diverges: {a} vs {b}");
+    }
+}
+
+/// HiFuse must reduce kernel count vs baseline (Fig. 8 direction) on the
+/// tiny profile already.
+#[test]
+fn hifuse_reduces_kernels() {
+    let eng = Engine::load(&tiny_dir()).unwrap();
+    let mut totals = Vec::new();
+    for opt in [OptConfig::baseline(), OptConfig::hifuse()] {
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        let m = tr.train_epoch(0).unwrap();
+        totals.push(m.kernels_total);
+    }
+    assert!(totals[1] < totals[0], "HiFuse did not reduce kernels: {totals:?}");
+    let reduction = 1.0 - totals[1] as f64 / totals[0] as f64;
+    assert!(reduction > 0.3, "reduction only {reduction:.2}");
+}
+
+/// Accuracy rises above chance after a few epochs (features are learnable
+/// class-centroid Gaussians).
+#[test]
+fn training_beats_chance_accuracy() {
+    let eng = Engine::load(&tiny_dir()).unwrap();
+    let mut g = tiny_graph(1);
+    let opt = OptConfig::hifuse();
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    let mut last = 0.0;
+    for e in 0..8 {
+        last = tr.train_epoch(e).unwrap().acc;
+    }
+    let chance = 1.0 / g.num_classes as f64;
+    assert!(last > chance + 0.1, "acc {last} not above chance {chance}");
+}

@@ -1,0 +1,233 @@
+//! Property-based tests: seeded randomized sweeps asserting invariants
+//! (the offline environment has no proptest crate; these loops play the
+//! same role — many random cases per property, deterministic seeds so
+//! failures reproduce).
+
+use hifuse::coordinator::OptConfig;
+use hifuse::graph::datasets::{generate, DatasetSpec};
+use hifuse::graph::Layout;
+use hifuse::models::plan::expected_counts;
+use hifuse::models::step::{pad_layer_edges, Dims};
+use hifuse::models::ModelKind;
+use hifuse::sampler::{NeighborSampler, SamplerCfg, TaggedEdges};
+use hifuse::semantic;
+use hifuse::util::Rng;
+
+const CASES: u64 = 25;
+
+fn random_spec(rng: &mut Rng) -> DatasetSpec {
+    DatasetSpec {
+        name: "prop",
+        nodes: 100 + rng.below(400),
+        edges: 300 + rng.below(2000),
+        n_types: 2 + rng.below(6),
+        n_relations: 2 + rng.below(10),
+        num_classes: 2 + rng.below(3),
+        train_size: 16 + rng.below(32),
+    }
+}
+
+/// Sampler invariants hold for arbitrary graphs and seeds.
+#[test]
+fn prop_sampler_invariants() {
+    let mut meta = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let spec = random_spec(&mut meta);
+        let g = generate(&spec, 8, 1.0, case);
+        let cfg = SamplerCfg {
+            batch_size: 4 + meta.below(8),
+            fanout: 1 + meta.below(4),
+            layers: 2,
+            ns: 32,
+            ep: 16,
+        };
+        let s = NeighborSampler::new(&g, cfg);
+        let mb = s.sample(&Rng::new(case), case, meta.below(3));
+
+        // (1) slot maps are injective and in-range, capped at ns.
+        for (t, slots) in mb.slots.iter().enumerate() {
+            assert!(slots.len() <= cfg.ns);
+            let mut u = slots.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), slots.len(), "case {case}: dup slot type {t}");
+            for &v in slots {
+                assert!((v as usize) < g.num_nodes[t]);
+            }
+        }
+        // (2) every sampled edge exists in the graph, per-relation <= ep.
+        for layer in &mb.oracle_edges {
+            for (ri, e) in layer.iter().enumerate() {
+                assert!(e.len() <= cfg.ep);
+                let rel = &g.relations[ri];
+                for i in 0..e.len() {
+                    let sv = mb.slots[rel.src_type][e.src[i] as usize];
+                    let dv = mb.slots[rel.dst_type][e.dst[i] as usize];
+                    assert!(rel.in_neighbors(dv as usize).contains(&sv), "case {case}");
+                }
+            }
+        }
+        // (3) tagged list is a permutation of the oracle edges.
+        for (l, t) in mb.tagged.iter().enumerate() {
+            let total: usize = mb.oracle_edges[l].iter().map(|e| e.len()).sum();
+            assert_eq!(t.len(), total, "case {case} layer {l}");
+        }
+    }
+}
+
+/// All three CPU selection implementations agree on random inputs, for any
+/// thread count.
+#[test]
+fn prop_selection_implementations_agree() {
+    let mut meta = Rng::new(0xB0B);
+    for case in 0..CASES * 2 {
+        let n_rel = 1 + meta.below(20);
+        let n = meta.below(3000);
+        let mut t = TaggedEdges::default();
+        let mut rng = Rng::new(case);
+        for _ in 0..n {
+            t.rel.push(rng.below(n_rel) as u32);
+            t.src.push(rng.next_u64() as u32 % 512);
+            t.dst.push(rng.next_u64() as u32 % 512);
+        }
+        let a = semantic::select_serial(&t, n_rel);
+        let b = semantic::select_parallel(&t, n_rel, 1 + meta.below(8));
+        let c = semantic::select_bucketed(&t, n_rel);
+        for r in 0..n_rel {
+            assert_eq!(a[r].src, b[r].src, "case {case} rel {r} parallel");
+            assert_eq!(a[r].src, c[r].src, "case {case} rel {r} bucketed");
+            assert_eq!(a[r].dst, c[r].dst, "case {case} rel {r} bucketed dst");
+        }
+        // Selection partitions the input: total edges preserved.
+        let total: usize = a.iter().map(|e| e.len()).sum();
+        assert_eq!(total, t.len(), "case {case}");
+    }
+}
+
+/// Merged edge tensors always mirror the per-relation padded tensors.
+#[test]
+fn prop_pad_layer_edges_consistency() {
+    let d = Dims { ns: 32, ep: 16, rpad: 8, tpad: 8, f: 8, h: 16, c: 4, elp: 128 };
+    let mut meta = Rng::new(0xC0DE);
+    for case in 0..CASES {
+        let mut rng = Rng::new(case);
+        let rels: Vec<hifuse::sampler::RelEdges> = (0..meta.below(d.rpad + 1))
+            .map(|_| {
+                let n = rng.below(d.ep + 1);
+                hifuse::sampler::RelEdges {
+                    src: (0..n).map(|_| rng.below(d.ns) as u32).collect(),
+                    dst: (0..n).map(|_| rng.below(d.ns) as u32).collect(),
+                }
+            })
+            .collect();
+        let le = pad_layer_edges(&rels, &d);
+        let ms = le.src.as_i32().unwrap();
+        let md = le.dst.as_i32().unwrap();
+        let mv = le.valid.as_f32().unwrap();
+        for r in 0..d.rpad {
+            let (s, t, v) = &le.per_rel[r];
+            assert_eq!(&ms[r * d.ep..(r + 1) * d.ep], s.as_i32().unwrap());
+            assert_eq!(&md[r * d.ep..(r + 1) * d.ep], t.as_i32().unwrap());
+            assert_eq!(&mv[r * d.ep..(r + 1) * d.ep], v.as_f32().unwrap());
+            // valid mask counts the real edges, padding is zeroed.
+            let n = rels.get(r).map(|e| e.len()).unwrap_or(0);
+            let pop: f32 = v.as_f32().unwrap().iter().sum();
+            assert_eq!(pop as usize, n, "case {case} rel {r}");
+        }
+        // live <=> nonzero valid population.
+        for r in 0..d.rpad {
+            let n = rels.get(r).map(|e| e.len()).unwrap_or(0);
+            assert_eq!(le.live.contains(&r), n > 0, "case {case} rel {r}");
+        }
+    }
+}
+
+/// Feature layout conversion is lossless for arbitrary stores.
+#[test]
+fn prop_feature_layout_roundtrip() {
+    let mut meta = Rng::new(0xFEA7);
+    for case in 0..CASES {
+        let n_types = 1 + meta.below(6);
+        let num_nodes: Vec<usize> = (0..n_types).map(|_| 1 + meta.below(50)).collect();
+        let dim = 1 + meta.below(12);
+        let labels: Vec<u8> = (0..num_nodes[0]).map(|_| meta.below(3) as u8).collect();
+        let mut rng = Rng::new(case);
+        let mut store =
+            hifuse::graph::FeatureStore::synth(&num_nodes, dim, 0, &labels, 3, &mut rng);
+        let mut row = vec![0.0f32; dim];
+        let mut snapshot = Vec::new();
+        for (t, &n) in num_nodes.iter().enumerate() {
+            for v in 0..n {
+                store.copy_row(t, v, &mut row);
+                snapshot.push(row.clone());
+            }
+        }
+        store.ensure_layout(Layout::IndexMajor);
+        store.ensure_layout(Layout::TypeMajor);
+        let mut i = 0;
+        for (t, &n) in num_nodes.iter().enumerate() {
+            for v in 0..n {
+                store.copy_row(t, v, &mut row);
+                assert_eq!(row, snapshot[i], "case {case} ({t},{v})");
+                i += 1;
+            }
+        }
+    }
+}
+
+/// The kernel-count model is monotone: every optimization can only reduce
+/// (never increase) the dispatch count, for arbitrary live-relation counts.
+#[test]
+fn prop_plan_monotone_in_optimizations() {
+    let mut meta = Rng::new(0x9_1A7);
+    for case in 0..CASES * 2 {
+        let n_rel = 1 + meta.below(150);
+        let live = vec![meta.below(n_rel + 1), meta.below(n_rel + 1)];
+        for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+            let base = expected_counts(model, &OptConfig::baseline(), n_rel, &live).total();
+            let merged = expected_counts(
+                model,
+                &OptConfig { merge: true, ..OptConfig::baseline() },
+                n_rel,
+                &live,
+            )
+            .total();
+            let off = expected_counts(
+                model,
+                &OptConfig { offload: true, ..OptConfig::baseline() },
+                n_rel,
+                &live,
+            )
+            .total();
+            let hifuse = expected_counts(model, &OptConfig::hifuse(), n_rel, &live).total();
+            let stacked =
+                expected_counts(model, &OptConfig::parse("hifuse+stacked").unwrap(), n_rel, &live)
+                    .total();
+            assert!(merged <= base, "case {case}");
+            assert!(off <= base, "case {case}");
+            assert!(hifuse <= merged.min(off), "case {case}");
+            assert!(stacked <= hifuse, "case {case}");
+        }
+    }
+}
+
+/// Generated datasets always expose a learnable, well-formed task.
+#[test]
+fn prop_generator_well_formed() {
+    let mut meta = Rng::new(0x6E4);
+    for case in 0..CASES {
+        let spec = random_spec(&mut meta);
+        let g = generate(&spec, 8, 1.0, case);
+        assert_eq!(g.n_relations(), spec.n_relations);
+        assert_eq!(g.n_types(), spec.n_types);
+        // Self-relation present for the RGCN self-loop path.
+        assert_eq!(g.relations[0].src_type, g.target_type);
+        assert_eq!(g.relations[0].dst_type, g.target_type);
+        assert_eq!(g.relations[0].num_edges(), g.num_nodes[g.target_type]);
+        // Every vertex's self edge points at itself.
+        for v in 0..g.num_nodes[g.target_type] {
+            assert_eq!(g.relations[0].in_neighbors(v), &[v as u32]);
+        }
+        assert!(!g.train_idx.is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! Runtime-level tests against the `tiny` artifacts: every module in the
+//! manifest executes with manifest-shaped inputs and returns
+//! manifest-shaped outputs; dispatch accounting and shape checking work.
+
+use std::path::PathBuf;
+
+use hifuse::runtime::{DType, Engine, Phase, Stage};
+use hifuse::util::HostTensor;
+
+fn engine() -> Engine {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    assert!(p.join("manifest.txt").exists(), "run `make artifacts` first");
+    Engine::load(&p).unwrap()
+}
+
+fn zero_input(dtype: DType, shape: &[usize]) -> HostTensor {
+    match dtype {
+        DType::F32 => HostTensor::f32(vec![0.0; shape.iter().product()], shape),
+        DType::I32 => HostTensor::i32(vec![0; shape.iter().product()], shape),
+    }
+}
+
+/// Smoke: every declared module compiles, runs, and returns tensors whose
+/// dtypes/shapes match the manifest. Catches interface drift between
+/// aot.py and the compiled HLO (e.g. dropped unused args).
+#[test]
+fn every_module_roundtrips_interface() {
+    let eng = engine();
+    let names: Vec<String> = eng.manifest.modules.keys().cloned().collect();
+    assert!(names.len() >= 30, "expected full module inventory, got {}", names.len());
+    for name in names {
+        let spec = eng.manifest.module(&name).unwrap().clone();
+        let args: Vec<HostTensor> =
+            spec.args.iter().map(|a| zero_input(a.dtype, &a.shape)).collect();
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        // Leak the name to get a &'static str for the counter tag (test-only).
+        let static_name: &'static str = Box::leak(name.clone().into_boxed_str());
+        let outs = eng
+            .run(static_name, Stage::Calib, Phase::Fwd, &refs)
+            .unwrap_or_else(|e| panic!("module {name} failed: {e:#}"));
+        assert_eq!(outs.len(), spec.rets.len(), "{name}: return arity");
+        for (o, r) in outs.iter().zip(&spec.rets) {
+            assert_eq!(o.shape(), r.shape.as_slice(), "{name}: ret shape");
+            let want = match r.dtype {
+                DType::F32 => "f32",
+                DType::I32 => "i32",
+            };
+            assert_eq!(o.dtype_str(), want, "{name}: ret dtype");
+        }
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_execution() {
+    let eng = engine();
+    let bad = HostTensor::zeros_f32(&[3, 3]);
+    let w = HostTensor::zeros_f32(&[8, 16]);
+    let err = eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&bad, &w]).unwrap_err();
+    assert!(err.to_string().contains("expects"), "unexpected error: {err}");
+}
+
+#[test]
+fn dtype_mismatch_is_rejected() {
+    let eng = engine();
+    let ns = eng.cst("NS");
+    let f = eng.cst("F");
+    let x_wrong = HostTensor::i32(vec![0; ns * f], &[ns, f]);
+    let w = HostTensor::zeros_f32(&[f, eng.cst("H")]);
+    assert!(eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&x_wrong, &w]).is_err());
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let eng = engine();
+    let x = HostTensor::zeros_f32(&[eng.cst("NS"), eng.cst("F")]);
+    assert!(eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&x]).is_err());
+}
+
+#[test]
+fn unknown_module_is_an_error() {
+    let eng = engine();
+    assert!(eng.run("nope", Stage::Calib, Phase::Fwd, &[]).is_err());
+}
+
+#[test]
+fn projection_computes_matmul() {
+    let eng = engine();
+    let (ns, f, h) = (eng.cst("NS"), eng.cst("F"), eng.cst("H"));
+    // x = e_0 outer: row 0 = [1,0,...]; w row 0 = 1..h.
+    let mut x = vec![0.0f32; ns * f];
+    x[0] = 2.0;
+    let mut w = vec![0.0f32; f * h];
+    for j in 0..h {
+        w[j] = (j + 1) as f32;
+    }
+    let out = eng
+        .run(
+            "proj_fwd_l0",
+            Stage::Calib,
+            Phase::Fwd,
+            &[&HostTensor::f32(x, &[ns, f]), &HostTensor::f32(w, &[f, h])],
+        )
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+    for j in 0..h {
+        assert!((y[j] - 2.0 * (j + 1) as f32).abs() < 1e-5, "y[{j}]={}", y[j]);
+    }
+    assert!(y[h..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn merged_aggregation_means_sources() {
+    let eng = engine();
+    let (ns, ep, rp, h) = (eng.cst("NS"), eng.cst("EP"), eng.cst("RPAD"), eng.cst("H"));
+    let mut feat = vec![0.0f32; rp * ns * h];
+    // relation 1: rows 2 and 3 hold values 3 and 5 in every column.
+    for d in 0..h {
+        feat[ns * h + 2 * h + d] = 3.0;
+        feat[ns * h + 3 * h + d] = 5.0;
+    }
+    let mut src = vec![0i32; rp * ep];
+    let mut dst = vec![0i32; rp * ep];
+    let mut valid = vec![0.0f32; rp * ep];
+    // two valid edges in relation 1: 2->7 and 3->7.
+    src[ep] = 2;
+    dst[ep] = 7;
+    valid[ep] = 1.0;
+    src[ep + 1] = 3;
+    dst[ep + 1] = 7;
+    valid[ep + 1] = 1.0;
+    let out = eng
+        .run(
+            "agg_merged_fwd_h",
+            Stage::Calib,
+            Phase::Fwd,
+            &[
+                &HostTensor::f32(feat, &[rp, ns, h]),
+                &HostTensor::i32(src, &[rp, ep]),
+                &HostTensor::i32(dst, &[rp, ep]),
+                &HostTensor::f32(valid, &[rp, ep]),
+            ],
+        )
+        .unwrap();
+    let a = out[0].as_f32().unwrap();
+    for d in 0..h {
+        assert!((a[ns * h + 7 * h + d] - 4.0).abs() < 1e-5); // mean(3,5)
+    }
+    // relation 0 (all invalid) stays zero.
+    assert!(a[..ns * h].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn counters_track_dispatches_and_bytes() {
+    let eng = engine();
+    eng.reset_counters(true);
+    let (ns, c) = (eng.cst("NS"), eng.cst("C"));
+    let logits = HostTensor::zeros_f32(&[ns, c]);
+    let labels = HostTensor::i32(vec![0; ns], &[ns]);
+    let mask = HostTensor::f32(vec![1.0; ns], &[ns]);
+    eng.run("head", Stage::Head, Phase::Fwd, &[&logits, &labels, &mask]).unwrap();
+    let counters = eng.counters.borrow();
+    assert_eq!(counters.total(), 1);
+    assert_eq!(counters.events.len(), 1);
+    let e = &counters.events[0];
+    assert_eq!(e.module, "head");
+    assert_eq!(e.bytes_in, ns * c * 4 + ns * 4 + ns * 4);
+    assert!(e.bytes_out > 0);
+    assert!(e.dur.as_nanos() > 0);
+}
+
+#[test]
+fn dispatch_overhead_probe_is_sane() {
+    let eng = engine();
+    let us = eng.measure_dispatch_overhead(10).unwrap().as_secs_f64() * 1e6;
+    // CPU PJRT dispatch is tens-to-hundreds of microseconds; anything in
+    // (1us, 100ms) says the probe works.
+    assert!(us > 1.0 && us < 100_000.0, "overhead {us}us");
+}
+
+#[test]
+fn extra_launch_overhead_is_applied() {
+    let mut eng = engine();
+    let base = eng.measure_dispatch_overhead(5).unwrap();
+    eng.extra_launch_overhead = std::time::Duration::from_micros(500);
+    let slow = eng.measure_dispatch_overhead(5).unwrap();
+    assert!(slow > base + std::time::Duration::from_micros(300), "{base:?} -> {slow:?}");
+}
