@@ -1,0 +1,36 @@
+# HiFuse-RS build entry points.
+#
+# The default path is fully self-contained: the pure-Rust SimBackend needs
+# no AOT artifacts, no Python, and no PJRT runtime — `make build test`
+# works on a clean checkout.
+#
+# The PJRT backend is opt-in behind the non-default `pjrt` cargo feature:
+#   1. `make artifacts`  — emit the AOT HLO modules (needs a jax Python env)
+#   2. provide the `xla` crate (see the commented dependency in
+#      rust/Cargo.toml — it is not fetchable offline)
+#   3. `cargo build --release --features pjrt`
+#   4. run with `repro train --backend pjrt --artifacts artifacts/bench`
+
+.PHONY: build test bench artifacts fmt clippy
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Regenerate every paper table/figure into results/ (sim backend, bench
+# profile; minutes). HIFUSE_BENCH_QUICK=1 for a fast pass.
+bench: build
+	cargo bench --bench paper
+
+# OPTIONAL: emit the AOT HLO artifacts for the PJRT backend. The default
+# (sim) backend never needs this.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts --profiles tiny,bench
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings

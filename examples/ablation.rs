@@ -1,19 +1,19 @@
 //! Ablation walk-through (a fast, single-dataset rendition of the paper's
 //! Fig. 9): run the optimization ladder base -> R -> R+M -> R+O+P ->
 //! HiFuse (-> HiFuse+stacked extension) on RGCN/aifb and print the
-//! incremental speedups.
+//! incremental speedups. Runs on the self-contained sim backend:
 //!
-//!     make artifacts && cargo run --release --example ablation
+//!     cargo run --release --example ablation
 
 use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::{generate, spec_by_name};
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
-use hifuse::runtime::Engine;
+use hifuse::runtime::SimBackend;
 
 fn main() -> anyhow::Result<()> {
-    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
-    let d = Dims::from_engine(&eng);
+    let eng = SimBackend::builtin("bench")?;
+    let d = Dims::from_backend(&eng);
     let spec = spec_by_name("aifb").unwrap();
     let cfg = TrainCfg { epochs: 1, batch_size: 48, fanout: 4, ..Default::default() };
 

@@ -4,8 +4,9 @@
 //! HiFuse execution mode, logging the loss curve, then run one baseline
 //! epoch for a direct wall-clock comparison.
 //!
-//!     make artifacts && cargo run --release --example e2e_train
+//!     cargo run --release --example e2e_train
 //!
+//! Runs on the self-contained sim backend (no artifacts, no Python).
 //! Outputs: results/e2e_loss.csv (step-level loss curve), stdout summary.
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -14,12 +15,12 @@ use hifuse::graph::datasets::{generate, spec_by_name};
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
 use hifuse::report;
-use hifuse::runtime::Engine;
+use hifuse::runtime::SimBackend;
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::var("E2E_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
-    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
-    let d = Dims::from_engine(&eng);
+    let eng = SimBackend::builtin("bench")?;
+    let d = Dims::from_backend(&eng);
 
     let spec = spec_by_name("aifb").unwrap();
     let mut graph = generate(&spec, d.f, 1.0, 42);

@@ -3,21 +3,23 @@
 //! timeline head and the roofline classification, and write
 //! results/profile_timeline.csv + results/profile_roofline.csv.
 //!
-//!     make artifacts && cargo run --release --example profile_kernels
+//!     cargo run --release --example profile_kernels
+//!
+//! Runs on the self-contained sim backend (no artifacts, no Python).
 
-use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::{generate, spec_by_name};
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
 use hifuse::perf;
 use hifuse::report;
-use hifuse::runtime::Engine;
+use hifuse::runtime::{ExecBackend, SimBackend};
 use hifuse::sampler::SamplerCfg;
 use hifuse::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
-    let d = Dims::from_engine(&eng);
+    let eng = SimBackend::builtin("bench")?;
+    let d = Dims::from_backend(&eng);
     let peaks = perf::calibrate(&eng)?;
     println!(
         "peaks: {:.1} GFLOP/s | {:.1} GB/s | dispatch {:.0} us | knee AI {:.2}",
@@ -39,13 +41,13 @@ fn main() -> anyhow::Result<()> {
 
     // Warm up compile caches, then profile exactly one batch.
     let scfg = SamplerCfg { batch_size: 64, fanout: 4, layers: 2, ns: d.ns, ep: d.ep };
-    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
+    let prep = prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
     tr.compute_batch(prep)?;
     eng.reset_counters(true);
-    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
+    let prep = prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
     tr.compute_batch(prep)?;
 
-    let counters = eng.counters.borrow();
+    let counters = eng.counters().borrow();
     println!("\none baseline batch = {} kernel launches", counters.total());
     println!("first 12 timeline events:");
     println!("{:>10} {:>9} {:24} {:15}", "t (us)", "dur (us)", "module", "stage");

@@ -1,22 +1,26 @@
 //! Quickstart: train a 2-layer RGCN with HiFuse on a small synthetic
-//! heterogeneous graph, in ~a minute on the `tiny` profile.
+//! heterogeneous graph, in seconds, on the self-contained sim backend:
 //!
-//!     make artifacts
 //!     cargo run --release --example quickstart
 //!
-//! This walks the whole public API surface: generate a graph, open the
-//! AOT artifact profile, build a `Trainer`, train, inspect metrics.
+//! No artifacts, no Python: the default `SimBackend` interprets every
+//! stage module with reference semantics. (To run the same program on the
+//! PJRT engine instead: `make artifacts`, build with `--features pjrt`,
+//! and swap `SimBackend::builtin` for `Engine::load`.)
+//!
+//! This walks the whole public API surface: generate a graph, open a
+//! backend, build a `Trainer`, train, inspect metrics.
 
 use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::tiny_graph;
 use hifuse::models::ModelKind;
-use hifuse::runtime::Engine;
+use hifuse::runtime::{ExecBackend, SimBackend};
 
 fn main() -> anyhow::Result<()> {
-    // 1. The AOT artifacts (L1 Pallas kernels + L2 JAX modules, lowered to
-    //    HLO text by `make artifacts`) — Python never runs from here on.
-    let eng = Engine::load(std::path::Path::new("artifacts/tiny"))?;
-    println!("profile {} loaded ({} modules)", eng.profile(), eng.manifest.modules.len());
+    // 1. An execution backend over the built-in `tiny` profile. One module
+    //    dispatch ≙ one "CUDA kernel launch" of the paper.
+    let eng = SimBackend::builtin("tiny")?;
+    println!("profile {} loaded ({} modules)", eng.profile(), eng.manifest().modules.len());
 
     // 2. A small synthetic heterogeneous graph (3 vertex types, 6 edge
     //    relations, learnable class-centroid features).

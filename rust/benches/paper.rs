@@ -21,14 +21,14 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::{generate, spec_by_name, DATASETS};
 use hifuse::graph::HeteroGraph;
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
 use hifuse::perf;
 use hifuse::report::{f2, geomean, write_csv, write_md_table};
-use hifuse::runtime::{Engine, Phase, Stage};
+use hifuse::runtime::{ExecBackend, Phase, SimBackend, Stage};
 use hifuse::sampler::SamplerCfg;
 use hifuse::util::Rng;
 
@@ -67,8 +67,8 @@ struct RunRow {
     loss: f64,
 }
 
-fn run_one(
-    eng: &Engine,
+fn run_one<B: ExecBackend>(
+    eng: &B,
     graph: &mut HeteroGraph,
     dataset: &'static str,
     model: ModelKind,
@@ -101,8 +101,11 @@ fn combo_label(r: &RunRow) -> String {
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("HIFUSE_BENCH_QUICK").is_ok();
     let t0 = Instant::now();
-    let eng = Engine::load(std::path::Path::new("artifacts/bench"))?;
-    let d = Dims::from_engine(&eng);
+    // The full figure matrix runs on the self-contained sim backend (the
+    // dispatch counts are backend-invariant; wall-clock shape is preserved
+    // because every dispatch pays the same measured launch overhead).
+    let eng = SimBackend::builtin("bench")?;
+    let d = Dims::from_backend(&eng);
     let cfg = TrainCfg { epochs: 2, batch_size: 64, fanout: 4, lr: 0.05, seed: 42, threads: 4 };
 
     // ---------------- Table 2: dataset statistics --------------------------
@@ -307,12 +310,12 @@ fn main() -> anyhow::Result<()> {
             let opt = OptConfig::parse(mode).unwrap();
             prepare_graph_layout(g, &opt);
             let mut tr = Trainer::new(&eng, g, model, opt, cfg)?;
-            let prep = Trainer::prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
+            let prep = prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
             tr.compute_batch(prep)?; // warm
             eng.reset_counters(true);
-            let prep = Trainer::prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
+            let prep = prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
             tr.compute_batch(prep)?;
-            let counters = eng.counters.borrow();
+            let counters = eng.counters().borrow();
             // Fig 3 artifacts come from the RGCN baseline batch (paper's setup).
             if model == ModelKind::Rgcn && mode == "base" {
                 for e in &counters.events {

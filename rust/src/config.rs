@@ -10,6 +10,32 @@ use crate::coordinator::{OptConfig, TrainCfg};
 use crate::graph::{self, HeteroGraph};
 use crate::models::ModelKind;
 
+/// Which `ExecBackend` implementation a run executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference interpreter (default): no artifacts, no Python.
+    Sim,
+    /// PJRT engine over AOT HLO artifacts (requires `--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sim" => Some(BackendKind::Sim),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Everything a training / benchmark run needs.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -20,8 +46,16 @@ pub struct RunConfig {
     pub train: TrainCfg,
     /// Dataset scale factor (DESIGN.md §2: schema never scales).
     pub scale: f64,
-    /// Profile directory, e.g. `artifacts/bench`.
+    /// Profile directory for the PJRT backend, e.g. `artifacts/bench`.
     pub artifacts: PathBuf,
+    /// Execution backend (default: the self-contained sim interpreter).
+    pub backend: BackendKind,
+    /// Built-in profile for the sim backend (`tiny`|`bench`); `None` picks
+    /// by dataset (tiny dataset -> tiny profile, everything else -> bench).
+    pub profile: Option<String>,
+    /// Simulated per-dispatch launch overhead for the sim backend, in
+    /// microseconds — the "CUDA launch cost" knob of the reproduction.
+    pub sim_overhead_us: f64,
 }
 
 impl Default for RunConfig {
@@ -34,6 +68,9 @@ impl Default for RunConfig {
             train: TrainCfg::default(),
             scale: 1.0,
             artifacts: PathBuf::from("artifacts/bench"),
+            backend: BackendKind::Sim,
+            profile: None,
+            sim_overhead_us: 0.0,
         }
     }
 }
@@ -71,10 +108,28 @@ impl RunConfig {
                 "threads" => cfg.train.threads = v.parse().context("--threads")?,
                 "scale" => cfg.scale = v.parse().context("--scale")?,
                 "artifacts" => cfg.artifacts = PathBuf::from(v),
+                "backend" => {
+                    cfg.backend = BackendKind::parse(&v)
+                        .with_context(|| format!("unknown backend {v:?} (sim|pjrt)"))?
+                }
+                "profile" => cfg.profile = Some(v),
+                "sim-overhead-us" => {
+                    cfg.sim_overhead_us = v.parse().context("--sim-overhead-us")?
+                }
                 other => bail!("unknown flag --{other}"),
             }
         }
         Ok(cfg)
+    }
+
+    /// Sim-backend profile: explicit `--profile` wins; otherwise the tiny
+    /// dataset gets the tiny profile and every Table 2 dataset gets bench.
+    pub fn resolved_profile(&self) -> &str {
+        match &self.profile {
+            Some(p) => p,
+            None if self.dataset == "tiny" => "tiny",
+            None => "bench",
+        }
     }
 
     /// Build the dataset this config names. `feat_dim` must equal the
@@ -120,9 +175,26 @@ mod tests {
     }
 
     #[test]
-    fn defaults_are_hifuse_aifb() {
+    fn defaults_are_hifuse_aifb_on_sim() {
         let c = RunConfig::from_args(&[]).unwrap();
         assert_eq!(c.dataset, "aifb");
         assert_eq!(c.opt, OptConfig::hifuse());
+        assert_eq!(c.backend, BackendKind::Sim);
+        assert_eq!(c.resolved_profile(), "bench");
+        assert_eq!(c.sim_overhead_us, 0.0);
+    }
+
+    #[test]
+    fn backend_and_profile_flags_parse() {
+        let c = RunConfig::from_args(&argv("--backend pjrt --artifacts a/b")).unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert_eq!(c.artifacts, PathBuf::from("a/b"));
+        let c = RunConfig::from_args(&argv("--dataset tiny --sim-overhead-us 50")).unwrap();
+        assert_eq!(c.backend, BackendKind::Sim);
+        assert_eq!(c.resolved_profile(), "tiny");
+        assert_eq!(c.sim_overhead_us, 50.0);
+        let c = RunConfig::from_args(&argv("--dataset tiny --profile bench")).unwrap();
+        assert_eq!(c.resolved_profile(), "bench");
+        assert!(RunConfig::from_args(&argv("--backend gpu")).is_err());
     }
 }

@@ -16,7 +16,7 @@ use crate::models::step::{
     pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
 };
 use crate::models::{ModelKind, Params};
-use crate::runtime::{Engine, Phase, Stage};
+use crate::runtime::{ExecBackend, Phase, Stage};
 use crate::sampler::{collect, MiniBatch, NeighborSampler, RelEdges, SamplerCfg, TaggedEdges};
 use crate::semantic;
 use crate::util::{HostTensor, Rng};
@@ -59,7 +59,7 @@ pub struct EpochMetrics {
 }
 
 /// CPU-side product of batch preparation (safe to build on a producer
-/// thread; contains no PJRT handles).
+/// thread; contains no backend handles).
 pub struct PreparedCpu {
     pub collected: collect::Collected,
     /// `Some` when selection ran on CPU (offload path).
@@ -78,10 +78,88 @@ pub fn prepare_graph_layout(g: &mut HeteroGraph, opt: &OptConfig) {
     g.features.ensure_layout(want);
 }
 
-pub struct Trainer<'g, 'e> {
-    pub eng: &'e Engine,
+/// CPU half of batch preparation (runs on the producer thread in pipeline
+/// mode; touches no backend handles): sample, (optionally) select on CPU,
+/// collect.
+pub fn prepare_cpu(
+    graph: &HeteroGraph,
+    scfg: SamplerCfg,
+    d: &Dims,
+    opt: &OptConfig,
+    threads: usize,
+    rng: &Rng,
+    epoch: u64,
+    batch_idx: usize,
+) -> PreparedCpu {
+    let t0 = Instant::now();
+    let sampler = NeighborSampler::new(graph, scfg);
+    let mb: MiniBatch = sampler.sample(rng, epoch, batch_idx);
+    let n_rel = graph.n_relations();
+    let selected = if opt.offload {
+        Some(
+            mb.tagged
+                .iter()
+                .map(|t| {
+                    if opt.parallel {
+                        semantic::select_parallel(t, n_rel, threads)
+                    } else {
+                        semantic::select_serial(t, n_rel)
+                    }
+                })
+                .collect::<Vec<_>>(),
+        )
+    } else {
+        None
+    };
+    let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f);
+    PreparedCpu {
+        collected,
+        selected,
+        tagged: if opt.offload { None } else { Some(mb.tagged) },
+        cpu_time: t0.elapsed(),
+        dropped_nodes: mb.dropped_nodes,
+        dropped_edges: mb.dropped_edges,
+    }
+}
+
+/// "GPU" edge-index selection (baseline): one `edge_select` dispatch per
+/// relation per layer (the compare+index_select kernel pair), then host
+/// extraction of the selected endpoints.
+pub fn gpu_select<B: ExecBackend>(
+    eng: &B,
+    d: &Dims,
+    tagged: &TaggedEdges,
+    n_rel: usize,
+) -> Result<Vec<RelEdges>> {
+    // Pad the tagged type column to ELP with a sentinel (RPAD never matches
+    // a real relation id).
+    let mut et = vec![d.rpad as i32; d.elp];
+    for (i, &r) in tagged.rel.iter().enumerate() {
+        et[i] = r as i32;
+    }
+    let et = HostTensor::i32(et, &[d.elp]);
+    let mut out = Vec::with_capacity(n_rel);
+    for r in 0..n_rel {
+        let rel = HostTensor::scalar_i32(r as i32);
+        let mut res = eng
+            .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[&et, &rel])?
+            .into_iter();
+        let pos = res.next().unwrap().into_i32()?;
+        let count = res.next().unwrap().scalar()? as usize;
+        let mut e = RelEdges::default();
+        for &p in &pos[..count] {
+            e.src.push(tagged.src[p as usize]);
+            e.dst.push(tagged.dst[p as usize]);
+        }
+        out.push(e);
+    }
+    Ok(out)
+}
+
+pub struct Trainer<'g, 'e, B: ExecBackend> {
+    pub eng: &'e B,
     pub graph: &'g HeteroGraph,
-    pub exec: StepExecutor<'e>,
+    pub exec: StepExecutor<'e, B>,
     pub schema: SchemaTensors,
     pub params: Params,
     pub cfg: TrainCfg,
@@ -89,15 +167,15 @@ pub struct Trainer<'g, 'e> {
     rng: Rng,
 }
 
-impl<'g, 'e> Trainer<'g, 'e> {
+impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
     pub fn new(
-        eng: &'e Engine,
+        eng: &'e B,
         graph: &'g HeteroGraph,
         model: ModelKind,
         opt: OptConfig,
         cfg: TrainCfg,
     ) -> Result<Self> {
-        let d = Dims::from_engine(eng);
+        let d = Dims::from_backend(eng);
         assert_eq!(graph.feat_dim, d.f, "graph feature dim != profile F");
         assert!(graph.num_classes <= d.c, "dataset classes exceed profile C");
         let schema = schema_tensors(graph, &d);
@@ -121,83 +199,6 @@ impl<'g, 'e> Trainer<'g, 'e> {
         }
     }
 
-    /// CPU half of batch preparation (runs on the producer thread in
-    /// pipeline mode): sample, (optionally) select on CPU, collect.
-    pub fn prepare_cpu(
-        graph: &HeteroGraph,
-        scfg: SamplerCfg,
-        d: &Dims,
-        opt: &OptConfig,
-        threads: usize,
-        rng: &Rng,
-        epoch: u64,
-        batch_idx: usize,
-    ) -> PreparedCpu {
-        let t0 = Instant::now();
-        let sampler = NeighborSampler::new(graph, scfg);
-        let mb: MiniBatch = sampler.sample(rng, epoch, batch_idx);
-        let n_rel = graph.n_relations();
-        let selected = if opt.offload {
-            Some(
-                mb.tagged
-                    .iter()
-                    .map(|t| {
-                        if opt.parallel {
-                            semantic::select_parallel(t, n_rel, threads)
-                        } else {
-                            semantic::select_serial(t, n_rel)
-                        }
-                    })
-                    .collect::<Vec<_>>(),
-            )
-        } else {
-            None
-        };
-        let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f);
-        PreparedCpu {
-            collected,
-            selected,
-            tagged: if opt.offload { None } else { Some(mb.tagged) },
-            cpu_time: t0.elapsed(),
-            dropped_nodes: mb.dropped_nodes,
-            dropped_edges: mb.dropped_edges,
-        }
-    }
-
-    /// "GPU" edge-index selection (baseline): one `edge_select` dispatch
-    /// per relation per layer (the compare+index_select kernel pair), then
-    /// host extraction of the selected endpoints.
-    pub fn gpu_select(
-        eng: &Engine,
-        d: &Dims,
-        tagged: &TaggedEdges,
-        n_rel: usize,
-    ) -> Result<Vec<RelEdges>> {
-        // Pad the tagged type column to ELP with a sentinel (RPAD never
-        // matches a real relation id).
-        let mut et = vec![d.rpad as i32; d.elp];
-        for (i, &r) in tagged.rel.iter().enumerate() {
-            et[i] = r as i32;
-        }
-        let et = HostTensor::i32(et, &[d.elp]);
-        let mut out = Vec::with_capacity(n_rel);
-        for r in 0..n_rel {
-            let rel = HostTensor::scalar_i32(r as i32);
-            let mut res = eng
-                .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[&et, &rel])?
-                .into_iter();
-            let pos = res.next().unwrap().into_i32()?;
-            let count = res.next().unwrap().scalar()? as usize;
-            let mut e = RelEdges::default();
-            for &p in &pos[..count] {
-                e.src.push(tagged.src[p as usize]);
-                e.dst.push(tagged.dst[p as usize]);
-            }
-            out.push(e);
-        }
-        Ok(out)
-    }
-
     /// Device half of batch preparation + the training step itself.
     pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize)> {
         let d = self.exec.d;
@@ -205,7 +206,7 @@ impl<'g, 'e> Trainer<'g, 'e> {
             (Some(s), _) => s,
             (None, Some(tagged)) => tagged
                 .iter()
-                .map(|t| Self::gpu_select(self.eng, &d, t, self.schema.n_rel))
+                .map(|t| gpu_select(self.eng, &d, t, self.schema.n_rel))
                 .collect::<Result<_>>()?,
             _ => unreachable!("prepare_cpu always sets one of selected/tagged"),
         };
@@ -240,7 +241,7 @@ impl<'g, 'e> Trainer<'g, 'e> {
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
         for b in 0..n_batches {
-            let prep = Self::prepare_cpu(
+            let prep = prepare_cpu(
                 self.graph, scfg, &d, &self.opt, self.cfg.threads, &self.rng, epoch, b,
             );
             m.cpu_time += prep.cpu_time;
@@ -265,7 +266,7 @@ impl<'g, 'e> Trainer<'g, 'e> {
         m.wall = wall0.elapsed();
         m.loss /= m.batches.max(1) as f64;
         m.acc = total_correct / total_seed.max(1) as f64;
-        let c = self.eng.counters.borrow();
+        let c = self.eng.counters().borrow();
         m.gpu_time = c.gpu_time;
         m.kernels_total = c.total();
         m.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);

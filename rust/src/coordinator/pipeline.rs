@@ -2,26 +2,30 @@
 //!
 //! A producer thread runs the CPU stages — mini-batch sampling, CPU
 //! edge-index selection, feature collection — while the main thread runs
-//! model computation on the PJRT "device". A bounded channel (depth 2)
+//! model computation on the execution backend. A bounded channel (depth 2)
 //! provides the backpressure: the CPU may run at most two batches ahead,
 //! like the paper's dedicated transfer stream feeding the compute stream.
 //!
-//! `PjRtClient` is `!Send`, so compute stays on the calling thread and only
-//! plain host data crosses the channel — the design reason `PreparedCpu`
-//! contains no runtime handles.
+//! Backends may be `!Send` (the PJRT client is Rc-based), so compute stays
+//! on the calling thread and only plain host data crosses the channel — the
+//! design reason `PreparedCpu` contains no backend handles.
 
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{EpochMetrics, PreparedCpu, Trainer};
+use super::{prepare_cpu, EpochMetrics, PreparedCpu, Trainer};
+use crate::runtime::ExecBackend;
 use crate::sampler::NeighborSampler;
 
 /// Depth of the producer->consumer channel (batches in flight).
 pub const PIPELINE_DEPTH: usize = 2;
 
-pub fn train_epoch_pipelined(tr: &mut Trainer, epoch: u64) -> Result<EpochMetrics> {
+pub fn train_epoch_pipelined<B: ExecBackend>(
+    tr: &mut Trainer<'_, '_, B>,
+    epoch: u64,
+) -> Result<EpochMetrics> {
     let scfg = tr.sampler_cfg();
     let n_batches = NeighborSampler::new(tr.graph, scfg).batches_per_epoch();
     let d = tr.exec.d;
@@ -41,8 +45,7 @@ pub fn train_epoch_pipelined(tr: &mut Trainer, epoch: u64) -> Result<EpochMetric
         let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
         s.spawn(move || {
             for b in 0..n_batches {
-                let prep =
-                    Trainer::prepare_cpu(graph, scfg, &d, &opt, threads, &rng, epoch, b);
+                let prep = prepare_cpu(graph, scfg, &d, &opt, threads, &rng, epoch, b);
                 if tx.send(prep).is_err() {
                     return; // consumer bailed
                 }

@@ -4,21 +4,31 @@
 //!   datasets                     print Table 2 (generator statistics)
 //!   train [flags]                train a model, print per-epoch metrics
 //!   counts [flags]               measured vs predicted kernel counts
-//!   calibrate [--artifacts DIR]  machine peaks (compute / bandwidth / launch)
+//!   calibrate [flags]            machine peaks (compute / bandwidth / launch)
+//!   profile [flags]              per-module time breakdown of one step
 //!
 //! Common flags: --dataset aifb|mutag|bgs|am|tiny --model rgcn|rgat
 //!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked --epochs N
 //!   --batch-size N --fanout N --lr F --seed N --threads N --scale F
-//!   --artifacts DIR (default artifacts/bench)
+//!   --backend sim|pjrt (default sim) --profile tiny|bench (sim backend)
+//!   --sim-overhead-us F (simulated launch cost, sim backend)
+//!   --artifacts DIR (pjrt backend artifact dir, default artifacts/bench)
+//!
+//! The default `sim` backend is fully self-contained (no AOT artifacts, no
+//! Python); `--backend pjrt` needs a build with `--features pjrt` plus
+//! `make artifacts`. See README.md.
+
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use hifuse::config::RunConfig;
-use hifuse::coordinator::{prepare_graph_layout, Trainer};
+use hifuse::config::{BackendKind, RunConfig};
+use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, Trainer};
 use hifuse::graph::datasets::DATASETS;
 use hifuse::models::plan;
+use hifuse::models::step::Dims;
 use hifuse::perf;
-use hifuse::runtime::Engine;
+use hifuse::runtime::{ExecBackend, SimBackend};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,10 +38,10 @@ fn main() -> Result<()> {
     };
     match cmd.as_str() {
         "datasets" => cmd_datasets(),
-        "train" => cmd_train(rest),
-        "counts" => cmd_counts(rest),
-        "calibrate" => cmd_calibrate(rest),
-        "profile" => cmd_profile(rest),
+        "train" => dispatch(rest, Action::Train),
+        "counts" => dispatch(rest, Action::Counts),
+        "calibrate" => dispatch(rest, Action::Calibrate),
+        "profile" => dispatch(rest, Action::Profile),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -43,9 +53,93 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "repro — HiFuse-RS launcher\n\
-         usage: repro <datasets|train|counts|calibrate> [--flag value ...]\n\
-         see `rust/src/main.rs` header or README.md for flags"
+         usage: repro <datasets|train|counts|calibrate|profile> [--flag value ...]\n\
+         \n\
+         subcommands:\n\
+         \x20 datasets    print Table 2 (generator statistics)\n\
+         \x20 train       train a model, print per-epoch metrics\n\
+         \x20 counts      measured vs predicted kernel counts\n\
+         \x20 calibrate   machine peaks (compute / bandwidth / launch overhead)\n\
+         \x20 profile     per-module time breakdown of one training step\n\
+         \n\
+         common flags:\n\
+         \x20 --dataset aifb|mutag|bgs|am|tiny    --model rgcn|rgat\n\
+         \x20 --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked\n\
+         \x20 --backend sim|pjrt (default sim)    --profile tiny|bench (sim)\n\
+         \x20 --sim-overhead-us F                 --artifacts DIR (pjrt)\n\
+         \x20 --epochs N --batch-size N --fanout N --lr F --seed N\n\
+         \x20 --threads N --scale F\n\
+         see README.md for details"
     );
+}
+
+/// What each backend-using subcommand does once a backend exists.
+#[derive(Clone, Copy)]
+enum Action {
+    Train,
+    Counts,
+    Calibrate,
+    Profile,
+}
+
+/// Build the configured backend, then run the action against it. The match
+/// is the single place backend selection happens; everything below it is
+/// generic over `ExecBackend`.
+fn dispatch(args: &[String], action: Action) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    match cfg.backend {
+        BackendKind::Sim => {
+            let mut eng = SimBackend::builtin(cfg.resolved_profile())?;
+            if cfg.sim_overhead_us > 0.0 {
+                eng.set_launch_overhead(Duration::from_secs_f64(cfg.sim_overhead_us * 1e-6));
+            }
+            run_action(&eng, &cfg, action)
+        }
+        BackendKind::Pjrt => pjrt_dispatch(&cfg, action),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_dispatch(cfg: &RunConfig, action: Action) -> Result<()> {
+    let mut eng = hifuse::runtime::Engine::load(&cfg.artifacts)?;
+    if cfg.sim_overhead_us > 0.0 {
+        // Same knob as the sim backend: extra busy-wait per dispatch, so
+        // dispatch-bound comparisons mean the same thing on both backends.
+        eng.extra_launch_overhead = Duration::from_secs_f64(cfg.sim_overhead_us * 1e-6);
+    }
+    run_action(&eng, cfg, action)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_dispatch(_cfg: &RunConfig, _action: Action) -> Result<()> {
+    bail!(
+        "this build has no PJRT support; run `make artifacts`, then rebuild \
+         with `cargo build --release --features pjrt` (see rust/Cargo.toml)"
+    )
+}
+
+fn run_action<B: ExecBackend>(eng: &B, cfg: &RunConfig, action: Action) -> Result<()> {
+    match action {
+        Action::Train => cmd_train(eng, cfg),
+        Action::Counts => cmd_counts(eng, cfg),
+        Action::Calibrate => cmd_calibrate(eng),
+        Action::Profile => cmd_profile(eng, cfg),
+    }
+}
+
+/// Clamp the batch size to the profile's node-slab capacity so e.g.
+/// `repro train --dataset tiny` works with the default --batch-size on the
+/// tiny profile (NS=32) instead of tripping the sampler's capacity assert.
+fn clamped(cfg: &RunConfig, d: &Dims) -> RunConfig {
+    let mut cfg = cfg.clone();
+    if cfg.train.batch_size > d.ns {
+        eprintln!(
+            "note: clamping --batch-size {} to profile NS={}",
+            cfg.train.batch_size, d.ns
+        );
+        cfg.train.batch_size = d.ns;
+    }
+    cfg
 }
 
 /// Table 2: regenerate the dataset statistics from the generators.
@@ -62,22 +156,22 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
-    let eng = Engine::load(&cfg.artifacts)?;
-    let d = hifuse::models::step::Dims::from_engine(&eng);
+fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
+    let d = Dims::from_backend(eng);
+    let cfg = &clamped(cfg, &d);
     let mut graph = cfg.load_graph(d.f)?;
     prepare_graph_layout(&mut graph, &cfg.opt);
     println!(
-        "dataset={} model={} mode={} ({}) profile={} batches/epoch={}",
+        "dataset={} model={} mode={} ({}) backend={} profile={} batches/epoch={}",
         cfg.dataset,
         cfg.model.name(),
         cfg.mode_name,
         cfg.opt.label(),
+        cfg.backend.name(),
         eng.profile(),
         graph.train_idx.len().div_ceil(cfg.train.batch_size),
     );
-    let mut tr = Trainer::new(&eng, &graph, cfg.model, cfg.opt, cfg.train)?;
+    let mut tr = Trainer::new(eng, &graph, cfg.model, cfg.opt, cfg.train)?;
     if let Ok(path) = std::env::var("HIFUSE_LOAD_CKPT") {
         tr.params = hifuse::models::checkpoint::load(std::path::Path::new(&path))?;
         println!("loaded checkpoint {path}");
@@ -96,14 +190,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Measured vs predicted kernel counts for one training step.
-fn cmd_counts(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
-    let eng = Engine::load(&cfg.artifacts)?;
-    let d = hifuse::models::step::Dims::from_engine(&eng);
+/// Measured vs predicted kernel counts for one training epoch.
+fn cmd_counts<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
+    let d = Dims::from_backend(eng);
+    let cfg = &clamped(cfg, &d);
     let mut graph = cfg.load_graph(d.f)?;
     prepare_graph_layout(&mut graph, &cfg.opt);
-    let mut tr = Trainer::new(&eng, &graph, cfg.model, cfg.opt, cfg.train)?;
+    let mut tr = Trainer::new(eng, &graph, cfg.model, cfg.opt, cfg.train)?;
     let m = tr.train_epoch(0)?;
     let per_step = m.kernels_total as f64 / m.batches as f64;
     println!(
@@ -128,14 +221,13 @@ fn cmd_counts(args: &[String]) -> Result<()> {
 /// Per-module time breakdown of one training step (perf-pass tool):
 /// runs a warm step, then a profiled step with event logging, and prints
 /// modules ranked by total dispatch time.
-fn cmd_profile(args: &[String]) -> Result<()> {
+fn cmd_profile<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
     use std::collections::HashMap;
-    let cfg = RunConfig::from_args(args)?;
-    let eng = Engine::load(&cfg.artifacts)?;
-    let d = hifuse::models::step::Dims::from_engine(&eng);
+    let d = Dims::from_backend(eng);
+    let cfg = &clamped(cfg, &d);
     let mut graph = cfg.load_graph(d.f)?;
     prepare_graph_layout(&mut graph, &cfg.opt);
-    let mut tr = Trainer::new(&eng, &graph, cfg.model, cfg.opt, cfg.train)?;
+    let mut tr = Trainer::new(eng, &graph, cfg.model, cfg.opt, cfg.train)?;
     let scfg = hifuse::sampler::SamplerCfg {
         batch_size: cfg.train.batch_size,
         fanout: cfg.train.fanout,
@@ -144,14 +236,14 @@ fn cmd_profile(args: &[String]) -> Result<()> {
         ep: d.ep,
     };
     let rng = hifuse::util::Rng::new(cfg.train.seed);
-    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 0);
-    tr.compute_batch(prep)?; // warm (compiles)
+    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 0);
+    tr.compute_batch(prep)?; // warm (compiles on PJRT)
     eng.reset_counters(true);
     let t0 = std::time::Instant::now();
-    let prep = Trainer::prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 1);
+    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 1);
     tr.compute_batch(prep)?;
     let step_wall = t0.elapsed();
-    let counters = eng.counters.borrow();
+    let counters = eng.counters().borrow();
     let mut agg: HashMap<&str, (usize, f64)> = HashMap::new();
     for e in &counters.events {
         let ent = agg.entry(e.module).or_insert((0, 0.0));
@@ -176,10 +268,8 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_calibrate(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
-    let eng = Engine::load(&cfg.artifacts)?;
-    let p = perf::calibrate(&eng)?;
+fn cmd_calibrate<B: ExecBackend>(eng: &B) -> Result<()> {
+    let p = perf::calibrate(eng)?;
     println!(
         "machine peaks: {:.1} GFLOP/s compute, {:.1} GB/s bandwidth, {:.1} us dispatch overhead",
         p.gflops, p.membw_gbs, p.dispatch_us

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::coordinator::ablation::OptConfig;
 use crate::graph::HeteroGraph;
 use crate::models::{ModelKind, Params};
-use crate::runtime::{Arg, DevTensor, Engine, Phase, Stage};
+use crate::runtime::{Arg, DevBuf, ExecBackend, Phase, Stage};
 use crate::sampler::RelEdges;
 use crate::util::{tensor, HostTensor};
 
@@ -34,7 +34,7 @@ pub struct Dims {
 }
 
 impl Dims {
-    pub fn from_engine(eng: &Engine) -> Dims {
+    pub fn from_backend<B: ExecBackend>(eng: &B) -> Dims {
         Dims {
             ns: eng.cst("NS"),
             ep: eng.cst("EP"),
@@ -175,13 +175,13 @@ fn stack_block(stack: &[f32], r: usize, ns: usize, fd: usize) -> &[f32] {
 /// An activation that is either host-resident (per-relation plans need to
 /// slice it) or still on the device (the merged plan chains it straight
 /// into the next dispatch — §Perf #5).
-enum Stack {
+enum Stack<D> {
     Host(HostTensor),
-    Dev(DevTensor),
+    Dev(D),
 }
 
-impl Stack {
-    fn as_arg(&self) -> Arg<'_> {
+impl<D: DevBuf> Stack<D> {
+    fn as_arg(&self) -> Arg<'_, D> {
         match self {
             Stack::Host(h) => Arg::Host(h),
             Stack::Dev(d) => Arg::Dev(d),
@@ -196,13 +196,13 @@ impl Stack {
     }
 }
 
-struct LayerFwd {
+struct LayerFwd<D> {
     /// `[RPAD, NS, Fd]` projected source features (zeros for dead rels).
     pstack: Vec<f32>,
     /// RGAT only: projected destination features.
     pstack_dst: Option<Vec<f32>>,
     /// `[RPAD, NS, Fd]` aggregated features.
-    astack: Stack,
+    astack: Stack<D>,
     /// `[TPAD, NS, Fd]` fused output.
     hout: HostTensor,
 }
@@ -211,16 +211,19 @@ struct LayerFwd {
 // the step executor
 // --------------------------------------------------------------------------
 
-pub struct StepExecutor<'e> {
-    pub eng: &'e Engine,
+/// Chains module dispatches on any [`ExecBackend`]: the same plans, counts,
+/// and gradients whether the backend interprets (sim) or executes compiled
+/// HLO (PJRT).
+pub struct StepExecutor<'e, B: ExecBackend> {
+    pub eng: &'e B,
     pub d: Dims,
     pub model: ModelKind,
     pub opt: OptConfig,
 }
 
-impl<'e> StepExecutor<'e> {
-    pub fn new(eng: &'e Engine, model: ModelKind, opt: OptConfig) -> Self {
-        let d = Dims::from_engine(eng);
+impl<'e, B: ExecBackend> StepExecutor<'e, B> {
+    pub fn new(eng: &'e B, model: ModelKind, opt: OptConfig) -> Self {
+        let d = Dims::from_backend(eng);
         StepExecutor { eng, d, model, opt }
     }
 
@@ -335,7 +338,7 @@ impl<'e> StepExecutor<'e> {
         params: &Params,
         schema: &SchemaTensors,
         edges: &LayerEdges,
-    ) -> Result<LayerFwd> {
+    ) -> Result<LayerFwd<B::Dev>> {
         let (d, eng) = (&self.d, self.eng);
         let fd = d.fd(l);
 
@@ -440,7 +443,7 @@ impl<'e> StepExecutor<'e> {
         &self,
         l: usize,
         hin: &HostTensor,
-        fwd: &LayerFwd,
+        fwd: &LayerFwd<B::Dev>,
         dhout: &HostTensor,
         params: &Params,
         grads: &mut Params,
@@ -455,7 +458,7 @@ impl<'e> StepExecutor<'e> {
         // Merged plan: fusion backward and (RGCN) aggregation backward chain
         // device-resident; only the final dp comes back to the host for
         // per-relation projection slicing (§Perf #5).
-        let da: Stack = if self.opt.merge {
+        let da: Stack<B::Dev> = if self.opt.merge {
             Stack::Dev(eng.run_dev(
                 fuse_name,
                 Stage::Fusion,

@@ -12,7 +12,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::models::step::Dims;
-use crate::runtime::{Engine, Event, Phase, Stage};
+use crate::runtime::{Event, ExecBackend, Phase, Stage};
 use crate::util::HostTensor;
 
 /// Calibrated machine peaks.
@@ -93,12 +93,16 @@ pub fn module_cost(module: &str, d: &Dims) -> (f64, f64) {
 
 /// Calibrate machine peaks. Compute peak via the biggest matmul module in
 /// the profile; bandwidth via a 64 MB memcpy; dispatch overhead via the
-/// engine's probe.
-pub fn calibrate(eng: &Engine) -> Result<Peaks> {
-    let d = Dims::from_engine(eng);
+/// backend's probe. Works on any backend — on the sim backend the numbers
+/// characterize the interpreter substrate, which is exactly what its
+/// dispatched kernels run on.
+pub fn calibrate<B: ExecBackend>(eng: &B) -> Result<Peaks> {
+    let d = Dims::from_backend(eng);
     // -- compute peak: stacked projection is the densest matmul we ship.
-    let xs = HostTensor::zeros_f32(&[d.tpad, d.ns, d.f]);
-    let w = HostTensor::zeros_f32(&[d.rpad, d.f, d.h]);
+    // Nonzero operands: the sim interpreter short-circuits zero rows, so
+    // an all-zeros probe would overstate the peak by ~the output dim.
+    let xs = HostTensor::f32(vec![1.0; d.tpad * d.ns * d.f], &[d.tpad, d.ns, d.f]);
+    let w = HostTensor::f32(vec![1.0; d.rpad * d.f * d.h], &[d.rpad, d.f, d.h]);
     let st = HostTensor::i32(vec![0; d.rpad], &[d.rpad]);
     eng.run("proj_stacked_fwd_l0", Stage::Calib, Phase::Fwd, &[&xs, &w, &st])?; // warm+compile
     let (flops, _) = module_cost("proj_stacked_fwd_l0", &d);

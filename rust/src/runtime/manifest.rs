@@ -25,6 +25,13 @@ impl DType {
             _ => bail!("unknown dtype {s:?}"),
         }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
 }
 
 /// One declared tensor (argument or return) of a module.
@@ -143,6 +150,246 @@ impl Manifest {
         Ok(Manifest { profile, consts, modules, dir: dir.to_path_buf() })
     }
 
+    /// Synthesize a built-in profile manifest, mirroring the module table
+    /// of `python/compile/aot.py` and the shape profiles of
+    /// `python/compile/profiles.py`. The sim backend executes against these
+    /// directly, so the whole stack runs with **zero** AOT artifacts; the
+    /// `file` entries are placeholders that are never opened.
+    pub fn builtin(profile: &str) -> Result<Manifest> {
+        let base: &[(&str, usize)] = match profile {
+            "tiny" => &[
+                ("NS", 32),
+                ("EP", 16),
+                ("RPAD", 8),
+                ("TPAD", 8),
+                ("F", 8),
+                ("H", 16),
+                ("C", 4),
+            ],
+            "bench" => &[
+                ("NS", 512),
+                ("EP", 256),
+                ("RPAD", 128),
+                ("TPAD", 32),
+                ("F", 32),
+                ("H", 64),
+                ("C", 16),
+            ],
+            other => bail!("unknown builtin profile {other:?} (expected tiny|bench)"),
+        };
+        let mut consts: BTreeMap<String, usize> =
+            base.iter().map(|&(k, v)| (k.to_string(), v)).collect();
+        let (ns, ep, rp, tp) = (consts["NS"], consts["EP"], consts["RPAD"], consts["TPAD"]);
+        let (f, h, c) = (consts["F"], consts["H"], consts["C"]);
+        let elp = rp * ep;
+        consts.insert("ELP".to_string(), elp);
+
+        let dir = PathBuf::from(format!("<builtin:{profile}>"));
+        let mut modules: BTreeMap<String, ModuleSpec> = BTreeMap::new();
+        {
+            const F32: DType = DType::F32;
+            const I32: DType = DType::I32;
+            let mut add = |name: &str,
+                           args: Vec<(&str, DType, Vec<usize>)>,
+                           rets: Vec<(DType, Vec<usize>)>| {
+                let spec = ModuleSpec {
+                    name: name.to_string(),
+                    args: args
+                        .into_iter()
+                        .map(|(n, dtype, shape)| TensorSpec { name: n.to_string(), dtype, shape })
+                        .collect(),
+                    rets: rets
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, (dtype, shape))| TensorSpec {
+                            name: format!("out{i}"),
+                            dtype,
+                            shape,
+                        })
+                        .collect(),
+                    file: dir.join(format!("{name}.hlo.txt")),
+                };
+                modules.insert(name.to_string(), spec);
+            };
+
+            // -- semantic graph build (baseline-on-GPU path) ----------------
+            add(
+                "edge_select",
+                vec![("edge_type", I32, vec![elp]), ("rel", I32, vec![])],
+                vec![(I32, vec![elp]), (I32, vec![])],
+            );
+
+            // -- feature projection -----------------------------------------
+            for (l, fin, fout) in [("l0", f, h), ("l1", h, c)] {
+                add(
+                    &format!("proj_fwd_{l}"),
+                    vec![("x", F32, vec![ns, fin]), ("w", F32, vec![fin, fout])],
+                    vec![(F32, vec![ns, fout])],
+                );
+                add(
+                    &format!("proj_bwd_{l}"),
+                    vec![
+                        ("x", F32, vec![ns, fin]),
+                        ("w", F32, vec![fin, fout]),
+                        ("dy", F32, vec![ns, fout]),
+                    ],
+                    vec![(F32, vec![ns, fin]), (F32, vec![fin, fout])],
+                );
+                add(
+                    &format!("proj_stacked_fwd_{l}"),
+                    vec![
+                        ("xs", F32, vec![tp, ns, fin]),
+                        ("w", F32, vec![rp, fin, fout]),
+                        ("src_type", I32, vec![rp]),
+                    ],
+                    vec![(F32, vec![rp, ns, fout])],
+                );
+                add(
+                    &format!("proj_stacked_bwd_{l}"),
+                    vec![
+                        ("xs", F32, vec![tp, ns, fin]),
+                        ("w", F32, vec![rp, fin, fout]),
+                        ("src_type", I32, vec![rp]),
+                        ("dy", F32, vec![rp, ns, fout]),
+                    ],
+                    vec![(F32, vec![tp, ns, fin]), (F32, vec![rp, fin, fout])],
+                );
+            }
+
+            // -- neighbor aggregation (RGCN mean + RGAT attention) ----------
+            for (sfx, fd) in [("h", h), ("c", c)] {
+                add(
+                    &format!("agg_mean_fwd_{sfx}"),
+                    vec![
+                        ("feat", F32, vec![ns, fd]),
+                        ("src", I32, vec![ep]),
+                        ("dst", I32, vec![ep]),
+                        ("valid", F32, vec![ep]),
+                    ],
+                    vec![(F32, vec![ns, fd])],
+                );
+                add(
+                    &format!("agg_mean_bwd_{sfx}"),
+                    vec![
+                        ("feat", F32, vec![ns, fd]),
+                        ("src", I32, vec![ep]),
+                        ("dst", I32, vec![ep]),
+                        ("valid", F32, vec![ep]),
+                        ("dout", F32, vec![ns, fd]),
+                    ],
+                    vec![(F32, vec![ns, fd])],
+                );
+                add(
+                    &format!("agg_merged_fwd_{sfx}"),
+                    vec![
+                        ("feat", F32, vec![rp, ns, fd]),
+                        ("src", I32, vec![rp, ep]),
+                        ("dst", I32, vec![rp, ep]),
+                        ("valid", F32, vec![rp, ep]),
+                    ],
+                    vec![(F32, vec![rp, ns, fd])],
+                );
+                add(
+                    &format!("agg_merged_bwd_{sfx}"),
+                    vec![
+                        ("src", I32, vec![rp, ep]),
+                        ("dst", I32, vec![rp, ep]),
+                        ("valid", F32, vec![rp, ep]),
+                        ("dout", F32, vec![rp, ns, fd]),
+                    ],
+                    vec![(F32, vec![rp, ns, fd])],
+                );
+                let per: Vec<(&str, DType, Vec<usize>)> = vec![
+                    ("feat_src", F32, vec![ns, fd]),
+                    ("feat_dst", F32, vec![ns, fd]),
+                    ("a_src", F32, vec![fd]),
+                    ("a_dst", F32, vec![fd]),
+                    ("src", I32, vec![ep]),
+                    ("dst", I32, vec![ep]),
+                    ("valid", F32, vec![ep]),
+                ];
+                add(&format!("att_agg_fwd_{sfx}"), per.clone(), vec![(F32, vec![ns, fd])]);
+                let mut per_bwd = per.clone();
+                per_bwd.push(("dout", F32, vec![ns, fd]));
+                add(
+                    &format!("att_agg_bwd_{sfx}"),
+                    per_bwd,
+                    vec![
+                        (F32, vec![ns, fd]),
+                        (F32, vec![ns, fd]),
+                        (F32, vec![fd]),
+                        (F32, vec![fd]),
+                    ],
+                );
+                let mrg: Vec<(&str, DType, Vec<usize>)> = vec![
+                    ("feat_src", F32, vec![rp, ns, fd]),
+                    ("feat_dst", F32, vec![rp, ns, fd]),
+                    ("a_src", F32, vec![rp, fd]),
+                    ("a_dst", F32, vec![rp, fd]),
+                    ("src", I32, vec![rp, ep]),
+                    ("dst", I32, vec![rp, ep]),
+                    ("valid", F32, vec![rp, ep]),
+                ];
+                add(&format!("att_merged_fwd_{sfx}"), mrg.clone(), vec![(F32, vec![rp, ns, fd])]);
+                let mut mrg_bwd = mrg.clone();
+                mrg_bwd.push(("dout", F32, vec![rp, ns, fd]));
+                add(
+                    &format!("att_merged_bwd_{sfx}"),
+                    mrg_bwd,
+                    vec![
+                        (F32, vec![rp, ns, fd]),
+                        (F32, vec![rp, ns, fd]),
+                        (F32, vec![rp, fd]),
+                        (F32, vec![rp, fd]),
+                    ],
+                );
+            }
+
+            // -- semantic fusion --------------------------------------------
+            add(
+                "fuse_relu_fwd_h",
+                vec![("dst_type", I32, vec![rp]), ("agg", F32, vec![rp, ns, h])],
+                vec![(F32, vec![tp, ns, h])],
+            );
+            add(
+                "fuse_relu_bwd_h",
+                vec![
+                    ("dst_type", I32, vec![rp]),
+                    ("agg", F32, vec![rp, ns, h]),
+                    ("dout", F32, vec![tp, ns, h]),
+                ],
+                vec![(F32, vec![rp, ns, h])],
+            );
+            add(
+                "fuse_lin_fwd_c",
+                vec![("dst_type", I32, vec![rp]), ("agg", F32, vec![rp, ns, c])],
+                vec![(F32, vec![tp, ns, c])],
+            );
+            add(
+                "fuse_lin_bwd_c",
+                vec![
+                    ("dst_type", I32, vec![rp]),
+                    ("agg", F32, vec![rp, ns, c]),
+                    ("dout", F32, vec![tp, ns, c]),
+                ],
+                vec![(F32, vec![rp, ns, c])],
+            );
+
+            // -- head --------------------------------------------------------
+            add(
+                "head",
+                vec![
+                    ("logits", F32, vec![ns, c]),
+                    ("labels", I32, vec![ns]),
+                    ("seed_mask", F32, vec![ns]),
+                ],
+                vec![(F32, vec![]), (F32, vec![ns, c]), (F32, vec![])],
+            );
+        }
+
+        Ok(Manifest { profile: profile.to_string(), consts, modules, dir })
+    }
+
     pub fn cst(&self, name: &str) -> usize {
         *self
             .consts
@@ -205,6 +452,43 @@ end
     fn unknown_module_is_error() {
         let m = Manifest::parse(SAMPLE, Path::new("/tmp/x")).unwrap();
         assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_profiles_match_python_profiles() {
+        let t = Manifest::builtin("tiny").unwrap();
+        assert_eq!(t.profile, "tiny");
+        assert_eq!(
+            (t.cst("NS"), t.cst("EP"), t.cst("RPAD"), t.cst("TPAD")),
+            (32, 16, 8, 8)
+        );
+        assert_eq!((t.cst("F"), t.cst("H"), t.cst("C"), t.cst("ELP")), (8, 16, 4, 128));
+        // Full module inventory: 1 select + 8 projection + 16 aggregation
+        // + 4 fusion + 1 head.
+        assert_eq!(t.modules.len(), 30);
+        let b = Manifest::builtin("bench").unwrap();
+        assert_eq!((b.cst("NS"), b.cst("RPAD"), b.cst("ELP")), (512, 128, 32768));
+        assert_eq!(b.modules.len(), 30);
+        assert!(Manifest::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_interfaces_are_consistent() {
+        let m = Manifest::builtin("tiny").unwrap();
+        let p = m.module("proj_fwd_l0").unwrap();
+        assert_eq!(p.args[0].shape, vec![32, 8]);
+        assert_eq!(p.args[1].shape, vec![8, 16]);
+        assert_eq!(p.rets[0].shape, vec![32, 16]);
+        let a = m.module("att_merged_bwd_c").unwrap();
+        assert_eq!(a.args.len(), 8);
+        assert_eq!(a.rets.len(), 4);
+        assert_eq!(a.rets[3].shape, vec![8, 4]);
+        let h = m.module("head").unwrap();
+        assert_eq!(h.rets.len(), 3);
+        assert!(h.rets[0].shape.is_empty());
+        let e = m.module("edge_select").unwrap();
+        assert_eq!(e.args[0].dtype, DType::I32);
+        assert_eq!(e.args[0].shape, vec![128]);
     }
 
     #[test]

@@ -1,258 +1,133 @@
-//! PJRT runtime: load AOT artifacts, execute them, count every dispatch.
+//! Execution runtime: the [`ExecBackend`] trait every training-path
+//! dispatch goes through, plus its implementations — the pure-Rust
+//! [`SimBackend`] (default: interprets every manifest module with the
+//! reference semantics of `python/compile/kernels/ref.py`) and the PJRT
+//! `Engine` (`--features pjrt`: loads AOT HLO artifacts and executes them
+//! through the PJRT C API).
 //!
-//! This is the "GPU" of the reproduction (DESIGN.md §2): the `xla` crate's
-//! CPU PJRT client stands in for the T4, one executable dispatch stands in
-//! for one CUDA kernel launch, and the per-dispatch fixed overhead (real,
-//! measured by [`Engine::measure_dispatch_overhead`]) plays the role of the
-//! CUDA launch overhead the paper optimizes away.
-//!
-//! `PjRtClient` is `!Send` (Rc internally), so the `Engine` lives on the
-//! coordinator's compute thread; pipeline producer threads never touch it.
+//! The paper's claim is about *counting and reducing kernel dispatches*
+//! (DESIGN.md §2), so the backend contract is exactly the dispatch surface:
+//! `run` / `run_dev` execute one module (one "CUDA kernel launch"),
+//! shape/dtype-check its arguments against the manifest, and record the
+//! launch in [`Counters`]. Kernel counts and per-stage breakdowns therefore
+//! mean the same thing on every backend; only per-dispatch wall time is
+//! substrate-specific, and both backends expose a measured launch overhead
+//! via [`ExecBackend::measure_dispatch_overhead`].
 
 pub mod counters;
-pub mod literal;
 pub mod manifest;
+pub mod sim;
+
+#[cfg(feature = "pjrt")]
+pub mod literal;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use counters::{Counters, Event, Phase, Stage, STAGES};
 pub use manifest::{DType, Manifest, ModuleSpec};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DevTensor, Engine};
+pub use sim::{SimBackend, SimDev};
 
 use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::util::HostTensor;
 
 /// A module argument: host data (uploaded per dispatch) or an output buffer
-/// from a previous dispatch kept resident on the device — the CPU-PJRT
+/// from a previous dispatch kept resident on the backend's device — the
 /// analogue of leaving an intermediate tensor on the GPU instead of
 /// round-tripping it through host memory (EXPERIMENTS.md §Perf #5).
-pub enum Arg<'a> {
+pub enum Arg<'a, D> {
     Host(&'a HostTensor),
-    Dev(&'a DevTensor),
+    Dev(&'a D),
 }
 
-/// A device-resident tensor: a PJRT buffer plus its declared interface spec
-/// (used for shape checks and byte accounting without touching the data).
-pub struct DevTensor {
-    pub buf: xla::PjRtBuffer,
-    pub dtype: DType,
-    pub shape: Vec<usize>,
-}
-
-impl DevTensor {
-    pub fn size_bytes(&self) -> usize {
-        self.shape.iter().product::<usize>() * 4
-    }
-
+/// A backend's device-resident tensor: declared dtype/shape metadata (for
+/// shape checks and byte accounting without touching the data) plus an
+/// explicit host round-trip.
+pub trait DevBuf {
+    fn dtype(&self) -> DType;
+    fn shape(&self) -> &[usize];
     /// Copy back to host (only when the coordinator actually needs values).
-    pub fn to_host(&self) -> Result<HostTensor> {
-        literal::from_literal(&self.buf.to_literal_sync()?)
+    fn to_host(&self) -> Result<HostTensor>;
+    fn size_bytes(&self) -> usize {
+        self.shape().iter().product::<usize>() * 4
     }
 }
 
-/// Compiled-module cache + dispatch accounting over one PJRT client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    pub counters: RefCell<Counters>,
-    /// Optional simulated extra launch overhead added (busy-wait) per
-    /// dispatch, to emulate a configurable CUDA-launch cost on top of the
-    /// real PJRT dispatch overhead. Default zero: the real overhead is
-    /// already representative.
-    pub extra_launch_overhead: Duration,
-}
+/// The execution-backend contract: everything the coordinator, the step
+/// executor, the perf calibrator, and the benches need from a "device".
+///
+/// Implementations must type-check every dispatch against the manifest (use
+/// [`check_args`]) and record every non-calibration dispatch in the
+/// [`Counters`] returned by [`ExecBackend::counters`] — the paper's entire
+/// evaluation (Figs. 7–11) is derived from that log.
+pub trait ExecBackend {
+    /// The backend's device-resident tensor type.
+    type Dev: DevBuf;
 
-impl Engine {
-    /// Open a profile directory (e.g. `artifacts/tiny`). Modules compile
-    /// lazily on first dispatch; `warmup` precompiles a given list.
-    pub fn load(profile_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(profile_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            manifest,
-            exes: RefCell::new(HashMap::new()),
-            counters: RefCell::new(Counters::new(false)),
-            extra_launch_overhead: Duration::ZERO,
-        })
-    }
+    /// The artifact/interface manifest this backend executes against.
+    fn manifest(&self) -> &Manifest;
 
-    pub fn profile(&self) -> &str {
-        &self.manifest.profile
-    }
+    /// Dispatch accounting (counts, stage/phase breakdowns, event log).
+    fn counters(&self) -> &RefCell<Counters>;
 
-    pub fn cst(&self, name: &str) -> usize {
-        self.manifest.cst(name)
-    }
-
-    /// Precompile modules (keeps compile time out of measurement windows).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
-        }
-        Ok(())
-    }
-
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.manifest.module(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text for {name}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling module {name}"))?,
-        );
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Dispatch a module: shape/dtype-check args against the manifest,
-    /// upload, execute, download, record the launch.
-    pub fn run(
+    /// Dispatch a module with host-resident arguments; returns host outputs.
+    fn run(
         &self,
         name: &'static str,
         stage: Stage,
         phase: Phase,
         args: &[&HostTensor],
-    ) -> Result<Vec<HostTensor>> {
-        let arg_refs: Vec<Arg> = args.iter().map(|a| Arg::Host(a)).collect();
-        let (replica, spec, t0, bytes_in) = self.dispatch(name, &arg_refs)?;
-        // Single-output modules come back as one array buffer; multi-output
-        // modules as one tuple buffer to decompose (return_tuple=False in
-        // aot.py gives the former whenever possible).
-        let outs: Vec<HostTensor> = if spec.rets.len() == 1 {
-            vec![literal::from_literal(&replica[0].to_literal_sync()?)?]
-        } else {
-            let parts = replica[0].to_literal_sync()?.to_tuple()?;
-            if parts.len() != spec.rets.len() {
-                bail!("{name}: expected {} returns, got {}", spec.rets.len(), parts.len());
-            }
-            parts.iter().map(literal::from_literal).collect::<Result<_>>()?
-        };
-        let dur = t0.elapsed();
-        let bytes_out: usize = outs.iter().map(|t| t.size_bytes()).sum();
-        self.counters
-            .borrow_mut()
-            .record(name, stage, phase, dur, bytes_in, bytes_out);
-        Ok(outs)
-    }
+    ) -> Result<Vec<HostTensor>>;
 
-    /// Dispatch a **single-output** module keeping the result on the
-    /// device; args may mix host tensors and buffers from previous
-    /// dispatches (which then never round-trip through the host). The
-    /// merged-aggregation / fusion chain of the HiFuse plan uses this to
-    /// keep its 16 MB intermediates device-resident (§Perf #5).
-    pub fn run_dev(
+    /// Dispatch a **single-output** module keeping the result device-
+    /// resident; args may mix host tensors and buffers from previous
+    /// dispatches. The merged-aggregation / fusion chain of the HiFuse plan
+    /// uses this to avoid host round-trips for its intermediates.
+    fn run_dev(
         &self,
         name: &'static str,
         stage: Stage,
         phase: Phase,
-        args: &[Arg],
-    ) -> Result<DevTensor> {
-        let (mut replica, spec, t0, bytes_in) = self.dispatch(name, args)?;
-        if spec.rets.len() != 1 || replica.len() != 1 {
-            bail!("{name}: run_dev requires a single-output module");
-        }
-        let r = &spec.rets[0];
-        let out = DevTensor { buf: replica.swap_remove(0), dtype: r.dtype, shape: r.shape.clone() };
-        let dur = t0.elapsed();
-        let bytes_out = out.size_bytes();
-        self.counters
-            .borrow_mut()
-            .record(name, stage, phase, dur, bytes_in, bytes_out);
-        Ok(out)
+        args: &[Arg<'_, Self::Dev>],
+    ) -> Result<Self::Dev>;
+
+    /// Profile name (e.g. "tiny", "bench").
+    fn profile(&self) -> &str {
+        &self.manifest().profile
     }
 
-    /// Shared dispatch core: type-check, upload host args
-    /// (`buffer_from_host_buffer` + `execute_b` — the Literal-based
-    /// `execute` leaks its internally-created device buffers,
-    /// ~0.5 MB/dispatch measured, EXPERIMENTS.md §Perf #2), execute, apply
-    /// the optional simulated launch overhead.
-    fn dispatch(
-        &self,
-        name: &'static str,
-        args: &[Arg],
-    ) -> Result<(Vec<xla::PjRtBuffer>, ModuleSpec, Instant, usize)> {
-        let spec = self.manifest.module(name)?.clone();
-        if args.len() != spec.args.len() {
-            bail!("{name}: expected {} args, got {}", spec.args.len(), args.len());
+    /// Profile constant (NS, EP, RPAD, ...); panics if missing.
+    fn cst(&self, name: &str) -> usize {
+        self.manifest().cst(name)
+    }
+
+    /// Prepare modules ahead of a measurement window (the PJRT engine
+    /// compiles them; the sim backend just validates the names).
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.manifest().module(n)?;
         }
-        let mut bytes_in = 0;
-        for (a, s) in args.iter().zip(&spec.args) {
-            let (dt, shape, nbytes): (&str, &[usize], usize) = match a {
-                Arg::Host(h) => (h.dtype_str(), h.shape(), h.size_bytes()),
-                Arg::Dev(d) => (
-                    match d.dtype {
-                        DType::F32 => "f32",
-                        DType::I32 => "i32",
-                    },
-                    &d.shape,
-                    0, // already on device: no transfer
-                ),
-            };
-            let want = match s.dtype {
-                DType::F32 => "f32",
-                DType::I32 => "i32",
-            };
-            if dt != want || shape != s.shape.as_slice() {
-                bail!(
-                    "{name}: arg {:?} expects {want}{:?}, got {dt}{shape:?}",
-                    s.name,
-                    s.shape
-                );
-            }
-            bytes_in += nbytes;
-        }
-        let exe = self.executable(name)?;
-        let t0 = Instant::now();
-        // Own the uploaded buffers; borrow the device-resident ones.
-        let mut uploads: Vec<xla::PjRtBuffer> = Vec::new();
-        for a in args {
-            if let Arg::Host(h) = a {
-                let b = match h {
-                    HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
-                    HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
-                }?;
-                uploads.push(b);
-            }
-        }
-        let mut up_it = uploads.iter();
-        let in_bufs: Vec<&xla::PjRtBuffer> = args
-            .iter()
-            .map(|a| match a {
-                Arg::Host(_) => up_it.next().unwrap(),
-                Arg::Dev(d) => &d.buf,
-            })
-            .collect();
-        let mut bufs = exe.execute_b::<&xla::PjRtBuffer>(&in_bufs)?;
-        let replica = bufs.swap_remove(0);
-        if !self.extra_launch_overhead.is_zero() {
-            let spin = Instant::now();
-            while spin.elapsed() < self.extra_launch_overhead {
-                std::hint::spin_loop();
-            }
-        }
-        Ok((replica, spec, t0, bytes_in))
+        Ok(())
+    }
+
+    /// Reset counters for a fresh measurement window.
+    fn reset_counters(&self, keep_events: bool) {
+        let mut c = self.counters().borrow_mut();
+        *c = Counters::new(keep_events);
+        c.reset();
     }
 
     /// Measure the fixed per-dispatch overhead (the "kernel launch cost"):
-    /// median wall time of the cheapest module in the profile over `n`
-    /// dispatches.
-    pub fn measure_dispatch_overhead(&self, n: usize) -> Result<Duration> {
+    /// median wall time of the cheapest always-present module (`head`) over
+    /// `n` dispatches.
+    fn measure_dispatch_overhead(&self, n: usize) -> Result<Duration> {
         let ns = self.cst("NS");
         let c = self.cst("C");
-        // head is the smallest always-present module; its compute is tiny.
         let logits = HostTensor::zeros_f32(&[ns, c]);
         let labels = HostTensor::i32(vec![0; ns], &[ns]);
         let mask = HostTensor::f32(vec![1.0; ns], &[ns]);
@@ -266,11 +141,83 @@ impl Engine {
         samples.sort();
         Ok(samples[samples.len() / 2])
     }
+}
 
-    /// Reset counters for a fresh measurement window.
-    pub fn reset_counters(&self, keep_events: bool) {
-        let mut c = self.counters.borrow_mut();
-        *c = Counters::new(keep_events);
-        c.reset();
+pub(crate) fn host_dtype(t: &HostTensor) -> DType {
+    match t {
+        HostTensor::F32(..) => DType::F32,
+        HostTensor::I32(..) => DType::I32,
+    }
+}
+
+/// Pre-dispatch interface check shared by every backend: arity, dtype and
+/// shape of each argument against the manifest, so a profile mismatch fails
+/// loudly at the call site. Returns the host-upload byte count
+/// (device-resident args transfer nothing).
+pub fn check_args<D: DevBuf>(name: &str, spec: &ModuleSpec, args: &[Arg<'_, D>]) -> Result<usize> {
+    if args.len() != spec.args.len() {
+        bail!("{name}: expected {} args, got {}", spec.args.len(), args.len());
+    }
+    let mut bytes_in = 0;
+    for (a, s) in args.iter().zip(&spec.args) {
+        let (dt, shape, nbytes): (DType, &[usize], usize) = match a {
+            Arg::Host(h) => (host_dtype(h), h.shape(), h.size_bytes()),
+            Arg::Dev(d) => (d.dtype(), d.shape(), 0), // already on device: no transfer
+        };
+        if dt != s.dtype || shape != s.shape.as_slice() {
+            bail!(
+                "{name}: arg {:?} expects {}{:?}, got {}{shape:?}",
+                s.name,
+                s.dtype.name(),
+                s.shape,
+                dt.name()
+            );
+        }
+        bytes_in += nbytes;
+    }
+    Ok(bytes_in)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+    use std::path::PathBuf;
+
+    fn spec2() -> ModuleSpec {
+        ModuleSpec {
+            name: "m".into(),
+            args: vec![
+                TensorSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 3] },
+                TensorSpec { name: "i".into(), dtype: DType::I32, shape: vec![4] },
+            ],
+            rets: vec![],
+            file: PathBuf::from("m.hlo.txt"),
+        }
+    }
+
+    #[test]
+    fn check_args_accepts_matching_and_counts_bytes() {
+        let s = spec2();
+        let x = HostTensor::zeros_f32(&[2, 3]);
+        let i = HostTensor::i32(vec![0; 4], &[4]);
+        let args: Vec<Arg<'_, SimDev>> = vec![Arg::Host(&x), Arg::Host(&i)];
+        assert_eq!(check_args("m", &s, &args).unwrap(), 6 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn check_args_rejects_arity_shape_dtype() {
+        let s = spec2();
+        let x = HostTensor::zeros_f32(&[2, 3]);
+        let bad_shape = HostTensor::i32(vec![0; 3], &[3]);
+        let bad_dtype = HostTensor::zeros_f32(&[4]);
+        let i = HostTensor::i32(vec![0; 4], &[4]);
+        let a1: Vec<Arg<'_, SimDev>> = vec![Arg::Host(&x)];
+        assert!(check_args("m", &s, &a1).is_err());
+        let a2: Vec<Arg<'_, SimDev>> = vec![Arg::Host(&x), Arg::Host(&bad_shape)];
+        let err = check_args("m", &s, &a2).unwrap_err().to_string();
+        assert!(err.contains("expects"), "{err}");
+        let a3: Vec<Arg<'_, SimDev>> = vec![Arg::Host(&x), Arg::Host(&bad_dtype)];
+        assert!(check_args("m", &s, &a3).is_err());
     }
 }

@@ -1,0 +1,210 @@
+//! PJRT execution backend (`--features pjrt`): load AOT artifacts, execute
+//! them, count every dispatch.
+//!
+//! This is the "GPU" of the reproduction (DESIGN.md §2): the `xla` crate's
+//! CPU PJRT client stands in for the T4, one executable dispatch stands in
+//! for one CUDA kernel launch, and the per-dispatch fixed overhead (real,
+//! measured by [`ExecBackend::measure_dispatch_overhead`]) plays the role
+//! of the CUDA launch overhead the paper optimizes away.
+//!
+//! `PjRtClient` is `!Send` (Rc internally), so the `Engine` lives on the
+//! coordinator's compute thread; pipeline producer threads never touch it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{check_args, literal, Arg, Counters, DType, DevBuf, ExecBackend, Manifest, Phase, Stage};
+use crate::util::HostTensor;
+
+/// A device-resident tensor: a PJRT buffer plus its declared interface spec.
+pub struct DevTensor {
+    pub buf: xla::PjRtBuffer,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl DevBuf for DevTensor {
+    fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn to_host(&self) -> Result<HostTensor> {
+        literal::from_literal(&self.buf.to_literal_sync()?)
+    }
+}
+
+/// Compiled-module cache + dispatch accounting over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    counters: RefCell<Counters>,
+    /// Optional simulated extra launch overhead added (busy-wait) per
+    /// dispatch, to emulate a configurable CUDA-launch cost on top of the
+    /// real PJRT dispatch overhead. Default zero: the real overhead is
+    /// already representative.
+    pub extra_launch_overhead: Duration,
+}
+
+impl Engine {
+    /// Open a profile directory (e.g. `artifacts/tiny`). Modules compile
+    /// lazily on first dispatch; `warmup` precompiles a given list.
+    pub fn load(profile_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(profile_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            counters: RefCell::new(Counters::new(false)),
+            extra_launch_overhead: Duration::ZERO,
+        })
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.module(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling module {name}"))?,
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Shared dispatch core: type-check, upload host args
+    /// (`buffer_from_host_buffer` + `execute_b` — the Literal-based
+    /// `execute` leaks its internally-created device buffers,
+    /// ~0.5 MB/dispatch measured, EXPERIMENTS.md §Perf #2), execute, apply
+    /// the optional simulated launch overhead.
+    fn dispatch(
+        &self,
+        name: &'static str,
+        args: &[Arg<'_, DevTensor>],
+    ) -> Result<(Vec<xla::PjRtBuffer>, super::ModuleSpec, Instant, usize)> {
+        let spec = self.manifest.module(name)?.clone();
+        let bytes_in = check_args(name, &spec, args)?;
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        // Own the uploaded buffers; borrow the device-resident ones.
+        let mut uploads: Vec<xla::PjRtBuffer> = Vec::new();
+        for a in args {
+            if let Arg::Host(h) = a {
+                let b = match h {
+                    HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+                    HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+                }?;
+                uploads.push(b);
+            }
+        }
+        let mut up_it = uploads.iter();
+        let in_bufs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                Arg::Host(_) => up_it.next().unwrap(),
+                Arg::Dev(d) => &d.buf,
+            })
+            .collect();
+        let mut bufs = exe.execute_b::<&xla::PjRtBuffer>(&in_bufs)?;
+        let replica = bufs.swap_remove(0);
+        if !self.extra_launch_overhead.is_zero() {
+            let spin = Instant::now();
+            while spin.elapsed() < self.extra_launch_overhead {
+                std::hint::spin_loop();
+            }
+        }
+        Ok((replica, spec, t0, bytes_in))
+    }
+}
+
+impl ExecBackend for Engine {
+    type Dev = DevTensor;
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn counters(&self) -> &RefCell<Counters> {
+        &self.counters
+    }
+
+    /// Precompile modules (keeps compile time out of measurement windows).
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch a module: shape/dtype-check args against the manifest,
+    /// upload, execute, download, record the launch.
+    fn run(
+        &self,
+        name: &'static str,
+        stage: Stage,
+        phase: Phase,
+        args: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let arg_refs: Vec<Arg<'_, DevTensor>> = args.iter().map(|&a| Arg::Host(a)).collect();
+        let (replica, spec, t0, bytes_in) = self.dispatch(name, &arg_refs)?;
+        // Single-output modules come back as one array buffer; multi-output
+        // modules as one tuple buffer to decompose (return_tuple=False in
+        // aot.py gives the former whenever possible).
+        let outs: Vec<HostTensor> = if spec.rets.len() == 1 {
+            vec![literal::from_literal(&replica[0].to_literal_sync()?)?]
+        } else {
+            let parts = replica[0].to_literal_sync()?.to_tuple()?;
+            if parts.len() != spec.rets.len() {
+                bail!("{name}: expected {} returns, got {}", spec.rets.len(), parts.len());
+            }
+            parts.iter().map(literal::from_literal).collect::<Result<_>>()?
+        };
+        let dur = t0.elapsed();
+        let bytes_out: usize = outs.iter().map(|t| t.size_bytes()).sum();
+        self.counters
+            .borrow_mut()
+            .record(name, stage, phase, dur, bytes_in, bytes_out);
+        Ok(outs)
+    }
+
+    /// Dispatch a **single-output** module keeping the result on the
+    /// device; args may mix host tensors and buffers from previous
+    /// dispatches (which then never round-trip through the host).
+    fn run_dev(
+        &self,
+        name: &'static str,
+        stage: Stage,
+        phase: Phase,
+        args: &[Arg<'_, DevTensor>],
+    ) -> Result<DevTensor> {
+        let (mut replica, spec, t0, bytes_in) = self.dispatch(name, args)?;
+        if spec.rets.len() != 1 || replica.len() != 1 {
+            bail!("{name}: run_dev requires a single-output module");
+        }
+        let r = &spec.rets[0];
+        let out = DevTensor { buf: replica.swap_remove(0), dtype: r.dtype, shape: r.shape.clone() };
+        let dur = t0.elapsed();
+        let bytes_out = out.size_bytes();
+        self.counters
+            .borrow_mut()
+            .record(name, stage, phase, dur, bytes_in, bytes_out);
+        Ok(out)
+    }
+}

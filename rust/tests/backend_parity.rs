@@ -1,0 +1,95 @@
+//! Backend parity: the SimBackend's *measured* per-step kernel counts
+//! equal `plan::expected_counts` for **every** ablation-ladder mode (base,
+//! R, R+M, R+O+P, HiFuse) and both models, on the tiny graph. This is the
+//! contract that makes Fig. 8/9/11-style numbers backend-independent: a
+//! dispatch count means the same thing whether modules are interpreted
+//! (sim) or compiled (PJRT), because both record through the same
+//! `Counters` at the same call sites.
+
+use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::step::Dims;
+use hifuse::models::{plan, ModelKind};
+use hifuse::runtime::{ExecBackend, Phase, SimBackend, Stage};
+use hifuse::sampler::{NeighborSampler, SamplerCfg};
+use hifuse::util::Rng;
+
+#[test]
+fn sim_counts_match_plan_for_every_ladder_mode_and_model() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let d = Dims::from_backend(&eng);
+    let cfg = TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 };
+    let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
+
+    let mut modes = OptConfig::ablation_ladder();
+    modes.push(("HiFuse+S", OptConfig::parse("hifuse+stacked").unwrap()));
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        for &(name, opt) in &modes {
+            let mut g = tiny_graph(5);
+            prepare_graph_layout(&mut g, &opt);
+            let mut tr = Trainer::new(&eng, &g, model, opt, cfg).unwrap();
+            // Live-relation counts per layer from the sampler oracle drive
+            // the analytic prediction.
+            let mb = NeighborSampler::new(&g, scfg).sample(&Rng::new(42), 0, 0);
+            let live: Vec<usize> = mb
+                .oracle_edges
+                .iter()
+                .map(|rels| rels.iter().filter(|e| !e.is_empty()).count())
+                .collect();
+            let expect = plan::expected_counts(model, &opt, g.n_relations(), &live);
+
+            eng.reset_counters(false);
+            let prep = prepare_cpu(&g, scfg, &d, &opt, cfg.threads, &Rng::new(42), 0, 0);
+            tr.compute_batch(prep).unwrap();
+            let c = eng.counters().borrow();
+            for stage in [
+                Stage::SemanticBuild,
+                Stage::Projection,
+                Stage::Aggregation,
+                Stage::Fusion,
+                Stage::Head,
+            ] {
+                for phase in [Phase::Fwd, Phase::Bwd] {
+                    assert_eq!(
+                        c.count_phase(stage, phase),
+                        expect.get(stage, phase),
+                        "{} {name}: stage {stage:?} {phase:?}",
+                        model.name()
+                    );
+                }
+            }
+            assert_eq!(c.total(), expect.total(), "{} {name} total", model.name());
+        }
+    }
+}
+
+/// The paper's headline effect end-to-end on the sim backend: every rung
+/// of the ladder dispatches no more kernels than base, and full HiFuse
+/// strictly fewer. (The middle rungs are not mutually ordered — merging
+/// and offloading cut different stages — so only base/HiFuse bracket.)
+#[test]
+fn hifuse_launches_strictly_fewer_kernels_than_every_rung() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let cfg = TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 };
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let mut totals = Vec::new();
+        for (name, opt) in OptConfig::ablation_ladder() {
+            let mut g = tiny_graph(1);
+            prepare_graph_layout(&mut g, &opt);
+            let mut tr = Trainer::new(&eng, &g, model, opt, cfg).unwrap();
+            let m = tr.train_epoch(0).unwrap();
+            totals.push((name, m.kernels_total));
+        }
+        let base = totals[0].1;
+        let hifuse = totals.last().unwrap().1;
+        for &(name, t) in &totals {
+            assert!(t <= base, "{} {name}: {t} kernels exceeds base {base}", model.name());
+        }
+        assert!(
+            hifuse < base,
+            "{}: HiFuse did not reduce kernels: {hifuse} vs base {base}",
+            model.name()
+        );
+        assert!(hifuse <= totals.iter().map(|&(_, t)| t).min().unwrap(), "{}", model.name());
+    }
+}

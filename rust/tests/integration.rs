@@ -1,27 +1,19 @@
-//! Integration tests over the `tiny` AOT profile: full training loops
-//! through the PJRT runtime, equivalence of execution plans, and measured
-//! kernel counts vs the analytic plan.
-//!
-//! Requires `make artifacts` (skips with a clear panic otherwise).
+//! Integration tests over the built-in `tiny` profile on the default
+//! SimBackend: full training loops through the dispatch runtime,
+//! equivalence of execution plans, and measured kernel counts vs the
+//! analytic plan. Runs on a clean checkout — no AOT artifacts, no Python.
 
-use std::path::PathBuf;
-
-use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{gpu_select, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::tiny_graph;
 use hifuse::models::step::Dims;
-use hifuse::models::{plan, ModelKind};
-use hifuse::runtime::{Engine, Phase, Stage};
+use hifuse::models::ModelKind;
+use hifuse::runtime::SimBackend;
 use hifuse::sampler::{NeighborSampler, SamplerCfg};
 use hifuse::semantic;
 use hifuse::util::Rng;
 
-fn tiny_dir() -> PathBuf {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    assert!(
-        p.join("manifest.txt").exists(),
-        "artifacts/tiny missing — run `make artifacts` first"
-    );
-    p
+fn backend() -> SimBackend {
+    SimBackend::builtin("tiny").unwrap()
 }
 
 fn cfg() -> TrainCfg {
@@ -29,7 +21,7 @@ fn cfg() -> TrainCfg {
 }
 
 fn epoch_losses(model: ModelKind, opt: OptConfig, epochs: usize) -> Vec<f64> {
-    let eng = Engine::load(&tiny_dir()).unwrap();
+    let eng = backend();
     let mut g = tiny_graph(1);
     prepare_graph_layout(&mut g, &opt);
     let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
@@ -87,16 +79,16 @@ fn all_plans_agree_on_losses() {
     }
 }
 
-/// GPU-module edge selection must equal the CPU implementations.
+/// Backend-module edge selection must equal the CPU implementations.
 #[test]
 fn gpu_select_matches_cpu_select() {
-    let eng = Engine::load(&tiny_dir()).unwrap();
-    let d = Dims::from_engine(&eng);
+    let eng = backend();
+    let d = Dims::from_backend(&eng);
     let g = tiny_graph(7);
     let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
     let mb = NeighborSampler::new(&g, scfg).sample(&Rng::new(3), 0, 0);
     for tagged in &mb.tagged {
-        let gpu = Trainer::gpu_select(&eng, &d, tagged, g.n_relations()).unwrap();
+        let gpu = gpu_select(&eng, &d, tagged, g.n_relations()).unwrap();
         let cpu = semantic::select_serial(tagged, g.n_relations());
         let par = semantic::select_parallel(tagged, g.n_relations(), 3);
         for r in 0..g.n_relations() {
@@ -107,55 +99,9 @@ fn gpu_select_matches_cpu_select() {
     }
 }
 
-/// Measured dispatch counts must equal the analytic plan exactly.
-#[test]
-fn measured_kernel_counts_match_plan() {
-    let eng = Engine::load(&tiny_dir()).unwrap();
-    let d = Dims::from_engine(&eng);
-    let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
-
-    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
-        for (name, opt) in [
-            ("base", OptConfig::baseline()),
-            ("hifuse", OptConfig::hifuse()),
-            ("stacked", OptConfig::parse("hifuse+stacked").unwrap()),
-        ] {
-            let mut g2 = tiny_graph(5);
-            prepare_graph_layout(&mut g2, &opt);
-            let mut tr = Trainer::new(&eng, &g2, model, opt, cfg()).unwrap();
-            // Live relation counts per layer from the sampler oracle.
-            let mb = NeighborSampler::new(&g2, scfg).sample(&Rng::new(42), 0, 0);
-            let live: Vec<usize> = mb
-                .oracle_edges
-                .iter()
-                .map(|rels| rels.iter().filter(|e| !e.is_empty()).count())
-                .collect();
-            let expect = plan::expected_counts(model, &opt, g2.n_relations(), &live);
-
-            eng.reset_counters(false);
-            let prep = Trainer::prepare_cpu(&g2, scfg, &d, &opt, 2, &Rng::new(42), 0, 0);
-            tr.compute_batch(prep).unwrap();
-            let c = eng.counters.borrow();
-            for stage in [
-                Stage::SemanticBuild,
-                Stage::Projection,
-                Stage::Aggregation,
-                Stage::Fusion,
-                Stage::Head,
-            ] {
-                for phase in [Phase::Fwd, Phase::Bwd] {
-                    assert_eq!(
-                        c.count_phase(stage, phase),
-                        expect.get(stage, phase),
-                        "{} {name}: stage {stage:?} {phase:?}",
-                        model.name()
-                    );
-                }
-            }
-            assert_eq!(c.total(), expect.total(), "{} {name} total", model.name());
-        }
-    }
-}
+// NOTE: measured-counts-vs-analytic-plan parity lives in
+// tests/backend_parity.rs, which covers the full ablation ladder plus the
+// stacked extension for both models — one canonical copy of that contract.
 
 /// Pipelined execution computes the same losses as sequential.
 #[test]
@@ -173,7 +119,7 @@ fn pipeline_matches_sequential() {
 /// tiny profile already.
 #[test]
 fn hifuse_reduces_kernels() {
-    let eng = Engine::load(&tiny_dir()).unwrap();
+    let eng = backend();
     let mut totals = Vec::new();
     for opt in [OptConfig::baseline(), OptConfig::hifuse()] {
         let mut g = tiny_graph(1);
@@ -191,7 +137,7 @@ fn hifuse_reduces_kernels() {
 /// class-centroid Gaussians).
 #[test]
 fn training_beats_chance_accuracy() {
-    let eng = Engine::load(&tiny_dir()).unwrap();
+    let eng = backend();
     let mut g = tiny_graph(1);
     let opt = OptConfig::hifuse();
     prepare_graph_layout(&mut g, &opt);

@@ -1,16 +1,15 @@
-//! Runtime-level tests against the `tiny` artifacts: every module in the
-//! manifest executes with manifest-shaped inputs and returns
-//! manifest-shaped outputs; dispatch accounting and shape checking work.
+//! Runtime-level tests against the built-in `tiny` profile on the default
+//! SimBackend: every module in the manifest executes with manifest-shaped
+//! inputs and returns manifest-shaped outputs; dispatch accounting and
+//! shape checking work. (With `--features pjrt` and AOT artifacts the same
+//! contract holds for the PJRT engine — it shares the `ExecBackend` check
+//! and accounting paths.)
 
-use std::path::PathBuf;
-
-use hifuse::runtime::{DType, Engine, Phase, Stage};
+use hifuse::runtime::{DType, ExecBackend, Phase, SimBackend, Stage};
 use hifuse::util::HostTensor;
 
-fn engine() -> Engine {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    assert!(p.join("manifest.txt").exists(), "run `make artifacts` first");
-    Engine::load(&p).unwrap()
+fn backend() -> SimBackend {
+    SimBackend::builtin("tiny").unwrap()
 }
 
 fn zero_input(dtype: DType, shape: &[usize]) -> HostTensor {
@@ -20,16 +19,17 @@ fn zero_input(dtype: DType, shape: &[usize]) -> HostTensor {
     }
 }
 
-/// Smoke: every declared module compiles, runs, and returns tensors whose
-/// dtypes/shapes match the manifest. Catches interface drift between
-/// aot.py and the compiled HLO (e.g. dropped unused args).
+/// Smoke: every declared module runs and returns tensors whose
+/// dtypes/shapes match the manifest. Catches interface drift between the
+/// built-in manifest and the interpreter (and, on PJRT, between aot.py and
+/// the compiled HLO).
 #[test]
 fn every_module_roundtrips_interface() {
-    let eng = engine();
-    let names: Vec<String> = eng.manifest.modules.keys().cloned().collect();
+    let eng = backend();
+    let names: Vec<String> = eng.manifest().modules.keys().cloned().collect();
     assert!(names.len() >= 30, "expected full module inventory, got {}", names.len());
     for name in names {
-        let spec = eng.manifest.module(&name).unwrap().clone();
+        let spec = eng.manifest().module(&name).unwrap().clone();
         let args: Vec<HostTensor> =
             spec.args.iter().map(|a| zero_input(a.dtype, &a.shape)).collect();
         let refs: Vec<&HostTensor> = args.iter().collect();
@@ -41,18 +41,14 @@ fn every_module_roundtrips_interface() {
         assert_eq!(outs.len(), spec.rets.len(), "{name}: return arity");
         for (o, r) in outs.iter().zip(&spec.rets) {
             assert_eq!(o.shape(), r.shape.as_slice(), "{name}: ret shape");
-            let want = match r.dtype {
-                DType::F32 => "f32",
-                DType::I32 => "i32",
-            };
-            assert_eq!(o.dtype_str(), want, "{name}: ret dtype");
+            assert_eq!(o.dtype_str(), r.dtype.name(), "{name}: ret dtype");
         }
     }
 }
 
 #[test]
 fn shape_mismatch_is_rejected_before_execution() {
-    let eng = engine();
+    let eng = backend();
     let bad = HostTensor::zeros_f32(&[3, 3]);
     let w = HostTensor::zeros_f32(&[8, 16]);
     let err = eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&bad, &w]).unwrap_err();
@@ -61,7 +57,7 @@ fn shape_mismatch_is_rejected_before_execution() {
 
 #[test]
 fn dtype_mismatch_is_rejected() {
-    let eng = engine();
+    let eng = backend();
     let ns = eng.cst("NS");
     let f = eng.cst("F");
     let x_wrong = HostTensor::i32(vec![0; ns * f], &[ns, f]);
@@ -71,22 +67,22 @@ fn dtype_mismatch_is_rejected() {
 
 #[test]
 fn wrong_arity_is_rejected() {
-    let eng = engine();
+    let eng = backend();
     let x = HostTensor::zeros_f32(&[eng.cst("NS"), eng.cst("F")]);
     assert!(eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&x]).is_err());
 }
 
 #[test]
 fn unknown_module_is_an_error() {
-    let eng = engine();
+    let eng = backend();
     assert!(eng.run("nope", Stage::Calib, Phase::Fwd, &[]).is_err());
 }
 
 #[test]
 fn projection_computes_matmul() {
-    let eng = engine();
+    let eng = backend();
     let (ns, f, h) = (eng.cst("NS"), eng.cst("F"), eng.cst("H"));
-    // x = e_0 outer: row 0 = [1,0,...]; w row 0 = 1..h.
+    // x row 0 = [2,0,...]; w row 0 = 1..h.
     let mut x = vec![0.0f32; ns * f];
     x[0] = 2.0;
     let mut w = vec![0.0f32; f * h];
@@ -110,7 +106,7 @@ fn projection_computes_matmul() {
 
 #[test]
 fn merged_aggregation_means_sources() {
-    let eng = engine();
+    let eng = backend();
     let (ns, ep, rp, h) = (eng.cst("NS"), eng.cst("EP"), eng.cst("RPAD"), eng.cst("H"));
     let mut feat = vec![0.0f32; rp * ns * h];
     // relation 1: rows 2 and 3 hold values 3 and 5 in every column.
@@ -151,14 +147,14 @@ fn merged_aggregation_means_sources() {
 
 #[test]
 fn counters_track_dispatches_and_bytes() {
-    let eng = engine();
+    let eng = backend();
     eng.reset_counters(true);
     let (ns, c) = (eng.cst("NS"), eng.cst("C"));
     let logits = HostTensor::zeros_f32(&[ns, c]);
     let labels = HostTensor::i32(vec![0; ns], &[ns]);
     let mask = HostTensor::f32(vec![1.0; ns], &[ns]);
     eng.run("head", Stage::Head, Phase::Fwd, &[&logits, &labels, &mask]).unwrap();
-    let counters = eng.counters.borrow();
+    let counters = eng.counters().borrow();
     assert_eq!(counters.total(), 1);
     assert_eq!(counters.events.len(), 1);
     let e = &counters.events[0];
@@ -170,18 +166,18 @@ fn counters_track_dispatches_and_bytes() {
 
 #[test]
 fn dispatch_overhead_probe_is_sane() {
-    let eng = engine();
+    let eng = backend();
     let us = eng.measure_dispatch_overhead(10).unwrap().as_secs_f64() * 1e6;
-    // CPU PJRT dispatch is tens-to-hundreds of microseconds; anything in
-    // (1us, 100ms) says the probe works.
-    assert!(us > 1.0 && us < 100_000.0, "overhead {us}us");
+    // An interpreted dispatch takes over a tenth of a microsecond and under
+    // 100 ms on any machine; anything in that band says the probe works.
+    assert!(us > 0.1 && us < 100_000.0, "overhead {us}us");
 }
 
 #[test]
-fn extra_launch_overhead_is_applied() {
-    let mut eng = engine();
+fn simulated_launch_overhead_is_applied() {
+    let mut eng = backend();
     let base = eng.measure_dispatch_overhead(5).unwrap();
-    eng.extra_launch_overhead = std::time::Duration::from_micros(500);
+    eng.set_launch_overhead(std::time::Duration::from_micros(500));
     let slow = eng.measure_dispatch_overhead(5).unwrap();
     assert!(slow > base + std::time::Duration::from_micros(300), "{base:?} -> {slow:?}");
 }
