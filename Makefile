@@ -11,7 +11,7 @@
 #   3. `cargo build --release --features pjrt`
 #   4. run with `repro train --backend pjrt --artifacts artifacts/bench`
 
-.PHONY: build test bench artifacts fmt clippy
+.PHONY: build test bench bench-json artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -20,9 +20,18 @@ test:
 	cargo test -q
 
 # Regenerate every paper table/figure into results/ (sim backend, bench
-# profile; minutes). HIFUSE_BENCH_QUICK=1 for a fast pass.
+# profile; minutes). HIFUSE_BENCH_QUICK=1 for a fast pass: it shrinks the
+# dataset scales AND the epoch counts (the warm-up epoch per measured cell
+# is skipped, so quick numbers include first-touch compile/arena costs).
 bench: build
 	cargo bench --bench paper
+
+# Same matrix, plus the machine-readable perf trajectory written to
+# ./BENCH_2.json (per-stage wall/cpu/gpu times, kernel counts,
+# arena allocs-per-step). Set HIFUSE_PRE_PR_WALL_MS=<ms> (RGCN/aifb hifuse
+# epoch wall of the previous build) to record the cross-build speedup.
+bench-json: build
+	HIFUSE_BENCH_JSON=$(CURDIR)/BENCH_2.json cargo bench --bench paper
 
 # OPTIONAL: emit the AOT HLO artifacts for the PJRT backend. The default
 # (sim) backend never needs this.

@@ -12,10 +12,10 @@ use hifuse::models::ModelKind;
 use hifuse::runtime::SimBackend;
 
 fn main() -> anyhow::Result<()> {
-    let eng = SimBackend::builtin("bench")?;
+    let cfg = TrainCfg { epochs: 1, batch_size: 48, fanout: 4, ..Default::default() };
+    let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
     let d = Dims::from_backend(&eng);
     let spec = spec_by_name("aifb").unwrap();
-    let cfg = TrainCfg { epochs: 1, batch_size: 48, fanout: 4, ..Default::default() };
 
     let mut ladder = OptConfig::ablation_ladder();
     ladder.push(("HiFuse+S", OptConfig::parse("hifuse+stacked").unwrap()));

@@ -19,14 +19,13 @@ use hifuse::runtime::SimBackend;
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::var("E2E_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
-    let eng = SimBackend::builtin("bench")?;
+    let cfg = TrainCfg { epochs, batch_size: 48, fanout: 4, lr: 0.08, seed: 42, threads: 4 };
+    let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
     let d = Dims::from_backend(&eng);
 
     let spec = spec_by_name("aifb").unwrap();
     let mut graph = generate(&spec, d.f, 1.0, 42);
     println!("{}", graph.stats_row("aifb"));
-
-    let cfg = TrainCfg { epochs, batch_size: 48, fanout: 4, lr: 0.08, seed: 42, threads: 4 };
     let opt = OptConfig::hifuse();
     prepare_graph_layout(&mut graph, &opt);
     let mut tr = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;

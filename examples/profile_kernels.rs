@@ -15,10 +15,11 @@ use hifuse::perf;
 use hifuse::report;
 use hifuse::runtime::{ExecBackend, SimBackend};
 use hifuse::sampler::SamplerCfg;
-use hifuse::util::Rng;
+use hifuse::util::{Rng, WorkerPool};
 
 fn main() -> anyhow::Result<()> {
-    let eng = SimBackend::builtin("bench")?;
+    let cfg = TrainCfg { epochs: 1, batch_size: 64, fanout: 4, ..Default::default() };
+    let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
     let d = Dims::from_backend(&eng);
     let peaks = perf::calibrate(&eng)?;
     println!(
@@ -36,15 +37,15 @@ fn main() -> anyhow::Result<()> {
     let mut graph = generate(&spec, d.f, 0.02, 7);
     let opt = OptConfig::baseline();
     prepare_graph_layout(&mut graph, &opt);
-    let cfg = TrainCfg { epochs: 1, batch_size: 64, fanout: 4, ..Default::default() };
     let mut tr = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
 
     // Warm up compile caches, then profile exactly one batch.
     let scfg = SamplerCfg { batch_size: 64, fanout: 4, layers: 2, ns: d.ns, ep: d.ep };
-    let prep = prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
+    let pool = WorkerPool::new(1);
+    let prep = prepare_cpu(&graph, scfg, &d, &opt, &pool, &Rng::new(1), 0, 0);
     tr.compute_batch(prep)?;
     eng.reset_counters(true);
-    let prep = prepare_cpu(&graph, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
+    let prep = prepare_cpu(&graph, scfg, &d, &opt, &pool, &Rng::new(1), 0, 1);
     tr.compute_batch(prep)?;
 
     let counters = eng.counters().borrow();

@@ -18,8 +18,10 @@ use hifuse::runtime::{ExecBackend, SimBackend};
 
 fn main() -> anyhow::Result<()> {
     // 1. An execution backend over the built-in `tiny` profile. One module
-    //    dispatch ≙ one "CUDA kernel launch" of the paper.
-    let eng = SimBackend::builtin("tiny")?;
+    //    dispatch ≙ one "CUDA kernel launch" of the paper. `threads` drives
+    //    both the CPU stages and the sim kernels' row parallelism.
+    let cfg = TrainCfg { epochs: 8, batch_size: 8, fanout: 3, ..Default::default() };
+    let eng = SimBackend::builtin_threaded("tiny", cfg.threads)?;
     println!("profile {} loaded ({} modules)", eng.profile(), eng.manifest().modules.len());
 
     // 2. A small synthetic heterogeneous graph (3 vertex types, 6 edge
@@ -31,7 +33,6 @@ fn main() -> anyhow::Result<()> {
     //    CPU-parallel edge-index selection, pipelined CPU/GPU stages.
     let opt = OptConfig::hifuse();
     prepare_graph_layout(&mut graph, &opt);
-    let cfg = TrainCfg { epochs: 8, batch_size: 8, fanout: 3, ..Default::default() };
     let mut trainer = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
 
     // 4. Train and watch the loss fall and the kernel counter stay small.

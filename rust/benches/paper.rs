@@ -27,10 +27,10 @@ use hifuse::graph::HeteroGraph;
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
 use hifuse::perf;
-use hifuse::report::{f2, geomean, write_csv, write_md_table};
+use hifuse::report::{f2, geomean, results_dir, write_csv, write_md_table};
 use hifuse::runtime::{ExecBackend, Phase, SimBackend, Stage};
 use hifuse::sampler::SamplerCfg;
-use hifuse::util::Rng;
+use hifuse::util::{Rng, WorkerPool};
 
 /// Per-dataset node/edge scale used by the measured matrix (documented in
 /// EXPERIMENTS.md; schema is never scaled).
@@ -65,8 +65,18 @@ struct RunRow {
     fwd_semantic: usize,
     fwd_agg: usize,
     loss: f64,
+    /// Per-stage dispatch time, ms (name, ms).
+    gpu_ms_by_stage: Vec<(&'static str, f64)>,
+    /// Per-stage kernel counts (name, count).
+    kernels_by_stage: Vec<(&'static str, usize)>,
+    /// Arena misses per training step over the measured epoch (~0 when the
+    /// buffer pool is warm; includes warm-up allocations in quick mode).
+    allocs_per_step: f64,
 }
 
+/// One measured epoch. Full mode runs a warm-up epoch first (compiles
+/// every module, fills the buffer arena); HIFUSE_BENCH_QUICK=1 skips the
+/// warm-up epoch too, not just the dataset scale.
 fn run_one<B: ExecBackend>(
     eng: &B,
     graph: &mut HeteroGraph,
@@ -74,12 +84,17 @@ fn run_one<B: ExecBackend>(
     model: ModelKind,
     mode: &str,
     cfg: TrainCfg,
+    quick: bool,
 ) -> RunRow {
     let opt = OptConfig::parse(mode).unwrap();
     prepare_graph_layout(graph, &opt);
     let mut tr = Trainer::new(eng, graph, model, opt, cfg).unwrap();
-    tr.train_epoch(0).unwrap(); // warm-up: compiles every module used
-    let m = tr.train_epoch(1).unwrap();
+    let misses0 = if quick {
+        eng.counters().borrow().arena.misses
+    } else {
+        tr.train_epoch(0).unwrap().arena.misses
+    };
+    let m = tr.train_epoch(if quick { 0 } else { 1 }).unwrap();
     RunRow {
         dataset,
         model,
@@ -91,6 +106,14 @@ fn run_one<B: ExecBackend>(
         fwd_semantic: m.kernels_fwd_semantic,
         fwd_agg: m.kernels_fwd_agg,
         loss: m.loss,
+        gpu_ms_by_stage: m
+            .time_by_stage
+            .iter()
+            .map(|&(s, t)| (s.name(), t.as_secs_f64() * 1e3))
+            .collect(),
+        kernels_by_stage: m.kernels_by_stage.iter().map(|&(s, c)| (s.name(), c)).collect(),
+        allocs_per_step: (m.arena.misses.saturating_sub(misses0)) as f64
+            / m.batches.max(1) as f64,
     }
 }
 
@@ -104,9 +127,10 @@ fn main() -> anyhow::Result<()> {
     // The full figure matrix runs on the self-contained sim backend (the
     // dispatch counts are backend-invariant; wall-clock shape is preserved
     // because every dispatch pays the same measured launch overhead).
-    let eng = SimBackend::builtin("bench")?;
-    let d = Dims::from_backend(&eng);
+    // threads=4 drives CPU stages AND sim kernel row-parallelism.
     let cfg = TrainCfg { epochs: 2, batch_size: 64, fanout: 4, lr: 0.05, seed: 42, threads: 4 };
+    let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
+    let d = Dims::from_backend(&eng);
 
     // ---------------- Table 2: dataset statistics --------------------------
     let rows: Vec<Vec<String>> = DATASETS
@@ -141,7 +165,7 @@ fn main() -> anyhow::Result<()> {
             for mode in ["base", "hifuse"] {
                 eprintln!("[bench] {} {} {} ...", spec.name, model.name(), mode);
                 let g = graphs.get_mut(spec.name).unwrap();
-                matrix.push(run_one(&eng, g, spec.name, model, mode, cfg));
+                matrix.push(run_one(&eng, g, spec.name, model, mode, cfg, quick));
             }
         }
     }
@@ -279,7 +303,7 @@ fn main() -> anyhow::Result<()> {
                     get(spec.name, model, m).clone()
                 } else {
                     let g = graphs.get_mut(spec.name).unwrap();
-                    run_one(&eng, g, spec.name, model, mode, cfg)
+                    run_one(&eng, g, spec.name, model, mode, cfg, quick)
                 };
                 walls.push(r.wall_ms);
             }
@@ -310,10 +334,11 @@ fn main() -> anyhow::Result<()> {
             let opt = OptConfig::parse(mode).unwrap();
             prepare_graph_layout(g, &opt);
             let mut tr = Trainer::new(&eng, g, model, opt, cfg)?;
-            let prep = prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 0);
+            let pool1 = WorkerPool::new(1);
+            let prep = prepare_cpu(g, scfg, &d, &opt, &pool1, &Rng::new(1), 0, 0);
             tr.compute_batch(prep)?; // warm
             eng.reset_counters(true);
-            let prep = prepare_cpu(g, scfg, &d, &opt, 1, &Rng::new(1), 0, 1);
+            let prep = prepare_cpu(g, scfg, &d, &opt, &pool1, &Rng::new(1), 0, 1);
             tr.compute_batch(prep)?;
             let counters = eng.counters().borrow();
             // Fig 3 artifacts come from the RGCN baseline batch (paper's setup).
@@ -379,6 +404,81 @@ fn main() -> anyhow::Result<()> {
         &t3,
     )?;
 
+    // ---------------- BENCH_2.json: machine-readable perf trajectory -------
+    let json_path = write_bench_json(&matrix, cfg.threads, quick, geomean(&speedups))?;
+    eprintln!("[bench] wrote {json_path}");
+
     eprintln!("[bench] total {:?}; results in results/", t0.elapsed());
     Ok(())
+}
+
+/// Emit the perf-trajectory record: per-workload wall/cpu/gpu ms, per-stage
+/// gpu ms + kernel counts, and arena allocs-per-step, plus an optional
+/// comparison against a pre-change baseline wall time supplied via
+/// `HIFUSE_PRE_PR_WALL_MS` (the RGCN/aifb hifuse epoch wall of the build
+/// being compared against, measured in the same environment). Path:
+/// `HIFUSE_BENCH_JSON`, else `results/BENCH_2.json`.
+fn write_bench_json(
+    matrix: &[RunRow],
+    threads: usize,
+    quick: bool,
+    geomean_speedup: f64,
+) -> anyhow::Result<String> {
+    let mut runs = Vec::new();
+    for r in matrix {
+        let stages_ms: Vec<String> = r
+            .gpu_ms_by_stage
+            .iter()
+            .map(|(s, ms)| format!("\"{s}\": {ms:.3}"))
+            .collect();
+        let stages_k: Vec<String> = r
+            .kernels_by_stage
+            .iter()
+            .map(|(s, c)| format!("\"{s}\": {c}"))
+            .collect();
+        runs.push(format!(
+            "    {{\"dataset\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
+             \"wall_ms\": {:.3}, \"cpu_ms\": {:.3}, \"gpu_ms\": {:.3}, \
+             \"kernels\": {}, \"allocs_per_step\": {:.3}, \
+             \"gpu_ms_by_stage\": {{{}}}, \"kernels_by_stage\": {{{}}}}}",
+            r.dataset,
+            r.model.name(),
+            r.mode,
+            r.wall_ms,
+            r.cpu_ms,
+            r.gpu_ms,
+            r.kernels,
+            r.allocs_per_step,
+            stages_ms.join(", "),
+            stages_k.join(", ")
+        ));
+    }
+    let hifuse_aifb_rgcn = matrix
+        .iter()
+        .find(|r| r.dataset == "aifb" && r.model == ModelKind::Rgcn && r.mode == "hifuse")
+        .map(|r| r.wall_ms);
+    let pre_pr: Option<f64> = std::env::var("HIFUSE_PRE_PR_WALL_MS")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let speedup_vs_pre_pr = match (pre_pr, hifuse_aifb_rgcn) {
+        (Some(pre), Some(now)) if now > 0.0 => format!("{:.3}", pre / now),
+        _ => "null".to_string(),
+    };
+    let json = format!(
+        "{{\n  \"schema\": \"hifuse-bench-2\",\n  \"profile\": \"bench\",\n  \
+         \"threads\": {threads},\n  \"quick\": {quick},\n  \"measured\": true,\n  \
+         \"geomean_speedup_hifuse_over_base\": {:.3},\n  \
+         \"pre_pr_baseline_wall_ms\": {},\n  \
+         \"epoch_wall_speedup_vs_pre_pr\": {},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        geomean_speedup,
+        pre_pr.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".to_string()),
+        speedup_vs_pre_pr,
+        runs.join(",\n")
+    );
+    let path = match std::env::var("HIFUSE_BENCH_JSON") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => results_dir()?.join("BENCH_2.json"),
+    };
+    std::fs::write(&path, json)?;
+    Ok(path.display().to_string())
 }

@@ -16,10 +16,10 @@ use crate::models::step::{
     pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
 };
 use crate::models::{ModelKind, Params};
-use crate::runtime::{ExecBackend, Phase, Stage};
+use crate::runtime::{ArenaStats, ExecBackend, Phase, Stage};
 use crate::sampler::{collect, MiniBatch, NeighborSampler, RelEdges, SamplerCfg, TaggedEdges};
 use crate::semantic;
-use crate::util::{HostTensor, Rng};
+use crate::util::{HostTensor, Rng, WorkerPool};
 
 /// Training-run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +53,12 @@ pub struct EpochMetrics {
     pub kernels_fwd_semantic: usize,
     pub kernels_fwd_agg: usize,
     pub kernels_by_stage: Vec<(Stage, usize)>,
+    /// Dispatch time per stage (the per-stage slice of `gpu_time`).
+    pub time_by_stage: Vec<(Stage, Duration)>,
+    /// Backend buffer-arena traffic, cumulative at epoch end (all-zero on
+    /// backends without an arena). Per-epoch deltas = difference between
+    /// consecutive epochs' snapshots.
+    pub arena: ArenaStats,
     pub batches: usize,
     pub dropped_nodes: usize,
     pub dropped_edges: usize,
@@ -80,13 +86,14 @@ pub fn prepare_graph_layout(g: &mut HeteroGraph, opt: &OptConfig) {
 
 /// CPU half of batch preparation (runs on the producer thread in pipeline
 /// mode; touches no backend handles): sample, (optionally) select on CPU,
-/// collect.
+/// collect. `pool` partitions both CPU stages (selection across relations,
+/// collection across types).
 pub fn prepare_cpu(
     graph: &HeteroGraph,
     scfg: SamplerCfg,
     d: &Dims,
     opt: &OptConfig,
-    threads: usize,
+    pool: &WorkerPool,
     rng: &Rng,
     epoch: u64,
     batch_idx: usize,
@@ -101,7 +108,7 @@ pub fn prepare_cpu(
                 .iter()
                 .map(|t| {
                     if opt.parallel {
-                        semantic::select_parallel(t, n_rel, threads)
+                        semantic::select_parallel(t, n_rel, pool.threads())
                     } else {
                         semantic::select_serial(t, n_rel)
                     }
@@ -111,7 +118,7 @@ pub fn prepare_cpu(
     } else {
         None
     };
-    let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f);
+    let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f, pool);
     PreparedCpu {
         collected,
         selected,
@@ -144,13 +151,15 @@ pub fn gpu_select<B: ExecBackend>(
         let mut res = eng
             .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[&et, &rel])?
             .into_iter();
-        let pos = res.next().unwrap().into_i32()?;
+        let pos_t = res.next().unwrap();
         let count = res.next().unwrap().scalar()? as usize;
+        let pos = pos_t.as_i32()?;
         let mut e = RelEdges::default();
         for &p in &pos[..count] {
             e.src.push(tagged.src[p as usize]);
             e.dst.push(tagged.dst[p as usize]);
         }
+        eng.recycle(pos_t);
         out.push(e);
     }
     Ok(out)
@@ -164,6 +173,10 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub params: Params,
     pub cfg: TrainCfg,
     pub opt: OptConfig,
+    /// Worker pool for the CPU stages (`TrainCfg::threads`): selection
+    /// across relations, collection across types. Kernel-side threading is
+    /// the backend's own pool (`SimBackend::builtin_threaded`).
+    pub pool: WorkerPool,
     rng: Rng,
 }
 
@@ -181,7 +194,17 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let schema = schema_tensors(graph, &d);
         let exec = StepExecutor::new(eng, model, opt);
         let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
-        Ok(Trainer { eng, graph, exec, schema, params, cfg, opt, rng: Rng::new(cfg.seed) })
+        Ok(Trainer {
+            eng,
+            graph,
+            exec,
+            schema,
+            params,
+            cfg,
+            opt,
+            pool: WorkerPool::new(cfg.threads),
+            rng: Rng::new(cfg.seed),
+        })
     }
 
     pub fn dims(&self) -> Dims {
@@ -242,7 +265,7 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let mut total_seed = 0usize;
         for b in 0..n_batches {
             let prep = prepare_cpu(
-                self.graph, scfg, &d, &self.opt, self.cfg.threads, &self.rng, epoch, b,
+                self.graph, scfg, &d, &self.opt, &self.pool, &self.rng, epoch, b,
             );
             m.cpu_time += prep.cpu_time;
             m.dropped_nodes += prep.dropped_nodes;
@@ -272,6 +295,8 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         m.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);
         m.kernels_fwd_agg = c.count_phase(Stage::Aggregation, Phase::Fwd);
         m.kernels_by_stage = c.by_stage();
+        m.time_by_stage = c.time_by_stage();
+        m.arena = c.arena;
     }
 }
 

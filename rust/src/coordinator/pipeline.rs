@@ -30,7 +30,7 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let n_batches = NeighborSampler::new(tr.graph, scfg).batches_per_epoch();
     let d = tr.exec.d;
     let opt = tr.opt;
-    let threads = tr.cfg.threads;
+    let pool = tr.pool;
     let rng = tr.rng.clone();
     let graph = tr.graph;
 
@@ -45,7 +45,7 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
         let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
         s.spawn(move || {
             for b in 0..n_batches {
-                let prep = prepare_cpu(graph, scfg, &d, &opt, threads, &rng, epoch, b);
+                let prep = prepare_cpu(graph, scfg, &d, &opt, &pool, &rng, epoch, b);
                 if tx.send(prep).is_err() {
                     return; // consumer bailed
                 }

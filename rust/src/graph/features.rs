@@ -130,6 +130,20 @@ impl FeatureStore {
         self.layout = want;
     }
 
+    /// Contiguous view of rows `[v0, v0 + n)` of type `t`, when the
+    /// materialized layout makes them contiguous (type-major). Index-major
+    /// returns `None`: global-id interleaving scatters consecutive
+    /// type-local rows across the buffer, so callers must fall back to
+    /// [`FeatureStore::copy_row`]. This is what lets the collector turn a
+    /// run of consecutive slot ids into one `copy_from_slice`.
+    #[inline]
+    pub fn rows(&self, t: usize, v0: usize, n: usize) -> Option<&[f32]> {
+        match self.layout {
+            Layout::TypeMajor => Some(&self.tm[t][v0 * self.dim..(v0 + n) * self.dim]),
+            Layout::IndexMajor => None,
+        }
+    }
+
     /// Read the feature row of type-local vertex `(t, v)` into `out`.
     /// This is the hot path of feature collection; index-major incurs the
     /// scattered global-id indirection the paper's reorganization removes.
@@ -213,6 +227,20 @@ mod tests {
             s.copy_row(*t, *v, &mut b);
             assert_eq!(&b, want, "mismatch after roundtrip at ({t},{v})");
         }
+    }
+
+    #[test]
+    fn contiguous_rows_match_copy_row_and_gate_on_layout() {
+        let mut s = store();
+        let mut row = vec![0.0f32; 4];
+        let view = s.rows(2, 1, 3).expect("type-major is contiguous");
+        assert_eq!(view.len(), 3 * 4);
+        for i in 0..3 {
+            s.copy_row(2, 1 + i, &mut row);
+            assert_eq!(&view[i * 4..(i + 1) * 4], &row[..], "row {i}");
+        }
+        s.ensure_layout(Layout::IndexMajor);
+        assert!(s.rows(2, 1, 3).is_none(), "index-major must not claim contiguity");
     }
 
     #[test]

@@ -89,7 +89,10 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     match cfg.backend {
         BackendKind::Sim => {
-            let mut eng = SimBackend::builtin(cfg.resolved_profile())?;
+            // --threads governs both the CPU stages (selection, collection)
+            // and the sim backend's intra-kernel row parallelism.
+            let mut eng =
+                SimBackend::builtin_threaded(cfg.resolved_profile(), cfg.train.threads)?;
             if cfg.sim_overhead_us > 0.0 {
                 eng.set_launch_overhead(Duration::from_secs_f64(cfg.sim_overhead_us * 1e-6));
             }
@@ -236,11 +239,12 @@ fn cmd_profile<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         ep: d.ep,
     };
     let rng = hifuse::util::Rng::new(cfg.train.seed);
-    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 0);
+    let pool = tr.pool;
+    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, &pool, &rng, 0, 0);
     tr.compute_batch(prep)?; // warm (compiles on PJRT)
     eng.reset_counters(true);
     let t0 = std::time::Instant::now();
-    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, cfg.train.threads, &rng, 0, 1);
+    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, &pool, &rng, 0, 1);
     tr.compute_batch(prep)?;
     let step_wall = t0.elapsed();
     let counters = eng.counters().borrow();

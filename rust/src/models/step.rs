@@ -197,10 +197,11 @@ impl<D: DevBuf> Stack<D> {
 }
 
 struct LayerFwd<D> {
-    /// `[RPAD, NS, Fd]` projected source features (zeros for dead rels).
-    pstack: Vec<f32>,
+    /// `[RPAD, NS, Fd]` projected source features (zeros for dead rels),
+    /// kept as a tensor so dispatches borrow it without cloning.
+    pstack: HostTensor,
     /// RGAT only: projected destination features.
-    pstack_dst: Option<Vec<f32>>,
+    pstack_dst: Option<HostTensor>,
     /// `[RPAD, NS, Fd]` aggregated features.
     astack: Stack<D>,
     /// `[TPAD, NS, Fd]` fused output.
@@ -291,7 +292,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
 
     /// Project one endpoint slab stack: per-relation dispatches (baseline &
     /// paper-HiFuse) or one stacked dispatch (extension). `types` selects
-    /// src or dst endpoint typing.
+    /// src or dst endpoint typing. Returns the `[RPAD, NS, Fd]` stack.
     fn project(
         &self,
         l: usize,
@@ -301,7 +302,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         edges: &LayerEdges,
         types: &[usize],
         types_i32: &HostTensor,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<HostTensor> {
         let (d, eng) = (&self.d, self.eng);
         let fd = d.fd(l);
         if self.opt.stacked_proj {
@@ -312,23 +313,24 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                 Phase::Fwd,
                 &[hin, &w, types_i32],
             )?;
-            return out.into_iter().next().unwrap().into_f32();
+            return Ok(out.into_iter().next().unwrap());
         }
         let _ = schema;
         let mut pstack = vec![0.0f32; d.rpad * d.ns * fd];
         for &r in &edges.live {
             let x = slab(hin, types[r], d.ns, if l == 0 { d.f } else { d.h })?;
             let w = self.w_tensor(params, l, r);
-            let y = eng.run(
+            let out = eng.run(
                 Self::proj_name(l, false, false),
                 Stage::Projection,
                 Phase::Fwd,
                 &[&x, &w],
             )?;
-            let y = y.into_iter().next().unwrap().into_f32()?;
-            pstack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&y);
+            let y = out.into_iter().next().unwrap();
+            pstack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(y.as_f32()?);
+            eng.recycle(y);
         }
-        Ok(pstack)
+        Ok(HostTensor::f32(pstack, &[d.rpad, d.ns, fd]))
     }
 
     fn layer_forward(
@@ -343,15 +345,14 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         let fd = d.fd(l);
 
         let pstack = self.project(l, hin, params, schema, edges, &schema.src_type,
-                                  &schema.src_type_i32)?;
+            &schema.src_type_i32)?;
         let pstack_dst = if self.model == ModelKind::Rgat {
             Some(self.project(l, hin, params, schema, edges, &schema.dst_type,
-                              &schema.dst_type_i32)?)
+                &schema.dst_type_i32)?)
         } else {
             None
         };
 
-        let pst = HostTensor::f32(pstack.clone(), &[d.rpad, d.ns, fd]);
         let astack = if self.opt.merge {
             match self.model {
                 ModelKind::Rgcn => {
@@ -362,7 +363,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                         Stage::Aggregation,
                         Phase::Fwd,
                         &[
-                            Arg::Host(&pst),
+                            Arg::Host(&pstack),
                             Arg::Host(&edges.src),
                             Arg::Host(&edges.dst),
                             Arg::Host(&edges.valid),
@@ -370,16 +371,15 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                     )?)
                 }
                 ModelKind::Rgat => {
-                    let pdst =
-                        HostTensor::f32(pstack_dst.clone().unwrap(), &[d.rpad, d.ns, fd]);
+                    let pdst = pstack_dst.as_ref().unwrap();
                     let (a_s, a_d) = self.att_vecs(params, l);
                     Stack::Dev(eng.run_dev(
                         self.agg_name(l, false),
                         Stage::Aggregation,
                         Phase::Fwd,
                         &[
-                            Arg::Host(&pst),
-                            Arg::Host(&pdst),
+                            Arg::Host(&pstack),
+                            Arg::Host(pdst),
                             Arg::Host(&a_s),
                             Arg::Host(&a_d),
                             Arg::Host(&edges.src),
@@ -390,10 +390,11 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                 }
             }
         } else {
+            let pstack_f = pstack.as_f32()?;
             let mut astack = vec![0.0f32; d.rpad * d.ns * fd];
             for &r in &edges.live {
                 let feat =
-                    HostTensor::f32(stack_block(&pstack, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+                    HostTensor::f32(stack_block(pstack_f, r, d.ns, fd).to_vec(), &[d.ns, fd]);
                 let (src, dst, valid) = &edges.per_rel[r];
                 let out = match self.model {
                     ModelKind::Rgcn => eng.run(
@@ -403,12 +404,14 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                         &[&feat, src, dst, valid],
                     )?,
                     ModelKind::Rgat => {
-                        let pd = pstack_dst.as_ref().unwrap();
+                        let pd = pstack_dst.as_ref().unwrap().as_f32()?;
                         let fdst =
                             HostTensor::f32(stack_block(pd, r, d.ns, fd).to_vec(), &[d.ns, fd]);
                         let (a_s, a_d) = self.att_vecs(params, l);
-                        let asl = HostTensor::f32(a_s.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
-                        let adl = HostTensor::f32(a_d.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
+                        let asl =
+                            HostTensor::f32(a_s.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
+                        let adl =
+                            HostTensor::f32(a_d.as_f32()?[r * fd..(r + 1) * fd].to_vec(), &[fd]);
                         eng.run(
                             self.agg_name(l, false),
                             Stage::Aggregation,
@@ -417,8 +420,9 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                         )?
                     }
                 };
-                let out = out.into_iter().next().unwrap().into_f32()?;
-                astack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&out);
+                let y = out.into_iter().next().unwrap();
+                astack[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(y.as_f32()?);
+                eng.recycle(y);
             }
             Stack::Host(HostTensor::f32(astack, &[d.rpad, d.ns, fd]))
         };
@@ -431,7 +435,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                 Phase::Fwd,
                 &[Arg::Host(&schema.dst_type_i32), astack.as_arg()],
             )?
-            .to_host()?;
+            .into_host()?;
 
         Ok(LayerFwd { pstack, pstack_dst, astack, hout })
     }
@@ -480,8 +484,9 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         };
 
         // --- aggregation backward: dp (and attention grads for RGAT).
-        let pst = HostTensor::f32(fwd.pstack.clone(), &[d.rpad, d.ns, fd]);
-        let (dp, dp_dst): (Vec<f32>, Option<Vec<f32>>) = if self.opt.merge {
+        // `dp`/`dp_dst` are dispatch outputs in merged mode (recycled after
+        // projection backward) and executor-assembled stacks otherwise.
+        let (dp, dp_dst): (HostTensor, Option<HostTensor>) = if self.opt.merge {
             match self.model {
                 ModelKind::Rgcn => {
                     let dp_dev = eng.run_dev(
@@ -495,36 +500,40 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                             da.as_arg(),
                         ],
                     )?;
-                    (dp_dev.to_host()?.into_f32()?, None)
+                    self.recycle_stack(da);
+                    (dp_dev.into_host()?, None)
                 }
                 ModelKind::Rgat => {
                     // The attention VJP module is multi-output, so its da
                     // input must be host-resident.
-                    let da_host = match &da {
-                        Stack::Dev(dev) => dev.to_host()?,
-                        Stack::Host(h) => h.clone(),
+                    let da_host = match da {
+                        Stack::Dev(dev) => dev.into_host()?,
+                        Stack::Host(h) => h,
                     };
-                    let pdst =
-                        HostTensor::f32(fwd.pstack_dst.clone().unwrap(), &[d.rpad, d.ns, fd]);
+                    let pdst = fwd.pstack_dst.as_ref().unwrap();
                     let (a_s, a_d) = self.att_vecs(params, l);
                     let mut out = eng
                         .run(
                             self.agg_name(l, true),
                             Stage::Aggregation,
                             Phase::Bwd,
-                            &[&pst, &pdst, &a_s, &a_d, &edges.src, &edges.dst, &edges.valid,
-                              &da_host],
+                            &[&fwd.pstack, pdst, &a_s, &a_d, &edges.src, &edges.dst,
+                                &edges.valid, &da_host],
                         )?
                         .into_iter();
-                    let dfs = out.next().unwrap().into_f32()?;
-                    let dfd = out.next().unwrap().into_f32()?;
-                    let das = out.next().unwrap().into_f32()?;
-                    let dad = out.next().unwrap().into_f32()?;
-                    self.store_att_grads(l, grads, &das, &dad);
+                    eng.recycle(da_host);
+                    let dfs = out.next().unwrap();
+                    let dfd = out.next().unwrap();
+                    let das = out.next().unwrap();
+                    let dad = out.next().unwrap();
+                    self.store_att_grads(l, grads, das.as_f32()?, dad.as_f32()?);
+                    eng.recycle(das);
+                    eng.recycle(dad);
                     (dfs, Some(dfd))
                 }
             }
         } else {
+            let pstack_f = fwd.pstack.as_f32()?;
             let mut dp = vec![0.0f32; d.rpad * d.ns * fd];
             let mut dpd = vec![0.0f32; d.rpad * d.ns * fd];
             let da_flat = da.as_host().as_f32()?;
@@ -535,7 +544,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                 match self.model {
                     ModelKind::Rgcn => {
                         let feat = HostTensor::f32(
-                            stack_block(&fwd.pstack, r, d.ns, fd).to_vec(),
+                            stack_block(pstack_f, r, d.ns, fd).to_vec(),
                             &[d.ns, fd],
                         );
                         let out = eng.run(
@@ -544,15 +553,16 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                             Phase::Bwd,
                             &[&feat, src, dst, valid, &da_r],
                         )?;
-                        let g = out.into_iter().next().unwrap().into_f32()?;
-                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&g);
+                        let g = out.into_iter().next().unwrap();
+                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(g.as_f32()?);
+                        eng.recycle(g);
                     }
                     ModelKind::Rgat => {
                         let feat = HostTensor::f32(
-                            stack_block(&fwd.pstack, r, d.ns, fd).to_vec(),
+                            stack_block(pstack_f, r, d.ns, fd).to_vec(),
                             &[d.ns, fd],
                         );
-                        let pdall = fwd.pstack_dst.as_ref().unwrap();
+                        let pdall = fwd.pstack_dst.as_ref().unwrap().as_f32()?;
                         let fdst = HostTensor::f32(
                             stack_block(pdall, r, d.ns, fd).to_vec(),
                             &[d.ns, fd],
@@ -574,30 +584,57 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
                                 &[&feat, &fdst, &asl, &adl, src, dst, valid, &da_r],
                             )?
                             .into_iter();
-                        let dfs = out.next().unwrap().into_f32()?;
-                        let dfd = out.next().unwrap().into_f32()?;
-                        let das = out.next().unwrap().into_f32()?;
-                        let dad = out.next().unwrap().into_f32()?;
-                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&dfs);
-                        dpd[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(&dfd);
+                        let dfs = out.next().unwrap();
+                        let dfd = out.next().unwrap();
+                        let das = out.next().unwrap();
+                        let dad = out.next().unwrap();
+                        dp[r * d.ns * fd..(r + 1) * d.ns * fd].copy_from_slice(dfs.as_f32()?);
+                        dpd[r * d.ns * fd..(r + 1) * d.ns * fd]
+                            .copy_from_slice(dfd.as_f32()?);
                         let (gs, gd) = self.att_grad_slices(l, grads);
-                        gs[r * fd..(r + 1) * fd].copy_from_slice(&das);
-                        gd[r * fd..(r + 1) * fd].copy_from_slice(&dad);
+                        gs[r * fd..(r + 1) * fd].copy_from_slice(das.as_f32()?);
+                        gd[r * fd..(r + 1) * fd].copy_from_slice(dad.as_f32()?);
+                        eng.recycle(dfs);
+                        eng.recycle(dfd);
+                        eng.recycle(das);
+                        eng.recycle(dad);
                     }
                 }
             }
-            (dp, (self.model == ModelKind::Rgat).then_some(dpd))
+            self.recycle_stack(da);
+            (
+                HostTensor::f32(dp, &[d.rpad, d.ns, fd]),
+                (self.model == ModelKind::Rgat)
+                    .then_some(HostTensor::f32(dpd, &[d.rpad, d.ns, fd])),
+            )
         };
 
         // --- projection backward: dhin + dW.
         let mut dhin = vec![0.0f32; d.tpad * d.ns * fin];
-        self.project_backward(l, hin, params, grads, schema, edges, &dp,
-                              &schema.src_type, &schema.src_type_i32, &mut dhin, false)?;
+        self.project_backward(l, hin, params, grads, schema, edges, &dp, &schema.src_type,
+            &schema.src_type_i32, &mut dhin, false)?;
         if let Some(dpd) = &dp_dst {
             self.project_backward(l, hin, params, grads, schema, edges, dpd,
-                                  &schema.dst_type, &schema.dst_type_i32, &mut dhin, true)?;
+                &schema.dst_type, &schema.dst_type_i32, &mut dhin, true)?;
+        }
+        // Merged-mode dp tensors are dispatch outputs: hand them back.
+        if self.opt.merge {
+            eng.recycle(dp);
+            if let Some(t) = dp_dst {
+                eng.recycle(t);
+            }
         }
         Ok(HostTensor::f32(dhin, &[d.tpad, d.ns, fin]))
+    }
+
+    /// Recycle a consumed activation that is known to be a dispatch output
+    /// (device-resident buffers always are; host ones only when the caller
+    /// knows their provenance).
+    fn recycle_stack(&self, s: Stack<B::Dev>) {
+        match s {
+            Stack::Host(h) => self.eng.recycle(h),
+            Stack::Dev(dv) => self.eng.recycle_dev(dv),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -609,7 +646,7 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         grads: &mut Params,
         schema: &SchemaTensors,
         edges: &LayerEdges,
-        dp: &[f32],
+        dp: &HostTensor,
         types: &[usize],
         types_i32: &HostTensor,
         dhin: &mut [f32],
@@ -620,42 +657,46 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         let fin = if l == 0 { d.f } else { d.h };
         if self.opt.stacked_proj {
             let w = self.w_full(params, l);
-            let dpt = HostTensor::f32(dp.to_vec(), &[d.rpad, d.ns, fd]);
             let mut out = eng
                 .run(
                     Self::proj_name(l, true, true),
                     Stage::Projection,
                     Phase::Bwd,
-                    &[hin, &w, types_i32, &dpt],
+                    &[hin, &w, types_i32, dp],
                 )?
                 .into_iter();
-            let dxs = out.next().unwrap().into_f32()?;
-            let dw = out.next().unwrap().into_f32()?;
-            tensor::add_assign(dhin, &dxs);
+            let dxs = out.next().unwrap();
+            let dw = out.next().unwrap();
+            tensor::add_assign(dhin, dxs.as_f32()?);
             let gw = if l == 0 { &mut grads.w0 } else { &mut grads.w1 };
-            tensor::add_assign(gw, &dw);
+            tensor::add_assign(gw, dw.as_f32()?);
+            eng.recycle(dxs);
+            eng.recycle(dw);
             return Ok(());
         }
         let _ = schema;
+        let dp_f = dp.as_f32()?;
         for &r in &edges.live {
             let x = slab(hin, types[r], d.ns, fin)?;
             let w = self.w_tensor(params, l, r);
-            let dy = HostTensor::f32(stack_block(dp, r, d.ns, fd).to_vec(), &[d.ns, fd]);
+            let dy = HostTensor::f32(stack_block(dp_f, r, d.ns, fd).to_vec(), &[d.ns, fd]);
             let mut out = eng
                 .run(Self::proj_name(l, true, false), Stage::Projection, Phase::Bwd,
-                     &[&x, &w, &dy])?
+                    &[&x, &w, &dy])?
                 .into_iter();
-            let dx = out.next().unwrap().into_f32()?;
-            let dw = out.next().unwrap().into_f32()?;
+            let dx = out.next().unwrap();
+            let dw = out.next().unwrap();
             let t = types[r];
-            tensor::add_assign(&mut dhin[t * d.ns * fin..(t + 1) * d.ns * fin], &dx);
+            tensor::add_assign(&mut dhin[t * d.ns * fin..(t + 1) * d.ns * fin], dx.as_f32()?);
             let gw = if l == 0 { &mut grads.w0 } else { &mut grads.w1 };
             let gw_r = &mut gw[r * fin * fd..(r + 1) * fin * fd];
             if accumulate_w {
-                tensor::add_assign(gw_r, &dw);
+                tensor::add_assign(gw_r, dw.as_f32()?);
             } else {
-                gw_r.copy_from_slice(&dw);
+                gw_r.copy_from_slice(dw.as_f32()?);
             }
+            eng.recycle(dx);
+            eng.recycle(dw);
         }
         Ok(())
     }
@@ -666,12 +707,33 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         gd.copy_from_slice(dad);
     }
 
-    fn att_grad_slices<'g>(&self, l: usize, grads: &'g mut Params) -> (&'g mut [f32], &'g mut [f32]) {
+    fn att_grad_slices<'g>(
+        &self,
+        l: usize,
+        grads: &'g mut Params,
+    ) -> (&'g mut [f32], &'g mut [f32]) {
         if l == 0 {
             (&mut grads.a_src0, &mut grads.a_dst0)
         } else {
             (&mut grads.a_src1, &mut grads.a_dst1)
         }
+    }
+
+    /// Hand a consumed layer's buffers back to the backend. Only dispatch
+    /// outputs are recycled: the non-stacked projection stack and the
+    /// non-merged aggregation stack are executor-assembled, so they are
+    /// dropped normally (recycling them would grow the pool unboundedly).
+    fn recycle_layer(&self, l: LayerFwd<B::Dev>) {
+        if self.opt.stacked_proj {
+            self.eng.recycle(l.pstack);
+            if let Some(p) = l.pstack_dst {
+                self.eng.recycle(p);
+            }
+        }
+        if let Stack::Dev(dv) = l.astack {
+            self.eng.recycle_dev(dv);
+        }
+        self.eng.recycle(l.hout);
     }
 
     /// Run one full training step (forward, loss, backward, SGD update).
@@ -693,23 +755,26 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         let logits = slab(&l1.hout, schema.target_type, d.ns, d.c)?;
         let mut out = eng
             .run("head", Stage::Head, Phase::Fwd,
-                 &[&logits, &batch.labels, &batch.seed_mask])?
+                &[&logits, &batch.labels, &batch.seed_mask])?
             .into_iter();
         let loss = out.next().unwrap().scalar()?;
-        let dlogits = out.next().unwrap().into_f32()?;
+        let dlogits = out.next().unwrap();
         let ncorrect = out.next().unwrap().scalar()?;
 
         // ---- backward
         let mut grads = params.zeros_like();
         let mut dh2 = vec![0.0f32; d.tpad * d.ns * d.c];
         let t = schema.target_type;
-        dh2[t * d.ns * d.c..(t + 1) * d.ns * d.c].copy_from_slice(&dlogits);
+        dh2[t * d.ns * d.c..(t + 1) * d.ns * d.c].copy_from_slice(dlogits.as_f32()?);
+        eng.recycle(dlogits);
         let dh2 = HostTensor::f32(dh2, &[d.tpad, d.ns, d.c]);
 
         let dh1 = self.layer_backward(1, &l0.hout, &l1, &dh2, params, &mut grads, schema,
-                                      &batch.layers[1])?;
+            &batch.layers[1])?;
         let _dx = self.layer_backward(0, &batch.xs, &l0, &dh1, params, &mut grads, schema,
-                                      &batch.layers[0])?;
+            &batch.layers[0])?;
+        self.recycle_layer(l1);
+        self.recycle_layer(l0);
 
         params.sgd(&grads, lr);
         Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
@@ -728,11 +793,15 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         let logits = slab(&l1.hout, schema.target_type, d.ns, d.c)?;
         let mut out = eng
             .run("head", Stage::Head, Phase::Fwd,
-                 &[&logits, &batch.labels, &batch.seed_mask])?
+                &[&logits, &batch.labels, &batch.seed_mask])?
             .into_iter();
         let loss = out.next().unwrap().scalar()?;
-        let _ = out.next();
+        if let Some(dl) = out.next() {
+            eng.recycle(dl);
+        }
         let ncorrect = out.next().unwrap().scalar()?;
+        self.recycle_layer(l1);
+        self.recycle_layer(l0);
         Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
     }
 }

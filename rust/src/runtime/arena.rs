@@ -1,0 +1,223 @@
+//! Size-classed scratch-buffer arena for the dispatch hot path.
+//!
+//! Every Sim dispatch used to allocate a fresh `Vec` per operand scratch
+//! and per result; the HGNN-training characterization literature (and the
+//! paper's own CPU-stage profiling) identifies exactly this allocation
+//! churn as a dominant host-side cost. The arena replaces it with checkout
+//! / reclaim over power-of-two size classes:
+//!
+//! * `take_f32` / `take_i32` — check out a zeroed buffer of the exact
+//!   requested length, reusing a recycled buffer of the same class when
+//!   one is free (a **hit**) and heap-allocating otherwise (a **miss**).
+//! * `put_f32` / `put_i32` / [`Arena::reclaim`] — return a buffer (or a
+//!   whole [`HostTensor`], the "into-pooled" path) for reuse.
+//!
+//! After a warm-up step every buffer the training step needs exists in the
+//! pool, so steady-state misses — i.e. real allocations per step — are ~0;
+//! [`ArenaStats`] exports hit/miss/byte counters through the dispatch
+//! [`Counters`](super::Counters) so tests and the bench harness can assert
+//! exactly that. Buffers shorter than [`MIN_POOLED`] elements are not worth
+//! recycling (scalars, tiny index vectors) and bypass the pool untracked.
+
+use std::collections::HashMap;
+
+use crate::util::HostTensor;
+
+/// Buffers below this element count bypass the pool (plain allocation).
+pub const MIN_POOLED: usize = 64;
+
+/// Cumulative arena traffic counters (since backend construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts served from a recycled buffer (no allocation).
+    pub hits: u64,
+    /// Checkouts that had to heap-allocate a new buffer.
+    pub misses: u64,
+    /// Bytes handed back for reuse via the put/reclaim path.
+    pub bytes_recycled: u64,
+    /// Bytes newly allocated by misses.
+    pub bytes_allocated: u64,
+}
+
+/// The pool proper: free lists keyed by power-of-two capacity class.
+#[derive(Debug, Default)]
+pub struct Arena {
+    f32s: HashMap<usize, Vec<Vec<f32>>>,
+    i32s: HashMap<usize, Vec<Vec<i32>>>,
+    stats: ArenaStats,
+}
+
+/// Capacity class a checkout of `len` elements is served from.
+fn class_of(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_POOLED)
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Check out a zeroed f32 buffer of exactly `len` elements.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        if len < MIN_POOLED {
+            return vec![0.0; len];
+        }
+        let class = class_of(len);
+        if let Some(mut v) = self.f32s.get_mut(&class).and_then(|l| l.pop()) {
+            self.stats.hits += 1;
+            v.clear();
+            v.resize(len, 0.0);
+            return v;
+        }
+        self.stats.misses += 1;
+        self.stats.bytes_allocated += (class * 4) as u64;
+        let mut v = Vec::with_capacity(class);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Check out a zeroed i32 buffer of exactly `len` elements.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        if len < MIN_POOLED {
+            return vec![0; len];
+        }
+        let class = class_of(len);
+        if let Some(mut v) = self.i32s.get_mut(&class).and_then(|l| l.pop()) {
+            self.stats.hits += 1;
+            v.clear();
+            v.resize(len, 0);
+            return v;
+        }
+        self.stats.misses += 1;
+        self.stats.bytes_allocated += (class * 4) as u64;
+        let mut v = Vec::with_capacity(class);
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return a buffer for reuse. Classified by capacity rounded *down* to
+    /// a power of two, so a future `take` of that class never reallocates.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        let cap = v.capacity();
+        if cap < MIN_POOLED {
+            return; // tiny buffers are cheaper to reallocate than to track
+        }
+        let class = prev_power_of_two(cap);
+        self.stats.bytes_recycled += (cap * 4) as u64;
+        self.f32s.entry(class).or_default().push(v);
+    }
+
+    pub fn put_i32(&mut self, v: Vec<i32>) {
+        let cap = v.capacity();
+        if cap < MIN_POOLED {
+            return;
+        }
+        let class = prev_power_of_two(cap);
+        self.stats.bytes_recycled += (cap * 4) as u64;
+        self.i32s.entry(class).or_default().push(v);
+    }
+
+    /// The into-pooled path for [`HostTensor`]: consume a tensor and
+    /// recycle its storage.
+    pub fn reclaim(&mut self, t: HostTensor) {
+        match t {
+            HostTensor::F32(v, _) => self.put_f32(v),
+            HostTensor::I32(v, _) => self.put_i32(v),
+        }
+    }
+
+    /// The from-pooled path: a zeroed f32 [`HostTensor`] of `shape` backed
+    /// by pooled storage.
+    pub fn host_f32(&mut self, shape: &[usize]) -> HostTensor {
+        let v = self.take_f32(shape.iter().product());
+        HostTensor::f32(v, shape)
+    }
+
+    pub fn host_i32(&mut self, shape: &[usize]) -> HostTensor {
+        let v = self.take_i32(shape.iter().product());
+        HostTensor::i32(v, shape)
+    }
+}
+
+fn prev_power_of_two(n: usize) -> usize {
+    debug_assert!(n > 0);
+    let npot = n.next_power_of_two();
+    if npot == n {
+        n
+    } else {
+        npot / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_take_hits() {
+        let mut a = Arena::new();
+        let v = a.take_f32(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(a.stats().misses, 1);
+        a.put_f32(v);
+        let w = a.take_f32(70); // same class (128)
+        assert_eq!(w.len(), 70);
+        assert_eq!(a.stats().hits, 1);
+        assert_eq!(a.stats().misses, 1);
+    }
+
+    #[test]
+    fn recycled_buffers_come_back_zeroed() {
+        let mut a = Arena::new();
+        let mut v = a.take_f32(64);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        a.put_f32(v);
+        let w = a.take_f32(64);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn tiny_buffers_bypass_the_pool() {
+        let mut a = Arena::new();
+        let v = a.take_f32(3);
+        assert_eq!(v.len(), 3);
+        assert_eq!(a.stats().misses, 0);
+        a.put_f32(v);
+        assert_eq!(a.stats().bytes_recycled, 0);
+    }
+
+    #[test]
+    fn i32_pool_is_independent() {
+        let mut a = Arena::new();
+        let v = a.take_i32(128);
+        a.put_i32(v);
+        let _f = a.take_f32(128); // must not steal the i32 buffer
+        assert_eq!(a.stats().misses, 2);
+        let w = a.take_i32(128);
+        assert_eq!(w.len(), 128);
+        assert_eq!(a.stats().hits, 1);
+    }
+
+    #[test]
+    fn host_tensor_roundtrip_recycles() {
+        let mut a = Arena::new();
+        let t = a.host_f32(&[8, 16]);
+        assert_eq!(t.shape(), &[8, 16]);
+        a.reclaim(t);
+        let _ = a.host_f32(&[16, 8]);
+        assert_eq!(a.stats().hits, 1);
+    }
+
+    #[test]
+    fn class_rounding_is_consistent() {
+        assert_eq!(class_of(1), MIN_POOLED);
+        assert_eq!(class_of(65), 128);
+        assert_eq!(prev_power_of_two(128), 128);
+        assert_eq!(prev_power_of_two(130), 128);
+    }
+}

@@ -74,7 +74,12 @@ pub struct Counters {
     /// Log full events (timeline benches) or just counts (training loops).
     pub keep_events: bool,
     counts: std::collections::HashMap<(Stage, Phase), usize>,
+    stage_time: std::collections::HashMap<Stage, Duration>,
     pub gpu_time: Duration,
+    /// Snapshot of the backend's buffer-arena traffic (cumulative since
+    /// backend construction; refreshed by the sim backend on every
+    /// dispatch, all-zero on backends without an arena).
+    pub arena: super::ArenaStats,
     epoch_start: Option<std::time::Instant>,
 }
 
@@ -86,6 +91,7 @@ impl Counters {
     pub fn reset(&mut self) {
         self.events.clear();
         self.counts.clear();
+        self.stage_time.clear();
         self.gpu_time = Duration::ZERO;
         self.epoch_start = Some(std::time::Instant::now());
     }
@@ -101,6 +107,7 @@ impl Counters {
     ) {
         if stage != Stage::Calib {
             *self.counts.entry((stage, phase)).or_insert(0) += 1;
+            *self.stage_time.entry(stage).or_insert(Duration::ZERO) += dur;
             self.gpu_time += dur;
         }
         if self.keep_events {
@@ -132,6 +139,14 @@ impl Counters {
     pub fn by_stage(&self) -> Vec<(Stage, usize)> {
         STAGES.iter().map(|&s| (s, self.count(s))).collect()
     }
+
+    /// Accumulated dispatch ("GPU") time per stage, epoch counts only.
+    pub fn time_by_stage(&self) -> Vec<(Stage, Duration)> {
+        STAGES
+            .iter()
+            .map(|&s| (s, self.stage_time.get(&s).copied().unwrap_or(Duration::ZERO)))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +164,10 @@ mod tests {
         assert_eq!(c.count(Stage::Aggregation), 2);
         assert_eq!(c.count_phase(Stage::Aggregation, Phase::Fwd), 1);
         assert_eq!(c.gpu_time, Duration::from_micros(12));
+        let times = c.time_by_stage();
+        assert!(times.contains(&(Stage::Aggregation, Duration::from_micros(10))));
+        assert!(times.contains(&(Stage::Projection, Duration::from_micros(2))));
+        assert!(times.contains(&(Stage::Head, Duration::ZERO)));
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! substrate-specific, and both backends expose a measured launch overhead
 //! via [`ExecBackend::measure_dispatch_overhead`].
 
+pub mod arena;
 pub mod counters;
 pub mod manifest;
 pub mod sim;
@@ -23,6 +24,7 @@ pub mod literal;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use arena::{Arena, ArenaStats};
 pub use counters::{Counters, Event, Phase, Stage, STAGES};
 pub use manifest::{DType, Manifest, ModuleSpec};
 #[cfg(feature = "pjrt")]
@@ -53,6 +55,15 @@ pub trait DevBuf {
     fn shape(&self) -> &[usize];
     /// Copy back to host (only when the coordinator actually needs values).
     fn to_host(&self) -> Result<HostTensor>;
+    /// Consume the device buffer into a host tensor. Backends whose
+    /// "device" memory *is* host memory (the sim backend) override this to
+    /// hand the storage over without a copy.
+    fn into_host(self) -> Result<HostTensor>
+    where
+        Self: Sized,
+    {
+        self.to_host()
+    }
     fn size_bytes(&self) -> usize {
         self.shape().iter().product::<usize>() * 4
     }
@@ -121,6 +132,16 @@ pub trait ExecBackend {
         *c = Counters::new(keep_events);
         c.reset();
     }
+
+    /// Hand a consumed dispatch output back to the backend for storage
+    /// reuse (the sim backend recycles it through its buffer arena;
+    /// backends without a pool ignore it). Callers that copy a result out
+    /// and would otherwise drop the tensor should route it here so
+    /// steady-state dispatch allocations stay ~0.
+    fn recycle(&self, _t: HostTensor) {}
+
+    /// [`ExecBackend::recycle`] for a device-resident buffer.
+    fn recycle_dev(&self, _d: Self::Dev) {}
 
     /// Measure the fixed per-dispatch overhead (the "kernel launch cost"):
     /// median wall time of the cheapest always-present module (`head`) over

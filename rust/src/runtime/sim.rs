@@ -22,10 +22,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::{
-    check_args, host_dtype, Arg, Counters, DType, DevBuf, ExecBackend, Manifest, ModuleSpec,
-    Phase, Stage,
+    check_args, host_dtype, Arena, ArenaStats, Arg, Counters, DType, DevBuf, ExecBackend,
+    Manifest, ModuleSpec, Phase, Stage,
 };
-use crate::util::HostTensor;
+use crate::util::{HostTensor, WorkerPool};
 
 /// LeakyReLU negative slope (ref.py `LEAKY_SLOPE`).
 const LEAKY_SLOPE: f32 = 0.2;
@@ -51,35 +51,58 @@ impl DevBuf for SimDev {
     fn to_host(&self) -> Result<HostTensor> {
         Ok(self.0.clone())
     }
+
+    fn into_host(self) -> Result<HostTensor> {
+        Ok(self.0) // "device" memory is host memory: hand the storage over
+    }
 }
 
 /// Reference interpreter + dispatch accounting: the default backend.
+///
+/// Its kernels are cache-blocked and row-parallel over the shared
+/// [`WorkerPool`] (partitioned so f32 summation order — and therefore every
+/// parity/VJP test — is bit-identical for any thread count), and all
+/// dispatch scratch/result buffers come from a size-classed [`Arena`] so
+/// steady-state allocations per training step are ~0.
 pub struct SimBackend {
     manifest: Manifest,
     counters: RefCell<Counters>,
     /// Simulated per-dispatch launch overhead (busy-wait), the knob the
     /// dispatch-reduction experiments turn. Default zero.
     launch_overhead: Duration,
+    /// Worker pool for intra-kernel row parallelism (`--threads`).
+    pool: WorkerPool,
+    /// Dispatch buffer arena (scratch + result storage reuse).
+    arena: RefCell<Arena>,
 }
 
 impl SimBackend {
     /// Backend over a built-in profile ("tiny" or "bench") — zero
-    /// artifacts, zero Python.
+    /// artifacts, zero Python. Kernels run serially; see
+    /// [`SimBackend::builtin_threaded`].
     pub fn builtin(profile: &str) -> Result<SimBackend> {
-        Ok(Self::new(Manifest::builtin(profile)?))
+        Ok(Self::new(Manifest::builtin(profile)?, WorkerPool::default()))
+    }
+
+    /// Built-in profile with `threads` kernel workers (what `--threads`
+    /// selects for the CLI, benches, and examples).
+    pub fn builtin_threaded(profile: &str, threads: usize) -> Result<SimBackend> {
+        Ok(Self::new(Manifest::builtin(profile)?, WorkerPool::new(threads)))
     }
 
     /// Backend over an on-disk artifact manifest (interface parity checks
     /// against the AOT emitter; the HLO files themselves are never read).
     pub fn load(profile_dir: &Path) -> Result<SimBackend> {
-        Ok(Self::new(Manifest::load(profile_dir)?))
+        Ok(Self::new(Manifest::load(profile_dir)?, WorkerPool::default()))
     }
 
-    pub fn new(manifest: Manifest) -> SimBackend {
+    pub fn new(manifest: Manifest, pool: WorkerPool) -> SimBackend {
         SimBackend {
             manifest,
             counters: RefCell::new(Counters::new(false)),
             launch_overhead: Duration::ZERO,
+            pool,
+            arena: RefCell::new(Arena::new()),
         }
     }
 
@@ -90,6 +113,32 @@ impl SimBackend {
 
     pub fn launch_overhead(&self) -> Duration {
         self.launch_overhead
+    }
+
+    /// Replace the kernel worker pool.
+    pub fn set_pool(&mut self, pool: WorkerPool) {
+        self.pool = pool;
+    }
+
+    pub fn pool(&self) -> WorkerPool {
+        self.pool
+    }
+
+    /// Cumulative buffer-arena traffic since construction.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.borrow().stats()
+    }
+
+    fn take_f32(&self, len: usize) -> Vec<f32> {
+        self.arena.borrow_mut().take_f32(len)
+    }
+
+    fn take_i32(&self, len: usize) -> Vec<i32> {
+        self.arena.borrow_mut().take_i32(len)
+    }
+
+    fn reclaim_f32(&self, v: Vec<f32>) {
+        self.arena.borrow_mut().put_f32(v);
     }
 
     /// Dispatch core: check args, interpret, verify outputs against the
@@ -111,7 +160,7 @@ impl SimBackend {
                 Arg::Dev(d) => &d.0,
             })
             .collect();
-        let outs = interpret(name, spec, &host_args)?;
+        let outs = self.interpret(name, spec, &host_args)?;
         if outs.len() != spec.rets.len() {
             bail!(
                 "{name}: interpreter returned {} outputs, declared {}",
@@ -138,9 +187,11 @@ impl SimBackend {
         }
         let dur = t0.elapsed();
         let bytes_out: usize = outs.iter().map(|t| t.size_bytes()).sum();
-        self.counters
-            .borrow_mut()
-            .record(name, stage, phase, dur, bytes_in, bytes_out);
+        {
+            let mut c = self.counters.borrow_mut();
+            c.record(name, stage, phase, dur, bytes_in, bytes_out);
+            c.arena = self.arena.borrow().stats();
+        }
         Ok(outs)
     }
 }
@@ -180,6 +231,14 @@ impl ExecBackend for SimBackend {
         }
         Ok(SimDev(outs.swap_remove(0)))
     }
+
+    fn recycle(&self, t: HostTensor) {
+        self.arena.borrow_mut().reclaim(t);
+    }
+
+    fn recycle_dev(&self, d: SimDev) {
+        self.arena.borrow_mut().reclaim(d.0);
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -195,303 +254,931 @@ fn idx(v: i32, n: usize, what: &str) -> Result<usize> {
     Ok(v as usize)
 }
 
-fn interpret(name: &str, spec: &ModuleSpec, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    let dim = |a: usize, d: usize| spec.args[a].shape[d];
-    match name {
-        "edge_select" => {
-            let et = args[0].as_i32()?;
-            let rel = args[1].as_i32()?[0];
-            let elp = et.len();
-            let mut pos: Vec<i32> = Vec::with_capacity(elp);
-            for (p, &t) in et.iter().enumerate() {
-                if t == rel {
-                    pos.push(p as i32);
+impl SimBackend {
+    /// Evaluate one module with reference semantics: blocked, row-parallel
+    /// kernels over the shared pool, scratch and results from the arena.
+    fn interpret(
+        &self,
+        name: &str,
+        spec: &ModuleSpec,
+        args: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let dim = |a: usize, d: usize| spec.args[a].shape[d];
+        match name {
+            "edge_select" => {
+                let et = args[0].as_i32()?;
+                let rel = args[1].as_i32()?[0];
+                let elp = et.len();
+                let mut pos = self.take_i32(elp);
+                let mut count = 0usize;
+                for (p, &t) in et.iter().enumerate() {
+                    if t == rel {
+                        pos[count] = p as i32;
+                        count += 1;
+                    }
                 }
+                for v in pos[count..].iter_mut() {
+                    *v = elp as i32; // sentinel = ELP, like the HLO module
+                }
+                Ok(vec![HostTensor::i32(pos, &[elp]), HostTensor::scalar_i32(count as i32)])
             }
-            let count = pos.len() as i32;
-            pos.resize(elp, elp as i32); // sentinel = ELP, like the HLO module
-            Ok(vec![HostTensor::i32(pos, &[elp]), HostTensor::scalar_i32(count)])
-        }
 
-        n if n.starts_with("proj_stacked_fwd") => {
-            let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
-            let (rp, fout) = (dim(1, 0), dim(1, 2));
-            let xs = args[0].as_f32()?;
-            let w = args[1].as_f32()?;
-            let st = args[2].as_i32()?;
-            let mut out = vec![0.0f32; rp * ns * fout];
-            for r in 0..rp {
-                let t = idx(st[r], tp, "src_type")?;
-                let y = matmul(
-                    &xs[t * ns * fin..(t + 1) * ns * fin],
-                    &w[r * fin * fout..(r + 1) * fin * fout],
+            n if n.starts_with("proj_stacked_fwd") => {
+                let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let (rp, fout) = (dim(1, 0), dim(1, 2));
+                let xs = args[0].as_f32()?;
+                let w = args[1].as_f32()?;
+                let st = args[2].as_i32()?;
+                let mut out = self.take_f32(rp * ns * fout);
+                self.pool.try_for_row_chunks(&mut out, rp, 1, |r0, r1, orows| {
+                    for r in r0..r1 {
+                        let t = idx(st[r], tp, "src_type")?;
+                        matmul_rows(
+                            &xs[t * ns * fin..(t + 1) * ns * fin],
+                            &w[r * fin * fout..(r + 1) * fin * fout],
+                            0,
+                            ns,
+                            fin,
+                            fout,
+                            &mut orows[(r - r0) * ns * fout..(r - r0 + 1) * ns * fout],
+                        );
+                    }
+                    Ok(())
+                })?;
+                Ok(vec![HostTensor::f32(out, &[rp, ns, fout])])
+            }
+
+            n if n.starts_with("proj_stacked_bwd") => {
+                let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let (rp, fout) = (dim(1, 0), dim(1, 2));
+                let xs = args[0].as_f32()?;
+                let w = args[1].as_f32()?;
+                let st = args[2].as_i32()?;
+                let dy = args[3].as_f32()?;
+                let mut dxs = self.take_f32(tp * ns * fin);
+                let mut dw = self.take_f32(rp * fin * fout);
+                // Per-relation dx lands in scratch; it is folded into the
+                // type slabs serially below so the accumulation order (r
+                // ascending) stays bit-identical to the scalar oracle.
+                let mut dx_scratch = self.take_f32(rp * ns * fin);
+                self.pool.try_for_row_chunks2(
+                    &mut dx_scratch,
+                    &mut dw,
+                    rp,
+                    1,
+                    |r0, r1, dxc, dwc| {
+                        for r in r0..r1 {
+                            let t = idx(st[r], tp, "src_type")?;
+                            let dy_r = &dy[r * ns * fout..(r + 1) * ns * fout];
+                            matmul_nt_rows(
+                                dy_r,
+                                &w[r * fin * fout..(r + 1) * fin * fout],
+                                fout,
+                                fin,
+                                0,
+                                ns,
+                                &mut dxc[(r - r0) * ns * fin..(r - r0 + 1) * ns * fin],
+                            );
+                            matmul_tn_rows(
+                                &xs[t * ns * fin..(t + 1) * ns * fin],
+                                dy_r,
+                                ns,
+                                fin,
+                                fout,
+                                0,
+                                fin,
+                                &mut dwc[(r - r0) * fin * fout..(r - r0 + 1) * fin * fout],
+                            );
+                        }
+                        Ok(())
+                    },
+                )?;
+                for r in 0..rp {
+                    let t = st[r] as usize; // validated by the worker pass
+                    let dst = &mut dxs[t * ns * fin..(t + 1) * ns * fin];
+                    let src = &dx_scratch[r * ns * fin..(r + 1) * ns * fin];
+                    for (acc, v) in dst.iter_mut().zip(src) {
+                        *acc += *v;
+                    }
+                }
+                self.reclaim_f32(dx_scratch);
+                Ok(vec![
+                    HostTensor::f32(dxs, &[tp, ns, fin]),
+                    HostTensor::f32(dw, &[rp, fin, fout]),
+                ])
+            }
+
+            n if n.starts_with("proj_fwd") => {
+                let (ns, fin, fout) = (dim(0, 0), dim(0, 1), dim(1, 1));
+                let mut y = self.take_f32(ns * fout);
+                matmul_into(&self.pool, args[0].as_f32()?, args[1].as_f32()?, ns, fin, fout,
+                    &mut y);
+                Ok(vec![HostTensor::f32(y, &[ns, fout])])
+            }
+
+            n if n.starts_with("proj_bwd") => {
+                let (ns, fin, fout) = (dim(0, 0), dim(0, 1), dim(1, 1));
+                let x = args[0].as_f32()?;
+                let w = args[1].as_f32()?;
+                let dy = args[2].as_f32()?;
+                let mut dx = self.take_f32(ns * fin);
+                let mut dw = self.take_f32(fin * fout);
+                matmul_nt_into(&self.pool, dy, w, ns, fout, fin, &mut dx);
+                matmul_tn_into(&self.pool, x, dy, ns, fin, fout, &mut dw);
+                Ok(vec![HostTensor::f32(dx, &[ns, fin]), HostTensor::f32(dw, &[fin, fout])])
+            }
+
+            n if n.starts_with("agg_mean_fwd") => {
+                let (ns, fd) = (dim(0, 0), dim(0, 1));
+                let mut out = self.take_f32(ns * fd);
+                let mut cnt = self.take_f32(ns);
+                agg_mean_into(
+                    args[0].as_f32()?,
+                    args[1].as_i32()?,
+                    args[2].as_i32()?,
+                    args[3].as_f32()?,
                     ns,
-                    fin,
-                    fout,
+                    fd,
+                    &mut cnt,
+                    &mut out,
+                )?;
+                self.reclaim_f32(cnt);
+                Ok(vec![HostTensor::f32(out, &[ns, fd])])
+            }
+
+            n if n.starts_with("agg_mean_bwd") => {
+                let (ns, fd) = (dim(0, 0), dim(0, 1));
+                // arg 0 (feat) is unused: mean aggregation is linear in feat.
+                let mut out = self.take_f32(ns * fd);
+                let mut cnt = self.take_f32(ns);
+                agg_mean_bwd_into(
+                    args[1].as_i32()?,
+                    args[2].as_i32()?,
+                    args[3].as_f32()?,
+                    args[4].as_f32()?,
+                    ns,
+                    fd,
+                    &mut cnt,
+                    &mut out,
+                )?;
+                self.reclaim_f32(cnt);
+                Ok(vec![HostTensor::f32(out, &[ns, fd])])
+            }
+
+            n if n.starts_with("agg_merged_fwd") => {
+                let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let ep = dim(1, 1);
+                let feat = args[0].as_f32()?;
+                let src = args[1].as_i32()?;
+                let dst = args[2].as_i32()?;
+                let valid = args[3].as_f32()?;
+                let mut out = self.take_f32(rp * ns * fd);
+                let mut cnt = self.take_f32(rp * ns);
+                self.pool.try_for_row_chunks2(&mut out, &mut cnt, rp, 1, |r0, r1, oc, cc| {
+                    for r in r0..r1 {
+                        agg_mean_into(
+                            &feat[r * ns * fd..(r + 1) * ns * fd],
+                            &src[r * ep..(r + 1) * ep],
+                            &dst[r * ep..(r + 1) * ep],
+                            &valid[r * ep..(r + 1) * ep],
+                            ns,
+                            fd,
+                            &mut cc[(r - r0) * ns..(r - r0 + 1) * ns],
+                            &mut oc[(r - r0) * ns * fd..(r - r0 + 1) * ns * fd],
+                        )?;
+                    }
+                    Ok(())
+                })?;
+                self.reclaim_f32(cnt);
+                Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
+            }
+
+            n if n.starts_with("agg_merged_bwd") => {
+                let (rp, ep) = (dim(0, 0), dim(0, 1));
+                let (ns, fd) = (dim(3, 1), dim(3, 2));
+                let src = args[0].as_i32()?;
+                let dst = args[1].as_i32()?;
+                let valid = args[2].as_f32()?;
+                let dout = args[3].as_f32()?;
+                let mut out = self.take_f32(rp * ns * fd);
+                let mut cnt = self.take_f32(rp * ns);
+                self.pool.try_for_row_chunks2(&mut out, &mut cnt, rp, 1, |r0, r1, oc, cc| {
+                    for r in r0..r1 {
+                        agg_mean_bwd_into(
+                            &src[r * ep..(r + 1) * ep],
+                            &dst[r * ep..(r + 1) * ep],
+                            &valid[r * ep..(r + 1) * ep],
+                            &dout[r * ns * fd..(r + 1) * ns * fd],
+                            ns,
+                            fd,
+                            &mut cc[(r - r0) * ns..(r - r0 + 1) * ns],
+                            &mut oc[(r - r0) * ns * fd..(r - r0 + 1) * ns * fd],
+                        )?;
+                    }
+                    Ok(())
+                })?;
+                self.reclaim_f32(cnt);
+                Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
+            }
+
+            n if n.starts_with("att_agg_fwd") => {
+                let (ns, fd) = (dim(0, 0), dim(0, 1));
+                let src = args[4].as_i32()?;
+                let ep = src.len();
+                let mut out = self.take_f32(ns * fd);
+                let mut scratch = self.take_f32(att_fwd_scratch_len(ns, ep));
+                att_agg_into(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_f32()?,
+                    args[3].as_f32()?,
+                    src,
+                    args[5].as_i32()?,
+                    args[6].as_f32()?,
+                    ns,
+                    fd,
+                    &mut scratch,
+                    &mut out,
+                )?;
+                self.reclaim_f32(scratch);
+                Ok(vec![HostTensor::f32(out, &[ns, fd])])
+            }
+
+            n if n.starts_with("att_agg_bwd") => {
+                let (ns, fd) = (dim(0, 0), dim(0, 1));
+                let src = args[4].as_i32()?;
+                let ep = src.len();
+                let mut dfs = self.take_f32(ns * fd);
+                let mut dfd = self.take_f32(ns * fd);
+                let mut das = self.take_f32(fd);
+                let mut dad = self.take_f32(fd);
+                let mut scratch = self.take_f32(att_bwd_scratch_len(ns, ep));
+                att_agg_bwd_into(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_f32()?,
+                    args[3].as_f32()?,
+                    src,
+                    args[5].as_i32()?,
+                    args[6].as_f32()?,
+                    args[7].as_f32()?,
+                    ns,
+                    fd,
+                    &mut scratch,
+                    &mut dfs,
+                    &mut dfd,
+                    &mut das,
+                    &mut dad,
+                )?;
+                self.reclaim_f32(scratch);
+                Ok(vec![
+                    HostTensor::f32(dfs, &[ns, fd]),
+                    HostTensor::f32(dfd, &[ns, fd]),
+                    HostTensor::f32(das, &[fd]),
+                    HostTensor::f32(dad, &[fd]),
+                ])
+            }
+
+            n if n.starts_with("att_merged_fwd") => {
+                let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let ep = dim(4, 1);
+                let (fs, fdm) = (args[0].as_f32()?, args[1].as_f32()?);
+                let (a_s, a_d) = (args[2].as_f32()?, args[3].as_f32()?);
+                let (src, dst) = (args[4].as_i32()?, args[5].as_i32()?);
+                let valid = args[6].as_f32()?;
+                let sw = att_fwd_scratch_len(ns, ep);
+                let mut out = self.take_f32(rp * ns * fd);
+                let mut scratch = self.take_f32(rp * sw);
+                self.pool.try_for_row_chunks2(&mut out, &mut scratch, rp, 1,
+                    |r0, r1, oc, sc| {
+                        for r in r0..r1 {
+                            att_agg_into(
+                                &fs[r * ns * fd..(r + 1) * ns * fd],
+                                &fdm[r * ns * fd..(r + 1) * ns * fd],
+                                &a_s[r * fd..(r + 1) * fd],
+                                &a_d[r * fd..(r + 1) * fd],
+                                &src[r * ep..(r + 1) * ep],
+                                &dst[r * ep..(r + 1) * ep],
+                                &valid[r * ep..(r + 1) * ep],
+                                ns,
+                                fd,
+                                &mut sc[(r - r0) * sw..(r - r0 + 1) * sw],
+                                &mut oc[(r - r0) * ns * fd..(r - r0 + 1) * ns * fd],
+                            )?;
+                        }
+                        Ok(())
+                    })?;
+                self.reclaim_f32(scratch);
+                Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
+            }
+
+            n if n.starts_with("att_merged_bwd") => {
+                let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let ep = dim(4, 1);
+                let (fs, fdm) = (args[0].as_f32()?, args[1].as_f32()?);
+                let (a_s, a_d) = (args[2].as_f32()?, args[3].as_f32()?);
+                let (src, dst) = (args[4].as_i32()?, args[5].as_i32()?);
+                let valid = args[6].as_f32()?;
+                let dout = args[7].as_f32()?;
+                // Each relation's four gradients are packed into one row of
+                // `packed` so a single lockstep partition covers them all:
+                // [dfs ns*fd | dfd ns*fd | das fd | dad fd].
+                let ow = 2 * ns * fd + 2 * fd;
+                let sw = att_bwd_scratch_len(ns, ep);
+                let mut packed = self.take_f32(rp * ow);
+                let mut scratch = self.take_f32(rp * sw);
+                self.pool.try_for_row_chunks2(&mut packed, &mut scratch, rp, 1,
+                    |r0, r1, pc, sc| {
+                        for r in r0..r1 {
+                            let p = &mut pc[(r - r0) * ow..(r - r0 + 1) * ow];
+                            let (dfs_r, rest) = p.split_at_mut(ns * fd);
+                            let (dfd_r, rest) = rest.split_at_mut(ns * fd);
+                            let (das_r, dad_r) = rest.split_at_mut(fd);
+                            att_agg_bwd_into(
+                                &fs[r * ns * fd..(r + 1) * ns * fd],
+                                &fdm[r * ns * fd..(r + 1) * ns * fd],
+                                &a_s[r * fd..(r + 1) * fd],
+                                &a_d[r * fd..(r + 1) * fd],
+                                &src[r * ep..(r + 1) * ep],
+                                &dst[r * ep..(r + 1) * ep],
+                                &valid[r * ep..(r + 1) * ep],
+                                &dout[r * ns * fd..(r + 1) * ns * fd],
+                                ns,
+                                fd,
+                                &mut sc[(r - r0) * sw..(r - r0 + 1) * sw],
+                                dfs_r,
+                                dfd_r,
+                                das_r,
+                                dad_r,
+                            )?;
+                        }
+                        Ok(())
+                    })?;
+                self.reclaim_f32(scratch);
+                let mut dfs = self.take_f32(rp * ns * fd);
+                let mut dfd = self.take_f32(rp * ns * fd);
+                let mut das = self.take_f32(rp * fd);
+                let mut dad = self.take_f32(rp * fd);
+                for r in 0..rp {
+                    let p = &packed[r * ow..(r + 1) * ow];
+                    dfs[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&p[..ns * fd]);
+                    dfd[r * ns * fd..(r + 1) * ns * fd]
+                        .copy_from_slice(&p[ns * fd..2 * ns * fd]);
+                    das[r * fd..(r + 1) * fd]
+                        .copy_from_slice(&p[2 * ns * fd..2 * ns * fd + fd]);
+                    dad[r * fd..(r + 1) * fd].copy_from_slice(&p[2 * ns * fd + fd..]);
+                }
+                self.reclaim_f32(packed);
+                Ok(vec![
+                    HostTensor::f32(dfs, &[rp, ns, fd]),
+                    HostTensor::f32(dfd, &[rp, ns, fd]),
+                    HostTensor::f32(das, &[rp, fd]),
+                    HostTensor::f32(dad, &[rp, fd]),
+                ])
+            }
+
+            n if n.starts_with("fuse_relu_fwd") || n.starts_with("fuse_lin_fwd") => {
+                let relu = n.starts_with("fuse_relu");
+                let (rp, ns, fd) = (dim(1, 0), dim(1, 1), dim(1, 2));
+                let tp = spec.rets[0].shape[0];
+                let mut out = self.take_f32(tp * ns * fd);
+                fuse_fwd_into(&self.pool, args[0].as_i32()?, args[1].as_f32()?, rp, ns, fd,
+                    tp, relu, &mut out)?;
+                Ok(vec![HostTensor::f32(out, &[tp, ns, fd])])
+            }
+
+            n if n.starts_with("fuse_relu_bwd") || n.starts_with("fuse_lin_bwd") => {
+                let relu = n.starts_with("fuse_relu");
+                let (rp, ns, fd) = (dim(1, 0), dim(1, 1), dim(1, 2));
+                let tp = dim(2, 0);
+                let dst_type = args[0].as_i32()?;
+                let agg = args[1].as_f32()?;
+                let dout = args[2].as_f32()?;
+                let mut dagg = self.take_f32(rp * ns * fd);
+                // ReLU support is recomputed from the stored pre-activation
+                // inputs, exactly like the scalar oracle.
+                let pre = if relu {
+                    let mut p = self.take_f32(tp * ns * fd);
+                    fuse_fwd_into(&self.pool, dst_type, agg, rp, ns, fd, tp, false, &mut p)?;
+                    Some(p)
+                } else {
+                    None
+                };
+                let w = ns * fd;
+                self.pool.try_for_row_chunks(&mut dagg, rp, 1, |r0, r1, dc| {
+                    for r in r0..r1 {
+                        let t = idx(dst_type[r], tp, "dst_type")?;
+                        let grow = &dout[t * w..(t + 1) * w];
+                        let drow = &mut dc[(r - r0) * w..(r - r0 + 1) * w];
+                        match &pre {
+                            Some(s) => {
+                                let srow = &s[t * w..(t + 1) * w];
+                                for k in 0..w {
+                                    drow[k] = if srow[k] > 0.0 { grow[k] } else { 0.0 };
+                                }
+                            }
+                            None => drow.copy_from_slice(grow),
+                        }
+                    }
+                    Ok(())
+                })?;
+                if let Some(p) = pre {
+                    self.reclaim_f32(p);
+                }
+                Ok(vec![HostTensor::f32(dagg, &[rp, ns, fd])])
+            }
+
+            "head" => {
+                let (ns, c) = (dim(0, 0), dim(0, 1));
+                let mut z = self.take_f32(ns * c);
+                let mut dlogits = self.take_f32(ns * c);
+                let (loss, ncorrect) = head_into(
+                    args[0].as_f32()?,
+                    args[1].as_i32()?,
+                    args[2].as_f32()?,
+                    ns,
+                    c,
+                    &mut z,
+                    &mut dlogits,
                 );
-                out[r * ns * fout..(r + 1) * ns * fout].copy_from_slice(&y);
+                self.reclaim_f32(z);
+                Ok(vec![
+                    HostTensor::scalar_f32(loss),
+                    HostTensor::f32(dlogits, &[ns, c]),
+                    HostTensor::scalar_f32(ncorrect),
+                ])
             }
-            Ok(vec![HostTensor::f32(out, &[rp, ns, fout])])
-        }
 
-        n if n.starts_with("proj_stacked_bwd") => {
-            let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
-            let (rp, fout) = (dim(1, 0), dim(1, 2));
-            let xs = args[0].as_f32()?;
-            let w = args[1].as_f32()?;
-            let st = args[2].as_i32()?;
-            let dy = args[3].as_f32()?;
-            let mut dxs = vec![0.0f32; tp * ns * fin];
-            let mut dw = vec![0.0f32; rp * fin * fout];
-            for r in 0..rp {
-                let t = idx(st[r], tp, "src_type")?;
-                let dy_r = &dy[r * ns * fout..(r + 1) * ns * fout];
-                let dx = matmul_nt(dy_r, &w[r * fin * fout..(r + 1) * fin * fout], ns, fout, fin);
-                for (acc, v) in dxs[t * ns * fin..(t + 1) * ns * fin].iter_mut().zip(&dx) {
-                    *acc += *v;
-                }
-                let g = matmul_tn(&xs[t * ns * fin..(t + 1) * ns * fin], dy_r, ns, fin, fout);
-                dw[r * fin * fout..(r + 1) * fin * fout].copy_from_slice(&g);
-            }
-            Ok(vec![
-                HostTensor::f32(dxs, &[tp, ns, fin]),
-                HostTensor::f32(dw, &[rp, fin, fout]),
-            ])
+            other => bail!("SimBackend has no reference semantics for module {other:?}"),
         }
-
-        n if n.starts_with("proj_fwd") => {
-            let (ns, fin, fout) = (dim(0, 0), dim(0, 1), dim(1, 1));
-            let y = matmul(args[0].as_f32()?, args[1].as_f32()?, ns, fin, fout);
-            Ok(vec![HostTensor::f32(y, &[ns, fout])])
-        }
-
-        n if n.starts_with("proj_bwd") => {
-            let (ns, fin, fout) = (dim(0, 0), dim(0, 1), dim(1, 1));
-            let x = args[0].as_f32()?;
-            let w = args[1].as_f32()?;
-            let dy = args[2].as_f32()?;
-            let dx = matmul_nt(dy, w, ns, fout, fin);
-            let dw = matmul_tn(x, dy, ns, fin, fout);
-            Ok(vec![HostTensor::f32(dx, &[ns, fin]), HostTensor::f32(dw, &[fin, fout])])
-        }
-
-        n if n.starts_with("agg_mean_fwd") => {
-            let (ns, fd) = (dim(0, 0), dim(0, 1));
-            let out = agg_mean(
-                args[0].as_f32()?,
-                args[1].as_i32()?,
-                args[2].as_i32()?,
-                args[3].as_f32()?,
-                ns,
-                fd,
-            )?;
-            Ok(vec![HostTensor::f32(out, &[ns, fd])])
-        }
-
-        n if n.starts_with("agg_mean_bwd") => {
-            let (ns, fd) = (dim(0, 0), dim(0, 1));
-            // arg 0 (feat) is unused: the mean aggregation is linear in feat.
-            let out = agg_mean_bwd(
-                args[1].as_i32()?,
-                args[2].as_i32()?,
-                args[3].as_f32()?,
-                args[4].as_f32()?,
-                ns,
-                fd,
-            )?;
-            Ok(vec![HostTensor::f32(out, &[ns, fd])])
-        }
-
-        n if n.starts_with("agg_merged_fwd") => {
-            let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
-            let ep = dim(1, 1);
-            let feat = args[0].as_f32()?;
-            let src = args[1].as_i32()?;
-            let dst = args[2].as_i32()?;
-            let valid = args[3].as_f32()?;
-            let mut out = vec![0.0f32; rp * ns * fd];
-            for r in 0..rp {
-                let y = agg_mean(
-                    &feat[r * ns * fd..(r + 1) * ns * fd],
-                    &src[r * ep..(r + 1) * ep],
-                    &dst[r * ep..(r + 1) * ep],
-                    &valid[r * ep..(r + 1) * ep],
-                    ns,
-                    fd,
-                )?;
-                out[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&y);
-            }
-            Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
-        }
-
-        n if n.starts_with("agg_merged_bwd") => {
-            let (rp, ep) = (dim(0, 0), dim(0, 1));
-            let (ns, fd) = (dim(3, 1), dim(3, 2));
-            let src = args[0].as_i32()?;
-            let dst = args[1].as_i32()?;
-            let valid = args[2].as_f32()?;
-            let dout = args[3].as_f32()?;
-            let mut out = vec![0.0f32; rp * ns * fd];
-            for r in 0..rp {
-                let y = agg_mean_bwd(
-                    &src[r * ep..(r + 1) * ep],
-                    &dst[r * ep..(r + 1) * ep],
-                    &valid[r * ep..(r + 1) * ep],
-                    &dout[r * ns * fd..(r + 1) * ns * fd],
-                    ns,
-                    fd,
-                )?;
-                out[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&y);
-            }
-            Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
-        }
-
-        n if n.starts_with("att_agg_fwd") => {
-            let (ns, fd) = (dim(0, 0), dim(0, 1));
-            let out = att_agg(
-                args[0].as_f32()?,
-                args[1].as_f32()?,
-                args[2].as_f32()?,
-                args[3].as_f32()?,
-                args[4].as_i32()?,
-                args[5].as_i32()?,
-                args[6].as_f32()?,
-                ns,
-                fd,
-            )?;
-            Ok(vec![HostTensor::f32(out, &[ns, fd])])
-        }
-
-        n if n.starts_with("att_agg_bwd") => {
-            let (ns, fd) = (dim(0, 0), dim(0, 1));
-            let (dfs, dfd, das, dad) = att_agg_bwd(
-                args[0].as_f32()?,
-                args[1].as_f32()?,
-                args[2].as_f32()?,
-                args[3].as_f32()?,
-                args[4].as_i32()?,
-                args[5].as_i32()?,
-                args[6].as_f32()?,
-                args[7].as_f32()?,
-                ns,
-                fd,
-            )?;
-            Ok(vec![
-                HostTensor::f32(dfs, &[ns, fd]),
-                HostTensor::f32(dfd, &[ns, fd]),
-                HostTensor::f32(das, &[fd]),
-                HostTensor::f32(dad, &[fd]),
-            ])
-        }
-
-        n if n.starts_with("att_merged_fwd") => {
-            let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
-            let ep = dim(4, 1);
-            let (fs, fdm) = (args[0].as_f32()?, args[1].as_f32()?);
-            let (a_s, a_d) = (args[2].as_f32()?, args[3].as_f32()?);
-            let (src, dst) = (args[4].as_i32()?, args[5].as_i32()?);
-            let valid = args[6].as_f32()?;
-            let mut out = vec![0.0f32; rp * ns * fd];
-            for r in 0..rp {
-                let y = att_agg(
-                    &fs[r * ns * fd..(r + 1) * ns * fd],
-                    &fdm[r * ns * fd..(r + 1) * ns * fd],
-                    &a_s[r * fd..(r + 1) * fd],
-                    &a_d[r * fd..(r + 1) * fd],
-                    &src[r * ep..(r + 1) * ep],
-                    &dst[r * ep..(r + 1) * ep],
-                    &valid[r * ep..(r + 1) * ep],
-                    ns,
-                    fd,
-                )?;
-                out[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&y);
-            }
-            Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
-        }
-
-        n if n.starts_with("att_merged_bwd") => {
-            let (rp, ns, fd) = (dim(0, 0), dim(0, 1), dim(0, 2));
-            let ep = dim(4, 1);
-            let (fs, fdm) = (args[0].as_f32()?, args[1].as_f32()?);
-            let (a_s, a_d) = (args[2].as_f32()?, args[3].as_f32()?);
-            let (src, dst) = (args[4].as_i32()?, args[5].as_i32()?);
-            let valid = args[6].as_f32()?;
-            let dout = args[7].as_f32()?;
-            let mut dfs = vec![0.0f32; rp * ns * fd];
-            let mut dfd = vec![0.0f32; rp * ns * fd];
-            let mut das = vec![0.0f32; rp * fd];
-            let mut dad = vec![0.0f32; rp * fd];
-            for r in 0..rp {
-                let (a, b, c, d) = att_agg_bwd(
-                    &fs[r * ns * fd..(r + 1) * ns * fd],
-                    &fdm[r * ns * fd..(r + 1) * ns * fd],
-                    &a_s[r * fd..(r + 1) * fd],
-                    &a_d[r * fd..(r + 1) * fd],
-                    &src[r * ep..(r + 1) * ep],
-                    &dst[r * ep..(r + 1) * ep],
-                    &valid[r * ep..(r + 1) * ep],
-                    &dout[r * ns * fd..(r + 1) * ns * fd],
-                    ns,
-                    fd,
-                )?;
-                dfs[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&a);
-                dfd[r * ns * fd..(r + 1) * ns * fd].copy_from_slice(&b);
-                das[r * fd..(r + 1) * fd].copy_from_slice(&c);
-                dad[r * fd..(r + 1) * fd].copy_from_slice(&d);
-            }
-            Ok(vec![
-                HostTensor::f32(dfs, &[rp, ns, fd]),
-                HostTensor::f32(dfd, &[rp, ns, fd]),
-                HostTensor::f32(das, &[rp, fd]),
-                HostTensor::f32(dad, &[rp, fd]),
-            ])
-        }
-
-        n if n.starts_with("fuse_relu_fwd") || n.starts_with("fuse_lin_fwd") => {
-            let relu = n.starts_with("fuse_relu");
-            let (rp, ns, fd) = (dim(1, 0), dim(1, 1), dim(1, 2));
-            let tp = spec.rets[0].shape[0];
-            let out = fuse_fwd(args[0].as_i32()?, args[1].as_f32()?, rp, ns, fd, tp, relu)?;
-            Ok(vec![HostTensor::f32(out, &[tp, ns, fd])])
-        }
-
-        n if n.starts_with("fuse_relu_bwd") || n.starts_with("fuse_lin_bwd") => {
-            let relu = n.starts_with("fuse_relu");
-            let (rp, ns, fd) = (dim(1, 0), dim(1, 1), dim(1, 2));
-            let tp = dim(2, 0);
-            let out = fuse_bwd(
-                args[0].as_i32()?,
-                args[1].as_f32()?,
-                args[2].as_f32()?,
-                rp,
-                ns,
-                fd,
-                tp,
-                relu,
-            )?;
-            Ok(vec![HostTensor::f32(out, &[rp, ns, fd])])
-        }
-
-        "head" => {
-            let (ns, c) = (dim(0, 0), dim(0, 1));
-            let (loss, dlogits, ncorrect) =
-                head(args[0].as_f32()?, args[1].as_i32()?, args[2].as_f32()?, ns, c);
-            Ok(vec![
-                HostTensor::scalar_f32(loss),
-                HostTensor::f32(dlogits, &[ns, c]),
-                HostTensor::scalar_f32(ncorrect),
-            ])
-        }
-
-        other => bail!("SimBackend has no reference semantics for module {other:?}"),
     }
 }
 
 // --------------------------------------------------------------------------
-// reference kernels (mirror ref.py / model.py exactly; see module docs)
+// hot-path kernels: cache-blocked, row-parallel over the worker pool.
+//
+// Parallel partitioning is always by *output row*, and every element keeps
+// the scalar oracle's exact accumulation sequence (ascending reduction
+// index, same zero-skip), so results are bit-identical to the serial
+// reference for any thread count — the invariant the parity tests pin.
 // --------------------------------------------------------------------------
 
-/// `out[m,n] = a[m,k] · b[k,n]`, row-major f32.
+/// Column-tile width of the blocked matmul microkernel: one output-row
+/// tile plus the matching B-row segment stay cache-resident while the k
+/// loop streams over A.
+const TILE_J: usize = 64;
+/// Minimum output rows per worker before a kernel fans out (tiny-profile
+/// shapes stay serial: spawn cost would dominate).
+const PAR_MIN_ROWS: usize = 64;
+
+/// Rows `i0..i1` of `out[m,n] = a[m,k] · b[k,n]` into `orows`
+/// (`(i1-i0)*n`, pre-zeroed). Per element: p ascending, zero-skip on A.
+fn matmul_rows(a: &[f32], b: &[f32], i0: usize, i1: usize, k: usize, n: usize,
+    orows: &mut [f32]) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut orows[(i - i0) * n..(i - i0 + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE_J).min(n);
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + j0..p * n + j1];
+                for (o, bv) in orow[j0..j1].iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] · b[k,n]`, rows partitioned across the pool.
+fn matmul_into(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+    out: &mut [f32]) {
+    pool.for_row_chunks(out, m, PAR_MIN_ROWS, |i0, i1, orows| {
+        matmul_rows(a, b, i0, i1, k, n, orows)
+    });
+}
+
+/// Rows `i0..i1` of `out[k,n] = aᵀ · b` for `a: [m,k]`, `b: [m,n]`
+/// (the `dw = xᵀ·dy` form). Per element: s ascending, zero-skip on A.
+fn matmul_tn_rows(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, i0: usize, i1: usize,
+    orows: &mut [f32]) {
+    for i in i0..i1 {
+        let orow = &mut orows[(i - i0) * n..(i - i0 + 1) * n];
+        for s in 0..m {
+            let av = a[s * k + i];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[s * n..(s + 1) * n];
+            for (o, bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn matmul_tn_into(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+    out: &mut [f32]) {
+    pool.for_row_chunks(out, k, PAR_MIN_ROWS, |i0, i1, orows| {
+        matmul_tn_rows(a, b, m, k, n, i0, i1, orows)
+    });
+}
+
+/// Rows `i0..i1` of `out[m,k] = a[m,n] · bᵀ` for `b: [k,n]`
+/// (the `dx = dy·wᵀ` form): dense dot products, no accumulation races.
+fn matmul_nt_rows(a: &[f32], b: &[f32], n: usize, k: usize, i0: usize, i1: usize,
+    orows: &mut [f32]) {
+    for i in i0..i1 {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut orows[(i - i0) * k..(i - i0 + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                s += av * bv;
+            }
+            *o = s;
+        }
+    }
+}
+
+fn matmul_nt_into(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, n: usize, k: usize,
+    out: &mut [f32]) {
+    pool.for_row_chunks(out, m, PAR_MIN_ROWS, |i0, i1, orows| {
+        matmul_nt_rows(a, b, n, k, i0, i1, orows)
+    });
+}
+
+/// Mean-aggregate `feat[src[e]]` onto `dst[e]` (ref.py `agg_mean_ref`):
+/// row j = sum of valid incoming features / max(1, valid in-degree).
+/// `out` (`ns*fd`) and `cnt` (`ns`) must be pre-zeroed; scatter collisions
+/// keep one relation serial — merged variants parallelize across relations.
+fn agg_mean_into(
+    feat: &[f32],
+    src: &[i32],
+    dst: &[i32],
+    valid: &[f32],
+    ns: usize,
+    fd: usize,
+    cnt: &mut [f32],
+    out: &mut [f32],
+) -> Result<()> {
+    for e in 0..src.len() {
+        let v = valid[e];
+        if v == 0.0 {
+            continue;
+        }
+        let s = idx(src[e], ns, "src")?;
+        let d = idx(dst[e], ns, "dst")?;
+        for x in 0..fd {
+            out[d * fd + x] += feat[s * fd + x] * v;
+        }
+        cnt[d] += v;
+    }
+    for j in 0..ns {
+        let c = cnt[j].max(1.0);
+        if c != 1.0 {
+            for x in 0..fd {
+                out[j * fd + x] /= c;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// VJP of [`agg_mean_into`] w.r.t. `feat` (linear, so exact):
+/// `dfeat[src[e]] += valid[e] * dout[dst[e]] / max(1, degree(dst[e]))`.
+fn agg_mean_bwd_into(
+    src: &[i32],
+    dst: &[i32],
+    valid: &[f32],
+    dout: &[f32],
+    ns: usize,
+    fd: usize,
+    cnt: &mut [f32],
+    out: &mut [f32],
+) -> Result<()> {
+    for e in 0..src.len() {
+        if valid[e] != 0.0 {
+            cnt[idx(dst[e], ns, "dst")?] += valid[e];
+        }
+    }
+    for e in 0..src.len() {
+        let v = valid[e];
+        if v == 0.0 {
+            continue;
+        }
+        let s = idx(src[e], ns, "src")?;
+        let d = idx(dst[e], ns, "dst")?;
+        let w = v / cnt[d].max(1.0);
+        for x in 0..fd {
+            out[s * fd + x] += dout[d * fd + x] * w;
+        }
+    }
+    Ok(())
+}
+
+/// Pooled-scratch length for one relation's attention forward:
+/// `[es ns][ed ns][z ep][eact ep][w ep][segmax ns][denom ns]`.
+fn att_fwd_scratch_len(ns: usize, ep: usize) -> usize {
+    4 * ns + 3 * ep
+}
+
+/// Backward scratch: the forward layout plus
+/// `[alpha ep][dalpha ep][seg ns][des ns][ded ns]`.
+fn att_bwd_scratch_len(ns: usize, ep: usize) -> usize {
+    att_fwd_scratch_len(ns, ep) + 3 * ns + 2 * ep
+}
+
+/// Attention-forward intermediates into pooled `scratch` (fwd layout,
+/// pre-zeroed): the same rematerialization the AOT modules do, with zero
+/// per-call allocation.
+fn att_forward_into(
+    fs: &[f32],
+    fdm: &[f32],
+    a_s: &[f32],
+    a_d: &[f32],
+    src: &[i32],
+    dst: &[i32],
+    valid: &[f32],
+    ns: usize,
+    fd: usize,
+    scratch: &mut [f32],
+) -> Result<()> {
+    let ep = src.len();
+    debug_assert_eq!(scratch.len(), att_fwd_scratch_len(ns, ep));
+    let (es, rest) = scratch.split_at_mut(ns);
+    let (ed, rest) = rest.split_at_mut(ns);
+    let (z, rest) = rest.split_at_mut(ep);
+    let (eact, rest) = rest.split_at_mut(ep);
+    let (w, rest) = rest.split_at_mut(ep);
+    let (segmax, denom) = rest.split_at_mut(ns);
+    for i in 0..ns {
+        let (mut se, mut de) = (0.0f32, 0.0f32);
+        for x in 0..fd {
+            se += fs[i * fd + x] * a_s[x];
+            de += fdm[i * fd + x] * a_d[x];
+        }
+        es[i] = se;
+        ed[i] = de;
+    }
+    for e in 0..ep {
+        let s = idx(src[e], ns, "src")?;
+        let d = idx(dst[e], ns, "dst")?;
+        let ze = es[s] + ed[d];
+        z[e] = ze;
+        let l = if ze >= 0.0 { ze } else { LEAKY_SLOPE * ze };
+        eact[e] = if valid[e] > 0.0 { l } else { NEG_INF };
+    }
+    for v in segmax.iter_mut() {
+        *v = NEG_INF;
+    }
+    for e in 0..ep {
+        let d = dst[e] as usize;
+        if eact[e] > segmax[d] {
+            segmax[d] = eact[e];
+        }
+    }
+    for e in 0..ep {
+        let d = dst[e] as usize;
+        let we = (eact[e] - segmax[d]).exp() * valid[e];
+        w[e] = we;
+        denom[d] += we;
+    }
+    Ok(())
+}
+
+/// GAT-style attention aggregation (ref.py `att_agg_ref`):
+/// `e_ij = LeakyReLU(a_src·h_i + a_dst·h_j)`, segment-softmax over valid
+/// incoming edges of j, `out_j = Σ_i α_ij h_i`. `out` pre-zeroed.
+#[allow(clippy::too_many_arguments)]
+fn att_agg_into(
+    fs: &[f32],
+    fdm: &[f32],
+    a_s: &[f32],
+    a_d: &[f32],
+    src: &[i32],
+    dst: &[i32],
+    valid: &[f32],
+    ns: usize,
+    fd: usize,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) -> Result<()> {
+    att_forward_into(fs, fdm, a_s, a_d, src, dst, valid, ns, fd, scratch)?;
+    let ep = src.len();
+    let w = &scratch[2 * ns + 2 * ep..2 * ns + 3 * ep];
+    let denom = &scratch[3 * ns + 3 * ep..4 * ns + 3 * ep];
+    for e in 0..ep {
+        let we = w[e];
+        if we == 0.0 {
+            continue;
+        }
+        let s = src[e] as usize; // validated in att_forward_into
+        let d = dst[e] as usize;
+        for x in 0..fd {
+            out[d * fd + x] += we * fs[s * fd + x];
+        }
+    }
+    for j in 0..ns {
+        let dn = denom[j].max(DENOM_EPS);
+        for x in 0..fd {
+            out[j * fd + x] /= dn;
+        }
+    }
+    Ok(())
+}
+
+/// VJP of [`att_agg_into`] w.r.t. (feat_src, feat_dst, a_src, a_dst);
+/// recomputes the forward into the leading scratch region. Output slices
+/// (`dfs`/`dfd`: `ns*fd`, `das`/`dad`: `fd`) must be pre-zeroed. Validated
+/// against `jax.vjp` of the Python oracle (via the scalar oracle parity).
+#[allow(clippy::too_many_arguments)]
+fn att_agg_bwd_into(
+    fs: &[f32],
+    fdm: &[f32],
+    a_s: &[f32],
+    a_d: &[f32],
+    src: &[i32],
+    dst: &[i32],
+    valid: &[f32],
+    dout: &[f32],
+    ns: usize,
+    fd: usize,
+    scratch: &mut [f32],
+    dfs: &mut [f32],
+    dfd: &mut [f32],
+    das: &mut [f32],
+    dad: &mut [f32],
+) -> Result<()> {
+    let ep = src.len();
+    debug_assert_eq!(scratch.len(), att_bwd_scratch_len(ns, ep));
+    let (fw, rest) = scratch.split_at_mut(att_fwd_scratch_len(ns, ep));
+    att_forward_into(fs, fdm, a_s, a_d, src, dst, valid, ns, fd, fw)?;
+    let z = &fw[2 * ns..2 * ns + ep];
+    let w = &fw[2 * ns + 2 * ep..2 * ns + 3 * ep];
+    let denom = &fw[3 * ns + 3 * ep..4 * ns + 3 * ep];
+    let (alpha, rest) = rest.split_at_mut(ep);
+    let (dalpha, rest) = rest.split_at_mut(ep);
+    let (seg, rest) = rest.split_at_mut(ns);
+    let (des, ded) = rest.split_at_mut(ns);
+    // alpha_e = w_e / max(denom, eps): the normalized attention weights.
+    // Direct path: dfs[src] += alpha * dout[dst]; and the softmax pullback
+    // needs dalpha_e = dout[dst] · fs[src].
+    for e in 0..ep {
+        let d = dst[e] as usize;
+        let a = w[e] / denom[d].max(DENOM_EPS);
+        alpha[e] = a;
+        if a == 0.0 {
+            continue;
+        }
+        let s = src[e] as usize;
+        let mut da = 0.0f32;
+        for x in 0..fd {
+            dfs[s * fd + x] += a * dout[d * fd + x];
+            da += dout[d * fd + x] * fs[s * fd + x];
+        }
+        dalpha[e] = da;
+    }
+    // Softmax backward per segment: dl_e = alpha_e (dalpha_e - Σ alpha dalpha).
+    for e in 0..ep {
+        seg[dst[e] as usize] += alpha[e] * dalpha[e];
+    }
+    for e in 0..ep {
+        let a = alpha[e];
+        if a == 0.0 {
+            continue;
+        }
+        let d = dst[e] as usize;
+        let dl = a * (dalpha[e] - seg[d]);
+        let dz = dl * if z[e] >= 0.0 { 1.0 } else { LEAKY_SLOPE };
+        des[src[e] as usize] += dz;
+        ded[d] += dz;
+    }
+    // Back through the score projections es = fs·a_s, ed = fd·a_d.
+    for i in 0..ns {
+        if des[i] != 0.0 {
+            for x in 0..fd {
+                dfs[i * fd + x] += des[i] * a_s[x];
+                das[x] += des[i] * fs[i * fd + x];
+            }
+        }
+        if ded[i] != 0.0 {
+            for x in 0..fd {
+                dfd[i * fd + x] += ded[i] * a_d[x];
+                dad[x] += ded[i] * fdm[i * fd + x];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Semantic fusion forward (model.py `fuse_relu` / `fuse_lin`):
+/// `out[t] = act(Σ_{r: dst_type[r]=t} agg[r])` into pre-zeroed `out`.
+/// Parallelized by *destination type*: each worker owns a contiguous range
+/// of output slabs and scans all relations, so per-element accumulation
+/// stays in ascending-r order (bit-exact) with no scatter races.
+#[allow(clippy::too_many_arguments)]
+fn fuse_fwd_into(
+    pool: &WorkerPool,
+    dst_type: &[i32],
+    agg: &[f32],
+    rp: usize,
+    ns: usize,
+    fd: usize,
+    tp: usize,
+    relu: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    let w = ns * fd;
+    pool.try_for_row_chunks(out, tp, 1, |t0, t1, orows| {
+        for r in 0..rp {
+            let t = idx(dst_type[r], tp, "dst_type")?;
+            if t < t0 || t >= t1 {
+                continue;
+            }
+            let srow = &agg[r * w..(r + 1) * w];
+            let orow = &mut orows[(t - t0) * w..(t - t0 + 1) * w];
+            for (o, v) in orow.iter_mut().zip(srow) {
+                *o += *v;
+            }
+        }
+        if relu {
+            for v in orows.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Softmax cross-entropy head (model.py `head`): loss, dlogits, and
+/// accuracy count over the seed rows, in one "dispatch". `z` (`ns*c`
+/// scratch) and `dlogits` (`ns*c` output) come from the arena.
+fn head_into(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    ns: usize,
+    c: usize,
+    z: &mut [f32],
+    dlogits: &mut [f32],
+) -> (f32, f32) {
+    for i in 0..ns {
+        let row = &logits[i * c..(i + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut se = 0.0f32;
+        for &l in row {
+            se += (l - m).exp();
+        }
+        let lse = m + se.ln();
+        for j in 0..c {
+            z[i * c + j] = row[j] - lse;
+        }
+    }
+    let n = mask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut ncorrect = 0.0f32;
+    for i in 0..ns {
+        let lab = labels[i];
+        let mi = mask[i];
+        for j in 0..c {
+            let one = if j as i32 == lab { 1.0f32 } else { 0.0 };
+            if one == 1.0 {
+                loss -= z[i * c + j] * mi;
+            }
+            dlogits[i * c + j] = (z[i * c + j].exp() - one) * mi / n;
+        }
+        // argmax with first-max tie-breaking, like jnp.argmax.
+        let row = &logits[i * c..(i + 1) * c];
+        let mut am = 0usize;
+        for j in 1..c {
+            if row[j] > row[am] {
+                am = j;
+            }
+        }
+        if am as i32 == lab {
+            ncorrect += mi;
+        }
+    }
+    (loss / n, ncorrect)
+}
+
+// --------------------------------------------------------------------------
+// scalar oracles (test-only): the original serial reference kernels that
+// mirror ref.py / model.py line-for-line. The blocked/pooled kernels above
+// must match them bit-for-bit; the parity tests below enforce it.
+// --------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] · b[k,n]`, row-major f32 (scalar oracle).
+#[cfg(test)]
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
@@ -510,7 +1197,8 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `out[k,n] = aᵀ[k,m] · b[m,n]` for `a: [m,k]` (the `dw = xᵀ·dy` form).
+/// `out[k,n] = aᵀ[k,m] · b[m,n]` for `a: [m,k]` (scalar oracle).
+#[cfg(test)]
 fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; k * n];
     for s in 0..m {
@@ -529,7 +1217,8 @@ fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `out[m,k] = a[m,n] · bᵀ[n,k]` for `b: [k,n]` (the `dx = dy·wᵀ` form).
+/// `out[m,k] = a[m,n] · bᵀ[n,k]` for `b: [k,n]` (scalar oracle).
+#[cfg(test)]
 fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * k];
     for i in 0..m {
@@ -546,8 +1235,8 @@ fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     out
 }
 
-/// Mean-aggregate `feat[src[e]]` onto `dst[e]` (ref.py `agg_mean_ref`):
-/// row j = sum of valid incoming features / max(1, valid in-degree).
+/// Mean aggregation, scalar oracle (allocating wrapper over the kernel).
+#[cfg(test)]
 fn agg_mean(
     feat: &[f32],
     src: &[i32],
@@ -556,33 +1245,14 @@ fn agg_mean(
     ns: usize,
     fd: usize,
 ) -> Result<Vec<f32>> {
-    let mut sums = vec![0.0f32; ns * fd];
+    let mut out = vec![0.0f32; ns * fd];
     let mut cnt = vec![0.0f32; ns];
-    for e in 0..src.len() {
-        let v = valid[e];
-        if v == 0.0 {
-            continue;
-        }
-        let s = idx(src[e], ns, "src")?;
-        let d = idx(dst[e], ns, "dst")?;
-        for x in 0..fd {
-            sums[d * fd + x] += feat[s * fd + x] * v;
-        }
-        cnt[d] += v;
-    }
-    for j in 0..ns {
-        let c = cnt[j].max(1.0);
-        if c != 1.0 {
-            for x in 0..fd {
-                sums[j * fd + x] /= c;
-            }
-        }
-    }
-    Ok(sums)
+    agg_mean_into(feat, src, dst, valid, ns, fd, &mut cnt, &mut out)?;
+    Ok(out)
 }
 
-/// VJP of [`agg_mean`] w.r.t. `feat` (linear, so exact):
-/// `dfeat[src[e]] += valid[e] * dout[dst[e]] / max(1, degree(dst[e]))`.
+/// Mean-aggregation VJP, scalar oracle.
+#[cfg(test)]
 fn agg_mean_bwd(
     src: &[i32],
     dst: &[i32],
@@ -591,31 +1261,15 @@ fn agg_mean_bwd(
     ns: usize,
     fd: usize,
 ) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; ns * fd];
     let mut cnt = vec![0.0f32; ns];
-    for e in 0..src.len() {
-        if valid[e] != 0.0 {
-            cnt[idx(dst[e], ns, "dst")?] += valid[e];
-        }
-    }
-    let mut dfeat = vec![0.0f32; ns * fd];
-    for e in 0..src.len() {
-        let v = valid[e];
-        if v == 0.0 {
-            continue;
-        }
-        let s = idx(src[e], ns, "src")?;
-        let d = idx(dst[e], ns, "dst")?;
-        let w = v / cnt[d].max(1.0);
-        for x in 0..fd {
-            dfeat[s * fd + x] += dout[d * fd + x] * w;
-        }
-    }
-    Ok(dfeat)
+    agg_mean_bwd_into(src, dst, valid, dout, ns, fd, &mut cnt, &mut out)?;
+    Ok(out)
 }
 
-/// GAT-style attention aggregation (ref.py `att_agg_ref`):
-/// `e_ij = LeakyReLU(a_src·h_i + a_dst·h_j)`, segment-softmax over valid
-/// incoming edges of j, `out_j = Σ_i α_ij h_i`.
+/// Attention aggregation, scalar oracle.
+#[cfg(test)]
+#[allow(clippy::too_many_arguments)]
 fn att_agg(
     fs: &[f32],
     fdm: &[f32],
@@ -627,92 +1281,15 @@ fn att_agg(
     ns: usize,
     fd: usize,
 ) -> Result<Vec<f32>> {
-    let fw = att_forward(fs, fdm, a_s, a_d, src, dst, valid, ns, fd)?;
     let mut out = vec![0.0f32; ns * fd];
-    for e in 0..src.len() {
-        let we = fw.w[e];
-        if we == 0.0 {
-            continue;
-        }
-        let s = src[e] as usize; // validated in att_forward
-        let d = dst[e] as usize;
-        for x in 0..fd {
-            out[d * fd + x] += we * fs[s * fd + x];
-        }
-    }
-    for j in 0..ns {
-        let dn = fw.denom[j].max(DENOM_EPS);
-        for x in 0..fd {
-            out[j * fd + x] /= dn;
-        }
-    }
+    let mut scratch = vec![0.0f32; att_fwd_scratch_len(ns, src.len())];
+    att_agg_into(fs, fdm, a_s, a_d, src, dst, valid, ns, fd, &mut scratch, &mut out)?;
     Ok(out)
 }
 
-/// Shared attention-forward intermediates (recomputed in the backward, the
-/// same rematerialization the AOT modules do).
-struct AttForward {
-    /// Pre-activation scores z_e = es[src] + ed[dst].
-    z: Vec<f32>,
-    /// Unnormalized softmax weights (zero for invalid edges).
-    w: Vec<f32>,
-    /// Per-destination softmax denominators.
-    denom: Vec<f32>,
-}
-
-fn att_forward(
-    fs: &[f32],
-    fdm: &[f32],
-    a_s: &[f32],
-    a_d: &[f32],
-    src: &[i32],
-    dst: &[i32],
-    valid: &[f32],
-    ns: usize,
-    fd: usize,
-) -> Result<AttForward> {
-    let ep = src.len();
-    let mut es = vec![0.0f32; ns];
-    let mut ed = vec![0.0f32; ns];
-    for i in 0..ns {
-        let (mut se, mut de) = (0.0f32, 0.0f32);
-        for x in 0..fd {
-            se += fs[i * fd + x] * a_s[x];
-            de += fdm[i * fd + x] * a_d[x];
-        }
-        es[i] = se;
-        ed[i] = de;
-    }
-    let mut z = vec![0.0f32; ep];
-    let mut eact = vec![0.0f32; ep];
-    for e in 0..ep {
-        let s = idx(src[e], ns, "src")?;
-        let d = idx(dst[e], ns, "dst")?;
-        let ze = es[s] + ed[d];
-        z[e] = ze;
-        let l = if ze >= 0.0 { ze } else { LEAKY_SLOPE * ze };
-        eact[e] = if valid[e] > 0.0 { l } else { NEG_INF };
-    }
-    let mut segmax = vec![NEG_INF; ns];
-    for e in 0..ep {
-        let d = dst[e] as usize;
-        if eact[e] > segmax[d] {
-            segmax[d] = eact[e];
-        }
-    }
-    let mut w = vec![0.0f32; ep];
-    let mut denom = vec![0.0f32; ns];
-    for e in 0..ep {
-        let d = dst[e] as usize;
-        let we = (eact[e] - segmax[d]).exp() * valid[e];
-        w[e] = we;
-        denom[d] += we;
-    }
-    Ok(AttForward { z, w, denom })
-}
-
-/// VJP of [`att_agg`] w.r.t. (feat_src, feat_dst, a_src, a_dst); recomputes
-/// the forward internally. Validated against `jax.vjp` of the oracle.
+/// Attention-aggregation VJP, scalar oracle.
+#[cfg(test)]
+#[allow(clippy::too_many_arguments)]
 fn att_agg_bwd(
     fs: &[f32],
     fdm: &[f32],
@@ -725,70 +1302,20 @@ fn att_agg_bwd(
     ns: usize,
     fd: usize,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
-    let ep = src.len();
-    let fw = att_forward(fs, fdm, a_s, a_d, src, dst, valid, ns, fd)?;
-    // alpha_e = w_e / max(denom, eps): the normalized attention weights.
-    // Direct path: dfs[src] += alpha * dout[dst]; and the softmax pullback
-    // needs dalpha_e = dout[dst] · fs[src].
     let mut dfs = vec![0.0f32; ns * fd];
-    let mut alpha = vec![0.0f32; ep];
-    let mut dalpha = vec![0.0f32; ep];
-    for e in 0..ep {
-        let d = dst[e] as usize;
-        let a = fw.w[e] / fw.denom[d].max(DENOM_EPS);
-        alpha[e] = a;
-        if a == 0.0 {
-            continue;
-        }
-        let s = src[e] as usize;
-        let mut da = 0.0f32;
-        for x in 0..fd {
-            dfs[s * fd + x] += a * dout[d * fd + x];
-            da += dout[d * fd + x] * fs[s * fd + x];
-        }
-        dalpha[e] = da;
-    }
-    // Softmax backward per segment: dl_e = alpha_e (dalpha_e - Σ alpha dalpha).
-    let mut seg = vec![0.0f32; ns];
-    for e in 0..ep {
-        seg[dst[e] as usize] += alpha[e] * dalpha[e];
-    }
-    let mut des = vec![0.0f32; ns];
-    let mut ded = vec![0.0f32; ns];
-    for e in 0..ep {
-        let a = alpha[e];
-        if a == 0.0 {
-            continue;
-        }
-        let d = dst[e] as usize;
-        let dl = a * (dalpha[e] - seg[d]);
-        let dz = dl * if fw.z[e] >= 0.0 { 1.0 } else { LEAKY_SLOPE };
-        des[src[e] as usize] += dz;
-        ded[d] += dz;
-    }
-    // Back through the score projections es = fs·a_s, ed = fd·a_d.
     let mut dfd = vec![0.0f32; ns * fd];
     let mut das = vec![0.0f32; fd];
     let mut dad = vec![0.0f32; fd];
-    for i in 0..ns {
-        if des[i] != 0.0 {
-            for x in 0..fd {
-                dfs[i * fd + x] += des[i] * a_s[x];
-                das[x] += des[i] * fs[i * fd + x];
-            }
-        }
-        if ded[i] != 0.0 {
-            for x in 0..fd {
-                dfd[i * fd + x] += ded[i] * a_d[x];
-                dad[x] += ded[i] * fdm[i * fd + x];
-            }
-        }
-    }
+    let mut scratch = vec![0.0f32; att_bwd_scratch_len(ns, src.len())];
+    att_agg_bwd_into(
+        fs, fdm, a_s, a_d, src, dst, valid, dout, ns, fd, &mut scratch, &mut dfs, &mut dfd,
+        &mut das, &mut dad,
+    )?;
     Ok((dfs, dfd, das, dad))
 }
 
-/// Semantic fusion forward (model.py `fuse_relu` / `fuse_lin`):
-/// `out[t] = act(Σ_{r: dst_type[r]=t} agg[r])`.
+/// Semantic fusion forward, scalar oracle (serial over relations).
+#[cfg(test)]
 fn fuse_fwd(
     dst_type: &[i32],
     agg: &[f32],
@@ -817,8 +1344,9 @@ fn fuse_fwd(
     Ok(out)
 }
 
-/// VJP of [`fuse_fwd`] w.r.t. `agg`: `dagg[r] = dout[dst_type[r]]`, masked
-/// by the recomputed ReLU support when `relu`.
+/// Semantic fusion VJP, scalar oracle.
+#[cfg(test)]
+#[allow(clippy::too_many_arguments)]
 fn fuse_bwd(
     dst_type: &[i32],
     agg: &[f32],
@@ -852,49 +1380,13 @@ fn fuse_bwd(
     Ok(dagg)
 }
 
-/// Softmax cross-entropy head (model.py `head`): loss, dlogits, and
-/// accuracy count over the seed rows, in one "dispatch".
+/// Softmax cross-entropy head, scalar oracle.
+#[cfg(test)]
 fn head(logits: &[f32], labels: &[i32], mask: &[f32], ns: usize, c: usize) -> (f32, Vec<f32>, f32) {
     let mut z = vec![0.0f32; ns * c];
-    for i in 0..ns {
-        let row = &logits[i * c..(i + 1) * c];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut se = 0.0f32;
-        for &l in row {
-            se += (l - m).exp();
-        }
-        let lse = m + se.ln();
-        for j in 0..c {
-            z[i * c + j] = row[j] - lse;
-        }
-    }
-    let n = mask.iter().sum::<f32>().max(1.0);
-    let mut loss = 0.0f32;
     let mut dlogits = vec![0.0f32; ns * c];
-    let mut ncorrect = 0.0f32;
-    for i in 0..ns {
-        let lab = labels[i];
-        let mi = mask[i];
-        for j in 0..c {
-            let one = if j as i32 == lab { 1.0f32 } else { 0.0 };
-            if one == 1.0 {
-                loss -= z[i * c + j] * mi;
-            }
-            dlogits[i * c + j] = (z[i * c + j].exp() - one) * mi / n;
-        }
-        // argmax with first-max tie-breaking, like jnp.argmax.
-        let row = &logits[i * c..(i + 1) * c];
-        let mut am = 0usize;
-        for j in 1..c {
-            if row[j] > row[am] {
-                am = j;
-            }
-        }
-        if am as i32 == lab {
-            ncorrect += mi;
-        }
-    }
-    (loss / n, dlogits, ncorrect)
+    let (loss, ncorrect) = head_into(logits, labels, mask, ns, c, &mut z, &mut dlogits);
+    (loss, dlogits, ncorrect)
 }
 
 #[cfg(test)]
@@ -1160,5 +1652,249 @@ mod tests {
         eng.set_launch_overhead(Duration::from_micros(500));
         let slow = eng.measure_dispatch_overhead(5).unwrap();
         assert!(slow > base + Duration::from_micros(300), "{base:?} -> {slow:?}");
+    }
+
+    fn randi(rng: &mut Rng, n: usize, below: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.below(below) as i32).collect()
+    }
+
+    /// Blocked + row-parallel matmuls are bit-identical to the scalar
+    /// oracles on shapes that are NOT multiples of the tile / chunk sizes.
+    #[test]
+    fn blocked_matmuls_match_scalar_oracle_on_odd_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 31, 13), (65, 8, 66), (70, 3, 129)] {
+            let mut a = randv(&mut rng, m * k);
+            for i in (0..a.len()).step_by(3) {
+                a[i] = 0.0; // exercise the zero-skip path
+            }
+            let bkn = randv(&mut rng, k * n);
+            let bmn = randv(&mut rng, m * n);
+            let amn = randv(&mut rng, m * n);
+            for threads in [1, 3] {
+                let pool = WorkerPool::new(threads);
+                let mut out = vec![0.0f32; m * n];
+                matmul_into(&pool, &a, &bkn, m, k, n, &mut out);
+                assert_eq!(out, matmul(&a, &bkn, m, k, n), "nn {m}x{k}x{n} t{threads}");
+                let mut out = vec![0.0f32; k * n];
+                matmul_tn_into(&pool, &a, &bmn, m, k, n, &mut out);
+                assert_eq!(out, matmul_tn(&a, &bmn, m, k, n), "tn {m}x{k}x{n} t{threads}");
+                let mut out = vec![0.0f32; m * k];
+                matmul_nt_into(&pool, &amn, &bkn, m, n, k, &mut out);
+                assert_eq!(out, matmul_nt(&amn, &bkn, m, n, k), "nt {m}x{k}x{n} t{threads}");
+            }
+        }
+    }
+
+    /// Relation-parallel merged mean aggregation (fwd + VJP) equals the
+    /// per-relation scalar oracle bit-for-bit on a threaded backend.
+    #[test]
+    fn merged_aggregation_matches_per_relation_oracle_under_threading() {
+        let mut rng = Rng::new(31);
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let (rp, ns, ep, h) =
+            (eng.cst("RPAD"), eng.cst("NS"), eng.cst("EP"), eng.cst("H"));
+        let feat = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let src = HostTensor::i32(randi(&mut rng, rp * ep, ns), &[rp, ep]);
+        let dst = HostTensor::i32(randi(&mut rng, rp * ep, ns), &[rp, ep]);
+        let valid =
+            HostTensor::f32((0..rp * ep).map(|_| rng.below(2) as f32).collect(), &[rp, ep]);
+        let (f, s, d, v) = (
+            feat.as_f32().unwrap(),
+            src.as_i32().unwrap(),
+            dst.as_i32().unwrap(),
+            valid.as_f32().unwrap(),
+        );
+        let out = eng
+            .run("agg_merged_fwd_h", Stage::Calib, Phase::Fwd, &[&feat, &src, &dst, &valid])
+            .unwrap();
+        let of = out[0].as_f32().unwrap();
+        for r in 0..rp {
+            let y = agg_mean(
+                &f[r * ns * h..(r + 1) * ns * h],
+                &s[r * ep..(r + 1) * ep],
+                &d[r * ep..(r + 1) * ep],
+                &v[r * ep..(r + 1) * ep],
+                ns,
+                h,
+            )
+            .unwrap();
+            assert_eq!(&of[r * ns * h..(r + 1) * ns * h], &y[..], "agg fwd r={r}");
+        }
+        let dout = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let dof = dout.as_f32().unwrap();
+        let out = eng
+            .run("agg_merged_bwd_h", Stage::Calib, Phase::Bwd, &[&src, &dst, &valid, &dout])
+            .unwrap();
+        let ob = out[0].as_f32().unwrap();
+        for r in 0..rp {
+            let y = agg_mean_bwd(
+                &s[r * ep..(r + 1) * ep],
+                &d[r * ep..(r + 1) * ep],
+                &v[r * ep..(r + 1) * ep],
+                &dof[r * ns * h..(r + 1) * ns * h],
+                ns,
+                h,
+            )
+            .unwrap();
+            assert_eq!(&ob[r * ns * h..(r + 1) * ns * h], &y[..], "agg bwd r={r}");
+        }
+    }
+
+    /// Relation-parallel merged attention (fwd + 4-output VJP, packed rows)
+    /// equals the per-relation scalar oracle bit-for-bit when threaded.
+    #[test]
+    fn merged_attention_matches_per_relation_oracle_under_threading() {
+        let mut rng = Rng::new(37);
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let (rp, ns, ep, h) =
+            (eng.cst("RPAD"), eng.cst("NS"), eng.cst("EP"), eng.cst("H"));
+        let fs = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let fdm = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let a_s = HostTensor::f32(randv(&mut rng, rp * h), &[rp, h]);
+        let a_d = HostTensor::f32(randv(&mut rng, rp * h), &[rp, h]);
+        let src = HostTensor::i32(randi(&mut rng, rp * ep, ns), &[rp, ep]);
+        let dst = HostTensor::i32(randi(&mut rng, rp * ep, ns), &[rp, ep]);
+        let valid =
+            HostTensor::f32((0..rp * ep).map(|_| rng.below(2) as f32).collect(), &[rp, ep]);
+        let dout = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let args = [&fs, &fdm, &a_s, &a_d, &src, &dst, &valid];
+        let out = eng.run("att_merged_fwd_h", Stage::Calib, Phase::Fwd, &args).unwrap();
+        let of = out[0].as_f32().unwrap();
+        let bwd_args = [&fs, &fdm, &a_s, &a_d, &src, &dst, &valid, &dout];
+        let bout = eng.run("att_merged_bwd_h", Stage::Calib, Phase::Bwd, &bwd_args).unwrap();
+        for r in 0..rp {
+            let nf = r * ns * h..(r + 1) * ns * h;
+            let fr = r * h..(r + 1) * h;
+            let er = r * ep..(r + 1) * ep;
+            let y = att_agg(
+                &fs.as_f32().unwrap()[nf.clone()],
+                &fdm.as_f32().unwrap()[nf.clone()],
+                &a_s.as_f32().unwrap()[fr.clone()],
+                &a_d.as_f32().unwrap()[fr.clone()],
+                &src.as_i32().unwrap()[er.clone()],
+                &dst.as_i32().unwrap()[er.clone()],
+                &valid.as_f32().unwrap()[er.clone()],
+                ns,
+                h,
+            )
+            .unwrap();
+            assert_eq!(&of[nf.clone()], &y[..], "att fwd r={r}");
+            let (dfs, dfd, das, dad) = att_agg_bwd(
+                &fs.as_f32().unwrap()[nf.clone()],
+                &fdm.as_f32().unwrap()[nf.clone()],
+                &a_s.as_f32().unwrap()[fr.clone()],
+                &a_d.as_f32().unwrap()[fr.clone()],
+                &src.as_i32().unwrap()[er.clone()],
+                &dst.as_i32().unwrap()[er.clone()],
+                &valid.as_f32().unwrap()[er.clone()],
+                &dout.as_f32().unwrap()[nf.clone()],
+                ns,
+                h,
+            )
+            .unwrap();
+            assert_eq!(&bout[0].as_f32().unwrap()[nf.clone()], &dfs[..], "dfs r={r}");
+            assert_eq!(&bout[1].as_f32().unwrap()[nf.clone()], &dfd[..], "dfd r={r}");
+            assert_eq!(&bout[2].as_f32().unwrap()[fr.clone()], &das[..], "das r={r}");
+            assert_eq!(&bout[3].as_f32().unwrap()[fr.clone()], &dad[..], "dad r={r}");
+        }
+    }
+
+    /// Stacked projection (fwd + bwd with its serial dx fold) and the
+    /// type-parallel fusion kernels equal the scalar oracles bit-for-bit.
+    #[test]
+    fn stacked_projection_and_fusion_match_oracles_under_threading() {
+        let mut rng = Rng::new(47);
+        let eng = SimBackend::builtin_threaded("tiny", 3).unwrap();
+        let (tp, ns, f, h, rp) = (
+            eng.cst("TPAD"),
+            eng.cst("NS"),
+            eng.cst("F"),
+            eng.cst("H"),
+            eng.cst("RPAD"),
+        );
+        let xs = HostTensor::f32(randv(&mut rng, tp * ns * f), &[tp, ns, f]);
+        let w = HostTensor::f32(randv(&mut rng, rp * f * h), &[rp, f, h]);
+        let st = HostTensor::i32(randi(&mut rng, rp, tp), &[rp]);
+        let (xsf, wf, stf) =
+            (xs.as_f32().unwrap(), w.as_f32().unwrap(), st.as_i32().unwrap());
+        let out = eng
+            .run("proj_stacked_fwd_l0", Stage::Calib, Phase::Fwd, &[&xs, &w, &st])
+            .unwrap();
+        let of = out[0].as_f32().unwrap();
+        for r in 0..rp {
+            let t = stf[r] as usize;
+            let y = matmul(
+                &xsf[t * ns * f..(t + 1) * ns * f],
+                &wf[r * f * h..(r + 1) * f * h],
+                ns,
+                f,
+                h,
+            );
+            assert_eq!(&of[r * ns * h..(r + 1) * ns * h], &y[..], "stacked fwd r={r}");
+        }
+        let dy = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let dyf = dy.as_f32().unwrap();
+        let mut outs = eng
+            .run("proj_stacked_bwd_l0", Stage::Calib, Phase::Bwd, &[&xs, &w, &st, &dy])
+            .unwrap()
+            .into_iter();
+        let dxs = outs.next().unwrap();
+        let dw = outs.next().unwrap();
+        let mut dxs_o = vec![0.0f32; tp * ns * f];
+        let mut dw_o = vec![0.0f32; rp * f * h];
+        for r in 0..rp {
+            let t = stf[r] as usize;
+            let dy_r = &dyf[r * ns * h..(r + 1) * ns * h];
+            let dx = matmul_nt(dy_r, &wf[r * f * h..(r + 1) * f * h], ns, h, f);
+            for (acc, v) in dxs_o[t * ns * f..(t + 1) * ns * f].iter_mut().zip(&dx) {
+                *acc += *v;
+            }
+            let g = matmul_tn(&xsf[t * ns * f..(t + 1) * ns * f], dy_r, ns, f, h);
+            dw_o[r * f * h..(r + 1) * f * h].copy_from_slice(&g);
+        }
+        assert_eq!(dxs.as_f32().unwrap(), &dxs_o[..], "stacked bwd dxs");
+        assert_eq!(dw.as_f32().unwrap(), &dw_o[..], "stacked bwd dw");
+
+        // Fusion fwd + bwd against the independent serial oracles.
+        let dt = HostTensor::i32(randi(&mut rng, rp, tp), &[rp]);
+        let agg_t = HostTensor::f32(randv(&mut rng, rp * ns * h), &[rp, ns, h]);
+        let dtf = dt.as_i32().unwrap();
+        let aggf = agg_t.as_f32().unwrap();
+        let out = eng.run("fuse_relu_fwd_h", Stage::Calib, Phase::Fwd, &[&dt, &agg_t]).unwrap();
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            &fuse_fwd(dtf, aggf, rp, ns, h, tp, true).unwrap()[..],
+            "fuse fwd"
+        );
+        let dout = HostTensor::f32(randv(&mut rng, tp * ns * h), &[tp, ns, h]);
+        let doutf = dout.as_f32().unwrap();
+        let out = eng
+            .run("fuse_relu_bwd_h", Stage::Calib, Phase::Bwd, &[&dt, &agg_t, &dout])
+            .unwrap();
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            &fuse_bwd(dtf, aggf, doutf, rp, ns, h, tp, true).unwrap()[..],
+            "fuse bwd"
+        );
+    }
+
+    /// Recycled dispatch outputs are reused: after the first dispatch of a
+    /// module, re-running it allocates nothing new.
+    #[test]
+    fn arena_recycles_dispatch_buffers_to_zero_steady_state_misses() {
+        let eng = SimBackend::builtin("tiny").unwrap();
+        let (ns, f, h) = (eng.cst("NS"), eng.cst("F"), eng.cst("H"));
+        let x = HostTensor::zeros_f32(&[ns, f]);
+        let w = HostTensor::zeros_f32(&[f, h]);
+        let mut outs = eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&x, &w]).unwrap();
+        let warm_misses = eng.arena_stats().misses;
+        assert!(warm_misses >= 1, "first dispatch should allocate");
+        eng.recycle(outs.swap_remove(0));
+        let _outs = eng.run("proj_fwd_l0", Stage::Calib, Phase::Fwd, &[&x, &w]).unwrap();
+        let s = eng.arena_stats();
+        assert_eq!(s.misses, warm_misses, "steady-state dispatch allocated: {s:?}");
+        assert!(s.hits >= 1);
+        assert!(s.bytes_recycled > 0);
     }
 }

@@ -2,16 +2,19 @@
 //! every sampled vertex into the padded `[TPAD, NS, F]` slab tensor the AOT
 //! modules consume.
 //!
-//! The collector is layout-agnostic (it reads through
-//! `FeatureStore::copy_row`), so the paper's *reorganization* ablation is
-//! purely a question of which layout the store materializes: index-major
-//! collection chases interleaved global ids across the whole feature buffer
-//! (cache-hostile, Fig. 4a), type-major collection streams per-type regions
-//! (Fig. 4b).
+//! The collector is layout-*aware*: on the type-major layout (HiFuse's
+//! reorganization, Fig. 4b) consecutive slot ids map to physically
+//! contiguous rows, so maximal runs of consecutive ids are copied with one
+//! `copy_from_slice` each instead of row by row; index-major (Fig. 4a)
+//! falls back to per-row `copy_row`, chasing interleaved global ids across
+//! the whole feature buffer — exactly the cache-hostile access pattern the
+//! paper profiles. Per-type slabs are independent, so collection is
+//! partitioned across the [`WorkerPool`] (`TrainCfg::threads`), overlapping
+//! the memory streams the way the paper's OpenMP collection stage does.
 
-use crate::graph::HeteroGraph;
+use crate::graph::{HeteroGraph, Layout};
 use crate::sampler::MiniBatch;
-use crate::util::HostTensor;
+use crate::util::{HostTensor, WorkerPool};
 
 /// Collected batch tensors, ready for upload.
 pub struct Collected {
@@ -25,37 +28,79 @@ pub struct Collected {
     pub n_seed: usize,
 }
 
+/// Fill one type's `[NS, F]` slab: run-length `copy_from_slice` on the
+/// type-major layout, per-row gather otherwise.
+fn collect_type_rows(g: &HeteroGraph, t: usize, slot_list: &[u32], f: usize, out: &mut [f32]) {
+    if g.features.layout() == Layout::IndexMajor {
+        for (s, &v) in slot_list.iter().enumerate() {
+            g.features.copy_row(t, v as usize, &mut out[s * f..(s + 1) * f]);
+        }
+        return;
+    }
+    let mut s = 0usize;
+    while s < slot_list.len() {
+        let v0 = slot_list[s] as usize;
+        let mut run = 1usize;
+        while s + run < slot_list.len() && slot_list[s + run] as usize == v0 + run {
+            run += 1;
+        }
+        // Type-major guarantees contiguity (the index-major fallback
+        // returned above), so a whole run is one memcpy.
+        let src = g.features.rows(t, v0, run).expect("type-major rows are contiguous");
+        out[s * f..(s + run) * f].copy_from_slice(src);
+        s += run;
+    }
+}
+
 /// Gather raw features + labels + seed mask for a mini-batch.
 ///
-/// `tpad`/`ns` are the profile paddings; `f` is the raw feature dim.
-pub fn collect(g: &HeteroGraph, mb: &MiniBatch, tpad: usize, ns: usize, f: usize) -> Collected {
+/// `tpad`/`ns` are the profile paddings; `f` is the raw feature dim;
+/// `pool` partitions the per-type slab fills across workers.
+pub fn collect(
+    g: &HeteroGraph,
+    mb: &MiniBatch,
+    tpad: usize,
+    ns: usize,
+    f: usize,
+    pool: &WorkerPool,
+) -> Collected {
     assert!(g.n_types() <= tpad, "graph has more types than TPAD");
     assert_eq!(g.feat_dim, f);
     let mut xs = vec![0.0f32; tpad * ns * f];
-    for (t, slot_list) in mb.slots.iter().enumerate() {
-        let base = t * ns * f;
-        for (s, &v) in slot_list.iter().enumerate() {
-            let out = &mut xs[base + s * f..base + (s + 1) * f];
-            g.features.copy_row(t, v as usize, out);
+    let n_types = mb.slots.len();
+    pool.for_row_chunks(&mut xs[..n_types * ns * f], n_types, 1, |t0, t1, slab| {
+        for t in t0..t1 {
+            let out = &mut slab[(t - t0) * ns * f..(t - t0 + 1) * ns * f];
+            collect_type_rows(g, t, &mb.slots[t], f, out);
         }
-    }
+    });
 
     let mut labels = vec![0i32; ns];
     for (s, &v) in mb.slots[g.target_type].iter().enumerate() {
         labels[s] = g.labels[v as usize] as i32;
     }
 
-    // Seeds occupy the leading target-type slots (sampler contract); the
-    // batch may contain duplicate seeds when the train split wraps, so the
-    // mask population is the number of *distinct* seeds.
+    // Seeds occupy the leading target-type slots in first-seen order
+    // (sampler contract, pinned by `seeds_occupy_leading_target_slots`), so
+    // walking the seed list against that slot prefix identifies each
+    // first occurrence in O(1) — a duplicate can never equal the *next*
+    // unclaimed slot, because it already owns an earlier one. This replaces
+    // the per-batch HashSet (and its allocations) the collector used to
+    // build.
+    let tslots = &mb.slots[g.target_type];
     let mut seed_mask = vec![0.0f32; ns];
     let mut n_seed = 0usize;
-    let mut seen = std::collections::HashSet::new();
     for &v in &mb.seeds {
-        if seen.insert(v) {
+        if n_seed < tslots.len() && tslots[n_seed] == v {
             seed_mask[n_seed] = 1.0;
             n_seed += 1;
         }
+    }
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = std::collections::HashSet::new();
+        let distinct = mb.seeds.iter().filter(|v| seen.insert(**v)).count();
+        debug_assert_eq!(n_seed, distinct, "slot-prefix dedup diverged from HashSet");
     }
 
     Collected {
@@ -70,7 +115,6 @@ pub fn collect(g: &HeteroGraph, mb: &MiniBatch, tpad: usize, ns: usize, f: usize
 mod tests {
     use super::*;
     use crate::graph::datasets::tiny_graph;
-    use crate::graph::Layout;
     use crate::sampler::{NeighborSampler, SamplerCfg};
     use crate::util::Rng;
 
@@ -84,10 +128,14 @@ mod tests {
         (g, mb)
     }
 
+    fn serial() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
     #[test]
     fn slab_rows_match_store() {
         let (g, mb) = setup();
-        let c = collect(&g, &mb, 8, 32, 8);
+        let c = collect(&g, &mb, 8, 32, 8, &serial());
         let xs = c.xs.as_f32().unwrap();
         let mut row = vec![0.0f32; 8];
         for (t, slots) in mb.slots.iter().enumerate() {
@@ -104,20 +152,42 @@ mod tests {
         }
     }
 
+    /// Run-length (type-major) and row-wise (index-major) collection agree,
+    /// serial and threaded.
     #[test]
     fn both_layouts_collect_identically() {
         let (mut g, mb) = setup();
-        let a = collect(&g, &mb, 8, 32, 8);
+        let a = collect(&g, &mb, 8, 32, 8, &serial());
+        let a4 = collect(&g, &mb, 8, 32, 8, &WorkerPool::new(4));
+        assert_eq!(a.xs, a4.xs, "threaded type-major collect diverged");
         g.features.ensure_layout(Layout::IndexMajor);
-        let b = collect(&g, &mb, 8, 32, 8);
+        let b = collect(&g, &mb, 8, 32, 8, &serial());
+        let b4 = collect(&g, &mb, 8, 32, 8, &WorkerPool::new(4));
         assert_eq!(a.xs, b.xs);
+        assert_eq!(b.xs, b4.xs, "threaded index-major collect diverged");
         assert_eq!(a.labels, b.labels);
+    }
+
+    /// Force slot lists with mixed run shapes (runs, singletons, reversed
+    /// pairs) through the run-length path and compare to copy_row.
+    #[test]
+    fn run_length_path_matches_row_wise_on_crafted_runs() {
+        let (g, _) = setup();
+        let f = 8;
+        let slots: Vec<u32> = vec![5, 6, 7, 2, 1, 0, 10, 12, 13, 3];
+        let mut run_out = vec![0.0f32; slots.len() * f];
+        collect_type_rows(&g, 0, &slots, f, &mut run_out);
+        let mut row = vec![0.0f32; f];
+        for (s, &v) in slots.iter().enumerate() {
+            g.features.copy_row(0, v as usize, &mut row);
+            assert_eq!(&run_out[s * f..(s + 1) * f], &row[..], "slot {s} (vertex {v})");
+        }
     }
 
     #[test]
     fn labels_and_mask_line_up_with_seeds() {
         let (g, mb) = setup();
-        let c = collect(&g, &mb, 8, 32, 8);
+        let c = collect(&g, &mb, 8, 32, 8, &serial());
         let labels = c.labels.as_i32().unwrap();
         let mask = c.seed_mask.as_f32().unwrap();
         assert_eq!(c.n_seed, 8); // tiny graph train split > batch, no dups
@@ -127,5 +197,25 @@ mod tests {
             assert_eq!(labels[s], g.labels[v] as i32);
         }
         assert!(mask[c.n_seed..].iter().all(|&x| x == 0.0));
+    }
+
+    /// Duplicate seeds (wrapped tail batch) are counted once by the
+    /// slot-prefix dedup, matching the old HashSet semantics.
+    #[test]
+    fn duplicate_seeds_are_deduplicated() {
+        let g = tiny_graph(3);
+        // batch_size 32 > train split (24): the tail wraps and repeats seeds.
+        let s = NeighborSampler::new(
+            &g,
+            SamplerCfg { batch_size: 32, fanout: 2, layers: 2, ns: 32, ep: 16 },
+        );
+        let mb = s.sample(&Rng::new(9), 0, 0);
+        let mut seen = std::collections::HashSet::new();
+        let distinct = mb.seeds.iter().filter(|v| seen.insert(**v)).count();
+        assert!(distinct < mb.seeds.len(), "expected wrapped duplicates");
+        let c = collect(&g, &mb, 8, 32, 8, &serial());
+        assert_eq!(c.n_seed, distinct);
+        let mask = c.seed_mask.as_f32().unwrap();
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), distinct);
     }
 }

@@ -2,10 +2,12 @@
 //! `serde`, or `criterion`, so the PRNG, stats, and timing helpers live
 //! here).
 
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod tensor;
 
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::Stats;
 pub use tensor::HostTensor;

@@ -12,7 +12,7 @@ use hifuse::models::step::Dims;
 use hifuse::models::{plan, ModelKind};
 use hifuse::runtime::{ExecBackend, Phase, SimBackend, Stage};
 use hifuse::sampler::{NeighborSampler, SamplerCfg};
-use hifuse::util::Rng;
+use hifuse::util::{Rng, WorkerPool};
 
 #[test]
 fn sim_counts_match_plan_for_every_ladder_mode_and_model() {
@@ -39,7 +39,8 @@ fn sim_counts_match_plan_for_every_ladder_mode_and_model() {
             let expect = plan::expected_counts(model, &opt, g.n_relations(), &live);
 
             eng.reset_counters(false);
-            let prep = prepare_cpu(&g, scfg, &d, &opt, cfg.threads, &Rng::new(42), 0, 0);
+            let pool = WorkerPool::new(cfg.threads);
+            let prep = prepare_cpu(&g, scfg, &d, &opt, &pool, &Rng::new(42), 0, 0);
             tr.compute_batch(prep).unwrap();
             let c = eng.counters().borrow();
             for stage in [
