@@ -2,7 +2,8 @@
 //! the full-scale synthetic **aifb** dataset (7,262 vertices / 48,810
 //! edges / 104 relations) for a few hundred mini-batch steps with the full
 //! HiFuse execution mode, logging the loss curve, then run one baseline
-//! epoch for a direct wall-clock comparison.
+//! epoch for a direct wall-clock comparison and one data-parallel
+//! two-replica epoch (whose counters must sum to the group totals).
 //!
 //!     cargo run --release --example e2e_train
 //!
@@ -10,7 +11,9 @@
 //! Outputs: results/e2e_loss.csv (step-level loss curve), stdout summary.
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
-use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{
+    prepare_graph_layout, OptConfig, ReplicaGroup, TrainCfg, Trainer, DEFAULT_ROUND,
+};
 use hifuse::graph::datasets::{generate, spec_by_name};
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
@@ -79,6 +82,43 @@ fn main() -> anyhow::Result<()> {
         mb.kernels_total,
         mb.wall.as_secs_f64() / hifuse_epoch_wall.as_secs_f64(),
         100.0 * (1.0 - rows.last().unwrap()[4].parse::<f64>()? / mb.kernels_total as f64)
+    );
+
+    // One data-parallel epoch over two replica backends (DESIGN.md §4):
+    // same HiFuse plan, batches fanned out per round, gradients merged in
+    // fixed order. The group totals must be exactly the per-replica sums.
+    prepare_graph_layout(&mut graph, &opt);
+    let mut group = ReplicaGroup::builtin(
+        "bench",
+        2,
+        std::time::Duration::ZERO,
+        &graph,
+        ModelKind::Rgcn,
+        opt,
+        cfg,
+        DEFAULT_ROUND,
+    )?;
+    let mr = group.train_epoch(0)?;
+    // Independent witness (the per-replica -> group sum is true by
+    // construction): the single-backend HiFuse run's epoch-0 kernel count,
+    // recorded in rows[0], came from the same batches and plans, so the
+    // two-replica epoch 0 must dispatch exactly as many kernels.
+    let reference: usize = rows.first().unwrap()[4].parse()?;
+    anyhow::ensure!(
+        mr.group.kernels_total == reference,
+        "replica kernel total {} != single-backend epoch-0 total {reference}",
+        mr.group.kernels_total
+    );
+    println!(
+        "replicas=2 epoch: {:>7.1} ms, loss {:.4}, {} kernels ({} per replica)",
+        mr.group.wall.as_secs_f64() * 1e3,
+        mr.group.loss,
+        mr.group.kernels_total,
+        mr.per_replica
+            .iter()
+            .map(|r| r.kernels_total.to_string())
+            .collect::<Vec<_>>()
+            .join("+"),
     );
     Ok(())
 }

@@ -9,9 +9,12 @@
 //! and swap `SimBackend::builtin` for `Engine::load`.)
 //!
 //! This walks the whole public API surface: generate a graph, open a
-//! backend, build a `Trainer`, train, inspect metrics.
+//! backend, build a `Trainer`, train, inspect metrics — then do the same
+//! epoch data-parallel over two backend replicas (`ReplicaGroup`).
 
-use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{
+    prepare_graph_layout, OptConfig, ReplicaGroup, TrainCfg, Trainer, DEFAULT_ROUND,
+};
 use hifuse::graph::datasets::tiny_graph;
 use hifuse::models::ModelKind;
 use hifuse::runtime::{ExecBackend, SimBackend};
@@ -41,6 +44,33 @@ fn main() -> anyhow::Result<()> {
         println!(
             "epoch {epoch} | loss {:.4} | acc {:.2} | kernels/epoch {} | wall {:?}",
             m.loss, m.acc, m.kernels_total, m.wall
+        );
+    }
+
+    // 5. Data-parallel replicas (DESIGN.md §4): two backends, each with its
+    //    own arena/counters, splitting one thread budget; mini-batches fan
+    //    out per round and gradients merge in a fixed order, so the
+    //    trajectory is bit-identical for ANY replica count.
+    let mut group = ReplicaGroup::builtin(
+        "tiny",
+        2,
+        std::time::Duration::ZERO,
+        &graph,
+        ModelKind::Rgcn,
+        opt,
+        cfg,
+        DEFAULT_ROUND,
+    )?;
+    for epoch in 0..2u64 {
+        let m = group.train_epoch(epoch)?;
+        let per_rep: Vec<String> =
+            m.per_replica.iter().map(|r| r.kernels_total.to_string()).collect();
+        println!(
+            "replicas=2 epoch {epoch} | loss {:.4} | acc {:.2} | kernels {} ({} per replica)",
+            m.group.loss,
+            m.group.acc,
+            m.group.kernels_total,
+            per_rep.join("+"),
         );
     }
     Ok(())

@@ -15,7 +15,7 @@ against ``ref.py``. A finite NEG_INF keeps fully-padded segments NaN-free.
 
 The backward pass for attention is emitted from ``jax.vjp`` of the pure-jnp
 reference (one HLO module = still one launch); writing it as a hand-derived
-Pallas kernel is possible but buys nothing under interpret=True. DESIGN.md §5.
+Pallas kernel is possible but buys nothing under interpret=True. DESIGN.md §3.
 """
 
 from __future__ import annotations

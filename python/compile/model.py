@@ -3,7 +3,7 @@
 Each function below becomes one AOT-compiled HLO module (plus a VJP module
 where the backward pass needs it). The Rust coordinator (L3) chains these
 modules per its execution plan — per-relation loops for the PyG-style
-baseline, merged single launches for HiFuse (DESIGN.md §5).
+baseline, merged single launches for HiFuse (DESIGN.md §3).
 
 Model math (per layer l, relations r: src_type s_r -> dst_type d_r):
 
@@ -63,7 +63,7 @@ def proj(x, w):
 
 def proj_stacked(xs, w, src_type):
     """All-relations projection in one launch (extension config `R+M+S`,
-    DESIGN.md §5): gather each relation's source-type slab, batched matmul.
+    DESIGN.md §3): gather each relation's source-type slab, batched matmul.
 
     xs: [TPAD, NS, Fin]; w: [RPAD, Fin, Fout]; src_type: [RPAD] i32.
     Returns [RPAD, NS, Fout].

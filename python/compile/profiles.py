@@ -1,7 +1,7 @@
 """Shape profiles shared between the AOT emitter and the Rust coordinator.
 
 All HLO modules have static shapes; the Rust coordinator pads mini-batches to
-these buckets (DESIGN.md §7). Constants are exported into the artifact
+these buckets (DESIGN.md §6). Constants are exported into the artifact
 manifest so Rust never hard-codes them.
 
   NS     node slots per vertex type (per-type slab rows)

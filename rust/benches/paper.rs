@@ -21,7 +21,10 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{
+    prepare_cpu, prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg,
+    Trainer, DEFAULT_ROUND,
+};
 use hifuse::graph::datasets::{generate, spec_by_name, DATASETS};
 use hifuse::graph::HeteroGraph;
 use hifuse::models::step::Dims;
@@ -402,6 +405,54 @@ fn main() -> anyhow::Result<()> {
         &["workload", "base compute", "base memory", "hifuse compute", "hifuse memory",
           "compute improv x", "memory improv x"],
         &t3,
+    )?;
+
+    // ---------------- replica scaling: data-parallel epoch walls -----------
+    // RGCN/aifb with the full HiFuse plan, fanned out over 1/2/4 replica
+    // backends sharing the same thread budget (DESIGN.md §4). The loss
+    // column is the replica-parity witness: it must be identical in every
+    // row (pinned bitwise by tests/replica_parity.rs).
+    let mut rows = Vec::new();
+    {
+        let g = graphs.get_mut("aifb").unwrap();
+        let opt = OptConfig::hifuse();
+        prepare_graph_layout(g, &opt);
+        for replicas in [1usize, 2, 4] {
+            eprintln!("[bench] replicas={replicas} aifb rgcn hifuse ...");
+            let mut group = ReplicaGroup::builtin(
+                "bench",
+                replicas,
+                std::time::Duration::ZERO,
+                g,
+                ModelKind::Rgcn,
+                opt,
+                cfg,
+                DEFAULT_ROUND,
+            )?;
+            if !quick {
+                group.train_epoch(0)?; // warm the per-replica arenas
+            }
+            let m = group.train_epoch(if quick { 0 } else { 1 })?;
+            let per = replica_thread_budget(cfg.threads, group.replicas());
+            rows.push(vec![
+                replicas.to_string(),
+                per.to_string(),
+                f2(m.group.wall.as_secs_f64() * 1e3),
+                m.group.kernels_total.to_string(),
+                format!("{:.6}", m.group.loss),
+            ]);
+        }
+    }
+    write_md_table(
+        "replica_scaling.md",
+        "Replica scaling — data-parallel epoch wall (loss identical by contract)",
+        &["replicas", "threads/replica", "wall ms", "kernels", "loss"],
+        &rows,
+    )?;
+    write_csv(
+        "replica_scaling.csv",
+        &["replicas", "threads_per_replica", "wall_ms", "kernels", "loss"],
+        &rows,
     )?;
 
     // ---------------- BENCH_2.json: machine-readable perf trajectory -------

@@ -56,6 +56,13 @@ pub struct RunConfig {
     /// Simulated per-dispatch launch overhead for the sim backend, in
     /// microseconds — the "CUDA launch cost" knob of the reproduction.
     pub sim_overhead_us: f64,
+    /// `Some(n)`: train data-parallel over `n` backend replicas
+    /// (`coordinator::ReplicaGroup`, sim backend only). `None` (default):
+    /// classic single-backend per-batch SGD. The two differ semantically —
+    /// replica rounds update once per `DEFAULT_ROUND` batches — which is
+    /// why `--replicas 1` still selects the replica path: the trajectory
+    /// must be identical for every `--replicas` value (DESIGN.md §4).
+    pub replicas: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -71,6 +78,7 @@ impl Default for RunConfig {
             backend: BackendKind::Sim,
             profile: None,
             sim_overhead_us: 0.0,
+            replicas: None,
         }
     }
 }
@@ -115,6 +123,13 @@ impl RunConfig {
                 "profile" => cfg.profile = Some(v),
                 "sim-overhead-us" => {
                     cfg.sim_overhead_us = v.parse().context("--sim-overhead-us")?
+                }
+                "replicas" => {
+                    let n: usize = v.parse().context("--replicas")?;
+                    if n == 0 {
+                        bail!("--replicas must be >= 1");
+                    }
+                    cfg.replicas = Some(n);
                 }
                 other => bail!("unknown flag --{other}"),
             }
@@ -196,5 +211,16 @@ mod tests {
         let c = RunConfig::from_args(&argv("--dataset tiny --profile bench")).unwrap();
         assert_eq!(c.resolved_profile(), "bench");
         assert!(RunConfig::from_args(&argv("--backend gpu")).is_err());
+    }
+
+    #[test]
+    fn replicas_flag_parses_and_rejects_zero() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().replicas, None);
+        let c = RunConfig::from_args(&argv("--replicas 4")).unwrap();
+        assert_eq!(c.replicas, Some(4));
+        let c = RunConfig::from_args(&argv("--replicas 1")).unwrap();
+        assert_eq!(c.replicas, Some(1));
+        assert!(RunConfig::from_args(&argv("--replicas 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--replicas x")).is_err());
     }
 }

@@ -16,7 +16,7 @@ pub struct OptConfig {
     /// Asynchronous pipeline (Fig. 6): CPU stages overlap GPU compute.
     pub pipeline: bool,
     /// EXTENSION (beyond the paper): merge the projection stage too, via
-    /// the stacked-einsum module (DESIGN.md §5).
+    /// the stacked-einsum module (DESIGN.md §3).
     pub stacked_proj: bool,
 }
 

@@ -4,8 +4,10 @@
 
 pub mod ablation;
 pub mod pipeline;
+pub mod replica;
 
 pub use ablation::OptConfig;
+pub use replica::{replica_thread_budget, ReplicaGroup, ReplicaMetrics, DEFAULT_ROUND};
 
 use std::time::{Duration, Instant};
 
@@ -16,7 +18,7 @@ use crate::models::step::{
     pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
 };
 use crate::models::{ModelKind, Params};
-use crate::runtime::{ArenaStats, ExecBackend, Phase, Stage};
+use crate::runtime::{ArenaStats, Counters, ExecBackend, Phase, Stage};
 use crate::sampler::{collect, MiniBatch, NeighborSampler, RelEdges, SamplerCfg, TaggedEdges};
 use crate::semantic;
 use crate::util::{HostTensor, Rng, WorkerPool};
@@ -64,6 +66,55 @@ pub struct EpochMetrics {
     pub dropped_edges: usize,
 }
 
+impl EpochMetrics {
+    /// Copy the counter-derived fields (dispatch counts, stage breakdowns,
+    /// gpu time, arena snapshot) out of a dispatch log — the single source
+    /// of these fields for both the single-backend path
+    /// ([`Trainer::train_epoch`]) and the per-replica metrics.
+    pub fn fill_from_counters(&mut self, c: &Counters) {
+        self.gpu_time = c.gpu_time;
+        self.kernels_total = c.total();
+        self.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);
+        self.kernels_fwd_agg = c.count_phase(Stage::Aggregation, Phase::Fwd);
+        self.kernels_by_stage = c.by_stage();
+        self.time_by_stage = c.time_by_stage();
+        self.arena = c.arena;
+    }
+
+    /// Sum `other`'s **additive counter fields** into `self`: batch and
+    /// kernel counts, per-stage counts/times, cpu/gpu time, arena traffic,
+    /// drop counters. The ratio fields (`loss`, `acc`) and `wall` are *not*
+    /// merged — they are not additive across replicas; the replica group
+    /// computes them from the global batch results (DESIGN.md §4).
+    pub fn absorb(&mut self, other: &EpochMetrics) {
+        self.cpu_time += other.cpu_time;
+        self.gpu_time += other.gpu_time;
+        self.kernels_total += other.kernels_total;
+        self.kernels_fwd_semantic += other.kernels_fwd_semantic;
+        self.kernels_fwd_agg += other.kernels_fwd_agg;
+        merge_stage_vec(&mut self.kernels_by_stage, &other.kernels_by_stage);
+        merge_stage_vec(&mut self.time_by_stage, &other.time_by_stage);
+        self.arena += other.arena;
+        self.batches += other.batches;
+        self.dropped_nodes += other.dropped_nodes;
+        self.dropped_edges += other.dropped_edges;
+    }
+}
+
+/// Merge per-stage `(Stage, T)` rows by stage, preserving `into`'s order and
+/// appending stages it has not seen yet.
+fn merge_stage_vec<T: Copy + std::ops::AddAssign>(
+    into: &mut Vec<(Stage, T)>,
+    from: &[(Stage, T)],
+) {
+    for &(s, v) in from {
+        match into.iter_mut().find(|(t, _)| *t == s) {
+            Some((_, acc)) => *acc += v,
+            None => into.push((s, v)),
+        }
+    }
+}
+
 /// CPU-side product of batch preparation (safe to build on a producer
 /// thread; contains no backend handles).
 pub struct PreparedCpu {
@@ -75,6 +126,19 @@ pub struct PreparedCpu {
     pub cpu_time: Duration,
     pub dropped_nodes: usize,
     pub dropped_edges: usize,
+}
+
+/// The profile-capped sampler configuration a training run uses — shared
+/// by `Trainer` and the replica lanes so both paths sample identical
+/// batches (the bit-exactness contract depends on it).
+pub(crate) fn sampler_cfg(cfg: &TrainCfg, d: &Dims) -> SamplerCfg {
+    SamplerCfg {
+        batch_size: cfg.batch_size,
+        fanout: cfg.fanout,
+        layers: 2,
+        ns: d.ns,
+        ep: d.ep,
+    }
 }
 
 /// Materialize the feature layout an `OptConfig` requires (the paper's
@@ -165,6 +229,34 @@ pub fn gpu_select<B: ExecBackend>(
     Ok(out)
 }
 
+/// Device half of batch preparation, shared by [`Trainer::compute_batch`]
+/// and the replica lanes: resolve per-relation edges (taking the baseline
+/// `edge_select` dispatches when selection did not run on CPU), pad them
+/// into module tensors, and wrap the collected features as a [`BatchData`].
+pub fn assemble_batch<B: ExecBackend>(
+    eng: &B,
+    d: &Dims,
+    schema: &SchemaTensors,
+    prep: PreparedCpu,
+) -> Result<BatchData> {
+    let selected: Vec<Vec<RelEdges>> = match (prep.selected, prep.tagged) {
+        (Some(s), _) => s,
+        (None, Some(tagged)) => tagged
+            .iter()
+            .map(|t| gpu_select(eng, d, t, schema.n_rel))
+            .collect::<Result<_>>()?,
+        _ => unreachable!("prepare_cpu always sets one of selected/tagged"),
+    };
+    let layers = selected.iter().map(|rels| pad_layer_edges(rels, d)).collect();
+    Ok(BatchData {
+        xs: prep.collected.xs,
+        labels: prep.collected.labels,
+        seed_mask: prep.collected.seed_mask,
+        n_seed: prep.collected.n_seed,
+        layers,
+    })
+}
+
 pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub eng: &'e B,
     pub graph: &'g HeteroGraph,
@@ -212,35 +304,13 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
     }
 
     fn sampler_cfg(&self) -> SamplerCfg {
-        let d = self.exec.d;
-        SamplerCfg {
-            batch_size: self.cfg.batch_size,
-            fanout: self.cfg.fanout,
-            layers: 2,
-            ns: d.ns,
-            ep: d.ep,
-        }
+        sampler_cfg(&self.cfg, &self.exec.d)
     }
 
     /// Device half of batch preparation + the training step itself.
     pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize)> {
         let d = self.exec.d;
-        let selected: Vec<Vec<RelEdges>> = match (prep.selected, prep.tagged) {
-            (Some(s), _) => s,
-            (None, Some(tagged)) => tagged
-                .iter()
-                .map(|t| gpu_select(self.eng, &d, t, self.schema.n_rel))
-                .collect::<Result<_>>()?,
-            _ => unreachable!("prepare_cpu always sets one of selected/tagged"),
-        };
-        let layers = selected.iter().map(|rels| pad_layer_edges(rels, &d)).collect();
-        let batch = BatchData {
-            xs: prep.collected.xs,
-            labels: prep.collected.labels,
-            seed_mask: prep.collected.seed_mask,
-            n_seed: prep.collected.n_seed,
-            layers,
-        };
+        let batch = assemble_batch(self.eng, &d, &self.schema, prep)?;
         let res = self.exec.train_step(&mut self.params, &self.schema, &batch, self.cfg.lr)?;
         Ok((res.loss, res.ncorrect, res.n_seed))
     }
@@ -289,14 +359,7 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         m.wall = wall0.elapsed();
         m.loss /= m.batches.max(1) as f64;
         m.acc = total_correct / total_seed.max(1) as f64;
-        let c = self.eng.counters().borrow();
-        m.gpu_time = c.gpu_time;
-        m.kernels_total = c.total();
-        m.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);
-        m.kernels_fwd_agg = c.count_phase(Stage::Aggregation, Phase::Fwd);
-        m.kernels_by_stage = c.by_stage();
-        m.time_by_stage = c.time_by_stage();
-        m.arena = c.arena;
+        m.fill_from_counters(&self.eng.counters().borrow());
     }
 }
 
@@ -308,5 +371,62 @@ mod tests {
     fn default_cfg_is_sane() {
         let c = TrainCfg::default();
         assert!(c.batch_size > 0 && c.lr > 0.0 && c.threads >= 1);
+    }
+
+    #[test]
+    fn absorb_sums_additive_fields_only() {
+        let mut a = EpochMetrics {
+            loss: 1.0,
+            acc: 0.5,
+            wall: Duration::from_millis(7),
+            cpu_time: Duration::from_millis(2),
+            gpu_time: Duration::from_millis(3),
+            kernels_total: 10,
+            kernels_fwd_semantic: 1,
+            kernels_fwd_agg: 2,
+            kernels_by_stage: vec![(Stage::Projection, 4), (Stage::Head, 1)],
+            time_by_stage: vec![(Stage::Projection, Duration::from_micros(5))],
+            arena: ArenaStats { hits: 5, misses: 1, bytes_recycled: 8, bytes_allocated: 16 },
+            batches: 3,
+            dropped_nodes: 1,
+            dropped_edges: 2,
+        };
+        let b = EpochMetrics {
+            loss: 9.0,
+            acc: 0.9,
+            wall: Duration::from_millis(9),
+            cpu_time: Duration::from_millis(1),
+            gpu_time: Duration::from_millis(1),
+            kernels_total: 5,
+            kernels_fwd_semantic: 2,
+            kernels_fwd_agg: 1,
+            kernels_by_stage: vec![(Stage::Projection, 1), (Stage::Aggregation, 6)],
+            time_by_stage: vec![(Stage::Projection, Duration::from_micros(2))],
+            arena: ArenaStats { hits: 1, misses: 1, bytes_recycled: 1, bytes_allocated: 1 },
+            batches: 2,
+            dropped_nodes: 0,
+            dropped_edges: 1,
+        };
+        a.absorb(&b);
+        // Additive counters sum ...
+        assert_eq!(a.kernels_total, 15);
+        assert_eq!(a.kernels_fwd_semantic, 3);
+        assert_eq!(a.kernels_fwd_agg, 3);
+        assert_eq!(a.batches, 5);
+        assert_eq!(a.cpu_time, Duration::from_millis(3));
+        assert_eq!(a.gpu_time, Duration::from_millis(4));
+        assert_eq!(a.arena.hits, 6);
+        assert_eq!(a.arena.misses, 2);
+        assert_eq!(a.dropped_nodes, 1);
+        assert_eq!(a.dropped_edges, 3);
+        // ... stage rows merge by stage, appending unseen stages ...
+        assert!(a.kernels_by_stage.contains(&(Stage::Projection, 5)));
+        assert!(a.kernels_by_stage.contains(&(Stage::Head, 1)));
+        assert!(a.kernels_by_stage.contains(&(Stage::Aggregation, 6)));
+        assert!(a.time_by_stage.contains(&(Stage::Projection, Duration::from_micros(7))));
+        // ... and the non-additive fields are untouched.
+        assert_eq!(a.loss, 1.0);
+        assert_eq!(a.acc, 0.5);
+        assert_eq!(a.wall, Duration::from_millis(7));
     }
 }

@@ -9,6 +9,10 @@
 //! Backends may be `!Send` (the PJRT client is Rc-based), so compute stays
 //! on the calling thread and only plain host data crosses the channel — the
 //! design reason `PreparedCpu` contains no backend handles.
+//!
+//! The data-parallel replica path ([`super::replica`], DESIGN.md §4) fans
+//! this same producer out to one bounded channel per replica lane; this
+//! module remains the single-backend (depth-2, one-consumer) form.
 
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;

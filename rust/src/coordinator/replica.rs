@@ -1,0 +1,541 @@
+//! Data-parallel replica training across execution-backend instances
+//! (DESIGN.md §4).
+//!
+//! A [`ReplicaGroup`] owns `N` backends — each with its **own** dispatch
+//! counters and buffer arena — and partitions each epoch's mini-batches
+//! across them in fixed *rounds* of `round` consecutive batches. Every
+//! batch of a round computes its gradient from the same parameter snapshot
+//! (synchronous data-parallel SGD); the per-batch gradients are then merged
+//! by a **deterministic fixed-order all-reduce** — summed in replica-index
+//! order, which by the contiguous round partition *is* global batch order —
+//! and one mean-gradient SGD step updates the shared parameters, which the
+//! next round's lanes see by re-borrowing (the "broadcast").
+//!
+//! **Bit-exactness contract.** PR 2 made kernel threading partition-only,
+//! so a batch gradient is bitwise-deterministic in (params, batch index)
+//! for *any* thread count. Round boundaries and the merge order depend only
+//! on `(n_batches, round)`, never on the replica count — therefore the
+//! whole training trajectory is bit-identical for any `--replicas N`
+//! (pinned by `tests/replica_parity.rs`). This extends the PR 2 contract
+//! from threads to replicas: replicas are a scheduling choice, not a
+//! semantic one.
+//!
+//! **Thread budget.** The group shares one `--threads` budget: each lane
+//! (CPU producer + backend kernels) gets [`replica_thread_budget`] workers,
+//! so `--replicas 4 --threads 4` runs four serial lanes rather than
+//! oversubscribing the host.
+//!
+//! **Pipelining.** With `OptConfig::pipeline` on, the existing CPU producer
+//! stages fan out to one bounded channel per replica (depth
+//! [`PIPELINE_DEPTH`](super::pipeline::PIPELINE_DEPTH), the Fig. 6
+//! backpressure), so sampling/selection/collection overlap the lanes'
+//! backend compute exactly as in single-backend pipelined training.
+//!
+//! Backends must be [`Send`] (each lane thread takes exclusive ownership of
+//! its backend for the round); they need **not** be `Sync`, which is what
+//! lets the `RefCell`-based [`SimBackend`](crate::runtime::SimBackend)
+//! participate. The `Rc`-based PJRT engine is `!Send` and stays
+//! single-backend.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::pipeline::PIPELINE_DEPTH;
+use super::{
+    assemble_batch, prepare_cpu, sampler_cfg, EpochMetrics, OptConfig, PreparedCpu, TrainCfg,
+};
+use crate::graph::HeteroGraph;
+use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, StepResult};
+use crate::models::{ModelKind, Params};
+use crate::runtime::{ExecBackend, SimBackend};
+use crate::sampler::{NeighborSampler, SamplerCfg};
+use crate::util::{Rng, WorkerPool};
+
+/// Default round width (global batches per synchronous update). A constant
+/// — *not* derived from the replica count — so the trajectory is invariant
+/// in `--replicas` (DESIGN.md §4).
+pub const DEFAULT_ROUND: usize = 4;
+
+/// Split one shared thread budget across replicas: each lane gets
+/// `max(1, total / replicas)` workers for both its CPU producer stages and
+/// its backend's intra-kernel row parallelism.
+pub fn replica_thread_budget(total: usize, replicas: usize) -> usize {
+    (total / replicas.max(1)).max(1)
+}
+
+/// What one lane returns for its slice of a round: `(step result,
+/// gradient)` per batch, in batch order.
+type RoundOutput = Result<Vec<(StepResult, Params)>>;
+
+/// One epoch's measurements from a replica group: the aggregated group view
+/// plus each replica's own counters.
+#[derive(Clone, Debug)]
+pub struct ReplicaMetrics {
+    /// Group totals: additive counters summed over replicas via
+    /// [`EpochMetrics::absorb`]; `loss`/`acc`/`wall` computed globally.
+    pub group: EpochMetrics,
+    /// Per-replica counters (kernels, stage times, arena, cpu time,
+    /// batches). `loss`/`acc`/`wall` are left at their defaults here —
+    /// they are properties of the group trajectory, not of a lane.
+    pub per_replica: Vec<EpochMetrics>,
+}
+
+/// Synchronous data-parallel trainer over `N` backend replicas. See the
+/// module docs for the round/all-reduce semantics.
+pub struct ReplicaGroup<'g, B: ExecBackend> {
+    pub graph: &'g HeteroGraph,
+    pub model: ModelKind,
+    pub opt: OptConfig,
+    pub cfg: TrainCfg,
+    /// The shared (broadcast) parameters; updated once per round.
+    pub params: Params,
+    round: usize,
+    schema: SchemaTensors,
+    engines: Vec<B>,
+    rng: Rng,
+    d: Dims,
+}
+
+impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
+    /// Build a group over pre-constructed backends (one per replica; all
+    /// must share one profile). Callers construct the backends with
+    /// [`replica_thread_budget`] kernel workers each so the group respects
+    /// one shared `--threads` budget.
+    pub fn new(
+        engines: Vec<B>,
+        graph: &'g HeteroGraph,
+        model: ModelKind,
+        opt: OptConfig,
+        cfg: TrainCfg,
+        round: usize,
+    ) -> Result<Self> {
+        ensure!(!engines.is_empty(), "replica group needs at least one backend");
+        ensure!(
+            engines.len() <= round.max(1),
+            "{} replicas but rounds hold only {} batches: the extra lanes could \
+             never receive work (clamp the replica count to the round width)",
+            engines.len(),
+            round.max(1)
+        );
+        let d = Dims::from_backend(&engines[0]);
+        for e in &engines[1..] {
+            ensure!(
+                e.profile() == engines[0].profile(),
+                "replica backends must share one profile ({} vs {})",
+                e.profile(),
+                engines[0].profile()
+            );
+        }
+        assert_eq!(graph.feat_dim, d.f, "graph feature dim != profile F");
+        assert!(graph.num_classes <= d.c, "dataset classes exceed profile C");
+        let schema = schema_tensors(graph, &d);
+        let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
+        Ok(ReplicaGroup {
+            graph,
+            model,
+            opt,
+            cfg,
+            params,
+            round: round.max(1),
+            schema,
+            engines,
+            rng: Rng::new(cfg.seed),
+            d,
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn dims(&self) -> Dims {
+        self.d
+    }
+
+    /// The per-replica backends (e.g. for arena/counter inspection).
+    pub fn engines(&self) -> &[B] {
+        &self.engines
+    }
+}
+
+impl<'g> ReplicaGroup<'g, SimBackend> {
+    /// Sim-backend convenience constructor holding the whole replica policy
+    /// in one place: clamps `replicas` to the round width (an extra lane
+    /// could never receive a batch — and by the parity contract the clamp
+    /// is invisible to the numerics), splits `cfg.threads` across the lanes
+    /// via [`replica_thread_budget`], and applies the simulated launch
+    /// overhead to every engine. Check [`ReplicaGroup::replicas`] for the
+    /// effective lane count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn builtin(
+        profile: &str,
+        replicas: usize,
+        launch_overhead: Duration,
+        graph: &'g HeteroGraph,
+        model: ModelKind,
+        opt: OptConfig,
+        cfg: TrainCfg,
+        round: usize,
+    ) -> Result<Self> {
+        let n = replicas.clamp(1, round.max(1));
+        let per = replica_thread_budget(cfg.threads, n);
+        let engines = (0..n)
+            .map(|_| {
+                let mut e = SimBackend::builtin_threaded(profile, per)?;
+                e.set_launch_overhead(launch_overhead);
+                Ok(e)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(engines, graph, model, opt, cfg, round)
+    }
+}
+
+impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
+    /// Train one epoch: rounds of `round` batches, each round fanned out
+    /// across the replica lanes and merged with the fixed-order all-reduce.
+    pub fn train_epoch(&mut self, epoch: u64) -> Result<ReplicaMetrics> {
+        let d = self.d;
+        let opt = self.opt;
+        let model = self.model;
+        let cfg = self.cfg;
+        let round = self.round;
+        let scfg = sampler_cfg(&cfg, &d);
+        let graph = self.graph;
+        let n_batches = NeighborSampler::new(graph, scfg).batches_per_epoch();
+        let n_lanes = self.engines.len();
+        let pool = WorkerPool::new(replica_thread_budget(cfg.threads, n_lanes));
+        let rng = self.rng.clone();
+        let sched = lane_schedule(n_batches, round, n_lanes);
+
+        for e in &self.engines {
+            e.reset_counters(false);
+        }
+
+        let params: &mut Params = &mut self.params;
+        let schema: &SchemaTensors = &self.schema;
+        let engines: &mut Vec<B> = &mut self.engines;
+
+        let wall0 = Instant::now();
+        let mut loss_sum = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total_seed = 0usize;
+        let mut lane_tallies: Vec<LaneTally> = Vec::new();
+        let mut epoch_result: Result<()> = Ok(());
+
+        std::thread::scope(|s| {
+            // One lane per replica; in pipeline mode each lane gets its own
+            // producer thread streaming its batches, in schedule order,
+            // through a bounded channel.
+            let mut lanes: Vec<Lane<'_, B>> = engines
+                .iter_mut()
+                .enumerate()
+                .map(|(i, eng)| {
+                    let rx = if opt.pipeline && !sched[i].is_empty() {
+                        let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
+                        let my: Vec<usize> = sched[i].clone();
+                        let prng = rng.clone();
+                        s.spawn(move || {
+                            for &b in &my {
+                                let prep =
+                                    prepare_cpu(graph, scfg, &d, &opt, &pool, &prng, epoch, b);
+                                if tx.send(prep).is_err() {
+                                    return; // consumer bailed
+                                }
+                            }
+                        });
+                        Some(rx)
+                    } else {
+                        None
+                    };
+                    Lane {
+                        eng,
+                        rx,
+                        pool,
+                        rng: rng.clone(),
+                        cpu_time: Duration::ZERO,
+                        batches: 0,
+                        dropped_nodes: 0,
+                        dropped_edges: 0,
+                    }
+                })
+                .collect();
+
+            'rounds: for r0 in (0..n_batches).step_by(round.max(1)) {
+                let len = round.min(n_batches - r0);
+                let split = round_split(len, n_lanes);
+                let mut round_out: Vec<Option<RoundOutput>> =
+                    (0..n_lanes).map(|_| None).collect();
+                let psnap: &Params = params; // the round's broadcast snapshot
+                std::thread::scope(|rs| {
+                    let mut handles = Vec::new();
+                    for (li, (lane, &(a, l))) in lanes.iter_mut().zip(&split).enumerate() {
+                        if l == 0 {
+                            continue;
+                        }
+                        let batches: Vec<usize> = (r0 + a..r0 + a + l).collect();
+                        handles.push((
+                            li,
+                            rs.spawn(move || {
+                                lane.run_round(
+                                    graph, scfg, d, opt, model, schema, psnap, epoch, &batches,
+                                )
+                            }),
+                        ));
+                    }
+                    for (li, h) in handles {
+                        round_out[li] = Some(h.join().expect("replica lane panicked"));
+                    }
+                });
+
+                // Fixed-order all-reduce: lanes hold contiguous batch
+                // ranges, so iterating replicas in index order and batches
+                // in lane order chains the f32 sum in global batch order —
+                // the same bits no matter how many lanes computed them.
+                let mut gsum: Option<Params> = None;
+                let mut count = 0usize;
+                for lane_res in round_out.into_iter().flatten() {
+                    match lane_res {
+                        Ok(items) => {
+                            for (res, g) in items {
+                                loss_sum += res.loss as f64;
+                                total_correct += res.ncorrect as f64;
+                                total_seed += res.n_seed;
+                                match gsum.as_mut() {
+                                    Some(acc) => acc.add_assign(&g),
+                                    None => gsum = Some(g),
+                                }
+                                count += 1;
+                            }
+                        }
+                        Err(e) => {
+                            epoch_result = Err(e);
+                            break 'rounds;
+                        }
+                    }
+                }
+                // One SGD step with the mean round gradient; the updated
+                // params are re-broadcast to the next round by reborrow.
+                if let Some(g) = gsum {
+                    params.sgd(&g, cfg.lr / count as f32);
+                }
+            }
+
+            lane_tallies = lanes.iter().map(|l| l.tally()).collect();
+            // Dropping the lanes disconnects the receivers, unblocking any
+            // producer still parked on a bounded send after an early exit.
+            drop(lanes);
+        });
+        epoch_result?;
+
+        let mut per_replica: Vec<EpochMetrics> = Vec::with_capacity(n_lanes);
+        for (eng, t) in engines.iter().zip(&lane_tallies) {
+            let mut pm = EpochMetrics {
+                cpu_time: t.cpu_time,
+                batches: t.batches,
+                dropped_nodes: t.dropped_nodes,
+                dropped_edges: t.dropped_edges,
+                ..Default::default()
+            };
+            pm.fill_from_counters(&eng.counters().borrow());
+            per_replica.push(pm);
+        }
+        let mut group = EpochMetrics::default();
+        for pr in &per_replica {
+            group.absorb(pr);
+        }
+        group.wall = wall0.elapsed();
+        group.loss = loss_sum / n_batches.max(1) as f64;
+        group.acc = total_correct / total_seed.max(1) as f64;
+        Ok(ReplicaMetrics { group, per_replica })
+    }
+}
+
+/// One replica's execution lane: exclusive backend access plus the CPU-side
+/// tallies the per-replica metrics report.
+struct Lane<'e, B: ExecBackend> {
+    eng: &'e mut B,
+    /// Producer channel (pipeline mode); `None` = prepare inline.
+    rx: Option<Receiver<PreparedCpu>>,
+    pool: WorkerPool,
+    rng: Rng,
+    cpu_time: Duration,
+    batches: usize,
+    dropped_nodes: usize,
+    dropped_edges: usize,
+}
+
+#[derive(Clone, Copy, Default)]
+struct LaneTally {
+    cpu_time: Duration,
+    batches: usize,
+    dropped_nodes: usize,
+    dropped_edges: usize,
+}
+
+impl<'e, B: ExecBackend> Lane<'e, B> {
+    /// Compute gradients for this lane's slice of one round, against the
+    /// round's parameter snapshot. Returns `(step result, gradient)` per
+    /// batch, in batch order.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round(
+        &mut self,
+        graph: &HeteroGraph,
+        scfg: SamplerCfg,
+        d: Dims,
+        opt: OptConfig,
+        model: ModelKind,
+        schema: &SchemaTensors,
+        params: &Params,
+        epoch: u64,
+        batches: &[usize],
+    ) -> RoundOutput {
+        let exec = StepExecutor::new(&*self.eng, model, opt);
+        let mut out = Vec::with_capacity(batches.len());
+        for &b in batches {
+            let prep = match &self.rx {
+                Some(rx) => rx
+                    .recv()
+                    .map_err(|_| anyhow!("replica producer disconnected before batch {b}"))?,
+                None => prepare_cpu(graph, scfg, &d, &opt, &self.pool, &self.rng, epoch, b),
+            };
+            self.cpu_time += prep.cpu_time;
+            self.dropped_nodes += prep.dropped_nodes;
+            self.dropped_edges += prep.dropped_edges;
+            self.batches += 1;
+            let batch = assemble_batch(&*self.eng, &d, schema, prep)?;
+            out.push(exec.grad_step(params, schema, &batch)?);
+        }
+        Ok(out)
+    }
+
+    fn tally(&self) -> LaneTally {
+        LaneTally {
+            cpu_time: self.cpu_time,
+            batches: self.batches,
+            dropped_nodes: self.dropped_nodes,
+            dropped_edges: self.dropped_edges,
+        }
+    }
+}
+
+/// Contiguous per-lane `(start, len)` split of a round of `len` batches,
+/// balanced so no lane idles while another holds 2+ batches (the first
+/// `len % lanes` lanes take one extra). Depends only on `(len, lanes)`;
+/// the merge is batch-ordered for *any* contiguous split, so balancing is
+/// free of trajectory effects. Lanes beyond the work get `len == 0`.
+fn round_split(len: usize, lanes: usize) -> Vec<(usize, usize)> {
+    let base = len / lanes.max(1);
+    let extra = len % lanes.max(1);
+    let mut start = 0usize;
+    (0..lanes)
+        .map(|i| {
+            let l = base + usize::from(i < extra);
+            let a = start;
+            start += l;
+            (a, l)
+        })
+        .collect()
+}
+
+/// Every lane's global batch indices for a whole epoch, in the order its
+/// producer streams them (round by round, contiguous within each round).
+fn lane_schedule(n_batches: usize, round: usize, lanes: usize) -> Vec<Vec<usize>> {
+    let round = round.max(1);
+    let mut sched = vec![Vec::new(); lanes];
+    let mut r0 = 0usize;
+    while r0 < n_batches {
+        let len = round.min(n_batches - r0);
+        for (i, (a, l)) in round_split(len, lanes).into_iter().enumerate() {
+            sched[i].extend(r0 + a..r0 + a + l);
+        }
+        r0 += len;
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_split_covers_contiguously_for_any_lane_count() {
+        for len in 0..9 {
+            for lanes in 1..6 {
+                let split = round_split(len, lanes);
+                assert_eq!(split.len(), lanes);
+                let mut next = 0usize;
+                for &(a, l) in &split {
+                    if l > 0 {
+                        assert_eq!(a, next, "len={len} lanes={lanes}");
+                        next = a + l;
+                    }
+                }
+                assert_eq!(next, len, "len={len} lanes={lanes}: not covered");
+            }
+        }
+    }
+
+    #[test]
+    fn round_split_keeps_every_lane_busy_when_possible() {
+        // No lane may idle while another holds 2+ batches (e.g. the old
+        // ceil-chunking gave round_split(4, 3) = [2, 2, 0]).
+        for len in 1..10 {
+            for lanes in 1..=len {
+                let split = round_split(len, lanes);
+                assert!(
+                    split.iter().all(|&(_, l)| l > 0),
+                    "len={len} lanes={lanes}: idle lane in {split:?}"
+                );
+                let max = split.iter().map(|&(_, l)| l).max().unwrap();
+                let min = split.iter().map(|&(_, l)| l).min().unwrap();
+                assert!(max - min <= 1, "len={len} lanes={lanes}: unbalanced {split:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_schedule_is_a_partition_in_round_order() {
+        for (n, round, lanes) in [(10, 4, 2), (7, 3, 4), (5, 4, 1), (0, 4, 3), (9, 1, 2)] {
+            let sched = lane_schedule(n, round, lanes);
+            let mut all: Vec<usize> = sched.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n} round={round} lanes={lanes}");
+            // Each lane's stream is strictly increasing (producer order).
+            for lane in &sched {
+                assert!(lane.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn lane_schedule_matches_per_round_splits() {
+        // The producer stream must be exactly the concatenation of the
+        // per-round assignments the consumer computes.
+        let (n, round, lanes) = (11usize, 4usize, 3usize);
+        let sched = lane_schedule(n, round, lanes);
+        let mut expect = vec![Vec::new(); lanes];
+        let mut r0 = 0;
+        while r0 < n {
+            let len = round.min(n - r0);
+            for (i, (a, l)) in round_split(len, lanes).into_iter().enumerate() {
+                expect[i].extend(r0 + a..r0 + a + l);
+            }
+            r0 += len;
+        }
+        assert_eq!(sched, expect);
+    }
+
+    #[test]
+    fn thread_budget_splits_and_floors_at_one() {
+        assert_eq!(replica_thread_budget(8, 2), 4);
+        assert_eq!(replica_thread_budget(4, 4), 1);
+        assert_eq!(replica_thread_budget(2, 4), 1);
+        assert_eq!(replica_thread_budget(0, 0), 1);
+    }
+}

@@ -7,7 +7,9 @@
 //!   synthetic RDF-style dataset generators, mini-batch neighbor sampler,
 //!   CPU-offloaded parallel edge-index selection (the paper's Algorithm 2),
 //!   execution planner (PyG-style baseline vs HiFuse), asynchronous
-//!   CPU/GPU pipeline, metrics and roofline accounting.
+//!   CPU/GPU pipeline, data-parallel replica training
+//!   ([`coordinator::ReplicaGroup`], bit-identical for any replica count),
+//!   metrics and roofline accounting.
 //! * **L2** — the stage-module interface (`runtime::Manifest`), executed by
 //!   a pluggable [`runtime::ExecBackend`]: the pure-Rust
 //!   `runtime::SimBackend` (default — interprets every module with the
@@ -23,7 +25,33 @@
 //!
 //! One backend dispatch ≙ one "CUDA kernel launch" of the paper, so kernel
 //! counts and stage breakdowns (Figs. 7–11) mean the same thing on every
-//! backend. See `DESIGN.md` for the substitution table.
+//! backend. See `DESIGN.md` for the substitution table and the design
+//! rationale behind each subsystem; `EXPERIMENTS.md` logs the perf-pass
+//! findings those docs cite.
+//!
+//! # Quickstart
+//!
+//! The whole training path is generic over [`runtime::ExecBackend`]; the
+//! built-in `tiny` profile makes the sim backend self-contained:
+//!
+//! ```
+//! use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+//! use hifuse::graph::datasets::tiny_graph;
+//! use hifuse::models::ModelKind;
+//! use hifuse::runtime::{ExecBackend, SimBackend};
+//!
+//! // One dispatch on any backend ≙ one "CUDA kernel launch" of the paper.
+//! let eng = SimBackend::builtin("tiny")?;
+//! let opt = OptConfig::hifuse();
+//! let mut graph = tiny_graph(1);
+//! prepare_graph_layout(&mut graph, &opt);
+//! let cfg = TrainCfg { epochs: 1, batch_size: 8, fanout: 3, ..Default::default() };
+//! let mut trainer = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
+//! let metrics = trainer.train_epoch(0)?;
+//! assert!(metrics.kernels_total > 0);
+//! assert_eq!(metrics.kernels_total, eng.counters().borrow().total());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 // The reference interpreter is deliberately written as explicit index
 // loops mirroring ref.py; these two lints fight that style.

@@ -1,11 +1,11 @@
 //! `repro` — the HiFuse-RS launcher.
 //!
 //! Subcommands:
-//!   datasets                     print Table 2 (generator statistics)
-//!   train [flags]                train a model, print per-epoch metrics
-//!   counts [flags]               measured vs predicted kernel counts
-//!   calibrate [flags]            machine peaks (compute / bandwidth / launch)
-//!   profile [flags]              per-module time breakdown of one step
+//!   datasets                       print Table 2 (generator statistics)
+//!   train `[flags]`                train a model, print per-epoch metrics
+//!   counts `[flags]`               measured vs predicted kernel counts
+//!   calibrate `[flags]`            machine peaks (compute / bandwidth / launch)
+//!   profile `[flags]`              per-module time breakdown of one step
 //!
 //! Common flags: --dataset aifb|mutag|bgs|am|tiny --model rgcn|rgat
 //!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked --epochs N
@@ -13,6 +13,8 @@
 //!   --backend sim|pjrt (default sim) --profile tiny|bench (sim backend)
 //!   --sim-overhead-us F (simulated launch cost, sim backend)
 //!   --artifacts DIR (pjrt backend artifact dir, default artifacts/bench)
+//!   --replicas N (train only, sim backend: data-parallel replica rounds
+//!   with a bit-identical trajectory for every N — DESIGN.md §4)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
@@ -23,7 +25,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use hifuse::config::{BackendKind, RunConfig};
-use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, Trainer};
+use hifuse::coordinator::{
+    prepare_cpu, prepare_graph_layout, replica_thread_budget, ReplicaGroup, Trainer,
+};
 use hifuse::graph::datasets::DATASETS;
 use hifuse::models::plan;
 use hifuse::models::step::Dims;
@@ -69,7 +73,9 @@ fn print_usage() {
          \x20 --sim-overhead-us F                 --artifacts DIR (pjrt)\n\
          \x20 --epochs N --batch-size N --fanout N --lr F --seed N\n\
          \x20 --threads N --scale F\n\
-         see README.md for details"
+         \x20 --replicas N (train, sim: data-parallel replica rounds;\n\
+         \x20               trajectory bit-identical for every N)\n\
+         see README.md and DESIGN.md for details"
     );
 }
 
@@ -87,6 +93,18 @@ enum Action {
 /// generic over `ExecBackend`.
 fn dispatch(args: &[String], action: Action) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    if let Some(n) = cfg.replicas {
+        if !matches!(action, Action::Train) {
+            bail!("--replicas is only supported by the `train` subcommand");
+        }
+        if cfg.backend != BackendKind::Sim {
+            bail!(
+                "--replicas requires the sim backend (replica lanes need a \
+                 Send backend; the PJRT client is Rc-based)"
+            );
+        }
+        return cmd_train_replicas(&cfg, n);
+    }
     match cfg.backend {
         BackendKind::Sim => {
             // --threads governs both the CPU stages (selection, collection)
@@ -100,6 +118,89 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
         }
         BackendKind::Pjrt => pjrt_dispatch(&cfg, action),
     }
+}
+
+/// Data-parallel `train` over `n` sim-backend replicas: one backend (own
+/// arena + counters) per replica, sharing the `--threads` budget, merged by
+/// the deterministic fixed-order all-reduce (DESIGN.md §4).
+fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
+    // A lane beyond the round width would never receive a batch (rounds
+    // hold DEFAULT_ROUND batches) yet still shrink every working lane's
+    // thread share. Clamping is invisible to the numerics — the trajectory
+    // is replica-count-invariant — and strictly faster.
+    let round = hifuse::coordinator::DEFAULT_ROUND;
+    if n > round {
+        eprintln!(
+            "note: clamping --replicas {n} to the round width {round} (extra lanes would idle)"
+        );
+    }
+    let probe = SimBackend::builtin(cfg.resolved_profile())?;
+    let d = Dims::from_backend(&probe);
+    let cfg = &clamped(cfg, &d);
+    let mut graph = cfg.load_graph(d.f)?;
+    prepare_graph_layout(&mut graph, &cfg.opt);
+    let overhead = Duration::from_secs_f64(cfg.sim_overhead_us.max(0.0) * 1e-6);
+    let mut group = ReplicaGroup::builtin(
+        cfg.resolved_profile(),
+        n,
+        overhead,
+        &graph,
+        cfg.model,
+        cfg.opt,
+        cfg.train,
+        round,
+    )?;
+    let threads_per = replica_thread_budget(cfg.train.threads, group.replicas());
+    load_ckpt_env(&mut group.params)?;
+    println!(
+        "dataset={} model={} mode={} ({}) backend=sim profile={} replicas={} \
+         round={} threads/replica={} batches/epoch={}",
+        cfg.dataset,
+        cfg.model.name(),
+        cfg.mode_name,
+        cfg.opt.label(),
+        group.engines()[0].profile(),
+        group.replicas(),
+        group.round(),
+        threads_per,
+        graph.train_idx.len().div_ceil(cfg.train.batch_size),
+    );
+    for epoch in 0..cfg.train.epochs as u64 {
+        let m = group.train_epoch(epoch)?;
+        let per_rep: Vec<String> =
+            m.per_replica.iter().map(|r| r.kernels_total.to_string()).collect();
+        println!(
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | kernels {} (per replica: {})",
+            m.group.loss,
+            m.group.acc,
+            m.group.wall,
+            m.group.cpu_time,
+            m.group.gpu_time,
+            m.group.kernels_total,
+            per_rep.join("/"),
+        );
+    }
+    save_ckpt_env(&group.params)?;
+    Ok(())
+}
+
+/// Apply `HIFUSE_LOAD_CKPT` to a parameter set if the env var is present —
+/// one implementation for both the single-backend and replica train paths.
+fn load_ckpt_env(params: &mut hifuse::models::Params) -> Result<()> {
+    if let Ok(path) = std::env::var("HIFUSE_LOAD_CKPT") {
+        *params = hifuse::models::checkpoint::load(std::path::Path::new(&path))?;
+        println!("loaded checkpoint {path}");
+    }
+    Ok(())
+}
+
+/// Counterpart of [`load_ckpt_env`] for `HIFUSE_SAVE_CKPT`.
+fn save_ckpt_env(params: &hifuse::models::Params) -> Result<()> {
+    if let Ok(path) = std::env::var("HIFUSE_SAVE_CKPT") {
+        hifuse::models::checkpoint::save(params, std::path::Path::new(&path))?;
+        println!("saved checkpoint {path}");
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -175,10 +276,7 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         graph.train_idx.len().div_ceil(cfg.train.batch_size),
     );
     let mut tr = Trainer::new(eng, &graph, cfg.model, cfg.opt, cfg.train)?;
-    if let Ok(path) = std::env::var("HIFUSE_LOAD_CKPT") {
-        tr.params = hifuse::models::checkpoint::load(std::path::Path::new(&path))?;
-        println!("loaded checkpoint {path}");
-    }
+    load_ckpt_env(&mut tr.params)?;
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
         println!(
@@ -186,10 +284,7 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             m.loss, m.acc, m.wall, m.cpu_time, m.gpu_time, m.kernels_total
         );
     }
-    if let Ok(path) = std::env::var("HIFUSE_SAVE_CKPT") {
-        hifuse::models::checkpoint::save(&tr.params, std::path::Path::new(&path))?;
-        println!("saved checkpoint {path}");
-    }
+    save_ckpt_env(&tr.params)?;
     Ok(())
 }
 

@@ -92,6 +92,29 @@ impl Params {
         }
     }
 
+    /// `self += g`, elementwise over every parameter tensor — the reduction
+    /// primitive of the replica all-reduce (DESIGN.md §4). Chaining
+    /// `add_assign` in a fixed order is what keeps the merged gradient
+    /// bitwise independent of how batches were distributed over replicas.
+    pub fn add_assign(&mut self, g: &Params) {
+        let pairs: [(&mut Vec<f32>, &Vec<f32>); 6] = [
+            (&mut self.w0, &g.w0),
+            (&mut self.w1, &g.w1),
+            (&mut self.a_src0, &g.a_src0),
+            (&mut self.a_dst0, &g.a_dst0),
+            (&mut self.a_src1, &g.a_src1),
+            (&mut self.a_dst1, &g.a_dst1),
+        ];
+        for (a, b) in pairs {
+            // Hard assert: zip would silently truncate on a shape mismatch,
+            // turning a caller bug into a wrong gradient with no diagnostic.
+            assert_eq!(a.len(), b.len(), "Params::add_assign shape mismatch");
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+        }
+    }
+
     /// `self -= lr * g`.
     pub fn sgd(&mut self, g: &Params, lr: f32) {
         tensor::sgd_step(&mut self.w0, &g.w0, lr);
@@ -136,6 +159,20 @@ mod tests {
         assert!(a.w0.iter().all(|x| x.abs() < 2.0));
         assert_eq!(a.w0.len(), 4 * 8 * 16);
         assert_eq!(a.w1.len(), 4 * 16 * 4);
+    }
+
+    #[test]
+    fn add_assign_sums_every_tensor() {
+        let mut a = Params::init(2, 4, 8, 2, 3);
+        let before = a.clone();
+        let b = Params::init(2, 4, 8, 2, 5);
+        a.add_assign(&b);
+        for ((x, y), z) in a.w0.iter().zip(&before.w0).zip(&b.w0) {
+            assert_eq!(*x, *y + *z);
+        }
+        for ((x, y), z) in a.a_dst1.iter().zip(&before.a_dst1).zip(&b.a_dst1) {
+            assert_eq!(*x, *y + *z);
+        }
     }
 
     #[test]

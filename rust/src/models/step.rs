@@ -1,5 +1,5 @@
 //! The training-step executor: chains AOT modules according to the active
-//! execution plan (DESIGN.md §5).
+//! execution plan (DESIGN.md §3).
 //!
 //! * **Baseline ("PyG")**: per-relation projection + per-relation
 //!   aggregation dispatches, semantic-graph build on "GPU".
@@ -736,14 +736,17 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         self.eng.recycle(l.hout);
     }
 
-    /// Run one full training step (forward, loss, backward, SGD update).
-    pub fn train_step(
+    /// Forward + loss + backward, **without** the parameter update: returns
+    /// the step result and the raw gradients. This is the unit the
+    /// data-parallel replica path all-reduces (DESIGN.md §4) — gradients are
+    /// bitwise-deterministic in (`params`, `batch`), independent of thread
+    /// count, so summing them in a fixed order is replica-count-invariant.
+    pub fn grad_step(
         &self,
-        params: &mut Params,
+        params: &Params,
         schema: &SchemaTensors,
         batch: &BatchData,
-        lr: f32,
-    ) -> Result<StepResult> {
+    ) -> Result<(StepResult, Params)> {
         let (d, eng) = (&self.d, self.eng);
         assert_eq!(batch.layers.len(), 2, "2-layer model");
 
@@ -776,8 +779,20 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         self.recycle_layer(l1);
         self.recycle_layer(l0);
 
+        Ok((StepResult { loss, ncorrect, n_seed: batch.n_seed }, grads))
+    }
+
+    /// Run one full training step (forward, loss, backward, SGD update).
+    pub fn train_step(
+        &self,
+        params: &mut Params,
+        schema: &SchemaTensors,
+        batch: &BatchData,
+        lr: f32,
+    ) -> Result<StepResult> {
+        let (res, grads) = self.grad_step(params, schema, batch)?;
         params.sgd(&grads, lr);
-        Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
+        Ok(res)
     }
 
     /// Forward-only pass returning (loss, ncorrect) — evaluation helper.

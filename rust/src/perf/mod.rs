@@ -6,6 +6,14 @@
 //! large memcpy for bandwidth, a minimal dispatch for launch overhead), so
 //! "throughput %" numbers are relative to the same substrate the kernels
 //! run on — the CPU-PJRT analogue of Nsight Compute's SOL metrics.
+//!
+//! [`module_cost`] prices each manifest module analytically (algorithmic
+//! FLOPs and bytes, the convention roofline studies use); combined with
+//! the measured [`Peaks`], every dispatch event classifies as compute- or
+//! memory-bound ([`roofline_rows`], feeding Fig. 3b and Table 3). The
+//! work/span [`parallel_model`] is the shared model behind
+//! `semantic::modeled_parallel_speedup` — the multi-core CPU-stage scaling
+//! a single-core container cannot measure (DESIGN.md §1).
 
 use std::time::Instant;
 
@@ -127,6 +135,16 @@ pub fn calibrate<B: ExecBackend>(eng: &B) -> Result<Peaks> {
     Ok(Peaks { gflops: gflops.max(1e-9), membw_gbs: bw.max(1e-9), dispatch_us })
 }
 
+/// Work/span model of a parallel CPU stage (Brent's bound): the predicted
+/// wall time of `work_s` serial seconds spread over `threads` workers when
+/// the largest indivisible chunk costs `span_s` seconds —
+/// `max(span, work/threads)`. Single-core containers use this to report
+/// the multi-core selection/collection time they cannot measure
+/// (DESIGN.md §1); it ignores scheduling overhead, so it is a lower bound.
+pub fn parallel_model(work_s: f64, span_s: f64, threads: usize) -> f64 {
+    (work_s / threads.max(1) as f64).max(span_s)
+}
+
 /// One roofline point (Fig. 3b): a dispatched kernel's arithmetic
 /// intensity vs achieved compute, plus its bound classification.
 #[derive(Clone, Debug)]
@@ -173,6 +191,16 @@ mod tests {
 
     fn dims() -> Dims {
         Dims { ns: 512, ep: 256, rpad: 128, tpad: 32, f: 32, h: 64, c: 16, elp: 32768 }
+    }
+
+    #[test]
+    fn parallel_model_is_brents_bound() {
+        // Perfectly divisible work scales linearly ...
+        assert_eq!(parallel_model(8.0, 0.5, 8), 1.0);
+        // ... until the span dominates ...
+        assert_eq!(parallel_model(8.0, 2.0, 8), 2.0);
+        // ... and zero threads degrade to serial.
+        assert_eq!(parallel_model(8.0, 0.5, 0), 8.0);
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Result writers: CSV + markdown tables into `results/` (the bench
-//! harness regenerates every paper table/figure as one of these files).
+//! harness regenerates every paper table/figure as one of these files),
+//! plus the small numeric formatting helpers the tables share.
+//!
+//! The output directory defaults to `./results` and is overridable via the
+//! `HIFUSE_RESULTS_DIR` environment variable (used by tests and CI).
+//! Markdown tables are echoed to stdout as they are written, so a bench
+//! run doubles as a human-readable report.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;

@@ -39,6 +39,17 @@ pub struct ArenaStats {
     pub bytes_allocated: u64,
 }
 
+impl std::ops::AddAssign for ArenaStats {
+    /// Sum traffic counters — used to aggregate per-replica arenas into the
+    /// group totals (DESIGN.md §4).
+    fn add_assign(&mut self, o: ArenaStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.bytes_recycled += o.bytes_recycled;
+        self.bytes_allocated += o.bytes_allocated;
+    }
+}
+
 /// The pool proper: free lists keyed by power-of-two capacity class.
 #[derive(Debug, Default)]
 pub struct Arena {
@@ -156,6 +167,17 @@ fn prev_power_of_two(n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stats_add_assign_sums_fields() {
+        let mut a = ArenaStats { hits: 1, misses: 2, bytes_recycled: 3, bytes_allocated: 4 };
+        let b = ArenaStats { hits: 10, misses: 20, bytes_recycled: 30, bytes_allocated: 40 };
+        a += b;
+        assert_eq!(
+            a,
+            ArenaStats { hits: 11, misses: 22, bytes_recycled: 33, bytes_allocated: 44 }
+        );
+    }
 
     #[test]
     fn take_put_take_hits() {

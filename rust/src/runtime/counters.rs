@@ -1,7 +1,7 @@
 //! Kernel-launch accounting and the dispatch event log.
 //!
 //! One PJRT executable dispatch ≙ one "CUDA kernel launch" of the paper
-//! (DESIGN.md §2). Everything the paper's evaluation counts — Fig. 8
+//! (DESIGN.md §1). Everything the paper's evaluation counts — Fig. 8
 //! (kernels per epoch), Fig. 11 (per-stage reduction), Fig. 3a (timeline) —
 //! is derived from this log, so counts are *measured*, not modeled.
 

@@ -6,7 +6,7 @@
 //! through the PJRT C API).
 //!
 //! The paper's claim is about *counting and reducing kernel dispatches*
-//! (DESIGN.md §2), so the backend contract is exactly the dispatch surface:
+//! (DESIGN.md §1), so the backend contract is exactly the dispatch surface:
 //! `run` / `run_dev` execute one module (one "CUDA kernel launch"),
 //! shape/dtype-check its arguments against the manifest, and record the
 //! launch in [`Counters`]. Kernel counts and per-stage breakdowns therefore

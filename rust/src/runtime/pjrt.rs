@@ -1,7 +1,7 @@
 //! PJRT execution backend (`--features pjrt`): load AOT artifacts, execute
 //! them, count every dispatch.
 //!
-//! This is the "GPU" of the reproduction (DESIGN.md §2): the `xla` crate's
+//! This is the "GPU" of the reproduction (DESIGN.md §1): the `xla` crate's
 //! CPU PJRT client stands in for the T4, one executable dispatch stands in
 //! for one CUDA kernel launch, and the per-dispatch fixed overhead (real,
 //! measured by [`ExecBackend::measure_dispatch_overhead`]) plays the role

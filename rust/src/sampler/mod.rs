@@ -11,7 +11,7 @@
 //! Static-shape discipline: per-type slots are capped at `ns`, per-relation
 //! per-layer edges at `ep`; overflow is *dropped and counted* (the
 //! `dropped_*` fields), mirroring the bucket-padding contract in DESIGN.md
-//! §5. The caps come from the AOT profile, so the sampler can never emit a
+//! §6. The caps come from the AOT profile, so the sampler can never emit a
 //! batch the compiled modules cannot hold.
 
 pub mod collect;
@@ -57,7 +57,7 @@ impl TaggedEdges {
 /// A sampled mini-batch.
 pub struct MiniBatch {
     /// Seed vertices (type-local ids of the target type); slot i of the
-    /// target type holds seeds[i].
+    /// target type holds `seeds[i]`.
     pub seeds: Vec<u32>,
     /// Per type: slot -> type-local vertex id.
     pub slots: Vec<Vec<u32>>,

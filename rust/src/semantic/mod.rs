@@ -11,8 +11,9 @@
 //!   relation (what a single CPU thread does).
 //! * [`select_parallel`] — the relations partitioned across a scoped
 //!   `std::thread` pool (the OpenMP analogue). NOTE: this container has one
-//!   core, so the measured gain is ≈1x; `perf::parallel_model` reports the
-//!   work/span-modeled multi-core time alongside (DESIGN.md §2).
+//!   core, so the measured gain is ≈1x; [`modeled_parallel_speedup`] (on
+//!   `perf::parallel_model`) gives the work/span-modeled multi-core
+//!   scaling instead (DESIGN.md §1).
 //! * [`select_bucketed`] — a single-pass counting-sort variant (O(E) instead
 //!   of O(R·E)); our perf-pass extension beyond the paper (§Perf).
 //!
@@ -95,11 +96,14 @@ pub fn select_bucketed(t: &TaggedEdges, n_rel: usize) -> Vec<RelEdges> {
 }
 
 /// Work/span accounting for the parallel selection, used to model the
-/// multi-core speedup this 1-core container cannot measure (DESIGN.md §2):
+/// multi-core speedup this 1-core container cannot measure (DESIGN.md §1):
 /// serial work = R·E compares; with `p` threads the span is
 /// `ceil(R/p)·E`, so modeled time = measured_serial / min(p, R).
+/// Expressed through the shared [`crate::perf::parallel_model`] (one unit
+/// of work per relation, a one-relation span).
 pub fn modeled_parallel_speedup(n_rel: usize, n_threads: usize) -> f64 {
-    n_threads.max(1).min(n_rel.max(1)) as f64
+    let work = n_rel.max(1) as f64;
+    work / crate::perf::parallel_model(work, 1.0, n_threads)
 }
 
 #[cfg(test)]

@@ -1,5 +1,10 @@
 //! Timing statistics for the hand-rolled benchmark harness (criterion is
 //! not available offline): mean / stddev / percentiles over sample sets.
+//!
+//! Samples are stored in microseconds as `f64`; percentile queries sort a
+//! copy on demand, so pushing stays O(1) on the measurement path. Used by
+//! `perf::calibrate` (machine peaks) and the bench harness's per-cell
+//! timing loops.
 
 use std::time::Duration;
 
