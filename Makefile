@@ -27,9 +27,11 @@ bench: build
 	cargo bench --bench paper
 
 # Same matrix, plus the machine-readable perf trajectory written to
-# ./BENCH_2.json (per-stage wall/cpu/gpu times, kernel counts,
-# arena allocs-per-step). Set HIFUSE_PRE_PR_WALL_MS=<ms> (RGCN/aifb hifuse
-# epoch wall of the previous build) to record the cross-build speedup.
+# ./BENCH_2.json (per-stage wall/cpu/gpu times — the cpu side broken down
+# into sample/select/collect — kernel counts, arena allocs-per-step) and
+# the producer-scaling study in results/producer_scaling.{md,csv}. Set
+# HIFUSE_PRE_PR_WALL_MS=<ms> (RGCN/aifb hifuse epoch wall of the previous
+# build) to record the cross-build speedup.
 bench-json: build
 	HIFUSE_BENCH_JSON=$(CURDIR)/BENCH_2.json cargo bench --bench paper
 

@@ -22,7 +22,8 @@ use hifuse::runtime::SimBackend;
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::var("E2E_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
-    let cfg = TrainCfg { epochs, batch_size: 48, fanout: 4, lr: 0.08, seed: 42, threads: 4 };
+    let cfg =
+        TrainCfg { epochs, batch_size: 48, fanout: 4, lr: 0.08, seed: 42, threads: 4, producers: 0 };
     let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
     let d = Dims::from_backend(&eng);
 

@@ -7,7 +7,7 @@
 //!
 //! Runs on the self-contained sim backend (no artifacts, no Python).
 
-use hifuse::coordinator::{prepare_cpu, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{prepare_graph_layout, CpuProducer, OptConfig, TrainCfg, Trainer};
 use hifuse::graph::datasets::{generate, spec_by_name};
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
@@ -39,13 +39,15 @@ fn main() -> anyhow::Result<()> {
     prepare_graph_layout(&mut graph, &opt);
     let mut tr = Trainer::new(&eng, &graph, ModelKind::Rgcn, opt, cfg)?;
 
-    // Warm up compile caches, then profile exactly one batch.
+    // Warm up compile caches, then profile exactly one batch — through a
+    // persistent producer, so the measured window starts at real batch
+    // preparation rather than scratch construction.
     let scfg = SamplerCfg { batch_size: 64, fanout: 4, layers: 2, ns: d.ns, ep: d.ep };
-    let pool = WorkerPool::new(1);
-    let prep = prepare_cpu(&graph, scfg, &d, &opt, &pool, &Rng::new(1), 0, 0);
+    let mut producer = CpuProducer::new(&graph, scfg, d, opt, WorkerPool::new(1), Rng::new(1));
+    let prep = producer.produce(0, 0);
     tr.compute_batch(prep)?;
     eng.reset_counters(true);
-    let prep = prepare_cpu(&graph, scfg, &d, &opt, &pool, &Rng::new(1), 0, 1);
+    let prep = producer.produce(0, 1);
     tr.compute_batch(prep)?;
 
     let counters = eng.counters().borrow();

@@ -22,8 +22,8 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use hifuse::coordinator::{
-    prepare_cpu, prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg,
-    Trainer, DEFAULT_ROUND,
+    prepare_graph_layout, producer_count, replica_thread_budget, CpuProducer, OptConfig,
+    ReplicaGroup, TrainCfg, Trainer, DEFAULT_ROUND,
 };
 use hifuse::graph::datasets::{generate, spec_by_name, DATASETS};
 use hifuse::graph::HeteroGraph;
@@ -75,6 +75,8 @@ struct RunRow {
     /// Arena misses per training step over the measured epoch (~0 when the
     /// buffer pool is warm; includes warm-up allocations in quick mode).
     allocs_per_step: f64,
+    /// Per-stage CPU producer time, ms: (sample, select, collect).
+    cpu_stage_ms: (f64, f64, f64),
 }
 
 /// One measured epoch. Full mode runs a warm-up epoch first (compiles
@@ -117,6 +119,11 @@ fn run_one<B: ExecBackend>(
         kernels_by_stage: m.kernels_by_stage.iter().map(|&(s, c)| (s.name(), c)).collect(),
         allocs_per_step: (m.arena.misses.saturating_sub(misses0)) as f64
             / m.batches.max(1) as f64,
+        cpu_stage_ms: (
+            m.cpu_by_stage.sample.as_secs_f64() * 1e3,
+            m.cpu_by_stage.select.as_secs_f64() * 1e3,
+            m.cpu_by_stage.collect.as_secs_f64() * 1e3,
+        ),
     }
 }
 
@@ -131,7 +138,15 @@ fn main() -> anyhow::Result<()> {
     // dispatch counts are backend-invariant; wall-clock shape is preserved
     // because every dispatch pays the same measured launch overhead).
     // threads=4 drives CPU stages AND sim kernel row-parallelism.
-    let cfg = TrainCfg { epochs: 2, batch_size: 64, fanout: 4, lr: 0.05, seed: 42, threads: 4 };
+    let cfg = TrainCfg {
+        epochs: 2,
+        batch_size: 64,
+        fanout: 4,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers: 0,
+    };
     let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
     let d = Dims::from_backend(&eng);
 
@@ -337,11 +352,13 @@ fn main() -> anyhow::Result<()> {
             let opt = OptConfig::parse(mode).unwrap();
             prepare_graph_layout(g, &opt);
             let mut tr = Trainer::new(&eng, g, model, opt, cfg)?;
-            let pool1 = WorkerPool::new(1);
-            let prep = prepare_cpu(g, scfg, &d, &opt, &pool1, &Rng::new(1), 0, 0);
+            // Persistent producer so the Fig. 3 timeline window measures
+            // batch preparation, not the scratch's one-time construction.
+            let mut producer = CpuProducer::new(g, scfg, d, opt, WorkerPool::new(1), Rng::new(1));
+            let prep = producer.produce(0, 0);
             tr.compute_batch(prep)?; // warm
             eng.reset_counters(true);
-            let prep = prepare_cpu(g, scfg, &d, &opt, &pool1, &Rng::new(1), 0, 1);
+            let prep = producer.produce(0, 1);
             tr.compute_batch(prep)?;
             let counters = eng.counters().borrow();
             // Fig 3 artifacts come from the RGCN baseline batch (paper's setup).
@@ -455,8 +472,66 @@ fn main() -> anyhow::Result<()> {
         &rows,
     )?;
 
+    // ---------------- producer scaling: multi-producer pipeline walls ------
+    // RGCN/aifb with the full HiFuse plan (pipeline on), varying the CPU
+    // sampling-worker count. The loss column is the parity witness — the
+    // trajectory is bit-identical for every producer count
+    // (tests/producer_parity.rs) — and the modeled column is the
+    // work/span pipeline bound (perf::pipeline_model) fed with the
+    // 1-producer row's measured CPU/GPU split (EXPERIMENTS.md §Perf #6).
+    let mut rows = Vec::new();
+    {
+        let g = graphs.get_mut("aifb").unwrap();
+        let opt = OptConfig::hifuse();
+        prepare_graph_layout(g, &opt);
+        let mut base_split: Option<(f64, f64, f64)> = None; // (cpu_s, gpu_s, wall_ms)
+        for producers in [1usize, 2, 4] {
+            eprintln!("[bench] producers={producers} aifb rgcn hifuse ...");
+            let pcfg = TrainCfg { producers, ..cfg };
+            let mut tr = Trainer::new(&eng, g, ModelKind::Rgcn, opt, pcfg)?;
+            if !quick {
+                tr.train_epoch(0)?; // warm the arena + producer pools
+            }
+            let m = tr.train_epoch(if quick { 0 } else { 1 })?;
+            let wall_ms = m.wall.as_secs_f64() * 1e3;
+            let (cpu_s, gpu_s) = (
+                m.cpu_time.as_secs_f64() / m.batches.max(1) as f64,
+                m.gpu_time.as_secs_f64() / m.batches.max(1) as f64,
+            );
+            if base_split.is_none() {
+                base_split = Some((cpu_s, gpu_s, wall_ms));
+            }
+            let (b_cpu, b_gpu, b_wall) = base_split.unwrap();
+            let modeled_x = perf::pipeline_model(b_cpu, b_gpu, 1)
+                / perf::pipeline_model(b_cpu, b_gpu, producers);
+            rows.push(vec![
+                producers.to_string(),
+                f2(wall_ms),
+                f2(b_wall / wall_ms),
+                f2(modeled_x),
+                f2(m.cpu_by_stage.sample.as_secs_f64() * 1e3),
+                f2(m.cpu_by_stage.select.as_secs_f64() * 1e3),
+                f2(m.cpu_by_stage.collect.as_secs_f64() * 1e3),
+                format!("{:.6}", m.loss),
+            ]);
+        }
+    }
+    write_md_table(
+        "producer_scaling.md",
+        "Producer scaling — multi-producer pipeline epoch wall (loss identical by contract)",
+        &["producers", "wall ms", "speedup x", "modeled x", "sample ms", "select ms",
+          "collect ms", "loss"],
+        &rows,
+    )?;
+    write_csv(
+        "producer_scaling.csv",
+        &["producers", "wall_ms", "speedup", "modeled", "sample_ms", "select_ms", "collect_ms",
+          "loss"],
+        &rows,
+    )?;
+
     // ---------------- BENCH_2.json: machine-readable perf trajectory -------
-    let json_path = write_bench_json(&matrix, cfg.threads, quick, geomean(&speedups))?;
+    let json_path = write_bench_json(&matrix, &cfg, quick, geomean(&speedups))?;
     eprintln!("[bench] wrote {json_path}");
 
     eprintln!("[bench] total {:?}; results in results/", t0.elapsed());
@@ -464,17 +539,18 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// Emit the perf-trajectory record: per-workload wall/cpu/gpu ms, per-stage
-/// gpu ms + kernel counts, and arena allocs-per-step, plus an optional
-/// comparison against a pre-change baseline wall time supplied via
-/// `HIFUSE_PRE_PR_WALL_MS` (the RGCN/aifb hifuse epoch wall of the build
-/// being compared against, measured in the same environment). Path:
-/// `HIFUSE_BENCH_JSON`, else `results/BENCH_2.json`.
+/// gpu **and** cpu-producer ms + kernel counts, and arena allocs-per-step,
+/// plus an optional comparison against a pre-change baseline wall time
+/// supplied via `HIFUSE_PRE_PR_WALL_MS` (the RGCN/aifb hifuse epoch wall of
+/// the build being compared against, measured in the same environment).
+/// Path: `HIFUSE_BENCH_JSON`, else `results/BENCH_2.json`.
 fn write_bench_json(
     matrix: &[RunRow],
-    threads: usize,
+    cfg: &TrainCfg,
     quick: bool,
     geomean_speedup: f64,
 ) -> anyhow::Result<String> {
+    let threads = cfg.threads;
     let mut runs = Vec::new();
     for r in matrix {
         let stages_ms: Vec<String> = r
@@ -487,10 +563,13 @@ fn write_bench_json(
             .iter()
             .map(|(s, c)| format!("\"{s}\": {c}"))
             .collect();
+        let (smp, sel, col) = r.cpu_stage_ms;
         runs.push(format!(
             "    {{\"dataset\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
              \"wall_ms\": {:.3}, \"cpu_ms\": {:.3}, \"gpu_ms\": {:.3}, \
              \"kernels\": {}, \"allocs_per_step\": {:.3}, \
+             \"cpu_ms_by_stage\": {{\"sample\": {smp:.3}, \"select\": {sel:.3}, \
+             \"collect\": {col:.3}}}, \
              \"gpu_ms_by_stage\": {{{}}}, \"kernels_by_stage\": {{{}}}}}",
             r.dataset,
             r.model.name(),
@@ -517,10 +596,12 @@ fn write_bench_json(
     };
     let json = format!(
         "{{\n  \"schema\": \"hifuse-bench-2\",\n  \"profile\": \"bench\",\n  \
-         \"threads\": {threads},\n  \"quick\": {quick},\n  \"measured\": true,\n  \
+         \"threads\": {threads},\n  \"producers\": {},\n  \"quick\": {quick},\n  \
+         \"measured\": true,\n  \
          \"geomean_speedup_hifuse_over_base\": {:.3},\n  \
          \"pre_pr_baseline_wall_ms\": {},\n  \
          \"epoch_wall_speedup_vs_pre_pr\": {},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        producer_count(cfg),
         geomean_speedup,
         pre_pr.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".to_string()),
         speedup_vs_pre_pr,

@@ -114,6 +114,13 @@ impl RunConfig {
                 "lr" => cfg.train.lr = v.parse().context("--lr")?,
                 "seed" => cfg.train.seed = v.parse().context("--seed")?,
                 "threads" => cfg.train.threads = v.parse().context("--threads")?,
+                "producers" => {
+                    let n: usize = v.parse().context("--producers")?;
+                    if n == 0 {
+                        bail!("--producers must be >= 1 (omit the flag to derive from --threads)");
+                    }
+                    cfg.train.producers = n;
+                }
                 "scale" => cfg.scale = v.parse().context("--scale")?,
                 "artifacts" => cfg.artifacts = PathBuf::from(v),
                 "backend" => {
@@ -211,6 +218,16 @@ mod tests {
         let c = RunConfig::from_args(&argv("--dataset tiny --profile bench")).unwrap();
         assert_eq!(c.resolved_profile(), "bench");
         assert!(RunConfig::from_args(&argv("--backend gpu")).is_err());
+    }
+
+    #[test]
+    fn producers_flag_parses_and_rejects_zero() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().train.producers, 0);
+        let c = RunConfig::from_args(&argv("--producers 4 --threads 8")).unwrap();
+        assert_eq!(c.train.producers, 4);
+        assert_eq!(c.train.threads, 8);
+        assert!(RunConfig::from_args(&argv("--producers 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--producers x")).is_err());
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! The coordinator: drives mini-batch HGNN training end-to-end (Fig. 2
 //! workflow), switching between the PyG-style baseline plan and HiFuse
 //! optimizations per `OptConfig`, sequentially or pipelined (Fig. 6).
+//!
+//! The CPU side of every training path runs through a [`CpuProducer`]: a
+//! worker owning a [`SamplerScratch`] and a pool of recycled [`BatchBufs`],
+//! so steady-state batch preparation performs **zero heap allocations**
+//! (DESIGN.md §5; pinned by `tests/producer_parity.rs`). Consumed batches
+//! hand their buffers back through [`Trainer::compute_batch`] /
+//! [`SpentBatch::reclaim`], closing the loop.
 
 pub mod ablation;
 pub mod pipeline;
 pub mod replica;
 
 pub use ablation::OptConfig;
+pub use pipeline::PIPELINE_DEPTH;
 pub use replica::{replica_thread_budget, ReplicaGroup, ReplicaMetrics, DEFAULT_ROUND};
 
 use std::time::{Duration, Instant};
@@ -18,8 +26,11 @@ use crate::models::step::{
     pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
 };
 use crate::models::{ModelKind, Params};
-use crate::runtime::{ArenaStats, Counters, ExecBackend, Phase, Stage};
-use crate::sampler::{collect, MiniBatch, NeighborSampler, RelEdges, SamplerCfg, TaggedEdges};
+use crate::runtime::{ArenaStats, Counters, CpuStageTimes, ExecBackend, Phase, Stage};
+use crate::sampler::collect::{self, Collected};
+use crate::sampler::{
+    MiniBatch, NeighborSampler, RelEdges, SamplerCfg, SamplerScratch, TaggedEdges,
+};
 use crate::semantic;
 use crate::util::{HostTensor, Rng, WorkerPool};
 
@@ -33,11 +44,72 @@ pub struct TrainCfg {
     pub seed: u64,
     /// CPU selection threads (the paper's OpenMP worker count).
     pub threads: usize,
+    /// Sampling workers feeding the pipelined paths (`--producers`);
+    /// `0` = derive from the thread budget ([`producer_count`]). The
+    /// sequential path always prepares inline with one producer.
+    pub producers: usize,
 }
 
 impl Default for TrainCfg {
     fn default() -> Self {
-        TrainCfg { epochs: 1, batch_size: 64, fanout: 4, lr: 0.05, seed: 42, threads: 4 }
+        TrainCfg {
+            epochs: 1,
+            batch_size: 64,
+            fanout: 4,
+            lr: 0.05,
+            seed: 42,
+            threads: 4,
+            producers: 0,
+        }
+    }
+}
+
+/// Number of sampling workers the pipelined paths spawn: an explicit
+/// `--producers` wins; otherwise half the `--threads` budget (at least
+/// one) — each producer drives its own selection/collection chunks, so the
+/// worker pool each producer gets is the budget split by this count
+/// ([`replica_thread_budget`] applied to producers).
+pub fn producer_count(cfg: &TrainCfg) -> usize {
+    if cfg.producers > 0 {
+        cfg.producers
+    } else {
+        (cfg.threads / 2).max(1)
+    }
+}
+
+/// Per-lane producer budget under the replica fan-out: the producer count
+/// splits across lanes exactly like the thread budget, flooring at one.
+pub fn lane_producer_count(cfg: &TrainCfg, lanes: usize) -> usize {
+    (producer_count(cfg) / lanes.max(1)).max(1)
+}
+
+/// CPU-producer buffer-pool traffic (the host-side analogue of
+/// [`ArenaStats`]): `fresh` buffer-set constructions, `reused` recycled
+/// sets, and `grown` produce calls that had to enlarge a pooled buffer.
+/// Steady state means `fresh` and `grown` both stay flat — pinned by
+/// `tests/producer_parity.rs` in the same style as the arena tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProducerStats {
+    /// Buffer sets (and sampler scratches) constructed from scratch.
+    pub fresh: u64,
+    /// Produce calls served from the recycled pool.
+    pub reused: u64,
+    /// Produce calls that grew some pooled buffer's capacity.
+    pub grown: u64,
+}
+
+impl ProducerStats {
+    /// Allocation events (anything other than pure reuse).
+    pub fn allocations(&self) -> u64 {
+        self.fresh + self.grown
+    }
+}
+
+impl std::ops::AddAssign for ProducerStats {
+    fn add_assign(&mut self, o: ProducerStats) {
+        self.fresh += o.fresh;
+        self.reused += o.reused;
+        self.grown += o.grown;
     }
 }
 
@@ -49,6 +121,8 @@ pub struct EpochMetrics {
     pub wall: Duration,
     /// Host-side stage time: sampling + CPU selection + collection.
     pub cpu_time: Duration,
+    /// Per-stage breakdown of `cpu_time` (sample / select / collect).
+    pub cpu_by_stage: CpuStageTimes,
     /// Device-side time: sum of dispatch durations ("GPU time").
     pub gpu_time: Duration,
     pub kernels_total: usize,
@@ -61,6 +135,10 @@ pub struct EpochMetrics {
     /// backends without an arena). Per-epoch deltas = difference between
     /// consecutive epochs' snapshots.
     pub arena: ArenaStats,
+    /// CPU-producer buffer-pool traffic, cumulative at epoch end (same
+    /// snapshot semantics as `arena`): flat `fresh`/`grown` between epochs
+    /// = a zero-allocation producer epoch.
+    pub producer: ProducerStats,
     pub batches: usize,
     pub dropped_nodes: usize,
     pub dropped_edges: usize,
@@ -82,12 +160,14 @@ impl EpochMetrics {
     }
 
     /// Sum `other`'s **additive counter fields** into `self`: batch and
-    /// kernel counts, per-stage counts/times, cpu/gpu time, arena traffic,
-    /// drop counters. The ratio fields (`loss`, `acc`) and `wall` are *not*
-    /// merged — they are not additive across replicas; the replica group
-    /// computes them from the global batch results (DESIGN.md §4).
+    /// kernel counts, per-stage counts/times, cpu/gpu time, arena and
+    /// producer traffic, drop counters. The ratio fields (`loss`, `acc`)
+    /// and `wall` are *not* merged — they are not additive across replicas;
+    /// the replica group computes them from the global batch results
+    /// (DESIGN.md §4).
     pub fn absorb(&mut self, other: &EpochMetrics) {
         self.cpu_time += other.cpu_time;
+        self.cpu_by_stage += other.cpu_by_stage;
         self.gpu_time += other.gpu_time;
         self.kernels_total += other.kernels_total;
         self.kernels_fwd_semantic += other.kernels_fwd_semantic;
@@ -95,6 +175,7 @@ impl EpochMetrics {
         merge_stage_vec(&mut self.kernels_by_stage, &other.kernels_by_stage);
         merge_stage_vec(&mut self.time_by_stage, &other.time_by_stage);
         self.arena += other.arena;
+        self.producer += other.producer;
         self.batches += other.batches;
         self.dropped_nodes += other.dropped_nodes;
         self.dropped_edges += other.dropped_edges;
@@ -116,16 +197,118 @@ fn merge_stage_vec<T: Copy + std::ops::AddAssign>(
 }
 
 /// CPU-side product of batch preparation (safe to build on a producer
-/// thread; contains no backend handles).
+/// thread; contains no backend handles). Retains the sampled
+/// [`MiniBatch`] so the consumer can hand every buffer back to the
+/// producer after the step ([`PreparedCpu::into_bufs`] /
+/// [`SpentBatch::reclaim`]).
 pub struct PreparedCpu {
-    pub collected: collect::Collected,
-    /// `Some` when selection ran on CPU (offload path).
-    pub selected: Option<Vec<Vec<RelEdges>>>,
-    /// `Some` when selection must run on "GPU" (baseline path).
-    pub tagged: Option<Vec<TaggedEdges>>,
+    pub collected: Collected,
+    /// The sampled mini-batch the stages consumed; on the baseline path
+    /// its `tagged` lists feed the "GPU" `edge_select` dispatches.
+    pub mb: MiniBatch,
+    /// CPU selection output, one entry per layer, when `cpu_selected`;
+    /// retained (possibly stale) otherwise so the buffers keep cycling.
+    pub selected: Vec<Vec<RelEdges>>,
+    /// Whether `selected` holds this batch's selection (offload path).
+    pub cpu_selected: bool,
     pub cpu_time: Duration,
-    pub dropped_nodes: usize,
-    pub dropped_edges: usize,
+    pub cpu_by_stage: CpuStageTimes,
+}
+
+impl PreparedCpu {
+    pub fn dropped_nodes(&self) -> usize {
+        self.mb.dropped_nodes
+    }
+
+    pub fn dropped_edges(&self) -> usize {
+        self.mb.dropped_edges
+    }
+
+    /// Recover the reusable buffers of a batch that will never be computed
+    /// (pipeline teardown).
+    pub fn into_bufs(self) -> BatchBufs {
+        BatchBufs { mb: self.mb, selected: self.selected, collected: self.collected }
+    }
+}
+
+/// One reusable set of producer-side buffers: everything a `produce` call
+/// writes. Cycles producer → `PreparedCpu` → consumer → (reclaim) →
+/// producer; a training loop in steady state owns a fixed population of
+/// these and allocates nothing per batch.
+pub struct BatchBufs {
+    mb: MiniBatch,
+    selected: Vec<Vec<RelEdges>>,
+    collected: Collected,
+}
+
+impl BatchBufs {
+    /// A fully-reserved buffer set: every nested vector is pre-sized to
+    /// its static cap (`batch_size`/`ns`/`ep`), so the set never grows —
+    /// not even on its first use — keeping [`ProducerStats::grown`] at
+    /// zero deterministically. The selection buffers are only materialized
+    /// when the plan selects on CPU (`offload`); the baseline path never
+    /// touches them.
+    fn new(d: &Dims, scfg: &SamplerCfg, n_types: usize, n_rel: usize, offload: bool) -> Self {
+        let mut mb = MiniBatch::default();
+        mb.reset(scfg, n_types, n_rel);
+        let selected = if offload {
+            (0..scfg.layers)
+                .map(|_| {
+                    (0..n_rel)
+                        .map(|_| RelEdges {
+                            src: Vec::with_capacity(scfg.ep),
+                            dst: Vec::with_capacity(scfg.ep),
+                        })
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        BatchBufs { mb, selected, collected: Collected::new(d.tpad, d.ns, d.f) }
+    }
+
+    /// Held heap capacity in elements (the `Collected` tensors are
+    /// fixed-shape, so only the edge-list buffers can grow); the
+    /// allocation-growth witness behind [`ProducerStats::grown`].
+    fn capacity_footprint(&self) -> usize {
+        self.mb.capacity_footprint()
+            + self.selected.capacity()
+            + self
+                .selected
+                .iter()
+                .map(|l| {
+                    l.capacity()
+                        + l.iter().map(|e| e.src.capacity() + e.dst.capacity()).sum::<usize>()
+                })
+                .sum::<usize>()
+    }
+}
+
+/// The leftover of a consumed [`PreparedCpu`] after [`assemble_batch`]
+/// moved its tensors into a [`BatchData`]; [`SpentBatch::reclaim`] reunites
+/// the two into a recyclable [`BatchBufs`] once the step is done.
+pub struct SpentBatch {
+    mb: MiniBatch,
+    selected: Vec<Vec<RelEdges>>,
+}
+
+impl SpentBatch {
+    /// Reunite with the consumed batch's tensors. Call after the training
+    /// step: `batch` must be the `BatchData` the paired `assemble_batch`
+    /// returned.
+    pub fn reclaim(self, batch: BatchData) -> BatchBufs {
+        BatchBufs {
+            mb: self.mb,
+            selected: self.selected,
+            collected: Collected {
+                xs: batch.xs,
+                labels: batch.labels,
+                seed_mask: batch.seed_mask,
+                n_seed: 0,
+            },
+        }
+    }
 }
 
 /// The profile-capped sampler configuration a training run uses — shared
@@ -148,10 +331,266 @@ pub fn prepare_graph_layout(g: &mut HeteroGraph, opt: &OptConfig) {
     g.features.ensure_layout(want);
 }
 
-/// CPU half of batch preparation (runs on the producer thread in pipeline
-/// mode; touches no backend handles): sample, (optionally) select on CPU,
-/// collect. `pool` partitions both CPU stages (selection across relations,
-/// collection across types).
+/// A CPU batch-preparation worker: sample, (optionally) select on CPU,
+/// collect — all through its own [`SamplerScratch`] and recycled
+/// [`BatchBufs`], so a warmed producer allocates nothing per batch. Touches
+/// no backend handles (runs on producer threads in pipeline mode).
+pub struct CpuProducer<'g> {
+    graph: &'g HeteroGraph,
+    scfg: SamplerCfg,
+    d: Dims,
+    opt: OptConfig,
+    pool: WorkerPool,
+    rng: Rng,
+    scratch: SamplerScratch,
+    spare: Vec<BatchBufs>,
+    /// Buffer sets this producer has originated (its flow-control credit in
+    /// pipeline mode: seeds + fresh constructions).
+    owned: usize,
+    pub stats: ProducerStats,
+}
+
+/// A producer's persistent state between epochs: scratch + recycled buffer
+/// sets (the [`ProducerArsenal`] hands these out and takes them back).
+pub(crate) struct ProducerSeed {
+    pub(crate) scratch: SamplerScratch,
+    pub(crate) spare: Vec<BatchBufs>,
+}
+
+/// What a producer returns when its epoch ends: scratch, surviving buffer
+/// sets, the stats it accumulated, and (pipeline mode) its recycle-channel
+/// receiver — carried out so a buffer the consumer returned *after* the
+/// producer's final drain is recovered by the arsenal rather than
+/// destroyed with the channel (the send and the exit can race; the queue
+/// survives as long as this receiver does).
+pub(crate) struct ProducerState {
+    pub(crate) scratch: SamplerScratch,
+    pub(crate) spare: Vec<BatchBufs>,
+    pub(crate) stats: ProducerStats,
+    pub(crate) returns: Option<std::sync::mpsc::Receiver<BatchBufs>>,
+}
+
+impl<'g> CpuProducer<'g> {
+    /// Fresh producer (new scratch, empty pool). The training paths prefer
+    /// [`CpuProducer::from_seed`] to keep state across epochs.
+    pub fn new(
+        graph: &'g HeteroGraph,
+        scfg: SamplerCfg,
+        d: Dims,
+        opt: OptConfig,
+        pool: WorkerPool,
+        rng: Rng,
+    ) -> Self {
+        let seed = ProducerSeed { scratch: SamplerScratch::new(graph), spare: Vec::new() };
+        Self::from_seed(graph, scfg, d, opt, pool, rng, seed)
+    }
+
+    pub(crate) fn from_seed(
+        graph: &'g HeteroGraph,
+        scfg: SamplerCfg,
+        d: Dims,
+        opt: OptConfig,
+        pool: WorkerPool,
+        rng: Rng,
+        seed: ProducerSeed,
+    ) -> Self {
+        let owned = seed.spare.len();
+        let mut scratch = seed.scratch;
+        // Idempotent cap reservation: a scratch that sat out an epoch must
+        // not grow on its first sample under this producer.
+        scratch.reserve_for(graph.n_relations(), scfg.ep);
+        CpuProducer {
+            graph,
+            scfg,
+            d,
+            opt,
+            pool,
+            rng,
+            scratch,
+            spare: seed.spare,
+            owned,
+            stats: ProducerStats::default(),
+        }
+    }
+
+    /// Return a consumed batch's buffers to the pool.
+    pub fn reclaim(&mut self, bufs: BatchBufs) {
+        self.spare.push(bufs);
+    }
+
+    /// Top the pool up to `target` owned buffer sets (pipeline credit).
+    /// Eager construction keeps the circulating population **fixed**: a
+    /// producer never fresh-allocates mid-epoch because a return raced its
+    /// schedule, which is what makes the steady-state zero-alloc contract
+    /// deterministic rather than timing-dependent.
+    pub(crate) fn preallocate(&mut self, target: usize) {
+        while self.owned < target {
+            let bufs = self.fresh_bufs();
+            self.spare.push(bufs);
+            self.owned += 1;
+            self.stats.fresh += 1;
+        }
+    }
+
+    fn fresh_bufs(&self) -> BatchBufs {
+        BatchBufs::new(
+            &self.d,
+            &self.scfg,
+            self.graph.n_types(),
+            self.graph.n_relations(),
+            self.opt.offload,
+        )
+    }
+
+    pub(crate) fn spare_is_empty(&self) -> bool {
+        self.spare.is_empty()
+    }
+
+    pub(crate) fn owned(&self) -> usize {
+        self.owned
+    }
+
+    pub(crate) fn into_state(self) -> ProducerState {
+        ProducerState {
+            scratch: self.scratch,
+            spare: self.spare,
+            stats: self.stats,
+            returns: None,
+        }
+    }
+
+    /// Prepare one batch. Serves from the recycled pool when possible; a
+    /// fresh buffer set otherwise (counted in [`ProducerStats`]).
+    pub fn produce(&mut self, epoch: u64, batch_idx: usize) -> PreparedCpu {
+        let mut bufs = match self.spare.pop() {
+            Some(b) => {
+                self.stats.reused += 1;
+                b
+            }
+            None => {
+                self.stats.fresh += 1;
+                self.owned += 1;
+                self.fresh_bufs()
+            }
+        };
+        let before = self.scratch.capacity_footprint() + bufs.capacity_footprint();
+        let t0 = Instant::now();
+        NeighborSampler::new(self.graph, self.scfg).sample_into(
+            &self.rng,
+            epoch,
+            batch_idx,
+            &mut self.scratch,
+            &mut bufs.mb,
+        );
+        let sample = t0.elapsed();
+
+        let t1 = Instant::now();
+        let cpu_selected = self.opt.offload;
+        if cpu_selected {
+            let n_rel = self.graph.n_relations();
+            bufs.selected.resize_with(bufs.mb.tagged.len(), Vec::new);
+            for (l, t) in bufs.mb.tagged.iter().enumerate() {
+                if self.opt.parallel {
+                    semantic::select_parallel_into(
+                        t,
+                        n_rel,
+                        self.pool.threads(),
+                        &mut bufs.selected[l],
+                    );
+                } else {
+                    semantic::select_serial_into(t, n_rel, &mut bufs.selected[l]);
+                }
+            }
+        }
+        let select = t1.elapsed();
+
+        let t2 = Instant::now();
+        collect::collect_into(
+            self.graph,
+            &bufs.mb,
+            self.d.tpad,
+            self.d.ns,
+            self.d.f,
+            &self.pool,
+            &mut bufs.collected,
+        );
+        let collect_t = t2.elapsed();
+
+        let after = self.scratch.capacity_footprint() + bufs.capacity_footprint();
+        if after > before {
+            self.stats.grown += 1;
+        }
+        let BatchBufs { mb, selected, collected } = bufs;
+        PreparedCpu {
+            collected,
+            mb,
+            selected,
+            cpu_selected,
+            cpu_time: t0.elapsed(),
+            cpu_by_stage: CpuStageTimes { sample, select, collect: collect_t },
+        }
+    }
+}
+
+/// Persistent producer-side state of a training path, kept **across
+/// epochs** so the zero-alloc steady state spans the whole run: returned
+/// sampler scratches, the circulating buffer sets, and the cumulative
+/// [`ProducerStats`].
+#[derive(Default)]
+pub(crate) struct ProducerArsenal {
+    scratches: Vec<SamplerScratch>,
+    spare: Vec<BatchBufs>,
+    pub(crate) stats: ProducerStats,
+}
+
+impl ProducerArsenal {
+    /// Hand out state for `n` producers: one scratch each (constructing
+    /// new ones only when short — counted as `fresh`), with the pooled
+    /// buffer sets dealt round-robin.
+    pub(crate) fn checkout(&mut self, graph: &HeteroGraph, n: usize) -> Vec<ProducerSeed> {
+        let mut seeds: Vec<ProducerSeed> = (0..n.max(1))
+            .map(|_| {
+                let scratch = self.scratches.pop().unwrap_or_else(|| {
+                    self.stats.fresh += 1;
+                    SamplerScratch::new(graph)
+                });
+                ProducerSeed { scratch, spare: Vec::new() }
+            })
+            .collect();
+        let mut i = 0usize;
+        while let Some(b) = self.spare.pop() {
+            seeds[i % seeds.len()].spare.push(b);
+            i += 1;
+        }
+        seeds
+    }
+
+    /// Take a finished producer's state back, recovering any buffer set
+    /// still parked in its recycle channel (a consumer return that raced
+    /// the producer's exit).
+    pub(crate) fn checkin(&mut self, state: ProducerState) {
+        let ProducerState { scratch, spare, stats, returns } = state;
+        self.scratches.push(scratch);
+        self.spare.extend(spare);
+        self.stats += stats;
+        if let Some(rx) = returns {
+            while let Ok(b) = rx.try_recv() {
+                self.spare.push(b);
+            }
+        }
+    }
+
+    /// Re-pool buffer sets that could not return to their producer (it had
+    /// already finished its epoch slice).
+    pub(crate) fn checkin_bufs(&mut self, bufs: Vec<BatchBufs>) {
+        self.spare.extend(bufs);
+    }
+}
+
+/// One-shot CPU half of batch preparation (profiling tools and tests):
+/// builds a throwaway [`CpuProducer`]. The training loops keep persistent
+/// producers instead — this wrapper allocates its scratch every call.
+#[allow(clippy::too_many_arguments)]
 pub fn prepare_cpu(
     graph: &HeteroGraph,
     scfg: SamplerCfg,
@@ -162,35 +601,7 @@ pub fn prepare_cpu(
     epoch: u64,
     batch_idx: usize,
 ) -> PreparedCpu {
-    let t0 = Instant::now();
-    let sampler = NeighborSampler::new(graph, scfg);
-    let mb: MiniBatch = sampler.sample(rng, epoch, batch_idx);
-    let n_rel = graph.n_relations();
-    let selected = if opt.offload {
-        Some(
-            mb.tagged
-                .iter()
-                .map(|t| {
-                    if opt.parallel {
-                        semantic::select_parallel(t, n_rel, pool.threads())
-                    } else {
-                        semantic::select_serial(t, n_rel)
-                    }
-                })
-                .collect::<Vec<_>>(),
-        )
-    } else {
-        None
-    };
-    let collected = collect::collect(graph, &mb, d.tpad, d.ns, d.f, pool);
-    PreparedCpu {
-        collected,
-        selected,
-        tagged: if opt.offload { None } else { Some(mb.tagged) },
-        cpu_time: t0.elapsed(),
-        dropped_nodes: mb.dropped_nodes,
-        dropped_edges: mb.dropped_edges,
-    }
+    CpuProducer::new(graph, scfg, *d, *opt, *pool, rng.clone()).produce(epoch, batch_idx)
 }
 
 /// "GPU" edge-index selection (baseline): one `edge_select` dispatch per
@@ -233,28 +644,31 @@ pub fn gpu_select<B: ExecBackend>(
 /// and the replica lanes: resolve per-relation edges (taking the baseline
 /// `edge_select` dispatches when selection did not run on CPU), pad them
 /// into module tensors, and wrap the collected features as a [`BatchData`].
+/// Also returns the [`SpentBatch`] carcass so the caller can recycle the
+/// buffers after the step.
 pub fn assemble_batch<B: ExecBackend>(
     eng: &B,
     d: &Dims,
     schema: &SchemaTensors,
     prep: PreparedCpu,
-) -> Result<BatchData> {
-    let selected: Vec<Vec<RelEdges>> = match (prep.selected, prep.tagged) {
-        (Some(s), _) => s,
-        (None, Some(tagged)) => tagged
+) -> Result<(BatchData, SpentBatch)> {
+    let PreparedCpu { collected, mb, selected, cpu_selected, .. } = prep;
+    let layers = if cpu_selected {
+        selected.iter().map(|rels| pad_layer_edges(rels, d)).collect()
+    } else {
+        mb.tagged
             .iter()
-            .map(|t| gpu_select(eng, d, t, schema.n_rel))
-            .collect::<Result<_>>()?,
-        _ => unreachable!("prepare_cpu always sets one of selected/tagged"),
+            .map(|t| Ok(pad_layer_edges(&gpu_select(eng, d, t, schema.n_rel)?, d)))
+            .collect::<Result<Vec<_>>>()?
     };
-    let layers = selected.iter().map(|rels| pad_layer_edges(rels, d)).collect();
-    Ok(BatchData {
-        xs: prep.collected.xs,
-        labels: prep.collected.labels,
-        seed_mask: prep.collected.seed_mask,
-        n_seed: prep.collected.n_seed,
+    let batch = BatchData {
+        xs: collected.xs,
+        labels: collected.labels,
+        seed_mask: collected.seed_mask,
+        n_seed: collected.n_seed,
         layers,
-    })
+    };
+    Ok((batch, SpentBatch { mb, selected }))
 }
 
 pub struct Trainer<'g, 'e, B: ExecBackend> {
@@ -270,6 +684,9 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     /// the backend's own pool (`SimBackend::builtin_threaded`).
     pub pool: WorkerPool,
     rng: Rng,
+    /// Producer state kept across epochs (scratches + recycled buffer
+    /// sets), so the steady-state zero-alloc contract covers the whole run.
+    pub(crate) arsenal: ProducerArsenal,
 }
 
 impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
@@ -296,6 +713,7 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             opt,
             pool: WorkerPool::new(cfg.threads),
             rng: Rng::new(cfg.seed),
+            arsenal: ProducerArsenal::default(),
         })
     }
 
@@ -307,12 +725,21 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         sampler_cfg(&self.cfg, &self.exec.d)
     }
 
+    /// Cumulative producer buffer-pool stats (pool hits/misses/growth),
+    /// mirroring `SimBackend::arena_stats` for the CPU side.
+    pub fn producer_stats(&self) -> ProducerStats {
+        self.arsenal.stats
+    }
+
     /// Device half of batch preparation + the training step itself.
-    pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize)> {
+    /// Returns the step result and the batch's recycled buffers — hand
+    /// them back to the producer ([`CpuProducer::reclaim`]) to keep the
+    /// steady state allocation-free.
+    pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize, BatchBufs)> {
         let d = self.exec.d;
-        let batch = assemble_batch(self.eng, &d, &self.schema, prep)?;
+        let (batch, spent) = assemble_batch(self.eng, &d, &self.schema, prep)?;
         let res = self.exec.train_step(&mut self.params, &self.schema, &batch, self.cfg.lr)?;
-        Ok((res.loss, res.ncorrect, res.n_seed))
+        Ok((res.loss, res.ncorrect, res.n_seed, spent.reclaim(batch)))
     }
 
     /// Train one epoch; dispatches to the pipelined loop when enabled.
@@ -328,24 +755,39 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let scfg = self.sampler_cfg();
         let n_batches = NeighborSampler::new(self.graph, scfg).batches_per_epoch();
         let d = self.exec.d;
+        let graph = self.graph;
         let wall0 = Instant::now();
         let mut m = EpochMetrics { batches: n_batches, ..Default::default() };
         self.eng.reset_counters(false);
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
+        let seed = self.arsenal.checkout(graph, 1).pop().expect("one seed");
+        let mut producer =
+            CpuProducer::from_seed(graph, scfg, d, self.opt, self.pool, self.rng.clone(), seed);
+        let mut result: Result<()> = Ok(());
         for b in 0..n_batches {
-            let prep = prepare_cpu(
-                self.graph, scfg, &d, &self.opt, &self.pool, &self.rng, epoch, b,
-            );
+            let prep = producer.produce(epoch, b);
             m.cpu_time += prep.cpu_time;
-            m.dropped_nodes += prep.dropped_nodes;
-            m.dropped_edges += prep.dropped_edges;
-            let (loss, ncorrect, n_seed) = self.compute_batch(prep)?;
-            m.loss += loss as f64;
-            total_correct += ncorrect as f64;
-            total_seed += n_seed;
+            m.cpu_by_stage += prep.cpu_by_stage;
+            m.dropped_nodes += prep.dropped_nodes();
+            m.dropped_edges += prep.dropped_edges();
+            match self.compute_batch(prep) {
+                Ok((loss, ncorrect, n_seed, bufs)) => {
+                    producer.reclaim(bufs);
+                    m.loss += loss as f64;
+                    total_correct += ncorrect as f64;
+                    total_seed += n_seed;
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
         }
+        self.arsenal.checkin(producer.into_state());
+        result?;
         self.finish_metrics(&mut m, wall0, total_correct, total_seed);
+        m.producer = self.arsenal.stats;
         Ok(m)
     }
 
@@ -371,6 +813,29 @@ mod tests {
     fn default_cfg_is_sane() {
         let c = TrainCfg::default();
         assert!(c.batch_size > 0 && c.lr > 0.0 && c.threads >= 1);
+        assert_eq!(c.producers, 0, "default derives producers from threads");
+    }
+
+    #[test]
+    fn producer_count_derives_from_threads() {
+        let auto4 = TrainCfg { threads: 4, producers: 0, ..Default::default() };
+        assert_eq!(producer_count(&auto4), 2);
+        let auto1 = TrainCfg { threads: 1, producers: 0, ..auto4 };
+        assert_eq!(producer_count(&auto1), 1);
+        let explicit = TrainCfg { producers: 3, ..auto1 };
+        assert_eq!(producer_count(&explicit), 3);
+        assert_eq!(lane_producer_count(&explicit, 2), 1);
+        let four = TrainCfg { producers: 4, ..explicit };
+        assert_eq!(lane_producer_count(&four, 2), 2);
+        assert_eq!(lane_producer_count(&four, 0), 4);
+    }
+
+    #[test]
+    fn producer_stats_accumulate() {
+        let mut a = ProducerStats { fresh: 1, reused: 2, grown: 3 };
+        a += ProducerStats { fresh: 10, reused: 20, grown: 30 };
+        assert_eq!(a, ProducerStats { fresh: 11, reused: 22, grown: 33 });
+        assert_eq!(a.allocations(), 44);
     }
 
     #[test]
@@ -380,6 +845,11 @@ mod tests {
             acc: 0.5,
             wall: Duration::from_millis(7),
             cpu_time: Duration::from_millis(2),
+            cpu_by_stage: CpuStageTimes {
+                sample: Duration::from_micros(1),
+                select: Duration::from_micros(2),
+                collect: Duration::from_micros(3),
+            },
             gpu_time: Duration::from_millis(3),
             kernels_total: 10,
             kernels_fwd_semantic: 1,
@@ -387,6 +857,7 @@ mod tests {
             kernels_by_stage: vec![(Stage::Projection, 4), (Stage::Head, 1)],
             time_by_stage: vec![(Stage::Projection, Duration::from_micros(5))],
             arena: ArenaStats { hits: 5, misses: 1, bytes_recycled: 8, bytes_allocated: 16 },
+            producer: ProducerStats { fresh: 1, reused: 4, grown: 2 },
             batches: 3,
             dropped_nodes: 1,
             dropped_edges: 2,
@@ -396,6 +867,11 @@ mod tests {
             acc: 0.9,
             wall: Duration::from_millis(9),
             cpu_time: Duration::from_millis(1),
+            cpu_by_stage: CpuStageTimes {
+                sample: Duration::from_micros(4),
+                select: Duration::from_micros(5),
+                collect: Duration::from_micros(6),
+            },
             gpu_time: Duration::from_millis(1),
             kernels_total: 5,
             kernels_fwd_semantic: 2,
@@ -403,6 +879,7 @@ mod tests {
             kernels_by_stage: vec![(Stage::Projection, 1), (Stage::Aggregation, 6)],
             time_by_stage: vec![(Stage::Projection, Duration::from_micros(2))],
             arena: ArenaStats { hits: 1, misses: 1, bytes_recycled: 1, bytes_allocated: 1 },
+            producer: ProducerStats { fresh: 2, reused: 8, grown: 1 },
             batches: 2,
             dropped_nodes: 0,
             dropped_edges: 1,
@@ -414,9 +891,18 @@ mod tests {
         assert_eq!(a.kernels_fwd_agg, 3);
         assert_eq!(a.batches, 5);
         assert_eq!(a.cpu_time, Duration::from_millis(3));
+        assert_eq!(
+            a.cpu_by_stage,
+            CpuStageTimes {
+                sample: Duration::from_micros(5),
+                select: Duration::from_micros(7),
+                collect: Duration::from_micros(9),
+            }
+        );
         assert_eq!(a.gpu_time, Duration::from_millis(4));
         assert_eq!(a.arena.hits, 6);
         assert_eq!(a.arena.misses, 2);
+        assert_eq!(a.producer, ProducerStats { fresh: 3, reused: 12, grown: 3 });
         assert_eq!(a.dropped_nodes, 1);
         assert_eq!(a.dropped_edges, 3);
         // ... stage rows merge by stage, appending unseen stages ...

@@ -1,30 +1,227 @@
-//! Asynchronous CPU/GPU pipeline (the paper's Fig. 6).
+//! Asynchronous CPU/GPU pipeline (the paper's Fig. 6), multi-producer.
 //!
-//! A producer thread runs the CPU stages — mini-batch sampling, CPU
-//! edge-index selection, feature collection — while the main thread runs
-//! model computation on the execution backend. A bounded channel (depth 2)
-//! provides the backpressure: the CPU may run at most two batches ahead,
-//! like the paper's dedicated transfer stream feeding the compute stream.
+//! `M` producer threads ([`producer_count`](super::producer_count), the
+//! paper's "multi-threading and asynchronous pipeline" on the workflow
+//! side) run the CPU stages — mini-batch sampling, CPU edge-index
+//! selection, feature collection — while the consuming thread runs model
+//! computation on the execution backend. Producer `p` prepares batch
+//! positions `p, p+M, p+2M, ...` of the epoch's schedule; completed batches
+//! arrive on one shared channel tagged with their **sequence number**, and
+//! the consumer restores exact global order through a fixed-capacity
+//! reorder ring — so delivery order (and therefore the training
+//! trajectory, bit for bit) is identical for every producer count.
+//!
+//! Backpressure is **credit-based**: each producer owns at most
+//! [`PIPELINE_DEPTH`] buffer sets; once they are all in flight it blocks
+//! until the consumer returns one over that producer's recycle channel
+//! (`BatchFeed::recycle`). The recycle channel thus doubles as flow
+//! control *and* as the allocation loop-closer: in steady state a fixed
+//! population of at most `M × PIPELINE_DEPTH` buffer sets (each producer
+//! holds `min(PIPELINE_DEPTH, its stride length)`) circulates and the CPU
+//! side allocates nothing per batch (DESIGN.md §5).
+//!
+//! Deadlock-freedom: a producer only blocks with `PIPELINE_DEPTH` of its
+//! batches outstanding, all at earlier positions than the one it would
+//! produce next; the consumer delivers positions in order, so those batches
+//! are consumed (and their buffers returned) before the consumer ever waits
+//! on this producer again.
 //!
 //! Backends may be `!Send` (the PJRT client is Rc-based), so compute stays
-//! on the calling thread and only plain host data crosses the channel — the
-//! design reason `PreparedCpu` contains no backend handles.
-//!
-//! The data-parallel replica path ([`super::replica`], DESIGN.md §4) fans
-//! this same producer out to one bounded channel per replica lane; this
-//! module remains the single-backend (depth-2, one-consumer) form.
+//! on the calling thread and only plain host data crosses the channels —
+//! the design reason `PreparedCpu` contains no backend handles. The
+//! data-parallel replica path ([`super::replica`], DESIGN.md §4) fans the
+//! same machinery out to one feed per replica lane.
 
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::thread::Scope;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::{prepare_cpu, EpochMetrics, PreparedCpu, Trainer};
+use super::{
+    producer_count, BatchBufs, CpuProducer, EpochMetrics, OptConfig, PreparedCpu, ProducerSeed,
+    ProducerState, ProducerStats, Trainer,
+};
+use crate::graph::HeteroGraph;
+use crate::models::step::Dims;
 use crate::runtime::ExecBackend;
-use crate::sampler::NeighborSampler;
+use crate::sampler::{NeighborSampler, SamplerCfg};
+use crate::util::{Rng, WorkerPool};
 
-/// Depth of the producer->consumer channel (batches in flight).
+/// Buffer sets each producer may have in flight (its flow-control credit);
+/// total pipeline depth is `producers × PIPELINE_DEPTH`.
 pub const PIPELINE_DEPTH: usize = 2;
+
+/// The consumer end of a multi-producer batch pipeline: receives
+/// sequence-tagged batches, restores global order, and routes consumed
+/// buffers back to their producers.
+pub(crate) struct BatchFeed {
+    rx: Receiver<(usize, PreparedCpu)>,
+    back: Vec<Sender<BatchBufs>>,
+    /// Fixed-capacity reorder ring indexed by `position % capacity`; the
+    /// credit bound keeps every in-flight position within one window.
+    ring: Vec<Option<PreparedCpu>>,
+    next: usize,
+    leftover: Vec<BatchBufs>,
+}
+
+impl BatchFeed {
+    /// Deliver the next batch in exact schedule order, buffering
+    /// out-of-order arrivals in the ring.
+    pub(crate) fn recv_next(&mut self) -> Result<PreparedCpu> {
+        let cap = self.ring.len();
+        if let Some(p) = self.ring[self.next % cap].take() {
+            self.next += 1;
+            return Ok(p);
+        }
+        loop {
+            let (pos, p) = self.rx.recv().map_err(|_| {
+                anyhow!("batch producers disconnected before position {}", self.next)
+            })?;
+            if pos == self.next {
+                self.next += 1;
+                return Ok(p);
+            }
+            debug_assert!(pos > self.next, "position {pos} delivered twice");
+            assert!(
+                pos - self.next < cap,
+                "reorder ring overflow (pos {pos}, next {}, cap {cap})",
+                self.next
+            );
+            let slot = &mut self.ring[pos % cap];
+            debug_assert!(slot.is_none(), "reorder slot collision at {pos}");
+            *slot = Some(p);
+        }
+    }
+
+    /// Hand a consumed batch's buffers back to the producer that prepared
+    /// position `pos`; if that producer already finished its slice, keep
+    /// the set for the arsenal instead.
+    pub(crate) fn recycle(&mut self, pos: usize, bufs: BatchBufs) {
+        if let Err(e) = self.back[pos % self.back.len()].send(bufs) {
+            self.leftover.push(e.0);
+        }
+    }
+
+    /// Tear the feed down, recovering the buffers of any batch that was
+    /// produced but never computed (early exit on error). Dropping the
+    /// returned value's channels unblocks every producer.
+    pub(crate) fn finish(mut self) -> Vec<BatchBufs> {
+        for slot in &mut self.ring {
+            if let Some(p) = slot.take() {
+                self.leftover.push(p.into_bufs());
+            }
+        }
+        while let Ok((_, p)) = self.rx.try_recv() {
+            self.leftover.push(p.into_bufs());
+        }
+        self.leftover
+    }
+}
+
+/// Spawn `producers` sampling workers over `batches` (an epoch schedule, in
+/// delivery order) inside `scope`. `seeds` must hold exactly one
+/// [`ProducerSeed`] per producer (arsenal checkout). Each worker's final
+/// state arrives on the returned state channel once it exits; the caller
+/// drains it after dropping/finishing the feed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spawn_feed<'scope, 'env>(
+    s: &'scope Scope<'scope, 'env>,
+    graph: &'env HeteroGraph,
+    scfg: SamplerCfg,
+    d: Dims,
+    opt: OptConfig,
+    pool: WorkerPool,
+    rng: &Rng,
+    epoch: u64,
+    batches: &[usize],
+    producers: usize,
+    seeds: Vec<ProducerSeed>,
+) -> (BatchFeed, Receiver<ProducerState>) {
+    let m = producers.max(1);
+    assert_eq!(seeds.len(), m, "one seed per producer");
+    let (tx, rx) = sync_channel::<(usize, PreparedCpu)>(m * PIPELINE_DEPTH);
+    let (state_tx, state_rx) = channel::<ProducerState>();
+    let mut back = Vec::with_capacity(m);
+    for (pi, seed) in seeds.into_iter().enumerate() {
+        let (btx, brx) = channel::<BatchBufs>();
+        back.push(btx);
+        // This producer's stride of the schedule: (position, batch id).
+        let my: Vec<(usize, usize)> = batches
+            .iter()
+            .copied()
+            .enumerate()
+            .skip(pi)
+            .step_by(m)
+            .collect();
+        if my.is_empty() {
+            // Nothing to do (more producers than batches): return the seed
+            // straight to the arsenal instead of spawning an idle worker
+            // that would preallocate never-used buffer sets.
+            let _ = state_tx.send(ProducerState {
+                scratch: seed.scratch,
+                spare: seed.spare,
+                stats: ProducerStats::default(),
+                returns: None,
+            });
+            continue;
+        }
+        let credit = PIPELINE_DEPTH.min(my.len());
+        let tx = tx.clone();
+        let state_tx = state_tx.clone();
+        let rng = rng.clone();
+        s.spawn(move || {
+            let mut producer = CpuProducer::from_seed(graph, scfg, d, opt, pool, rng, seed);
+            // Full credit up front (capped at the stride length — a
+            // producer never needs more sets in flight than it has
+            // batches): the circulating buffer population is fixed from
+            // the first batch on, so steady-state epochs are
+            // deterministically allocation-free, with no race against the
+            // consumer's returns.
+            producer.preallocate(credit);
+            for (pos, b) in my {
+                refill(&mut producer, &brx);
+                let prep = producer.produce(epoch, b);
+                if tx.send((pos, prep)).is_err() {
+                    break; // consumer bailed
+                }
+            }
+            // Surrender the state; the recycle receiver rides along so a
+            // return that raced this exit is drained at arsenal checkin.
+            let mut state = producer.into_state();
+            state.returns = Some(brx);
+            let _ = state_tx.send(state);
+        });
+    }
+    // Ring capacity: every in-flight position is within `credit` of `next`
+    // per producer; one producer-stride window of slack on top makes the
+    // bound comfortable without masking logic errors (overflow asserts).
+    let cap = m * PIPELINE_DEPTH + m;
+    let feed = BatchFeed {
+        rx,
+        back,
+        ring: (0..cap).map(|_| None).collect(),
+        next: 0,
+        leftover: Vec::new(),
+    };
+    (feed, state_rx)
+}
+
+/// Top the producer's pool up from its recycle channel. Non-blocking while
+/// the producer still has credit (fewer than [`PIPELINE_DEPTH`] sets
+/// originated); at full credit it blocks for a return — the pipeline's
+/// backpressure. A disconnected channel (consumer gone) falls through: the
+/// next `produce`+send fails and the worker exits.
+fn refill(producer: &mut CpuProducer<'_>, returns: &Receiver<BatchBufs>) {
+    while let Ok(b) = returns.try_recv() {
+        producer.reclaim(b);
+    }
+    if producer.spare_is_empty() && producer.owned() >= PIPELINE_DEPTH {
+        if let Ok(b) = returns.recv() {
+            producer.reclaim(b);
+        }
+    }
+}
 
 pub fn train_epoch_pipelined<B: ExecBackend>(
     tr: &mut Trainer<'_, '_, B>,
@@ -34,9 +231,14 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let n_batches = NeighborSampler::new(tr.graph, scfg).batches_per_epoch();
     let d = tr.exec.d;
     let opt = tr.opt;
-    let pool = tr.pool;
     let rng = tr.rng.clone();
     let graph = tr.graph;
+    let m_prod = producer_count(&tr.cfg);
+    // Producers split the CPU-stage thread budget (mirroring the replica
+    // lanes' split), so `--producers` never oversubscribes `--threads`.
+    let pool = WorkerPool::new(super::replica_thread_budget(tr.cfg.threads, m_prod));
+    let seeds = tr.arsenal.checkout(graph, m_prod);
+    let batches: Vec<usize> = (0..n_batches).collect();
 
     let wall0 = Instant::now();
     tr.eng.reset_counters(false);
@@ -45,39 +247,46 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let mut total_seed = 0usize;
 
     let mut result: Result<()> = Ok(());
-    std::thread::scope(|s| {
-        let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
-        s.spawn(move || {
-            for b in 0..n_batches {
-                let prep = prepare_cpu(graph, scfg, &d, &opt, &pool, &rng, epoch, b);
-                if tx.send(prep).is_err() {
-                    return; // consumer bailed
-                }
-            }
-        });
-        for _ in 0..n_batches {
-            let prep = match rx.recv() {
+    let mut leftover: Vec<BatchBufs> = Vec::new();
+    let state_rx = std::thread::scope(|s| {
+        let (mut feed, state_rx) =
+            spawn_feed(s, graph, scfg, d, opt, pool, &rng, epoch, &batches, m_prod, seeds);
+        for pos in 0..n_batches {
+            let prep = match feed.recv_next() {
                 Ok(p) => p,
-                Err(_) => break,
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
             };
             m.cpu_time += prep.cpu_time;
-            m.dropped_nodes += prep.dropped_nodes;
-            m.dropped_edges += prep.dropped_edges;
+            m.cpu_by_stage += prep.cpu_by_stage;
+            m.dropped_nodes += prep.dropped_nodes();
+            m.dropped_edges += prep.dropped_edges();
             match tr.compute_batch(prep) {
-                Ok((loss, ncorrect, n_seed)) => {
+                Ok((loss, ncorrect, n_seed, bufs)) => {
+                    feed.recycle(pos, bufs);
                     m.loss += loss as f64;
                     total_correct += ncorrect as f64;
                     total_seed += n_seed;
                 }
                 Err(e) => {
                     result = Err(e);
-                    break; // dropping rx unblocks the producer
+                    break;
                 }
             }
         }
-        drop(rx);
+        // Dropping the feed's channels unblocks the producers; the scope
+        // then joins them, which flushes every state message.
+        leftover = feed.finish();
+        state_rx
     });
+    for state in state_rx.try_iter() {
+        tr.arsenal.checkin(state);
+    }
+    tr.arsenal.checkin_bufs(leftover);
     result?;
     tr.finish_metrics(&mut m, wall0, total_correct, total_seed);
+    m.producer = tr.arsenal.stats;
     Ok(m)
 }

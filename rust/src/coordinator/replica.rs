@@ -8,7 +8,7 @@
 //! (synchronous data-parallel SGD); the per-batch gradients are then merged
 //! by a **deterministic fixed-order all-reduce** — summed in replica-index
 //! order, which by the contiguous round partition *is* global batch order —
-//! and one mean-gradient SGD step updates the shared parameters, which the
+//! and one mean-gradient SGD/round updates the shared parameters, which the
 //! next round's lanes see by re-borrowing (the "broadcast").
 //!
 //! **Bit-exactness contract.** PR 2 made kernel threading partition-only,
@@ -18,18 +18,25 @@
 //! whole training trajectory is bit-identical for any `--replicas N`
 //! (pinned by `tests/replica_parity.rs`). This extends the PR 2 contract
 //! from threads to replicas: replicas are a scheduling choice, not a
-//! semantic one.
+//! semantic one. The same holds for `--producers`
+//! (`tests/producer_parity.rs`): each lane's feed delivers its schedule in
+//! exact order regardless of how many sampling workers prepared it.
 //!
 //! **Thread budget.** The group shares one `--threads` budget: each lane
-//! (CPU producer + backend kernels) gets [`replica_thread_budget`] workers,
-//! so `--replicas 4 --threads 4` runs four serial lanes rather than
-//! oversubscribing the host.
+//! (CPU producers + backend kernels) gets [`replica_thread_budget`]
+//! workers, so `--replicas 4 --threads 4` runs four serial lanes rather
+//! than oversubscribing the host. The producer count splits the same way
+//! ([`lane_producer_count`](super::lane_producer_count)).
 //!
-//! **Pipelining.** With `OptConfig::pipeline` on, the existing CPU producer
-//! stages fan out to one bounded channel per replica (depth
-//! [`PIPELINE_DEPTH`](super::pipeline::PIPELINE_DEPTH), the Fig. 6
-//! backpressure), so sampling/selection/collection overlap the lanes'
+//! **Pipelining.** With `OptConfig::pipeline` on, each lane gets its own
+//! multi-producer feed ([`super::pipeline`]) over its schedule —
+//! [`lane_producer_count`](super::lane_producer_count) sampling workers
+//! feeding a sequence-numbered reorder ring with the Fig. 6 credit-based
+//! backpressure — so sampling/selection/collection overlap the lanes'
 //! backend compute exactly as in single-backend pipelined training.
+//! Consumed batch buffers cycle back to their producers; each lane's
+//! producer arsenal persists that state across epochs, extending the
+//! zero-alloc steady state to replica training (DESIGN.md §5).
 //!
 //! Backends must be [`Send`] (each lane thread takes exclusive ownership of
 //! its backend for the round); they need **not** be `Sync`, which is what
@@ -37,20 +44,21 @@
 //! participate. The `Rc`-based PJRT engine is `!Send` and stays
 //! single-backend.
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{ensure, Result};
 
-use super::pipeline::PIPELINE_DEPTH;
+use super::pipeline::{spawn_feed, BatchFeed};
 use super::{
-    assemble_batch, prepare_cpu, sampler_cfg, EpochMetrics, OptConfig, PreparedCpu, TrainCfg,
+    assemble_batch, lane_producer_count, sampler_cfg, CpuProducer, EpochMetrics, OptConfig,
+    ProducerArsenal, ProducerState, TrainCfg,
 };
 use crate::graph::HeteroGraph;
 use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, StepResult};
 use crate::models::{ModelKind, Params};
-use crate::runtime::{ExecBackend, SimBackend};
-use crate::sampler::{NeighborSampler, SamplerCfg};
+use crate::runtime::{CpuStageTimes, ExecBackend, SimBackend};
+use crate::sampler::NeighborSampler;
 use crate::util::{Rng, WorkerPool};
 
 /// Default round width (global batches per synchronous update). A constant
@@ -76,9 +84,9 @@ pub struct ReplicaMetrics {
     /// Group totals: additive counters summed over replicas via
     /// [`EpochMetrics::absorb`]; `loss`/`acc`/`wall` computed globally.
     pub group: EpochMetrics,
-    /// Per-replica counters (kernels, stage times, arena, cpu time,
-    /// batches). `loss`/`acc`/`wall` are left at their defaults here —
-    /// they are properties of the group trajectory, not of a lane.
+    /// Per-replica counters (kernels, stage times, arena, producer pool,
+    /// cpu time, batches). `loss`/`acc`/`wall` are left at their defaults
+    /// here — they are properties of the group trajectory, not of a lane.
     pub per_replica: Vec<EpochMetrics>,
 }
 
@@ -94,6 +102,9 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     round: usize,
     schema: SchemaTensors,
     engines: Vec<B>,
+    /// Per-lane producer state (scratches + recycled buffer sets), kept
+    /// across epochs for the zero-alloc steady state.
+    arsenals: Vec<ProducerArsenal>,
     rng: Rng,
     d: Dims,
 }
@@ -132,6 +143,7 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
         assert!(graph.num_classes <= d.c, "dataset classes exceed profile C");
         let schema = schema_tensors(graph, &d);
         let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
+        let arsenals = (0..engines.len()).map(|_| ProducerArsenal::default()).collect();
         Ok(ReplicaGroup {
             graph,
             model,
@@ -141,6 +153,7 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             round: round.max(1),
             schema,
             engines,
+            arsenals,
             rng: Rng::new(cfg.seed),
             d,
         })
@@ -210,6 +223,10 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
         let n_batches = NeighborSampler::new(graph, scfg).batches_per_epoch();
         let n_lanes = self.engines.len();
         let pool = WorkerPool::new(replica_thread_budget(cfg.threads, n_lanes));
+        let m_prod = lane_producer_count(&cfg, n_lanes);
+        // Lane producers split the lane's thread share further, mirroring
+        // the single-backend pipelined path.
+        let prod_pool = WorkerPool::new(replica_thread_budget(pool.threads(), m_prod));
         let rng = self.rng.clone();
         let sched = lane_schedule(n_batches, round, n_lanes);
 
@@ -220,6 +237,7 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
         let params: &mut Params = &mut self.params;
         let schema: &SchemaTensors = &self.schema;
         let engines: &mut Vec<B> = &mut self.engines;
+        let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
 
         let wall0 = Instant::now();
         let mut loss_sum = 0.0f64;
@@ -230,35 +248,37 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
 
         std::thread::scope(|s| {
             // One lane per replica; in pipeline mode each lane gets its own
-            // producer thread streaming its batches, in schedule order,
-            // through a bounded channel.
-            let mut lanes: Vec<Lane<'_, B>> = engines
+            // multi-producer feed streaming its schedule, in order, with
+            // credit-based backpressure (see super::pipeline).
+            let mut lanes: Vec<Lane<'_, '_, B>> = engines
                 .iter_mut()
                 .enumerate()
                 .map(|(i, eng)| {
-                    let rx = if opt.pipeline && !sched[i].is_empty() {
-                        let (tx, rx) = sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
-                        let my: Vec<usize> = sched[i].clone();
-                        let prng = rng.clone();
-                        s.spawn(move || {
-                            for &b in &my {
-                                let prep =
-                                    prepare_cpu(graph, scfg, &d, &opt, &pool, &prng, epoch, b);
-                                if tx.send(prep).is_err() {
-                                    return; // consumer bailed
-                                }
-                            }
-                        });
-                        Some(rx)
+                    let src = if opt.pipeline && !sched[i].is_empty() {
+                        let seeds = arsenals[i].checkout(graph, m_prod);
+                        let (feed, state_rx) = spawn_feed(
+                            s, graph, scfg, d, opt, prod_pool, &rng, epoch, &sched[i], m_prod,
+                            seeds,
+                        );
+                        LaneSource::Feed { feed, state_rx, producers: m_prod }
                     } else {
-                        None
+                        let seed = arsenals[i].checkout(graph, 1).pop().expect("one seed");
+                        LaneSource::Inline(CpuProducer::from_seed(
+                            graph,
+                            scfg,
+                            d,
+                            opt,
+                            pool,
+                            rng.clone(),
+                            seed,
+                        ))
                     };
                     Lane {
                         eng,
-                        rx,
-                        pool,
-                        rng: rng.clone(),
+                        src,
+                        pos: 0,
                         cpu_time: Duration::ZERO,
+                        cpu_by_stage: CpuStageTimes::default(),
                         batches: 0,
                         dropped_nodes: 0,
                         dropped_edges: 0,
@@ -282,9 +302,7 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
                         handles.push((
                             li,
                             rs.spawn(move || {
-                                lane.run_round(
-                                    graph, scfg, d, opt, model, schema, psnap, epoch, &batches,
-                                )
+                                lane.run_round(d, opt, model, schema, psnap, epoch, &batches)
                             }),
                         ));
                     }
@@ -327,16 +345,30 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
             }
 
             lane_tallies = lanes.iter().map(|l| l.tally()).collect();
-            // Dropping the lanes disconnects the receivers, unblocking any
-            // producer still parked on a bounded send after an early exit.
-            drop(lanes);
+            // Tear the lanes down, returning producer state to the
+            // arsenals. Finishing a feed drops its channels, which
+            // unblocks any producer still parked after an early exit; the
+            // scope then joins the producer threads.
+            for (i, lane) in lanes.into_iter().enumerate() {
+                match lane.src {
+                    LaneSource::Feed { feed, state_rx, producers } => {
+                        arsenals[i].checkin_bufs(feed.finish());
+                        for state in state_rx.iter().take(producers) {
+                            arsenals[i].checkin(state);
+                        }
+                    }
+                    LaneSource::Inline(p) => arsenals[i].checkin(p.into_state()),
+                }
+            }
         });
         epoch_result?;
 
         let mut per_replica: Vec<EpochMetrics> = Vec::with_capacity(n_lanes);
-        for (eng, t) in engines.iter().zip(&lane_tallies) {
+        for (i, (eng, t)) in engines.iter().zip(&lane_tallies).enumerate() {
             let mut pm = EpochMetrics {
                 cpu_time: t.cpu_time,
+                cpu_by_stage: t.cpu_by_stage,
+                producer: arsenals[i].stats,
                 batches: t.batches,
                 dropped_nodes: t.dropped_nodes,
                 dropped_edges: t.dropped_edges,
@@ -356,15 +388,22 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
     }
 }
 
+/// Where a lane's prepared batches come from: its multi-producer feed
+/// (pipeline mode) or an inline producer it drives itself.
+enum LaneSource<'g> {
+    Feed { feed: BatchFeed, state_rx: Receiver<ProducerState>, producers: usize },
+    Inline(CpuProducer<'g>),
+}
+
 /// One replica's execution lane: exclusive backend access plus the CPU-side
 /// tallies the per-replica metrics report.
-struct Lane<'e, B: ExecBackend> {
+struct Lane<'e, 'g, B: ExecBackend> {
     eng: &'e mut B,
-    /// Producer channel (pipeline mode); `None` = prepare inline.
-    rx: Option<Receiver<PreparedCpu>>,
-    pool: WorkerPool,
-    rng: Rng,
+    src: LaneSource<'g>,
+    /// Next position in this lane's schedule (feed sequence numbering).
+    pos: usize,
     cpu_time: Duration,
+    cpu_by_stage: CpuStageTimes,
     batches: usize,
     dropped_nodes: usize,
     dropped_edges: usize,
@@ -373,20 +412,20 @@ struct Lane<'e, B: ExecBackend> {
 #[derive(Clone, Copy, Default)]
 struct LaneTally {
     cpu_time: Duration,
+    cpu_by_stage: CpuStageTimes,
     batches: usize,
     dropped_nodes: usize,
     dropped_edges: usize,
 }
 
-impl<'e, B: ExecBackend> Lane<'e, B> {
+impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
     /// Compute gradients for this lane's slice of one round, against the
     /// round's parameter snapshot. Returns `(step result, gradient)` per
-    /// batch, in batch order.
+    /// batch, in batch order. Consumed buffers cycle straight back to the
+    /// producers.
     #[allow(clippy::too_many_arguments)]
     fn run_round(
         &mut self,
-        graph: &HeteroGraph,
-        scfg: SamplerCfg,
         d: Dims,
         opt: OptConfig,
         model: ModelKind,
@@ -398,18 +437,25 @@ impl<'e, B: ExecBackend> Lane<'e, B> {
         let exec = StepExecutor::new(&*self.eng, model, opt);
         let mut out = Vec::with_capacity(batches.len());
         for &b in batches {
-            let prep = match &self.rx {
-                Some(rx) => rx
-                    .recv()
-                    .map_err(|_| anyhow!("replica producer disconnected before batch {b}"))?,
-                None => prepare_cpu(graph, scfg, &d, &opt, &self.pool, &self.rng, epoch, b),
+            let prep = match &mut self.src {
+                LaneSource::Feed { feed, .. } => feed.recv_next()?,
+                LaneSource::Inline(p) => p.produce(epoch, b),
             };
             self.cpu_time += prep.cpu_time;
-            self.dropped_nodes += prep.dropped_nodes;
-            self.dropped_edges += prep.dropped_edges;
+            self.cpu_by_stage += prep.cpu_by_stage;
+            self.dropped_nodes += prep.dropped_nodes();
+            self.dropped_edges += prep.dropped_edges();
             self.batches += 1;
-            let batch = assemble_batch(&*self.eng, &d, schema, prep)?;
-            out.push(exec.grad_step(params, schema, &batch)?);
+            let (batch, spent) = assemble_batch(&*self.eng, &d, schema, prep)?;
+            let res = exec.grad_step(params, schema, &batch)?;
+            let bufs = spent.reclaim(batch);
+            let pos = self.pos;
+            self.pos += 1;
+            match &mut self.src {
+                LaneSource::Feed { feed, .. } => feed.recycle(pos, bufs),
+                LaneSource::Inline(p) => p.reclaim(bufs),
+            }
+            out.push(res);
         }
         Ok(out)
     }
@@ -417,6 +463,7 @@ impl<'e, B: ExecBackend> Lane<'e, B> {
     fn tally(&self) -> LaneTally {
         LaneTally {
             cpu_time: self.cpu_time,
+            cpu_by_stage: self.cpu_by_stage,
             batches: self.batches,
             dropped_nodes: self.dropped_nodes,
             dropped_edges: self.dropped_edges,
@@ -444,7 +491,7 @@ fn round_split(len: usize, lanes: usize) -> Vec<(usize, usize)> {
 }
 
 /// Every lane's global batch indices for a whole epoch, in the order its
-/// producer streams them (round by round, contiguous within each round).
+/// producers stream them (round by round, contiguous within each round).
 fn lane_schedule(n_batches: usize, round: usize, lanes: usize) -> Vec<Vec<usize>> {
     let round = round.max(1);
     let mut sched = vec![Vec::new(); lanes];

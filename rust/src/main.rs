@@ -10,6 +10,9 @@
 //! Common flags: --dataset aifb|mutag|bgs|am|tiny --model rgcn|rgat
 //!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked --epochs N
 //!   --batch-size N --fanout N --lr F --seed N --threads N --scale F
+//!   --producers M (pipelined modes: CPU sampling workers feeding the
+//!   reorder buffer; default max(1, threads/2) — trajectory bit-identical
+//!   for every M)
 //!   --backend sim|pjrt (default sim) --profile tiny|bench (sim backend)
 //!   --sim-overhead-us F (simulated launch cost, sim backend)
 //!   --artifacts DIR (pjrt backend artifact dir, default artifacts/bench)
@@ -26,7 +29,7 @@ use anyhow::{bail, Result};
 
 use hifuse::config::{BackendKind, RunConfig};
 use hifuse::coordinator::{
-    prepare_cpu, prepare_graph_layout, replica_thread_budget, ReplicaGroup, Trainer,
+    prepare_graph_layout, replica_thread_budget, CpuProducer, ReplicaGroup, Trainer,
 };
 use hifuse::graph::datasets::DATASETS;
 use hifuse::models::plan;
@@ -72,7 +75,7 @@ fn print_usage() {
          \x20 --backend sim|pjrt (default sim)    --profile tiny|bench (sim)\n\
          \x20 --sim-overhead-us F                 --artifacts DIR (pjrt)\n\
          \x20 --epochs N --batch-size N --fanout N --lr F --seed N\n\
-         \x20 --threads N --scale F\n\
+         \x20 --threads N --producers M --scale F\n\
          \x20 --replicas N (train, sim: data-parallel replica rounds;\n\
          \x20               trajectory bit-identical for every N)\n\
          see README.md and DESIGN.md for details"
@@ -280,8 +283,16 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | kernels {}",
-            m.loss, m.acc, m.wall, m.cpu_time, m.gpu_time, m.kernels_total
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | kernels {}",
+            m.loss,
+            m.acc,
+            m.wall,
+            m.cpu_time,
+            m.cpu_by_stage.sample,
+            m.cpu_by_stage.select,
+            m.cpu_by_stage.collect,
+            m.gpu_time,
+            m.kernels_total
         );
     }
     save_ckpt_env(&tr.params)?;
@@ -335,11 +346,15 @@ fn cmd_profile<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
     };
     let rng = hifuse::util::Rng::new(cfg.train.seed);
     let pool = tr.pool;
-    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, &pool, &rng, 0, 0);
+    // One persistent producer, constructed before the timed region: its
+    // scratch allocation (dense slot maps spanning the graph) is run-level
+    // setup the training loops amortize, not per-step work.
+    let mut producer = CpuProducer::new(&graph, scfg, d, cfg.opt, pool, rng);
+    let prep = producer.produce(0, 0);
     tr.compute_batch(prep)?; // warm (compiles on PJRT)
     eng.reset_counters(true);
     let t0 = std::time::Instant::now();
-    let prep = prepare_cpu(&graph, scfg, &d, &cfg.opt, &pool, &rng, 0, 1);
+    let prep = producer.produce(0, 1);
     tr.compute_batch(prep)?;
     let step_wall = t0.elapsed();
     let counters = eng.counters().borrow();

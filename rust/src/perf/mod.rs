@@ -145,6 +145,17 @@ pub fn parallel_model(work_s: f64, span_s: f64, threads: usize) -> f64 {
     (work_s / threads.max(1) as f64).max(span_s)
 }
 
+/// Steady-state per-batch wall time of the multi-producer pipeline
+/// (DESIGN.md §4): `producers` CPU workers each take `produce_s` per batch
+/// while the consumer takes `consume_s`, so throughput is limited by
+/// `max(consume, produce / producers)` — Brent's bound with the consumer
+/// step as the indivisible span. This is the model column of
+/// `results/producer_scaling.md` (EXPERIMENTS.md §Perf #6): producer
+/// scaling pays off exactly until the consumer becomes the bottleneck.
+pub fn pipeline_model(produce_s: f64, consume_s: f64, producers: usize) -> f64 {
+    parallel_model(produce_s, consume_s, producers)
+}
+
 /// One roofline point (Fig. 3b): a dispatched kernel's arithmetic
 /// intensity vs achieved compute, plus its bound classification.
 #[derive(Clone, Debug)]
@@ -201,6 +212,16 @@ mod tests {
         assert_eq!(parallel_model(8.0, 2.0, 8), 2.0);
         // ... and zero threads degrade to serial.
         assert_eq!(parallel_model(8.0, 0.5, 0), 8.0);
+    }
+
+    #[test]
+    fn pipeline_model_saturates_at_the_consumer() {
+        // Producer-bound: doubling producers halves the step time ...
+        assert_eq!(pipeline_model(8.0, 1.0, 2), 4.0);
+        assert_eq!(pipeline_model(8.0, 1.0, 4), 2.0);
+        // ... until the consumer is the bottleneck.
+        assert_eq!(pipeline_model(8.0, 3.0, 4), 3.0);
+        assert_eq!(pipeline_model(8.0, 3.0, 64), 3.0);
     }
 
     #[test]

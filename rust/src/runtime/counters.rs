@@ -53,6 +53,38 @@ pub enum Phase {
     Bwd,
 }
 
+/// Wall time of the three **CPU producer stages** per batch (the host-side
+/// counterpart of [`Counters::time_by_stage`]): mini-batch sampling, CPU
+/// edge-index selection, feature collection. Summed per epoch into
+/// `EpochMetrics` and exported by the bench harness, so the paper's Table 1
+/// CPU column can be broken down by stage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CpuStageTimes {
+    pub sample: Duration,
+    pub select: Duration,
+    pub collect: Duration,
+}
+
+impl CpuStageTimes {
+    pub fn total(&self) -> Duration {
+        self.sample + self.select + self.collect
+    }
+
+    /// `(stage name, duration)` rows, in pipeline order — the CPU analogue
+    /// of the per-stage dispatch-time table.
+    pub fn by_stage(&self) -> [(&'static str, Duration); 3] {
+        [("sample", self.sample), ("select", self.select), ("collect", self.collect)]
+    }
+}
+
+impl std::ops::AddAssign for CpuStageTimes {
+    fn add_assign(&mut self, o: CpuStageTimes) {
+        self.sample += o.sample;
+        self.select += o.select;
+        self.collect += o.collect;
+    }
+}
+
 /// One dispatch event (Fig. 3a timeline row).
 #[derive(Clone, Debug)]
 pub struct Event {
@@ -177,6 +209,20 @@ mod tests {
         c.record("x", Stage::Calib, Phase::Fwd, Duration::from_micros(50), 1, 1);
         assert_eq!(c.total(), 0);
         assert_eq!(c.gpu_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn cpu_stage_times_sum_and_accumulate() {
+        let mut a = CpuStageTimes {
+            sample: Duration::from_micros(3),
+            select: Duration::from_micros(2),
+            collect: Duration::from_micros(1),
+        };
+        assert_eq!(a.total(), Duration::from_micros(6));
+        a += CpuStageTimes { sample: Duration::from_micros(1), ..Default::default() };
+        assert_eq!(a.sample, Duration::from_micros(4));
+        assert_eq!(a.by_stage()[0], ("sample", Duration::from_micros(4)));
+        assert_eq!(a.by_stage()[2], ("collect", Duration::from_micros(1)));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod literal;
 pub mod pjrt;
 
 pub use arena::{Arena, ArenaStats};
-pub use counters::{Counters, Event, Phase, Stage, STAGES};
+pub use counters::{Counters, CpuStageTimes, Event, Phase, Stage, STAGES};
 pub use manifest::{DType, Manifest, ModuleSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{DevTensor, Engine};

@@ -16,7 +16,9 @@ use crate::graph::{HeteroGraph, Layout};
 use crate::sampler::MiniBatch;
 use crate::util::{HostTensor, WorkerPool};
 
-/// Collected batch tensors, ready for upload.
+/// Collected batch tensors, ready for upload. Reusable: [`collect_into`]
+/// refills an existing instance in place (the shapes are profile constants,
+/// so a recycled `Collected` never reallocates).
 pub struct Collected {
     /// `[TPAD, NS, F]` raw-feature slabs, zero-padded.
     pub xs: HostTensor,
@@ -26,6 +28,19 @@ pub struct Collected {
     pub seed_mask: HostTensor,
     /// Number of distinct seeds (mask population).
     pub n_seed: usize,
+}
+
+impl Collected {
+    /// Zeroed tensors at the profile shapes (one-time allocation; the
+    /// producer recycling loop keeps them alive across batches).
+    pub fn new(tpad: usize, ns: usize, f: usize) -> Self {
+        Collected {
+            xs: HostTensor::zeros_f32(&[tpad, ns, f]),
+            labels: HostTensor::i32(vec![0i32; ns], &[ns]),
+            seed_mask: HostTensor::zeros_f32(&[ns]),
+            n_seed: 0,
+        }
+    }
 }
 
 /// Fill one type's `[NS, F]` slab: run-length `copy_from_slice` on the
@@ -55,7 +70,8 @@ fn collect_type_rows(g: &HeteroGraph, t: usize, slot_list: &[u32], f: usize, out
 /// Gather raw features + labels + seed mask for a mini-batch.
 ///
 /// `tpad`/`ns` are the profile paddings; `f` is the raw feature dim;
-/// `pool` partitions the per-type slab fills across workers.
+/// `pool` partitions the per-type slab fills across workers. One-shot
+/// convenience over [`collect_into`].
 pub fn collect(
     g: &HeteroGraph,
     mb: &MiniBatch,
@@ -64,9 +80,27 @@ pub fn collect(
     f: usize,
     pool: &WorkerPool,
 ) -> Collected {
+    let mut out = Collected::new(tpad, ns, f);
+    collect_into(g, mb, tpad, ns, f, pool, &mut out);
+    out
+}
+
+/// Zero-alloc variant of [`collect`]: refill `out` (a recycled
+/// [`Collected`] of the same profile shapes) in place.
+pub fn collect_into(
+    g: &HeteroGraph,
+    mb: &MiniBatch,
+    tpad: usize,
+    ns: usize,
+    f: usize,
+    pool: &WorkerPool,
+    out: &mut Collected,
+) {
     assert!(g.n_types() <= tpad, "graph has more types than TPAD");
     assert_eq!(g.feat_dim, f);
-    let mut xs = vec![0.0f32; tpad * ns * f];
+    let xs = out.xs.as_f32_mut().expect("xs is f32");
+    assert_eq!(xs.len(), tpad * ns * f, "recycled xs has a different profile shape");
+    xs.fill(0.0);
     let n_types = mb.slots.len();
     pool.for_row_chunks(&mut xs[..n_types * ns * f], n_types, 1, |t0, t1, slab| {
         for t in t0..t1 {
@@ -75,7 +109,9 @@ pub fn collect(
         }
     });
 
-    let mut labels = vec![0i32; ns];
+    let labels = out.labels.as_i32_mut().expect("labels is i32");
+    assert_eq!(labels.len(), ns, "recycled labels has a different profile shape");
+    labels.fill(0);
     for (s, &v) in mb.slots[g.target_type].iter().enumerate() {
         labels[s] = g.labels[v as usize] as i32;
     }
@@ -88,7 +124,9 @@ pub fn collect(
     // the per-batch HashSet (and its allocations) the collector used to
     // build.
     let tslots = &mb.slots[g.target_type];
-    let mut seed_mask = vec![0.0f32; ns];
+    let seed_mask = out.seed_mask.as_f32_mut().expect("seed_mask is f32");
+    assert_eq!(seed_mask.len(), ns, "recycled seed_mask has a different profile shape");
+    seed_mask.fill(0.0);
     let mut n_seed = 0usize;
     for &v in &mb.seeds {
         if n_seed < tslots.len() && tslots[n_seed] == v {
@@ -102,13 +140,7 @@ pub fn collect(
         let distinct = mb.seeds.iter().filter(|v| seen.insert(**v)).count();
         debug_assert_eq!(n_seed, distinct, "slot-prefix dedup diverged from HashSet");
     }
-
-    Collected {
-        xs: HostTensor::f32(xs, &[tpad, ns, f]),
-        labels: HostTensor::i32(labels, &[ns]),
-        seed_mask: HostTensor::f32(seed_mask, &[ns]),
-        n_seed,
-    }
+    out.n_seed = n_seed;
 }
 
 #[cfg(test)]
@@ -197,6 +229,27 @@ mod tests {
             assert_eq!(labels[s], g.labels[v] as i32);
         }
         assert!(mask[c.n_seed..].iter().all(|&x| x == 0.0));
+    }
+
+    /// Refilling a recycled `Collected` (already holding another batch's
+    /// data) reproduces a fresh collection exactly — stale rows, labels and
+    /// mask bits are all overwritten or re-zeroed.
+    #[test]
+    fn collect_into_reuse_matches_fresh() {
+        let (g, mb) = setup();
+        let s = NeighborSampler::new(
+            &g,
+            SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: 32, ep: 16 },
+        );
+        let other = s.sample(&Rng::new(99), 1, 2);
+        let mut recycled = Collected::new(8, 32, 8);
+        collect_into(&g, &other, 8, 32, 8, &serial(), &mut recycled);
+        collect_into(&g, &mb, 8, 32, 8, &serial(), &mut recycled);
+        let fresh = collect(&g, &mb, 8, 32, 8, &serial());
+        assert_eq!(recycled.xs, fresh.xs);
+        assert_eq!(recycled.labels, fresh.labels);
+        assert_eq!(recycled.seed_mask, fresh.seed_mask);
+        assert_eq!(recycled.n_seed, fresh.n_seed);
     }
 
     /// Duplicate seeds (wrapped tail batch) are counted once by the

@@ -13,6 +13,17 @@
 //! `dropped_*` fields), mirroring the bucket-padding contract in DESIGN.md
 //! §6. The caps come from the AOT profile, so the sampler can never emit a
 //! batch the compiled modules cannot hold.
+//!
+//! **Zero-alloc hot path.** [`NeighborSampler::sample_into`] writes into a
+//! caller-owned [`MiniBatch`] using a reusable [`SamplerScratch`]: the
+//! epoch permutation is computed once per *epoch* (not per batch), the
+//! per-type slot maps are generation-stamped dense arrays instead of
+//! `HashMap`s, and every intermediate (`sample_indices` picks, the tagged
+//! shuffle permutation, the pre-shuffle COO staging list) lives in pooled
+//! buffers — so steady-state sampling performs no heap allocation while
+//! producing **bit-identical** batches (same RNG fork discipline; pinned by
+//! `scratch_reuse_is_bit_identical`). [`NeighborSampler::sample`] remains
+//! as the one-shot convenience wrapper.
 
 pub mod collect;
 
@@ -20,7 +31,7 @@ use crate::graph::HeteroGraph;
 use crate::util::Rng;
 
 /// Per-relation edges of one layer, in *slot* coordinates.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RelEdges {
     pub src: Vec<u32>,
     pub dst: Vec<u32>,
@@ -33,12 +44,20 @@ impl RelEdges {
     pub fn is_empty(&self) -> bool {
         self.src.is_empty()
     }
+    fn clear(&mut self) {
+        self.src.clear();
+        self.dst.clear();
+    }
+    /// Held heap capacity in elements (allocation-growth witness).
+    fn capacity_footprint(&self) -> usize {
+        self.src.capacity() + self.dst.capacity()
+    }
 }
 
 /// The shuffled, type-tagged edge list of one layer — the COO tensor the
 /// semantic-graph-build stage selects from (paper §4.3: "edge indices are
 /// stored in a 2xN tensor in coordinate format ... for all relations").
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TaggedEdges {
     pub rel: Vec<u32>,
     pub src: Vec<u32>,
@@ -52,9 +71,19 @@ impl TaggedEdges {
     pub fn is_empty(&self) -> bool {
         self.rel.is_empty()
     }
+    fn clear(&mut self) {
+        self.rel.clear();
+        self.src.clear();
+        self.dst.clear();
+    }
+    fn capacity_footprint(&self) -> usize {
+        self.rel.capacity() + self.src.capacity() + self.dst.capacity()
+    }
 }
 
-/// A sampled mini-batch.
+/// A sampled mini-batch. Reusable: [`NeighborSampler::sample_into`] clears
+/// and refills an existing instance, retaining its buffer capacities.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MiniBatch {
     /// Seed vertices (type-local ids of the target type); slot i of the
     /// target type holds `seeds[i]`.
@@ -71,6 +100,65 @@ pub struct MiniBatch {
     pub dropped_edges: usize,
 }
 
+impl MiniBatch {
+    /// Clear all contents (keeping capacities), size the nested structure
+    /// for `n_types` / `layers` / `n_rel`, and reserve every buffer to its
+    /// **static cap** (`batch_size`, `ns`, `ep` — the same profile bounds
+    /// the sampler enforces). Reserving to the caps up front is what makes
+    /// the steady state *deterministically* allocation-free: no later batch
+    /// can exceed a high-water mark, because the caps are the high-water
+    /// mark. All reserves are no-ops after the first use of a buffer set.
+    /// `pub(crate)` so the producer pool can construct fully-reserved
+    /// batches up front (a virgin buffer must never grow on first use).
+    pub(crate) fn reset(&mut self, cfg: &SamplerCfg, n_types: usize, n_rel: usize) {
+        let layers = cfg.layers;
+        self.seeds.clear();
+        self.seeds.reserve(cfg.batch_size);
+        self.slots.resize_with(n_types, Vec::new);
+        for s in &mut self.slots {
+            s.clear();
+            s.reserve(cfg.ns);
+        }
+        let layer_cap = n_rel * cfg.ep;
+        self.tagged.resize_with(layers, TaggedEdges::default);
+        for t in &mut self.tagged {
+            t.clear();
+            t.rel.reserve(layer_cap);
+            t.src.reserve(layer_cap);
+            t.dst.reserve(layer_cap);
+        }
+        self.oracle_edges.resize_with(layers, Vec::new);
+        for layer in &mut self.oracle_edges {
+            layer.resize_with(n_rel, RelEdges::default);
+            for e in layer.iter_mut() {
+                e.clear();
+                e.src.reserve(cfg.ep);
+                e.dst.reserve(cfg.ep);
+            }
+        }
+        self.dropped_nodes = 0;
+        self.dropped_edges = 0;
+    }
+
+    /// Total heap capacity held, in elements (not bytes): the
+    /// allocation-growth witness behind the producer zero-alloc tests — a
+    /// `produce` call that left this number unchanged performed no heap
+    /// allocation in the mini-batch buffers.
+    pub fn capacity_footprint(&self) -> usize {
+        self.seeds.capacity()
+            + self.slots.capacity()
+            + self.slots.iter().map(|s| s.capacity()).sum::<usize>()
+            + self.tagged.capacity()
+            + self.tagged.iter().map(|t| t.capacity_footprint()).sum::<usize>()
+            + self.oracle_edges.capacity()
+            + self
+                .oracle_edges
+                .iter()
+                .map(|l| l.capacity() + l.iter().map(|e| e.capacity_footprint()).sum::<usize>())
+                .sum::<usize>()
+    }
+}
+
 /// Sampler configuration: caps come from the AOT profile.
 #[derive(Clone, Copy, Debug)]
 pub struct SamplerCfg {
@@ -82,6 +170,132 @@ pub struct SamplerCfg {
     pub ns: usize,
     /// Edge cap per relation per layer (profile EP).
     pub ep: usize,
+}
+
+/// Reusable sampling state (one per producer worker). Holds everything
+/// `sample_into` needs beyond the output `MiniBatch`:
+///
+/// * the **epoch permutation** of the train split, recomputed only when the
+///   epoch changes (O(train) per epoch instead of per batch);
+/// * **generation-stamped dense slot maps**: `slot_of[t][v]` is valid iff
+///   `stamp[t][v]` equals the current generation, so "clearing" the map
+///   between batches is a single counter bump — no `HashMap`, no rehashing,
+///   no per-batch zeroing;
+/// * pooled scratch for the fanout picks (`idx`), the tagged-shuffle
+///   permutation (`perm`), the pre-shuffle COO staging list (`tag_tmp`) and
+///   the per-layer frontier snapshot.
+pub struct SamplerScratch {
+    order: Vec<u32>,
+    /// `(rng fork key, epoch)` the cached permutation was computed for —
+    /// keyed on the generator too, so reusing one scratch across
+    /// differently-seeded runs can never serve a stale permutation.
+    order_key: Option<(u64, u64)>,
+    slot_of: Vec<Vec<u32>>,
+    stamp: Vec<Vec<u32>>,
+    gen: u32,
+    idx: Vec<usize>,
+    perm: Vec<usize>,
+    tag_tmp: TaggedEdges,
+    frontier: Vec<usize>,
+}
+
+impl SamplerScratch {
+    /// Scratch sized for `g`: the dense slot maps span every vertex, and
+    /// the fanout-pick buffer is reserved to the graph's maximum in-degree
+    /// (its only data-dependent bound), so steady-state sampling never
+    /// grows it.
+    pub fn new(g: &HeteroGraph) -> Self {
+        let max_indeg = g
+            .relations
+            .iter()
+            .flat_map(|r| r.indptr.windows(2).map(|w| (w[1] - w[0]) as usize))
+            .max()
+            .unwrap_or(0);
+        SamplerScratch {
+            order: Vec::with_capacity(g.train_idx.len()),
+            order_key: None,
+            slot_of: g.num_nodes.iter().map(|&n| vec![0u32; n]).collect(),
+            stamp: g.num_nodes.iter().map(|&n| vec![0u32; n]).collect(),
+            gen: 0,
+            idx: Vec::with_capacity(max_indeg),
+            perm: Vec::new(),
+            tag_tmp: TaggedEdges::default(),
+            frontier: Vec::with_capacity(g.n_types()),
+        }
+    }
+
+    /// Reserve the cfg-dependent pooled buffers (shuffle permutation, COO
+    /// staging list) to the per-layer edge cap, clearing any stale
+    /// contents first. Idempotent; called once when a producer adopts the
+    /// scratch, so even a scratch that sat idle an epoch never grows on
+    /// its first use.
+    pub fn reserve_for(&mut self, n_rel: usize, ep: usize) {
+        let cap = n_rel * ep;
+        self.perm.clear();
+        self.perm.reserve(cap);
+        self.tag_tmp.clear();
+        self.tag_tmp.rel.reserve(cap);
+        self.tag_tmp.src.reserve(cap);
+        self.tag_tmp.dst.reserve(cap);
+    }
+
+    /// Total heap capacity held, in elements; see
+    /// [`MiniBatch::capacity_footprint`].
+    pub fn capacity_footprint(&self) -> usize {
+        self.order.capacity()
+            + self.slot_of.iter().map(|s| s.capacity()).sum::<usize>()
+            + self.stamp.iter().map(|s| s.capacity()).sum::<usize>()
+            + self.idx.capacity()
+            + self.perm.capacity()
+            + self.tag_tmp.capacity_footprint()
+            + self.frontier.capacity()
+    }
+}
+
+/// Assign `v` (type `t`) a slot, reusing an existing one if this batch
+/// already placed it. Generation-stamped: a stale `slot_of` entry from an
+/// earlier batch is invisible because its stamp differs.
+#[allow(clippy::too_many_arguments)]
+fn assign_slot(
+    t: usize,
+    v: u32,
+    ns: usize,
+    gen: u32,
+    slots: &mut [Vec<u32>],
+    slot_of: &mut [Vec<u32>],
+    stamp: &mut [Vec<u32>],
+    dropped: &mut usize,
+) -> Option<u32> {
+    let vi = v as usize;
+    if stamp[t][vi] == gen {
+        return Some(slot_of[t][vi]);
+    }
+    if slots[t].len() >= ns {
+        *dropped += 1;
+        return None;
+    }
+    let s = slots[t].len() as u32;
+    slots[t].push(v);
+    slot_of[t][vi] = s;
+    stamp[t][vi] = gen;
+    Some(s)
+}
+
+/// Fill `idx` with `0..n` and partially Fisher-Yates the first `k` entries
+/// into a uniform k-subset (read `&idx[..k]`). Identical RNG consumption to
+/// the historical allocate-per-call version: zero draws when `k == n`,
+/// otherwise exactly `k` `below` calls.
+fn sample_indices_into(n: usize, k: usize, rng: &mut Rng, idx: &mut Vec<usize>) {
+    debug_assert!(k <= n);
+    idx.clear();
+    idx.extend(0..n);
+    if k == n {
+        return;
+    }
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
 }
 
 pub struct NeighborSampler<'g> {
@@ -102,64 +316,94 @@ impl<'g> NeighborSampler<'g> {
 
     /// Sample the `batch_idx`-th mini-batch of an epoch. Deterministic in
     /// (`rng` seed, batch_idx) so baseline and HiFuse runs see identical
-    /// batches.
+    /// batches. One-shot convenience over [`NeighborSampler::sample_into`]
+    /// (allocates a fresh scratch; the training paths keep one per
+    /// producer).
     pub fn sample(&self, rng: &Rng, epoch: u64, batch_idx: usize) -> MiniBatch {
+        let mut scratch = SamplerScratch::new(self.graph);
+        let mut mb = MiniBatch::default();
+        self.sample_into(rng, epoch, batch_idx, &mut scratch, &mut mb);
+        mb
+    }
+
+    /// Sample into a caller-owned batch, reusing `scratch`. Bit-identical
+    /// to [`NeighborSampler::sample`] for any reuse pattern: all randomness
+    /// is forked from `rng` per (epoch, batch) exactly as before, and the
+    /// cached epoch permutation is a pure function of (`rng`, epoch).
+    pub fn sample_into(
+        &self,
+        rng: &Rng,
+        epoch: u64,
+        batch_idx: usize,
+        scratch: &mut SamplerScratch,
+        out: &mut MiniBatch,
+    ) {
         let g = self.graph;
         let cfg = self.cfg;
+        debug_assert_eq!(scratch.slot_of.len(), g.n_types(), "scratch built for another graph");
+        out.reset(&cfg, g.n_types(), g.n_relations());
+        let SamplerScratch {
+            order,
+            order_key,
+            slot_of,
+            stamp,
+            gen,
+            idx,
+            perm,
+            tag_tmp,
+            frontier,
+        } = scratch;
+        let MiniBatch { seeds, slots, tagged, oracle_edges, dropped_nodes, dropped_edges } = out;
+
         // Epoch-shuffled train split: derived from (base rng, epoch) ONLY,
-        // so every batch of an epoch agrees on the permutation.
-        let mut order: Vec<u32> = g.train_idx.clone();
-        let mut epoch_rng = rng.fork(0xE90C ^ epoch);
-        epoch_rng.shuffle(&mut order);
+        // so every batch of an epoch agrees on the permutation — computed
+        // once per (rng, epoch) and cached. Keying on the rng's fork key
+        // keeps scratch reuse safe across differently-seeded runs.
+        if *order_key != Some((rng.fork_key(), epoch)) {
+            order.clear();
+            order.extend_from_slice(&g.train_idx);
+            let mut epoch_rng = rng.fork(0xE90C ^ epoch);
+            epoch_rng.shuffle(order);
+            *order_key = Some((rng.fork_key(), epoch));
+        }
         // Everything below is per-(epoch, batch) randomness.
         let rng = rng.fork(epoch.wrapping_mul(1_000_003) + batch_idx as u64 + 1);
         let start = batch_idx * cfg.batch_size;
-        let seeds: Vec<u32> = order
-            .iter()
-            .copied()
-            .cycle() // wrap the tail batch to keep batch size static
-            .skip(start)
-            .take(cfg.batch_size)
-            .collect();
+        // Wrap the tail batch to keep the batch size static; modular
+        // indexing into the cached permutation (a cycled iterator would
+        // pay an O(start) skip walk per batch).
+        if !order.is_empty() {
+            let len = order.len();
+            seeds.extend((0..cfg.batch_size).map(|i| order[(start + i) % len]));
+        }
 
-        // Slot maps: per type, vertex -> slot. HashMap per type.
-        let mut slots: Vec<Vec<u32>> = vec![Vec::new(); g.n_types()];
-        let mut slot_of: Vec<std::collections::HashMap<u32, u32>> =
-            vec![std::collections::HashMap::new(); g.n_types()];
-        let mut dropped_nodes = 0usize;
-        let assign = |t: usize,
-                          v: u32,
-                          slots: &mut Vec<Vec<u32>>,
-                          slot_of: &mut Vec<std::collections::HashMap<u32, u32>>,
-                          dropped: &mut usize|
-         -> Option<u32> {
-            if let Some(&s) = slot_of[t].get(&v) {
-                return Some(s);
+        // New slot-map generation; on (unlikely) wrap, reset the stamps so
+        // generation 1 can never collide with a stale entry.
+        if *gen == u32::MAX {
+            for s in stamp.iter_mut() {
+                s.fill(0);
             }
-            if slots[t].len() >= cfg.ns {
-                *dropped += 1;
-                return None;
-            }
-            let s = slots[t].len() as u32;
-            slots[t].push(v);
-            slot_of[t].insert(v, s);
-            Some(s)
-        };
+            *gen = 0;
+        }
+        *gen += 1;
+        let gen = *gen;
 
         for (i, &v) in seeds.iter().enumerate() {
-            let s = assign(g.target_type, v, &mut slots, &mut slot_of, &mut dropped_nodes)
-                .expect("batch_size <= ns");
+            let s =
+                assign_slot(g.target_type, v, cfg.ns, gen, slots, slot_of, stamp, dropped_nodes)
+                    .expect("batch_size <= ns");
             debug_assert!(s as usize <= i);
         }
 
-        let mut dropped_edges = 0usize;
-        let mut layers_rel: Vec<Vec<RelEdges>> = Vec::with_capacity(cfg.layers);
         // Sample top layer first (aggregates into seeds), then lower layers
-        // (aggregate into everything sampled so far).
-        for _layer in (0..cfg.layers).rev() {
+        // (aggregate into everything sampled so far). Iteration `li` fills
+        // oracle layer `layers - 1 - li`, so storage stays input-layer-first
+        // without the historical push-then-reverse.
+        for li in 0..cfg.layers {
+            let layer = cfg.layers - 1 - li;
             // Snapshot frontier sizes: vertices present before this layer.
-            let frontier: Vec<usize> = slots.iter().map(|s| s.len()).collect();
-            let mut rel_edges: Vec<RelEdges> = vec![RelEdges::default(); g.n_relations()];
+            frontier.clear();
+            frontier.extend(slots.iter().map(|s| s.len()));
             for (ri, rel) in g.relations.iter().enumerate() {
                 let dt = rel.dst_type;
                 let mut srng = rng.fork((ri as u64) << 8);
@@ -171,77 +415,66 @@ impl<'g> NeighborSampler<'g> {
                     }
                     // Sample up to fanout without replacement (index set).
                     let k = cfg.fanout.min(neigh.len());
-                    let picks = sample_indices(neigh.len(), k, &mut srng);
-                    for p in picks {
-                        if rel_edges[ri].len() >= cfg.ep {
-                            dropped_edges += 1;
+                    sample_indices_into(neigh.len(), k, &mut srng, idx);
+                    for &p in &idx[..k] {
+                        if oracle_edges[layer][ri].len() >= cfg.ep {
+                            *dropped_edges += 1;
                             continue;
                         }
                         let sv = neigh[p];
-                        match assign(rel.src_type, sv, &mut slots, &mut slot_of, &mut dropped_nodes)
-                        {
+                        match assign_slot(
+                            rel.src_type,
+                            sv,
+                            cfg.ns,
+                            gen,
+                            slots,
+                            slot_of,
+                            stamp,
+                            dropped_nodes,
+                        ) {
                             Some(ss) => {
-                                rel_edges[ri].src.push(ss);
-                                rel_edges[ri].dst.push(dslot as u32);
+                                let e = &mut oracle_edges[layer][ri];
+                                e.src.push(ss);
+                                e.dst.push(dslot as u32);
                             }
-                            None => dropped_edges += 1,
+                            None => *dropped_edges += 1,
                         }
                     }
                 }
             }
-            layers_rel.push(rel_edges);
         }
-        // We sampled top-down; store input-layer-first (layer 0 first).
-        layers_rel.reverse();
 
-        // Build the shuffled tagged COO list per layer.
-        let tagged = layers_rel
-            .iter()
-            .enumerate()
-            .map(|(l, rels)| {
-                let total: usize = rels.iter().map(|e| e.len()).sum();
-                let mut t = TaggedEdges {
-                    rel: Vec::with_capacity(total),
-                    src: Vec::with_capacity(total),
-                    dst: Vec::with_capacity(total),
-                };
-                for (ri, e) in rels.iter().enumerate() {
-                    for i in 0..e.len() {
-                        t.rel.push(ri as u32);
-                        t.src.push(e.src[i]);
-                        t.dst.push(e.dst[i]);
-                    }
+        // Build the shuffled tagged COO list per layer: stage the edges in
+        // discovery order, then gather through a shuffled permutation —
+        // both through pooled buffers reserved to the per-layer edge cap.
+        let layer_cap = g.n_relations() * cfg.ep;
+        perm.clear();
+        perm.reserve(layer_cap);
+        tag_tmp.clear();
+        tag_tmp.rel.reserve(layer_cap);
+        tag_tmp.src.reserve(layer_cap);
+        tag_tmp.dst.reserve(layer_cap);
+        for l in 0..cfg.layers {
+            tag_tmp.clear();
+            for (ri, e) in oracle_edges[l].iter().enumerate() {
+                for i in 0..e.len() {
+                    tag_tmp.rel.push(ri as u32);
+                    tag_tmp.src.push(e.src[i]);
+                    tag_tmp.dst.push(e.dst[i]);
                 }
-                // Shuffle to a realistic mixed order (the sampler on CPU
-                // emits edges in discovery order; PyG's COO is not grouped).
-                let mut perm: Vec<usize> = (0..total).collect();
-                rng.fork(0xBEEF + l as u64).shuffle(&mut perm);
-                TaggedEdges {
-                    rel: perm.iter().map(|&i| t.rel[i]).collect(),
-                    src: perm.iter().map(|&i| t.src[i]).collect(),
-                    dst: perm.iter().map(|&i| t.dst[i]).collect(),
-                }
-            })
-            .collect();
-
-        MiniBatch { seeds, slots, tagged, oracle_edges: layers_rel, dropped_nodes, dropped_edges }
+            }
+            // Shuffle to a realistic mixed order (the sampler on CPU
+            // emits edges in discovery order; PyG's COO is not grouped).
+            perm.clear();
+            perm.extend(0..tag_tmp.len());
+            rng.fork(0xBEEF + l as u64).shuffle(perm);
+            let t = &mut tagged[l];
+            t.clear();
+            t.rel.extend(perm.iter().map(|&i| tag_tmp.rel[i]));
+            t.src.extend(perm.iter().map(|&i| tag_tmp.src[i]));
+            t.dst.extend(perm.iter().map(|&i| tag_tmp.dst[i]));
+        }
     }
-}
-
-/// k distinct indices from [0,n) (partial Fisher-Yates over a scratch vec —
-/// n is a vertex in-degree, small).
-fn sample_indices(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
-    debug_assert!(k <= n);
-    if k == n {
-        return (0..n).collect();
-    }
-    let mut idx: Vec<usize> = (0..n).collect();
-    for i in 0..k {
-        let j = i + rng.below(n - i);
-        idx.swap(i, j);
-    }
-    idx.truncate(k);
-    idx
 }
 
 #[cfg(test)]
@@ -368,5 +601,67 @@ mod tests {
         let a = s.sample(&rng, 0, 0);
         let b = s.sample(&rng, 1, 0);
         assert_ne!(a.seeds, b.seeds, "epoch shuffle had no effect");
+    }
+
+    /// The zero-alloc path is bit-identical to the one-shot path for any
+    /// reuse pattern: one scratch + one MiniBatch driven across a grid of
+    /// (epoch, batch) — including epoch changes, which exercise the cached
+    /// permutation — always reproduces a fresh `sample` exactly.
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(42);
+        let mut scratch = SamplerScratch::new(&g);
+        let mut mb = MiniBatch::default();
+        for epoch in 0..3u64 {
+            for b in 0..s.batches_per_epoch() {
+                s.sample_into(&rng, epoch, b, &mut scratch, &mut mb);
+                let fresh = s.sample(&rng, epoch, b);
+                assert_eq!(mb, fresh, "epoch {epoch} batch {b} diverged under reuse");
+            }
+        }
+        // Revisiting an earlier epoch (replica lanes replay schedules out of
+        // lockstep with each other) must also agree.
+        s.sample_into(&rng, 0, 1, &mut scratch, &mut mb);
+        assert_eq!(mb, s.sample(&rng, 0, 1));
+    }
+
+    /// The permutation cache is keyed on the generator, not just the
+    /// epoch: driving one scratch with a *different* rng must reshuffle,
+    /// never serve the previous run's permutation.
+    #[test]
+    fn scratch_reuse_across_different_rngs_is_safe() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let mut scratch = SamplerScratch::new(&g);
+        let mut mb = MiniBatch::default();
+        s.sample_into(&Rng::new(1), 0, 0, &mut scratch, &mut mb);
+        let b = Rng::new(2);
+        s.sample_into(&b, 0, 0, &mut scratch, &mut mb);
+        assert_eq!(mb, s.sample(&b, 0, 0), "stale epoch permutation served across rngs");
+    }
+
+    /// After one warm epoch, further sampling grows no buffer: the scratch
+    /// and batch capacity footprints are flat — the sampler half of the
+    /// producer zero-alloc contract.
+    #[test]
+    fn scratch_footprint_reaches_steady_state() {
+        let g = tiny_graph(2);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(7);
+        let mut scratch = SamplerScratch::new(&g);
+        let mut mb = MiniBatch::default();
+        for b in 0..s.batches_per_epoch() {
+            s.sample_into(&rng, 0, b, &mut scratch, &mut mb);
+        }
+        let warm = scratch.capacity_footprint() + mb.capacity_footprint();
+        for epoch in 1..3u64 {
+            for b in 0..s.batches_per_epoch() {
+                s.sample_into(&rng, epoch, b, &mut scratch, &mut mb);
+                let now = scratch.capacity_footprint() + mb.capacity_footprint();
+                assert_eq!(now, warm, "epoch {epoch} batch {b} grew a buffer");
+            }
+        }
     }
 }

@@ -23,36 +23,62 @@
 
 use crate::sampler::{RelEdges, TaggedEdges};
 
-/// Algorithm 2, one relation: positions of edges with `rel == r`, in order.
+/// Algorithm 2, one relation: positions of edges with `rel == r`, in
+/// order, appended to a cleared `out` (capacity retained for reuse).
 #[inline]
-fn select_one(t: &TaggedEdges, r: u32) -> RelEdges {
-    let mut out = RelEdges::default();
+fn select_one_into(t: &TaggedEdges, r: u32, out: &mut RelEdges) {
+    out.src.clear();
+    out.dst.clear();
     for i in 0..t.len() {
         if t.rel[i] == r {
             out.src.push(t.src[i]);
             out.dst.push(t.dst[i]);
         }
     }
-    out
 }
 
 /// Serial CPU edge-index selection: R compare+gather passes (Algorithm 2).
 pub fn select_serial(t: &TaggedEdges, n_rel: usize) -> Vec<RelEdges> {
-    (0..n_rel as u32).map(|r| select_one(t, r)).collect()
+    let mut out = Vec::new();
+    select_serial_into(t, n_rel, &mut out);
+    out
+}
+
+/// Zero-alloc variant of [`select_serial`]: refills a recycled per-relation
+/// vector in place, retaining every inner buffer's capacity.
+pub fn select_serial_into(t: &TaggedEdges, n_rel: usize, out: &mut Vec<RelEdges>) {
+    out.resize_with(n_rel, RelEdges::default);
+    for (r, e) in out.iter_mut().enumerate() {
+        select_one_into(t, r as u32, e);
+    }
 }
 
 /// Parallel CPU edge-index selection: relations are independent, so they
 /// are partitioned across `n_threads` scoped threads (OpenMP
 /// `parallel for` analogue from the paper).
 pub fn select_parallel(t: &TaggedEdges, n_rel: usize, n_threads: usize) -> Vec<RelEdges> {
+    let mut out = Vec::new();
+    select_parallel_into(t, n_rel, n_threads, &mut out);
+    out
+}
+
+/// Zero-alloc variant of [`select_parallel`]: each worker refills its
+/// contiguous slice of the recycled output in place.
+pub fn select_parallel_into(
+    t: &TaggedEdges,
+    n_rel: usize,
+    n_threads: usize,
+    out: &mut Vec<RelEdges>,
+) {
     let n_threads = n_threads.max(1).min(n_rel.max(1));
     if n_threads <= 1 || n_rel == 0 {
-        return select_serial(t, n_rel);
+        select_serial_into(t, n_rel, out);
+        return;
     }
-    let mut out: Vec<RelEdges> = vec![RelEdges::default(); n_rel];
+    out.resize_with(n_rel, RelEdges::default);
     let chunk = n_rel.div_ceil(n_threads);
     std::thread::scope(|s| {
-        let mut rest: &mut [RelEdges] = &mut out;
+        let mut rest: &mut [RelEdges] = out;
         let mut r0 = 0usize;
         let mut handles = Vec::new();
         while !rest.is_empty() {
@@ -62,7 +88,7 @@ pub fn select_parallel(t: &TaggedEdges, n_rel: usize, n_threads: usize) -> Vec<R
             let base = r0;
             handles.push(s.spawn(move || {
                 for (i, slot) in head.iter_mut().enumerate() {
-                    *slot = select_one(t, (base + i) as u32);
+                    select_one_into(t, (base + i) as u32, slot);
                 }
             }));
             r0 += take;
@@ -71,7 +97,6 @@ pub fn select_parallel(t: &TaggedEdges, n_rel: usize, n_threads: usize) -> Vec<R
             h.join().expect("selection worker panicked");
         }
     });
-    out
 }
 
 /// Single-pass bucketed selection: O(E + R). Two passes over the tagged
@@ -187,6 +212,21 @@ mod tests {
             assert_eq!(sel[0].src, vec![0, 2, 4, 6, 8]);
             assert_eq!(sel[1].src, vec![1, 3, 5, 7, 9]);
         }
+    }
+
+    /// Refilling recycled output vectors (already holding another list's
+    /// selection, with a different relation count) matches a fresh pass.
+    #[test]
+    fn into_variants_reuse_matches_fresh() {
+        let a = tagged(700, 9, 3);
+        let b = tagged(400, 5, 4);
+        let mut out = Vec::new();
+        select_serial_into(&a, 9, &mut out);
+        select_serial_into(&b, 5, &mut out);
+        assert_eq!(out, select_serial(&b, 5));
+        select_parallel_into(&a, 9, 3, &mut out);
+        assert_eq!(out, select_parallel(&a, 9, 3));
+        assert_eq!(flatten(&out), flatten(&select_serial(&a, 9)));
     }
 
     #[test]

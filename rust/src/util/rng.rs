@@ -30,6 +30,14 @@ impl Rng {
         Rng::new(self.s[0] ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// The state word that fully determines every [`Rng::fork`] of this
+    /// generator. Two generators with equal fork keys produce identical
+    /// forked streams — the identity the sampler's epoch-permutation cache
+    /// is keyed on.
+    pub fn fork_key(&self) -> u64 {
+        self.s[0]
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]

@@ -79,6 +79,23 @@ impl HostTensor {
         }
     }
 
+    /// Mutable storage access (in-place refill of recycled tensors — the
+    /// producer-side buffer reuse keeps the shape, so only data changes).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Mutable storage access; see [`HostTensor::as_f32_mut`].
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             HostTensor::F32(d, _) => Ok(d),

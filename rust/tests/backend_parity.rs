@@ -18,7 +18,15 @@ use hifuse::util::{Rng, WorkerPool};
 fn sim_counts_match_plan_for_every_ladder_mode_and_model() {
     let eng = SimBackend::builtin("tiny").unwrap();
     let d = Dims::from_backend(&eng);
-    let cfg = TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 };
+    let cfg = TrainCfg {
+        epochs: 1,
+        batch_size: 8,
+        fanout: 3,
+        lr: 0.05,
+        seed: 42,
+        threads: 2,
+        producers: 0,
+    };
     let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
 
     let mut modes = OptConfig::ablation_ladder();
@@ -71,7 +79,15 @@ fn sim_counts_match_plan_for_every_ladder_mode_and_model() {
 #[test]
 fn hifuse_launches_strictly_fewer_kernels_than_every_rung() {
     let eng = SimBackend::builtin("tiny").unwrap();
-    let cfg = TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 };
+    let cfg = TrainCfg {
+        epochs: 1,
+        batch_size: 8,
+        fanout: 3,
+        lr: 0.05,
+        seed: 42,
+        threads: 2,
+        producers: 0,
+    };
     for model in [ModelKind::Rgcn, ModelKind::Rgat] {
         let mut totals = Vec::new();
         for (name, opt) in OptConfig::ablation_ladder() {

@@ -17,7 +17,7 @@ fn backend() -> SimBackend {
 }
 
 fn cfg() -> TrainCfg {
-    TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 }
+    TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2, producers: 0 }
 }
 
 fn epoch_losses(model: ModelKind, opt: OptConfig, epochs: usize) -> Vec<f64> {

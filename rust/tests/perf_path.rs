@@ -8,7 +8,7 @@ use hifuse::models::ModelKind;
 use hifuse::runtime::SimBackend;
 
 fn cfg() -> TrainCfg {
-    TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2 }
+    TrainCfg { epochs: 1, batch_size: 8, fanout: 3, lr: 0.05, seed: 42, threads: 2, producers: 0 }
 }
 
 /// After one warm-up epoch every buffer class the step needs is pooled, so

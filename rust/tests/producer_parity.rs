@@ -1,0 +1,214 @@
+//! Multi-producer pipeline regression tests: the CPU sampling-worker count
+//! is a *scheduling* choice, never a semantic one — training trajectories
+//! are bit-identical for producers ∈ {1, 2, 4}, with and without the
+//! pipeline, single-backend and replica-fanned — and the steady-state CPU
+//! producer path performs **zero heap allocations** per batch (same
+//! counter style as the arena tests in `tests/perf_path.rs`).
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg, Trainer,
+    DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::ModelKind;
+use hifuse::runtime::SimBackend;
+
+/// batch_size 4 on tiny's 24 train seeds = 6 batches/epoch, so every
+/// producer count in {1, 2, 4} gets a non-trivial stride of the schedule.
+fn cfg(producers: usize) -> TrainCfg {
+    TrainCfg {
+        epochs: 1,
+        batch_size: 4,
+        fanout: 3,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers,
+    }
+}
+
+fn trainer_trajectory(model: ModelKind, opt: OptConfig, producers: usize) -> Vec<(f64, f64)> {
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, model, opt, cfg(producers)).unwrap();
+    (0..3)
+        .map(|e| {
+            let m = tr.train_epoch(e).unwrap();
+            (m.loss, m.acc)
+        })
+        .collect()
+}
+
+/// The headline contract: pipelined training follows a bitwise-identical
+/// trajectory for 1, 2 and 4 producers — and matches the non-pipelined
+/// (inline, single-producer) path too, for both models and for the
+/// baseline plan (whose selection runs through `edge_select` dispatches).
+#[test]
+fn producer_count_never_changes_the_trajectory() {
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let piped = OptConfig::hifuse();
+        let unpiped = OptConfig { pipeline: false, ..piped };
+        let inline = trainer_trajectory(model, unpiped, 1);
+        for producers in [1usize, 2, 4] {
+            let t = trainer_trajectory(model, piped, producers);
+            assert_eq!(
+                t,
+                inline,
+                "{}: {producers} producers diverged from the inline path",
+                model.name()
+            );
+        }
+    }
+    // Baseline plan (no offload): the pipeline still only moves collection
+    // off-thread; selection dispatches stay on the consumer.
+    let base_pipe = OptConfig { pipeline: true, ..OptConfig::baseline() };
+    let a = trainer_trajectory(ModelKind::Rgcn, base_pipe, 1);
+    let b = trainer_trajectory(ModelKind::Rgcn, base_pipe, 4);
+    assert_eq!(a, b, "baseline plan diverged across producer counts");
+}
+
+fn replica_trajectory(replicas: usize, producers: usize, pipeline: bool) -> Vec<(f64, f64)> {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let t = replica_thread_budget(4, replicas);
+    let engines: Vec<SimBackend> =
+        (0..replicas).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, &g, ModelKind::Rgcn, opt, cfg(producers), DEFAULT_ROUND)
+            .unwrap();
+    (0..2)
+        .map(|e| {
+            let m = grp.train_epoch(e).unwrap();
+            (m.group.loss, m.group.acc)
+        })
+        .collect()
+}
+
+/// The full grid the issue pins: producers ∈ {1, 2, 4} × replicas ∈ {1, 2}
+/// × pipeline on/off — one bitwise trajectory.
+#[test]
+fn producers_replicas_pipeline_grid_is_bit_identical() {
+    let reference = replica_trajectory(1, 1, false);
+    for replicas in [1usize, 2] {
+        for producers in [1usize, 2, 4] {
+            for pipeline in [false, true] {
+                let t = replica_trajectory(replicas, producers, pipeline);
+                assert_eq!(
+                    t, reference,
+                    "replicas={replicas} producers={producers} pipeline={pipeline} diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Zero steady-state producer allocations, sequential path: the cumulative
+/// pool stats (`EpochMetrics::producer`, same snapshot semantics as the
+/// arena) show no fresh buffer sets and no buffer growth after the warm-up
+/// epoch — only reuse.
+#[test]
+fn sequential_producer_reaches_zero_steady_state_allocations() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let opt = OptConfig { pipeline: false, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg(1)).unwrap();
+    let warm = tr.train_epoch(0).unwrap().producer;
+    assert!(warm.fresh > 0, "warm-up epoch should construct buffer sets");
+    let m1 = tr.train_epoch(1).unwrap().producer;
+    let m2 = tr.train_epoch(2).unwrap().producer;
+    for (epoch, (prev, now)) in [(1u64, (warm, m1)), (2, (m1, m2))] {
+        assert_eq!(
+            now.fresh, prev.fresh,
+            "epoch {epoch}: steady state constructed a fresh buffer set ({prev:?} -> {now:?})"
+        );
+        assert_eq!(
+            now.grown, prev.grown,
+            "epoch {epoch}: steady state grew a pooled buffer ({prev:?} -> {now:?})"
+        );
+        assert!(now.reused > prev.reused, "epoch {epoch}: pool unused");
+    }
+}
+
+/// Zero steady-state producer allocations, pipelined multi-producer path:
+/// the circulating buffer population (producers × depth) is built during
+/// warm-up and then recycles forever.
+#[test]
+fn pipelined_producers_reach_zero_steady_state_allocations() {
+    for producers in [1usize, 2, 4] {
+        let eng = SimBackend::builtin_threaded("tiny", 2).unwrap();
+        let opt = OptConfig::hifuse();
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg(producers)).unwrap();
+        tr.train_epoch(0).unwrap();
+        let warm = tr.train_epoch(1).unwrap().producer;
+        let steady = tr.train_epoch(2).unwrap().producer;
+        assert_eq!(
+            steady.fresh, warm.fresh,
+            "{producers} producers: steady state constructed a buffer set \
+             ({warm:?} -> {steady:?})"
+        );
+        assert_eq!(
+            steady.grown, warm.grown,
+            "{producers} producers: steady state grew a pooled buffer \
+             ({warm:?} -> {steady:?})"
+        );
+        assert!(steady.reused > warm.reused, "{producers} producers: pool unused");
+    }
+}
+
+/// Replica lanes inherit the contract: every lane's producer pool reaches
+/// steady state (per-replica cumulative stats flat across epochs), with
+/// the pipeline fan-out on.
+#[test]
+fn replica_lane_producers_reach_zero_steady_state_allocations() {
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let t = replica_thread_budget(4, 2);
+    let engines: Vec<SimBackend> =
+        (0..2).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, &g, ModelKind::Rgcn, opt, cfg(2), DEFAULT_ROUND).unwrap();
+    let ms: Vec<_> = (0..3u64).map(|e| grp.train_epoch(e).unwrap()).collect();
+    for lane in 0..2 {
+        let warm = ms[1].per_replica[lane].producer;
+        let steady = ms[2].per_replica[lane].producer;
+        assert_eq!(
+            steady.fresh, warm.fresh,
+            "lane {lane}: steady state constructed a buffer set ({warm:?} -> {steady:?})"
+        );
+        assert_eq!(
+            steady.grown, warm.grown,
+            "lane {lane}: steady state grew a pooled buffer ({warm:?} -> {steady:?})"
+        );
+        assert!(steady.reused > warm.reused, "lane {lane}: pool unused");
+    }
+    // Group totals absorb the per-lane pools.
+    let sum: u64 = ms[2].per_replica.iter().map(|r| r.producer.reused).sum();
+    assert_eq!(ms[2].group.producer.reused, sum);
+}
+
+/// The per-stage CPU timing breakdown is populated and consistent:
+/// sample + select + collect is bounded by the total CPU time, and the
+/// sampling stage is never zero across a full epoch.
+#[test]
+fn cpu_stage_times_are_populated() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg(2)).unwrap();
+    let m = tr.train_epoch(0).unwrap();
+    assert!(m.cpu_by_stage.total() > std::time::Duration::ZERO, "no CPU stage time recorded");
+    assert!(
+        m.cpu_by_stage.total() <= m.cpu_time,
+        "stage breakdown exceeds total cpu time: {:?} > {:?}",
+        m.cpu_by_stage.total(),
+        m.cpu_time
+    );
+    assert!(m.cpu_by_stage.sample > std::time::Duration::ZERO, "sampling time missing");
+}

@@ -16,7 +16,7 @@ use hifuse::runtime::SimBackend;
 /// default round of 4 that is one full round plus a tail round of 2, so
 /// every partition/merge edge case is exercised.
 fn cfg() -> TrainCfg {
-    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4 }
+    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4, producers: 0 }
 }
 
 /// `n` sim backends sharing one 4-thread budget (so replica counts also
