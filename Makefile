@@ -11,7 +11,7 @@
 #   3. `cargo build --release --features pjrt`
 #   4. run with `repro train --backend pjrt --artifacts artifacts/bench`
 
-.PHONY: build test bench bench-json artifacts fmt clippy
+.PHONY: build test bench bench-json bench-cache artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -34,6 +34,14 @@ bench: build
 # build) to record the cross-build speedup.
 bench-json: build
 	HIFUSE_BENCH_JSON=$(CURDIR)/BENCH_2.json cargo bench --bench paper
+
+# Feature-cache sweep (--cache-frac 0 / 0.25 / 0.5 / 1.0 on RGCN/aifb):
+# hit rate vs H2D bytes vs epoch wall, written to
+# results/cache_sweep.{md,csv}. The loss column must be identical in every
+# row (bit-exactness contract, DESIGN.md §7). HIFUSE_BENCH_QUICK=1 for a
+# fast pass.
+bench-cache: build
+	cargo bench --bench cache_sweep
 
 # OPTIONAL: emit the AOT HLO artifacts for the PJRT backend. The default
 # (sim) backend never needs this.

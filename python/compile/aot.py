@@ -58,6 +58,7 @@ def module_table(p):
     """
     ns, ep, rp, tp = p["NS"], p["EP"], p["RPAD"], p["TPAD"]
     f, h, c = p["F"], p["H"], p["C"]
+    cslots = p["CSLOTS"]
     el = elp(p)
 
     t = []
@@ -68,6 +69,11 @@ def module_table(p):
     # -- semantic graph build (baseline-on-GPU path) ------------------------
     add("edge_select", model.edge_select,
         ("edge_type", spec((el,), I32)), ("rel", spec((), I32)))
+
+    # -- on-device feature collection (cache path, DESIGN.md §7) ------------
+    add("feature_gather", model.feature_gather,
+        ("cache", spec((cslots, f))), ("miss", spec((tp * ns, f))),
+        ("idx", spec((tp, ns), I32)))
 
     # -- feature projection -------------------------------------------------
     for l, (fin, fout) in (("l0", (f, h)), ("l1", (h, c))):

@@ -53,6 +53,29 @@ def edge_select(edge_type, rel):
 
 
 # --------------------------------------------------------------------------
+# On-device feature collection (cache path, DESIGN.md §7).
+# --------------------------------------------------------------------------
+
+def feature_gather(cache, miss, idx):
+    """Assemble the fused [TPAD, NS, F] batch slab from the device-resident
+    cache rows, the (partially) uploaded miss rows, and per-slot scatter
+    indices: idx >= 0 reads cache row idx; idx == -1 writes a zero padding
+    row; idx <= -2 reads miss row (-idx - 2).
+
+    cache: [CSLOTS, F] f32; miss: [TPAD*NS, F] f32; idx: [TPAD, NS] i32.
+    Forward-only (VJP-free): the raw-feature slab is never differentiated.
+    """
+    tp, ns = idx.shape
+    f = cache.shape[1]
+    flat = idx.reshape(-1)
+    hit_rows = jnp.take(cache, jnp.clip(flat, 0, cache.shape[0] - 1), axis=0)
+    miss_rows = jnp.take(miss, jnp.clip(-flat - 2, 0, miss.shape[0] - 1), axis=0)
+    sel = flat[:, None]
+    out = jnp.where(sel >= 0, hit_rows, jnp.where(sel <= -2, miss_rows, 0.0))
+    return out.reshape(tp, ns, f)
+
+
+# --------------------------------------------------------------------------
 # Feature projection.
 # --------------------------------------------------------------------------
 

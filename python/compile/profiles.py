@@ -12,16 +12,19 @@ manifest so Rust never hard-codes them.
   F/H/C  raw-feature / hidden / class dims (2-layer RGCN & RGAT)
   ELP    merged edge-list length = RPAD*EP (edge-type tagged batch edge list
          over which the semantic-graph-build stage selects)
+  CSLOTS device-resident feature-cache rows (DESIGN.md §7): capacity of the
+         packed hot-vertex slab the feature_gather module reads; the
+         --cache-frac budget is clamped to it
 """
 
 PROFILES = {
     # CI / pytest / cargo-test profile: small enough that every module runs
     # in milliseconds under the CPU PJRT client.
-    "tiny": dict(NS=32, EP=16, RPAD=8, TPAD=8, F=8, H=16, C=4),
+    "tiny": dict(NS=32, EP=16, RPAD=8, TPAD=8, F=8, H=16, C=4, CSLOTS=160),
     # Benchmark profile used for all paper tables/figures: RPAD=128 >= every
     # dataset's relation count so one artifact set serves aifb/mutag/bgs/am.
     # C=16 >= am's 11 classes (largest label space in Table 2).
-    "bench": dict(NS=512, EP=256, RPAD=128, TPAD=32, F=32, H=64, C=16),
+    "bench": dict(NS=512, EP=256, RPAD=128, TPAD=32, F=32, H=64, C=16, CSLOTS=8192),
 }
 
 

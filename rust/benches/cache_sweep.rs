@@ -1,0 +1,85 @@
+//! Feature-cache sweep (`make bench-cache`): hit rate vs H2D bytes vs
+//! epoch wall for `--cache-frac` ∈ {0, 0.25, 0.5, 1.0} on RGCN/aifb with
+//! the full HiFuse plan, written to `results/cache_sweep.{md,csv}`.
+//!
+//! The loss column is the bit-exactness witness: it must be identical in
+//! every row (pinned bitwise by `tests/cache_parity.rs` on the tiny
+//! profile; this sweep shows the same holds at bench scale while the H2D
+//! column shrinks roughly with the hit rate — DESIGN.md §7).
+//!
+//! HIFUSE_BENCH_QUICK=1 shrinks the dataset and skips the warm-up epoch
+//! (quick numbers then include first-touch arena/cache costs).
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::graph::datasets::{generate, spec_by_name};
+use hifuse::models::step::Dims;
+use hifuse::models::ModelKind;
+use hifuse::report::{f2, write_csv, write_md_table};
+use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("HIFUSE_BENCH_QUICK").is_ok();
+    let cfg = TrainCfg {
+        epochs: 2,
+        batch_size: 64,
+        fanout: 4,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers: 0,
+    };
+    let scale = if quick { 0.25 } else { 1.0 };
+    let opt = OptConfig::hifuse();
+    let spec = spec_by_name("aifb").unwrap();
+
+    let mut rows = Vec::new();
+    for frac in [0.0f64, 0.25, 0.5, 1.0] {
+        eprintln!("[cache-sweep] frac {frac} ...");
+        // Fresh backend + graph per point: independent arenas/counters, and
+        // the layout prepared exactly as a training run would.
+        let eng = SimBackend::builtin_threaded("bench", cfg.threads)?;
+        let d = Dims::from_backend(&eng);
+        let mut g = generate(&spec, d.f, scale, cfg.seed);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg)?;
+        let resident = if frac > 0.0 {
+            let store =
+                Arc::new(ResidentStore::build(&g, frac, eng.cst("CSLOTS"), cfg.seed));
+            let rows_cached = store.rows_cached();
+            tr.attach_cache(store)?;
+            rows_cached
+        } else {
+            0
+        };
+        if !quick {
+            tr.train_epoch(0)?; // warm the arena + producer pools
+        }
+        let m = tr.train_epoch(if quick { 0 } else { 1 })?;
+        rows.push(vec![
+            format!("{frac}"),
+            resident.to_string(),
+            format!("{:.4}", m.cache_hit_rate()),
+            f2(m.h2d_bytes as f64 / (1024.0 * 1024.0)),
+            (m.h2d_bytes / m.batches.max(1) as u64).to_string(),
+            f2(m.wall.as_secs_f64() * 1e3),
+            format!("{:.6}", m.loss),
+        ]);
+    }
+    write_md_table(
+        "cache_sweep.md",
+        "Feature-cache sweep — hit rate vs H2D bytes vs wall (loss identical by contract)",
+        &["cache frac", "resident rows", "hit rate", "h2d MiB/epoch", "h2d B/batch",
+          "wall ms", "loss"],
+        &rows,
+    )?;
+    write_csv(
+        "cache_sweep.csv",
+        &["cache_frac", "resident_rows", "hit_rate", "h2d_mib", "h2d_bytes_per_batch",
+          "wall_ms", "loss"],
+        &rows,
+    )?;
+    eprintln!("[cache-sweep] wrote results/cache_sweep.{{md,csv}}");
+    Ok(())
+}

@@ -77,6 +77,12 @@ struct RunRow {
     allocs_per_step: f64,
     /// Per-stage CPU producer time, ms: (sample, select, collect).
     cpu_stage_ms: (f64, f64, f64),
+    /// Host→device bytes over the measured epoch (dispatch argument
+    /// uploads + the explicit feature channel).
+    h2d_bytes: u64,
+    /// Feature-cache hit rate over the measured epoch (0.0 = cache off;
+    /// the main matrix runs cache-off, the cache_sweep bench varies it).
+    cache_hit_rate: f64,
 }
 
 /// One measured epoch. Full mode runs a warm-up epoch first (compiles
@@ -124,6 +130,8 @@ fn run_one<B: ExecBackend>(
             m.cpu_by_stage.select.as_secs_f64() * 1e3,
             m.cpu_by_stage.collect.as_secs_f64() * 1e3,
         ),
+        h2d_bytes: m.h2d_bytes,
+        cache_hit_rate: m.cache_hit_rate(),
     }
 }
 
@@ -568,6 +576,7 @@ fn write_bench_json(
             "    {{\"dataset\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
              \"wall_ms\": {:.3}, \"cpu_ms\": {:.3}, \"gpu_ms\": {:.3}, \
              \"kernels\": {}, \"allocs_per_step\": {:.3}, \
+             \"h2d_bytes\": {}, \"cache_hit_rate\": {:.4}, \
              \"cpu_ms_by_stage\": {{\"sample\": {smp:.3}, \"select\": {sel:.3}, \
              \"collect\": {col:.3}}}, \
              \"gpu_ms_by_stage\": {{{}}}, \"kernels_by_stage\": {{{}}}}}",
@@ -579,6 +588,8 @@ fn write_bench_json(
             r.gpu_ms,
             r.kernels,
             r.allocs_per_step,
+            r.h2d_bytes,
+            r.cache_hit_rate,
             stages_ms.join(", "),
             stages_k.join(", ")
         ));

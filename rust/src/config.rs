@@ -63,6 +63,12 @@ pub struct RunConfig {
     /// why `--replicas 1` still selects the replica path: the trajectory
     /// must be identical for every `--replicas` value (DESIGN.md §4).
     pub replicas: Option<usize>,
+    /// Device-resident feature-cache budget in `[0, 1]` (`--cache-frac`):
+    /// the fraction of each vertex type pinned on the device by the
+    /// deterministic presampling pass (DESIGN.md §7). `0` (default) = off;
+    /// the trajectory is bitwise identical for every value. Train + sim
+    /// backend only (the PJRT path bails).
+    pub cache_frac: f64,
 }
 
 impl Default for RunConfig {
@@ -79,6 +85,7 @@ impl Default for RunConfig {
             profile: None,
             sim_overhead_us: 0.0,
             replicas: None,
+            cache_frac: 0.0,
         }
     }
 }
@@ -137,6 +144,13 @@ impl RunConfig {
                         bail!("--replicas must be >= 1");
                     }
                     cfg.replicas = Some(n);
+                }
+                "cache-frac" => {
+                    let f: f64 = v.parse().context("--cache-frac")?;
+                    if !(0.0..=1.0).contains(&f) {
+                        bail!("--cache-frac must be in [0, 1], got {f}");
+                    }
+                    cfg.cache_frac = f;
                 }
                 other => bail!("unknown flag --{other}"),
             }
@@ -228,6 +242,18 @@ mod tests {
         assert_eq!(c.train.threads, 8);
         assert!(RunConfig::from_args(&argv("--producers 0")).is_err());
         assert!(RunConfig::from_args(&argv("--producers x")).is_err());
+    }
+
+    #[test]
+    fn cache_frac_flag_parses_and_rejects_out_of_range() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().cache_frac, 0.0);
+        let c = RunConfig::from_args(&argv("--cache-frac 0.25")).unwrap();
+        assert_eq!(c.cache_frac, 0.25);
+        let c = RunConfig::from_args(&argv("--cache-frac 1.0")).unwrap();
+        assert_eq!(c.cache_frac, 1.0);
+        assert!(RunConfig::from_args(&argv("--cache-frac 1.5")).is_err());
+        assert!(RunConfig::from_args(&argv("--cache-frac -0.1")).is_err());
+        assert!(RunConfig::from_args(&argv("--cache-frac x")).is_err());
     }
 
     #[test]

@@ -17,16 +17,20 @@ pub use ablation::OptConfig;
 pub use pipeline::PIPELINE_DEPTH;
 pub use replica::{replica_thread_budget, ReplicaGroup, ReplicaMetrics, DEFAULT_ROUND};
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::graph::{HeteroGraph, Layout};
 use crate::models::step::{
     pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
 };
 use crate::models::{ModelKind, Params};
-use crate::runtime::{ArenaStats, Counters, CpuStageTimes, ExecBackend, Phase, Stage};
+use crate::runtime::{
+    Arg, ArenaStats, CacheHandle, Counters, CpuStageTimes, DevBuf, ExecBackend, Phase,
+    ResidentStore, Stage,
+};
 use crate::sampler::collect::{self, Collected};
 use crate::sampler::{
     MiniBatch, NeighborSampler, RelEdges, SamplerCfg, SamplerScratch, TaggedEdges,
@@ -125,6 +129,16 @@ pub struct EpochMetrics {
     pub cpu_by_stage: CpuStageTimes,
     /// Device-side time: sum of dispatch durations ("GPU time").
     pub gpu_time: Duration,
+    /// Host→device bytes over the epoch: dispatch-argument uploads plus
+    /// the explicit feature channel (full collected slab with the cache
+    /// off; scatter indices + miss rows with it on — DESIGN.md §7).
+    pub h2d_bytes: u64,
+    /// Device→host bytes (outputs of host-returning dispatches).
+    pub d2h_bytes: u64,
+    /// Feature-cache slot reads served by the device-resident store.
+    pub cache_hits: u64,
+    /// Feature-cache slot reads gathered on CPU and uploaded.
+    pub cache_misses: u64,
     pub kernels_total: usize,
     pub kernels_fwd_semantic: usize,
     pub kernels_fwd_agg: usize,
@@ -151,12 +165,27 @@ impl EpochMetrics {
     /// ([`Trainer::train_epoch`]) and the per-replica metrics.
     pub fn fill_from_counters(&mut self, c: &Counters) {
         self.gpu_time = c.gpu_time;
+        self.h2d_bytes = c.h2d_bytes;
+        self.d2h_bytes = c.d2h_bytes;
+        self.cache_hits = c.cache_hits;
+        self.cache_misses = c.cache_misses;
         self.kernels_total = c.total();
         self.kernels_fwd_semantic = c.count_phase(Stage::SemanticBuild, Phase::Fwd);
         self.kernels_fwd_agg = c.count_phase(Stage::Aggregation, Phase::Fwd);
         self.kernels_by_stage = c.by_stage();
         self.time_by_stage = c.time_by_stage();
         self.arena = c.arena;
+    }
+
+    /// Fraction of batch-slot feature reads served by the resident cache
+    /// this epoch (0.0 with the cache off).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     /// Sum `other`'s **additive counter fields** into `self`: batch and
@@ -169,6 +198,10 @@ impl EpochMetrics {
         self.cpu_time += other.cpu_time;
         self.cpu_by_stage += other.cpu_by_stage;
         self.gpu_time += other.gpu_time;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
         self.kernels_total += other.kernels_total;
         self.kernels_fwd_semantic += other.kernels_fwd_semantic;
         self.kernels_fwd_agg += other.kernels_fwd_agg;
@@ -247,8 +280,16 @@ impl BatchBufs {
     /// not even on its first use — keeping [`ProducerStats::grown`] at
     /// zero deterministically. The selection buffers are only materialized
     /// when the plan selects on CPU (`offload`); the baseline path never
-    /// touches them.
-    fn new(d: &Dims, scfg: &SamplerCfg, n_types: usize, n_rel: usize, offload: bool) -> Self {
+    /// touches them. `cached` sizes the miss-staging/scatter-index buffers
+    /// for the feature-cache path the same way.
+    fn new(
+        d: &Dims,
+        scfg: &SamplerCfg,
+        n_types: usize,
+        n_rel: usize,
+        offload: bool,
+        cached: bool,
+    ) -> Self {
         let mut mb = MiniBatch::default();
         mb.reset(scfg, n_types, n_rel);
         let selected = if offload {
@@ -265,7 +306,7 @@ impl BatchBufs {
         } else {
             Vec::new()
         };
-        BatchBufs { mb, selected, collected: Collected::new(d.tpad, d.ns, d.f) }
+        BatchBufs { mb, selected, collected: Collected::new(d.tpad, d.ns, d.f, cached) }
     }
 
     /// Held heap capacity in elements (the `Collected` tensors are
@@ -287,16 +328,23 @@ impl BatchBufs {
 
 /// The leftover of a consumed [`PreparedCpu`] after [`assemble_batch`]
 /// moved its tensors into a [`BatchData`]; [`SpentBatch::reclaim`] reunites
-/// the two into a recyclable [`BatchBufs`] once the step is done.
+/// the two into a recyclable [`BatchBufs`] once the step is done. The
+/// cache-path staging buffers (miss rows, scatter indices) ride along so
+/// the reunited set is complete either way.
 pub struct SpentBatch {
     mb: MiniBatch,
     selected: Vec<Vec<RelEdges>>,
+    miss_rows: HostTensor,
+    gather_idx: HostTensor,
 }
 
 impl SpentBatch {
     /// Reunite with the consumed batch's tensors. Call after the training
     /// step: `batch` must be the `BatchData` the paired `assemble_batch`
-    /// returned.
+    /// returned. (On the cache path `batch.xs` is the gather dispatch's
+    /// output — it replaces the producer's slab buffer, which
+    /// `assemble_batch` recycled into the backend arena, keeping the
+    /// circulating population fixed.)
     pub fn reclaim(self, batch: BatchData) -> BatchBufs {
         BatchBufs {
             mb: self.mb,
@@ -306,6 +354,10 @@ impl SpentBatch {
                 labels: batch.labels,
                 seed_mask: batch.seed_mask,
                 n_seed: 0,
+                miss_rows: self.miss_rows,
+                gather_idx: self.gather_idx,
+                n_hit: 0,
+                n_miss: 0,
             },
         }
     }
@@ -344,6 +396,10 @@ pub struct CpuProducer<'g> {
     rng: Rng,
     scratch: SamplerScratch,
     spare: Vec<BatchBufs>,
+    /// The shared read-only resident-store index (DESIGN.md §7): with it
+    /// present, collection runs the hit/miss split instead of the full
+    /// slab gather. One `Arc` is shared by every producer of a run.
+    cache: Option<Arc<ResidentStore>>,
     /// Buffer sets this producer has originated (its flow-control credit in
     /// pipeline mode: seeds + fresh constructions).
     owned: usize,
@@ -371,8 +427,9 @@ pub(crate) struct ProducerState {
 }
 
 impl<'g> CpuProducer<'g> {
-    /// Fresh producer (new scratch, empty pool). The training paths prefer
-    /// [`CpuProducer::from_seed`] to keep state across epochs.
+    /// Fresh cache-less producer (new scratch, empty pool). The training
+    /// paths prefer [`CpuProducer::from_seed`] to keep state across epochs
+    /// (and to inherit the run's resident-store index).
     pub fn new(
         graph: &'g HeteroGraph,
         scfg: SamplerCfg,
@@ -382,9 +439,10 @@ impl<'g> CpuProducer<'g> {
         rng: Rng,
     ) -> Self {
         let seed = ProducerSeed { scratch: SamplerScratch::new(graph), spare: Vec::new() };
-        Self::from_seed(graph, scfg, d, opt, pool, rng, seed)
+        Self::from_seed(graph, scfg, d, opt, pool, rng, None, seed)
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_seed(
         graph: &'g HeteroGraph,
         scfg: SamplerCfg,
@@ -392,6 +450,7 @@ impl<'g> CpuProducer<'g> {
         opt: OptConfig,
         pool: WorkerPool,
         rng: Rng,
+        cache: Option<Arc<ResidentStore>>,
         seed: ProducerSeed,
     ) -> Self {
         let owned = seed.spare.len();
@@ -408,6 +467,7 @@ impl<'g> CpuProducer<'g> {
             rng,
             scratch,
             spare: seed.spare,
+            cache,
             owned,
             stats: ProducerStats::default(),
         }
@@ -439,6 +499,7 @@ impl<'g> CpuProducer<'g> {
             self.graph.n_types(),
             self.graph.n_relations(),
             self.opt.offload,
+            self.cache.is_some(),
         )
     }
 
@@ -512,6 +573,7 @@ impl<'g> CpuProducer<'g> {
             self.d.ns,
             self.d.f,
             &self.pool,
+            self.cache.as_deref(),
             &mut bufs.collected,
         );
         let collect_t = t2.elapsed();
@@ -604,27 +666,51 @@ pub fn prepare_cpu(
     CpuProducer::new(graph, scfg, *d, *opt, *pool, rng.clone()).produce(epoch, batch_idx)
 }
 
+/// Consumer-side pooled scratch for [`assemble_batch`] / [`gpu_select`]:
+/// the padded edge-type column and the relation-id scalar are refilled in
+/// place instead of being allocated per call — the last per-batch
+/// allocations on the baseline device-selection path.
+#[derive(Default)]
+pub struct AssembleScratch {
+    /// `[ELP]` i32 edge-type column (sentinel-refilled per call); lazily
+    /// sized on first use, then permanent.
+    et: Option<HostTensor>,
+    /// Scalar i32 relation id, rewritten per relation.
+    rel: Option<HostTensor>,
+}
+
 /// "GPU" edge-index selection (baseline): one `edge_select` dispatch per
 /// relation per layer (the compare+index_select kernel pair), then host
-/// extraction of the selected endpoints.
+/// extraction of the selected endpoints. `scratch` pools the padded type
+/// column and the relation scalar across calls, so the steady state
+/// allocates only the returned edge lists' growth (capacity-bounded).
 pub fn gpu_select<B: ExecBackend>(
     eng: &B,
     d: &Dims,
     tagged: &TaggedEdges,
     n_rel: usize,
+    scratch: &mut AssembleScratch,
 ) -> Result<Vec<RelEdges>> {
     // Pad the tagged type column to ELP with a sentinel (RPAD never matches
-    // a real relation id).
-    let mut et = vec![d.rpad as i32; d.elp];
-    for (i, &r) in tagged.rel.iter().enumerate() {
-        et[i] = r as i32;
+    // a real relation id) — in pooled scratch.
+    let et = scratch
+        .et
+        .get_or_insert_with(|| HostTensor::i32(vec![d.rpad as i32; d.elp], &[d.elp]));
+    {
+        let e = et.as_i32_mut().expect("et scratch is i32");
+        assert_eq!(e.len(), d.elp, "assemble scratch built for another profile");
+        e.fill(d.rpad as i32);
+        for (i, &r) in tagged.rel.iter().enumerate() {
+            e[i] = r as i32;
+        }
     }
-    let et = HostTensor::i32(et, &[d.elp]);
+    let et: &HostTensor = et;
+    let rel = scratch.rel.get_or_insert_with(|| HostTensor::scalar_i32(0));
     let mut out = Vec::with_capacity(n_rel);
     for r in 0..n_rel {
-        let rel = HostTensor::scalar_i32(r as i32);
+        rel.as_i32_mut().expect("rel scratch is i32")[0] = r as i32;
         let mut res = eng
-            .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[&et, &rel])?
+            .run("edge_select", Stage::SemanticBuild, Phase::Fwd, &[et, rel])?
             .into_iter();
         let pos_t = res.next().unwrap();
         let count = res.next().unwrap().scalar()? as usize;
@@ -643,13 +729,31 @@ pub fn gpu_select<B: ExecBackend>(
 /// Device half of batch preparation, shared by [`Trainer::compute_batch`]
 /// and the replica lanes: resolve per-relation edges (taking the baseline
 /// `edge_select` dispatches when selection did not run on CPU), pad them
-/// into module tensors, and wrap the collected features as a [`BatchData`].
-/// Also returns the [`SpentBatch`] carcass so the caller can recycle the
-/// buffers after the step.
+/// into module tensors, and materialize the batch features as a
+/// [`BatchData`]. Also returns the [`SpentBatch`] carcass so the caller can
+/// recycle the buffers after the step.
+///
+/// Feature channel (DESIGN.md §7): with no `cache`, the collected
+/// `[TPAD, NS, F]` slab ships to the device whole every batch (recorded in
+/// `Counters::h2d_bytes`). With a [`CacheHandle`], only the miss rows
+/// upload (partial H2D) and the `feature_gather` dispatch assembles the
+/// identical slab on-device from {resident store, miss rows, scatter
+/// indices} — cutting the steady-state feature-channel H2D roughly by the
+/// hit rate while the produced bytes stay bitwise equal to the cache-off
+/// gather. Accounting caveat: downstream dispatches still receive `xs` as
+/// a *host* argument (the step executor is untouched), so those
+/// per-dispatch argument re-uploads appear in `h2d_bytes` **identically in
+/// both modes** and cancel in any on-vs-off comparison; the two branches
+/// below are the differential term. The gather output is materialized back
+/// to host for the same reason (free on the sim backend, whose "device"
+/// memory is host memory); feeding it device-resident into the stacked
+/// projection is the ROADMAP follow-up.
 pub fn assemble_batch<B: ExecBackend>(
     eng: &B,
     d: &Dims,
     schema: &SchemaTensors,
+    cache: Option<&CacheHandle<B>>,
+    scratch: &mut AssembleScratch,
     prep: PreparedCpu,
 ) -> Result<(BatchData, SpentBatch)> {
     let PreparedCpu { collected, mb, selected, cpu_selected, .. } = prep;
@@ -658,17 +762,39 @@ pub fn assemble_batch<B: ExecBackend>(
     } else {
         mb.tagged
             .iter()
-            .map(|t| Ok(pad_layer_edges(&gpu_select(eng, d, t, schema.n_rel)?, d)))
+            .map(|t| Ok(pad_layer_edges(&gpu_select(eng, d, t, schema.n_rel, scratch)?, d)))
             .collect::<Result<Vec<_>>>()?
     };
-    let batch = BatchData {
-        xs: collected.xs,
-        labels: collected.labels,
-        seed_mask: collected.seed_mask,
-        n_seed: collected.n_seed,
-        layers,
+    let Collected { xs, labels, seed_mask, n_seed, miss_rows, gather_idx, n_hit, n_miss } =
+        collected;
+    let xs = match cache {
+        None => {
+            // The whole collected slab ships host→device every batch (the
+            // implicit upload the resident cache removes).
+            eng.counters().borrow_mut().add_h2d(xs.size_bytes() as u64);
+            xs
+        }
+        Some(handle) => {
+            // Partial H2D: only the packed miss rows transfer; the scatter
+            // indices count as the gather dispatch's host argument.
+            let miss_dev = eng.upload(&miss_rows, n_miss * d.f)?;
+            let out = eng.run_dev(
+                "feature_gather",
+                Stage::Collection,
+                Phase::Fwd,
+                &[Arg::Dev(&handle.dev), Arg::Dev(&miss_dev), Arg::Host(&gather_idx)],
+            )?;
+            eng.recycle_dev(miss_dev);
+            eng.counters().borrow_mut().add_cache(n_hit as u64, n_miss as u64);
+            // The producer's (stale) slab buffer swaps into the arena and
+            // the gather output takes its slot in the circulating set, so
+            // the steady-state buffer population stays fixed.
+            eng.recycle(xs);
+            out.into_host()?
+        }
     };
-    Ok((batch, SpentBatch { mb, selected }))
+    let batch = BatchData { xs, labels, seed_mask, n_seed, layers };
+    Ok((batch, SpentBatch { mb, selected, miss_rows, gather_idx }))
 }
 
 pub struct Trainer<'g, 'e, B: ExecBackend> {
@@ -687,6 +813,11 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     /// Producer state kept across epochs (scratches + recycled buffer
     /// sets), so the steady-state zero-alloc contract covers the whole run.
     pub(crate) arsenal: ProducerArsenal,
+    /// Device-resident feature cache ([`Trainer::attach_cache`]); `None` =
+    /// classic full-slab collection.
+    pub(crate) cache: Option<CacheHandle<B>>,
+    /// Consumer-side pooled scratch for [`assemble_batch`].
+    assemble: AssembleScratch,
 }
 
 impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
@@ -714,7 +845,28 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             pool: WorkerPool::new(cfg.threads),
             rng: Rng::new(cfg.seed),
             arsenal: ProducerArsenal::default(),
+            cache: None,
+            assemble: AssembleScratch::default(),
         })
+    }
+
+    /// Pin a resident feature store on this trainer's backend (DESIGN.md
+    /// §7): uploads the packed slab once and switches every subsequent
+    /// batch to the hit/miss collection path. Must be called before the
+    /// first epoch — recycled buffer sets are sized for the active mode.
+    pub fn attach_cache(&mut self, store: Arc<ResidentStore>) -> Result<()> {
+        ensure!(self.cache.is_none(), "a resident cache is already attached");
+        ensure!(
+            self.arsenal.stats == ProducerStats::default(),
+            "attach the cache before the first epoch (buffer sets already circulate)"
+        );
+        self.cache = Some(CacheHandle::upload(self.eng, store)?);
+        Ok(())
+    }
+
+    /// The attached resident store, if any.
+    pub fn cache_store(&self) -> Option<&Arc<ResidentStore>> {
+        self.cache.as_ref().map(|h| &h.store)
     }
 
     pub fn dims(&self) -> Dims {
@@ -737,7 +889,14 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
     /// steady state allocation-free.
     pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize, BatchBufs)> {
         let d = self.exec.d;
-        let (batch, spent) = assemble_batch(self.eng, &d, &self.schema, prep)?;
+        let (batch, spent) = assemble_batch(
+            self.eng,
+            &d,
+            &self.schema,
+            self.cache.as_ref(),
+            &mut self.assemble,
+            prep,
+        )?;
         let res = self.exec.train_step(&mut self.params, &self.schema, &batch, self.cfg.lr)?;
         Ok((res.loss, res.ncorrect, res.n_seed, spent.reclaim(batch)))
     }
@@ -762,8 +921,17 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
         let seed = self.arsenal.checkout(graph, 1).pop().expect("one seed");
-        let mut producer =
-            CpuProducer::from_seed(graph, scfg, d, self.opt, self.pool, self.rng.clone(), seed);
+        let cache_store = self.cache.as_ref().map(|h| h.store.clone());
+        let mut producer = CpuProducer::from_seed(
+            graph,
+            scfg,
+            d,
+            self.opt,
+            self.pool,
+            self.rng.clone(),
+            cache_store,
+            seed,
+        );
         let mut result: Result<()> = Ok(());
         for b in 0..n_batches {
             let prep = producer.produce(epoch, b);
@@ -851,6 +1019,10 @@ mod tests {
                 collect: Duration::from_micros(3),
             },
             gpu_time: Duration::from_millis(3),
+            h2d_bytes: 100,
+            d2h_bytes: 10,
+            cache_hits: 6,
+            cache_misses: 2,
             kernels_total: 10,
             kernels_fwd_semantic: 1,
             kernels_fwd_agg: 2,
@@ -873,6 +1045,10 @@ mod tests {
                 collect: Duration::from_micros(6),
             },
             gpu_time: Duration::from_millis(1),
+            h2d_bytes: 11,
+            d2h_bytes: 5,
+            cache_hits: 1,
+            cache_misses: 3,
             kernels_total: 5,
             kernels_fwd_semantic: 2,
             kernels_fwd_agg: 1,
@@ -900,6 +1076,9 @@ mod tests {
             }
         );
         assert_eq!(a.gpu_time, Duration::from_millis(4));
+        assert_eq!((a.h2d_bytes, a.d2h_bytes), (111, 15));
+        assert_eq!((a.cache_hits, a.cache_misses), (7, 5));
+        assert!((a.cache_hit_rate() - 7.0 / 12.0).abs() < 1e-12);
         assert_eq!(a.arena.hits, 6);
         assert_eq!(a.arena.misses, 2);
         assert_eq!(a.producer, ProducerStats { fresh: 3, reused: 12, grown: 3 });

@@ -33,6 +33,7 @@
 //! same machinery out to one feed per replica lane.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::Scope;
 use std::time::Instant;
 
@@ -44,8 +45,8 @@ use super::{
 };
 use crate::graph::HeteroGraph;
 use crate::models::step::Dims;
-use crate::runtime::ExecBackend;
-use crate::sampler::{NeighborSampler, SamplerCfg};
+use crate::runtime::{ExecBackend, ResidentStore};
+use crate::sampler::{epoch_perm, NeighborSampler, SamplerCfg};
 use crate::util::{Rng, WorkerPool};
 
 /// Buffer sets each producer may have in flight (its flow-control credit);
@@ -121,9 +122,13 @@ impl BatchFeed {
 
 /// Spawn `producers` sampling workers over `batches` (an epoch schedule, in
 /// delivery order) inside `scope`. `seeds` must hold exactly one
-/// [`ProducerSeed`] per producer (arsenal checkout). Each worker's final
-/// state arrives on the returned state channel once it exits; the caller
-/// drains it after dropping/finishing the feed.
+/// [`ProducerSeed`] per producer (arsenal checkout); `perm` is the epoch's
+/// shared train-split permutation ([`epoch_perm`]) installed into every
+/// worker's scratch — one `Arc` instead of per-producer byte-identical
+/// shuffles (DESIGN.md §5). `cache` is the run's shared resident-store
+/// index, if a feature cache is attached. Each worker's final state arrives
+/// on the returned state channel once it exits; the caller drains it after
+/// dropping/finishing the feed.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_feed<'scope, 'env>(
     s: &'scope Scope<'scope, 'env>,
@@ -137,13 +142,16 @@ pub(crate) fn spawn_feed<'scope, 'env>(
     batches: &[usize],
     producers: usize,
     seeds: Vec<ProducerSeed>,
+    perm: &Arc<Vec<u32>>,
+    cache: Option<&Arc<ResidentStore>>,
 ) -> (BatchFeed, Receiver<ProducerState>) {
     let m = producers.max(1);
     assert_eq!(seeds.len(), m, "one seed per producer");
     let (tx, rx) = sync_channel::<(usize, PreparedCpu)>(m * PIPELINE_DEPTH);
     let (state_tx, state_rx) = channel::<ProducerState>();
     let mut back = Vec::with_capacity(m);
-    for (pi, seed) in seeds.into_iter().enumerate() {
+    for (pi, mut seed) in seeds.into_iter().enumerate() {
+        seed.scratch.install_epoch_perm(perm.clone(), rng, epoch);
         let (btx, brx) = channel::<BatchBufs>();
         back.push(btx);
         // This producer's stride of the schedule: (position, batch id).
@@ -170,8 +178,10 @@ pub(crate) fn spawn_feed<'scope, 'env>(
         let tx = tx.clone();
         let state_tx = state_tx.clone();
         let rng = rng.clone();
+        let cache = cache.cloned();
         s.spawn(move || {
-            let mut producer = CpuProducer::from_seed(graph, scfg, d, opt, pool, rng, seed);
+            let mut producer =
+                CpuProducer::from_seed(graph, scfg, d, opt, pool, rng, cache, seed);
             // Full credit up front (capped at the stride length — a
             // producer never needs more sets in flight than it has
             // batches): the circulating buffer population is fixed from
@@ -239,6 +249,9 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let pool = WorkerPool::new(super::replica_thread_budget(tr.cfg.threads, m_prod));
     let seeds = tr.arsenal.checkout(graph, m_prod);
     let batches: Vec<usize> = (0..n_batches).collect();
+    // One shared epoch permutation + resident-store index for all workers.
+    let perm = epoch_perm(graph, &rng, epoch);
+    let cache_store = tr.cache.as_ref().map(|h| h.store.clone());
 
     let wall0 = Instant::now();
     tr.eng.reset_counters(false);
@@ -249,8 +262,21 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let mut result: Result<()> = Ok(());
     let mut leftover: Vec<BatchBufs> = Vec::new();
     let state_rx = std::thread::scope(|s| {
-        let (mut feed, state_rx) =
-            spawn_feed(s, graph, scfg, d, opt, pool, &rng, epoch, &batches, m_prod, seeds);
+        let (mut feed, state_rx) = spawn_feed(
+            s,
+            graph,
+            scfg,
+            d,
+            opt,
+            pool,
+            &rng,
+            epoch,
+            &batches,
+            m_prod,
+            seeds,
+            &perm,
+            cache_store.as_ref(),
+        );
         for pos in 0..n_batches {
             let prep = match feed.recv_next() {
                 Ok(p) => p,

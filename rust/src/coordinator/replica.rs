@@ -45,20 +45,21 @@
 //! single-backend.
 
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use super::pipeline::{spawn_feed, BatchFeed};
 use super::{
-    assemble_batch, lane_producer_count, sampler_cfg, CpuProducer, EpochMetrics, OptConfig,
-    ProducerArsenal, ProducerState, TrainCfg,
+    assemble_batch, lane_producer_count, sampler_cfg, AssembleScratch, CpuProducer,
+    EpochMetrics, OptConfig, ProducerArsenal, ProducerState, TrainCfg,
 };
 use crate::graph::HeteroGraph;
 use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, StepResult};
 use crate::models::{ModelKind, Params};
-use crate::runtime::{CpuStageTimes, ExecBackend, SimBackend};
-use crate::sampler::NeighborSampler;
+use crate::runtime::{CacheHandle, CpuStageTimes, ExecBackend, ResidentStore, SimBackend};
+use crate::sampler::{epoch_perm, NeighborSampler};
 use crate::util::{Rng, WorkerPool};
 
 /// Default round width (global batches per synchronous update). A constant
@@ -105,6 +106,10 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     /// Per-lane producer state (scratches + recycled buffer sets), kept
     /// across epochs for the zero-alloc steady state.
     arsenals: Vec<ProducerArsenal>,
+    /// Per-replica feature-cache handles (one device upload per backend),
+    /// all sharing one read-only [`ResidentStore`] (DESIGN.md §7). Empty =
+    /// cache off. Aligned with `engines`.
+    caches: Vec<CacheHandle<B>>,
     rng: Rng,
     d: Dims,
 }
@@ -154,9 +159,32 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             schema,
             engines,
             arsenals,
+            caches: Vec::new(),
             rng: Rng::new(cfg.seed),
             d,
         })
+    }
+
+    /// Pin one shared resident feature store across every replica backend:
+    /// each lane gets its own device upload ([`CacheHandle`]) over the
+    /// same read-only `Arc<ResidentStore>` (DESIGN.md §7). Must be called
+    /// before the first epoch — recycled buffer sets are sized for the
+    /// active collection mode (same contract as `Trainer::attach_cache`).
+    pub fn attach_cache(&mut self, store: Arc<ResidentStore>) -> Result<()> {
+        ensure!(self.caches.is_empty(), "a resident cache is already attached");
+        ensure!(
+            self.arsenals.iter().all(|a| a.stats == super::ProducerStats::default()),
+            "attach the cache before the first epoch (buffer sets already circulate)"
+        );
+        for e in &self.engines {
+            self.caches.push(CacheHandle::upload(e, store.clone())?);
+        }
+        Ok(())
+    }
+
+    /// The attached resident store, if any.
+    pub fn cache_store(&self) -> Option<&Arc<ResidentStore>> {
+        self.caches.first().map(|h| &h.store)
     }
 
     pub fn replicas(&self) -> usize {
@@ -209,7 +237,12 @@ impl<'g> ReplicaGroup<'g, SimBackend> {
     }
 }
 
-impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
+// `B::Dev: Sync` lets the lanes share `&CacheHandle<B>` across the scoped
+// round threads (the handle is read-only; satisfied by `SimDev`).
+impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B>
+where
+    B::Dev: Sync,
+{
     /// Train one epoch: rounds of `round` batches, each round fanned out
     /// across the replica lanes and merged with the fixed-order all-reduce.
     pub fn train_epoch(&mut self, epoch: u64) -> Result<ReplicaMetrics> {
@@ -238,6 +271,11 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
         let schema: &SchemaTensors = &self.schema;
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
+        let caches: &[CacheHandle<B>] = &self.caches;
+        // One shared epoch permutation + resident-store index across every
+        // lane's producers (DESIGN.md §5/§7).
+        let perm = epoch_perm(graph, &rng, epoch);
+        let cache_store = caches.first().map(|h| h.store.clone());
 
         let wall0 = Instant::now();
         let mut loss_sum = 0.0f64;
@@ -257,12 +295,24 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
                     let src = if opt.pipeline && !sched[i].is_empty() {
                         let seeds = arsenals[i].checkout(graph, m_prod);
                         let (feed, state_rx) = spawn_feed(
-                            s, graph, scfg, d, opt, prod_pool, &rng, epoch, &sched[i], m_prod,
+                            s,
+                            graph,
+                            scfg,
+                            d,
+                            opt,
+                            prod_pool,
+                            &rng,
+                            epoch,
+                            &sched[i],
+                            m_prod,
                             seeds,
+                            &perm,
+                            cache_store.as_ref(),
                         );
                         LaneSource::Feed { feed, state_rx, producers: m_prod }
                     } else {
-                        let seed = arsenals[i].checkout(graph, 1).pop().expect("one seed");
+                        let mut seed = arsenals[i].checkout(graph, 1).pop().expect("one seed");
+                        seed.scratch.install_epoch_perm(perm.clone(), &rng, epoch);
                         LaneSource::Inline(CpuProducer::from_seed(
                             graph,
                             scfg,
@@ -270,12 +320,15 @@ impl<'g, B: ExecBackend + Send> ReplicaGroup<'g, B> {
                             opt,
                             pool,
                             rng.clone(),
+                            cache_store.clone(),
                             seed,
                         ))
                     };
                     Lane {
                         eng,
                         src,
+                        cache: caches.get(i),
+                        assemble: AssembleScratch::default(),
                         pos: 0,
                         cpu_time: Duration::ZERO,
                         cpu_by_stage: CpuStageTimes::default(),
@@ -400,6 +453,11 @@ enum LaneSource<'g> {
 struct Lane<'e, 'g, B: ExecBackend> {
     eng: &'e mut B,
     src: LaneSource<'g>,
+    /// This replica's feature-cache handle (shared read-only store, own
+    /// device upload); `None` = cache off.
+    cache: Option<&'e CacheHandle<B>>,
+    /// Consumer-side pooled scratch for `assemble_batch`.
+    assemble: AssembleScratch,
     /// Next position in this lane's schedule (feed sequence numbering).
     pos: usize,
     cpu_time: Duration,
@@ -446,7 +504,8 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
             self.dropped_nodes += prep.dropped_nodes();
             self.dropped_edges += prep.dropped_edges();
             self.batches += 1;
-            let (batch, spent) = assemble_batch(&*self.eng, &d, schema, prep)?;
+            let (batch, spent) =
+                assemble_batch(&*self.eng, &d, schema, self.cache, &mut self.assemble, prep)?;
             let res = exec.grad_step(params, schema, &batch)?;
             let bufs = spent.reclaim(batch);
             let pos = self.pos;

@@ -18,11 +18,16 @@
 //!   --artifacts DIR (pjrt backend artifact dir, default artifacts/bench)
 //!   --replicas N (train only, sim backend: data-parallel replica rounds
 //!   with a bit-identical trajectory for every N — DESIGN.md §4)
+//!   --cache-frac F (train only, sim backend: pin the hottest F of each
+//!   vertex type on the device and assemble batch slabs with the
+//!   feature_gather kernel; trajectory bit-identical for every F —
+//!   DESIGN.md §7)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
 //! `make artifacts`. See README.md.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -32,10 +37,11 @@ use hifuse::coordinator::{
     prepare_graph_layout, replica_thread_budget, CpuProducer, ReplicaGroup, Trainer,
 };
 use hifuse::graph::datasets::DATASETS;
+use hifuse::graph::HeteroGraph;
 use hifuse::models::plan;
 use hifuse::models::step::Dims;
 use hifuse::perf;
-use hifuse::runtime::{ExecBackend, SimBackend};
+use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -78,6 +84,8 @@ fn print_usage() {
          \x20 --threads N --producers M --scale F\n\
          \x20 --replicas N (train, sim: data-parallel replica rounds;\n\
          \x20               trajectory bit-identical for every N)\n\
+         \x20 --cache-frac F (train, sim: device-resident feature cache;\n\
+         \x20               trajectory bit-identical for every F)\n\
          see README.md and DESIGN.md for details"
     );
 }
@@ -96,6 +104,18 @@ enum Action {
 /// generic over `ExecBackend`.
 fn dispatch(args: &[String], action: Action) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    if cfg.cache_frac > 0.0 {
+        if !matches!(action, Action::Train) {
+            bail!("--cache-frac is only supported by the `train` subcommand");
+        }
+        if cfg.backend != BackendKind::Sim {
+            bail!(
+                "--cache-frac requires the sim backend (the PJRT artifact \
+                 manifests predate the feature_gather module / CSLOTS profile \
+                 constant)"
+            );
+        }
+    }
     if let Some(n) = cfg.replicas {
         if !matches!(action, Action::Train) {
             bail!("--replicas is only supported by the `train` subcommand");
@@ -153,6 +173,10 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         cfg.train,
         round,
     )?;
+    if cfg.cache_frac > 0.0 {
+        let store = build_cache(cfg, &graph, probe.cst("CSLOTS"));
+        group.attach_cache(store)?;
+    }
     let threads_per = replica_thread_budget(cfg.train.threads, group.replicas());
     load_ckpt_env(&mut group.params)?;
     println!(
@@ -172,19 +196,41 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         let m = group.train_epoch(epoch)?;
         let per_rep: Vec<String> =
             m.per_replica.iter().map(|r| r.kernels_total.to_string()).collect();
+        let cache_note = if cfg.cache_frac > 0.0 {
+            format!(" | hit {:.2}", m.group.cache_hit_rate())
+        } else {
+            String::new()
+        };
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | kernels {} (per replica: {})",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB{} | kernels {} (per replica: {})",
             m.group.loss,
             m.group.acc,
             m.group.wall,
             m.group.cpu_time,
             m.group.gpu_time,
+            m.group.h2d_bytes as f64 / (1024.0 * 1024.0),
+            cache_note,
             m.group.kernels_total,
             per_rep.join("/"),
         );
     }
     save_ckpt_env(&group.params)?;
     Ok(())
+}
+
+/// Build the resident feature store for `--cache-frac` (a pure function of
+/// graph/frac/cslots/seed — every replica and producer shares the result),
+/// printing the presampling outcome.
+fn build_cache(cfg: &RunConfig, graph: &HeteroGraph, cslots: usize) -> Arc<ResidentStore> {
+    let store = Arc::new(ResidentStore::build(graph, cfg.cache_frac, cslots, cfg.train.seed));
+    println!(
+        "feature cache: frac {} -> {} rows resident ({} slots), {:.1} KiB pinned",
+        cfg.cache_frac,
+        store.rows_cached(),
+        store.cslots(),
+        (store.rows_cached() * store.feat_dim() * 4) as f64 / 1024.0,
+    );
+    store
 }
 
 /// Apply `HIFUSE_LOAD_CKPT` to a parameter set if the env var is present —
@@ -279,11 +325,20 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         graph.train_idx.len().div_ceil(cfg.train.batch_size),
     );
     let mut tr = Trainer::new(eng, &graph, cfg.model, cfg.opt, cfg.train)?;
+    if cfg.cache_frac > 0.0 {
+        let store = build_cache(cfg, &graph, eng.cst("CSLOTS"));
+        tr.attach_cache(store)?;
+    }
     load_ckpt_env(&mut tr.params)?;
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
+        let cache_note = if cfg.cache_frac > 0.0 {
+            format!(" | hit {:.2}", m.cache_hit_rate())
+        } else {
+            String::new()
+        };
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | kernels {}",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB{} | kernels {}",
             m.loss,
             m.acc,
             m.wall,
@@ -292,6 +347,8 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             m.cpu_by_stage.select,
             m.cpu_by_stage.collect,
             m.gpu_time,
+            m.h2d_bytes as f64 / (1024.0 * 1024.0),
+            cache_note,
             m.kernels_total
         );
     }

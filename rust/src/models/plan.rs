@@ -40,6 +40,9 @@ impl StepCounts {
 
     pub fn get(&self, stage: Stage, phase: Phase) -> usize {
         match (stage, phase) {
+            // The feature-gather dispatch exists only with --cache-frac > 0,
+            // which is off in every ladder mode this model predicts.
+            (Stage::Collection, _) => 0,
             (Stage::SemanticBuild, Phase::Fwd) => self.semantic_fwd,
             (Stage::SemanticBuild, Phase::Bwd) => 0,
             (Stage::Projection, Phase::Fwd) => self.proj_fwd,

@@ -95,6 +95,9 @@ pub fn module_cost(module: &str, d: &Dims) -> (f64, f64) {
             (rp * ns * fd, (rp * ns * fd + rp + tp * ns * fd) * b)
         }
         "head" => (10.0 * ns * c, (2.0 * ns * c + 2.0 * ns) * b),
+        // Pure data movement: read one source row per slot (cache or miss)
+        // plus the index vector, write the fused slab.
+        "feature_gather" => (0.0, (2.0 * tp * ns * f + tp * ns) * b),
         _ => (0.0, 0.0),
     }
 }

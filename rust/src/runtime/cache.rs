@@ -1,0 +1,306 @@
+//! Device-resident vertex-feature cache (DESIGN.md §7).
+//!
+//! Mini-batch HGNN training re-gathers and re-uploads the same hot vertex
+//! rows batch after batch — HiHGNN and the GPU characterization study both
+//! identify this cross-batch reuse as the largest untapped locality source.
+//! The cache exploits it: at dataset load, a **deterministic presampling
+//! pass** ranks every type's vertices by how often sampling can touch them
+//! (their appearance count in the relation adjacency lists, plus train-seed
+//! membership for the target type), and pins the top `--cache-frac` of each
+//! type into one packed `[CSLOTS, F]` resident slab that is uploaded to the
+//! device **once**. Per batch, only the rows *not* resident (the misses) are
+//! gathered on the CPU and uploaded; the `feature_gather` module then
+//! assembles the fused `[TPAD, NS, F]` batch slab on-device from
+//! {resident slab, miss upload, scatter indices}.
+//!
+//! Bit-exactness contract: cached rows are byte-copies of the same f32 data
+//! the CPU collector would read, so for **any** `--cache-frac` the training
+//! trajectory is bitwise identical to cache-off (`tests/cache_parity.rs`).
+//! The store itself is immutable after construction and shared read-only —
+//! one `Arc<ResidentStore>` serves every producer and every replica lane,
+//! while each backend keeps its own uploaded [`CacheHandle`].
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::graph::HeteroGraph;
+use crate::util::HostTensor;
+
+use super::ExecBackend;
+
+/// The backend-agnostic half of the cache: packed hot-vertex rows plus the
+/// dense vertex→cache-slot index. Immutable and `Sync`; shared via `Arc`.
+pub struct ResidentStore {
+    /// Packed cached feature rows, `[CSLOTS, F]`, zero-padded past
+    /// `rows_cached`.
+    rows: Vec<f32>,
+    cslots: usize,
+    f: usize,
+    /// Per type: type-local vertex id → global cache slot, `-1` = absent.
+    slot_of: Vec<Vec<i32>>,
+    /// Rows cached per type (presampling outcome, for reporting).
+    per_type: Vec<usize>,
+    /// The budget fraction the store was built with.
+    pub frac: f64,
+}
+
+impl ResidentStore {
+    /// Deterministic presampling pass: per type, rank vertices by hotness
+    /// (adjacency appearance count; `+1` train-seed bonus on the target
+    /// type), break ties by a seeded hash then vertex id, and cache the top
+    /// `ceil(frac · n_t)` of each type — scaled down proportionally if the
+    /// summed budget exceeds the profile's `CSLOTS` capacity. The result is
+    /// a pure function of `(graph, frac, cslots, seed)`.
+    pub fn build(g: &HeteroGraph, frac: f64, cslots: usize, seed: u64) -> ResidentStore {
+        assert!((0.0..=1.0).contains(&frac), "cache frac {frac} outside [0, 1]");
+        let f = g.feat_dim;
+        let n_types = g.n_types();
+
+        // Hotness: how often a vertex appears as a sampleable source.
+        let mut heat: Vec<Vec<u64>> = g.num_nodes.iter().map(|&n| vec![0u64; n]).collect();
+        for rel in &g.relations {
+            for &s in &rel.src_ids {
+                heat[rel.src_type][s as usize] += 1;
+            }
+        }
+        for &v in &g.train_idx {
+            heat[g.target_type][v as usize] += 1; // seeds are touched every epoch
+        }
+
+        // Per-type budgets (ceil(0) = 0, so frac 0.0 caches nothing),
+        // proportionally clamped to the CSLOTS capacity.
+        let mut caps: Vec<usize> = g
+            .num_nodes
+            .iter()
+            .map(|&n| ((frac * n as f64).ceil() as usize).min(n))
+            .collect();
+        let want: usize = caps.iter().sum();
+        if want > cslots {
+            let scale = cslots as f64 / want as f64;
+            for c in caps.iter_mut() {
+                *c = (*c as f64 * scale).floor() as usize;
+            }
+        }
+
+        let mut slot_of: Vec<Vec<i32>> = g.num_nodes.iter().map(|&n| vec![-1i32; n]).collect();
+        let mut rows = vec![0.0f32; cslots * f];
+        let mut per_type = vec![0usize; n_types];
+        let mut next_slot = 0usize;
+        for t in 0..n_types {
+            let mut order: Vec<u32> = (0..g.num_nodes[t] as u32).collect();
+            // Rank: hotness desc, seeded-hash tiebreak, vertex id — fully
+            // deterministic in (graph, seed).
+            order.sort_unstable_by_key(|&v| {
+                (std::cmp::Reverse(heat[t][v as usize]), tie_hash(seed, t, v), v)
+            });
+            for &v in order.iter().take(caps[t]) {
+                if next_slot >= cslots {
+                    break;
+                }
+                slot_of[t][v as usize] = next_slot as i32;
+                g.features
+                    .copy_row(t, v as usize, &mut rows[next_slot * f..(next_slot + 1) * f]);
+                per_type[t] += 1;
+                next_slot += 1;
+            }
+        }
+
+        ResidentStore { rows, cslots, f, slot_of, per_type, frac }
+    }
+
+    /// Cache slot of `(type, vertex)`, or `-1` when not resident.
+    #[inline]
+    pub fn slot(&self, t: usize, v: usize) -> i32 {
+        self.slot_of[t][v]
+    }
+
+    /// Total rows pinned on the device.
+    pub fn rows_cached(&self) -> usize {
+        self.per_type.iter().sum()
+    }
+
+    /// Rows pinned per type.
+    pub fn per_type(&self) -> &[usize] {
+        &self.per_type
+    }
+
+    /// Resident-store capacity (the profile's `CSLOTS`).
+    pub fn cslots(&self) -> usize {
+        self.cslots
+    }
+
+    /// Feature dim the rows were packed with.
+    pub fn feat_dim(&self) -> usize {
+        self.f
+    }
+
+    /// One cached row (tests / debugging).
+    pub fn row(&self, slot: usize) -> &[f32] {
+        &self.rows[slot * self.f..(slot + 1) * self.f]
+    }
+
+    /// The packed `[CSLOTS, F]` slab as a host tensor (upload staging).
+    fn as_tensor(&self) -> HostTensor {
+        HostTensor::f32(self.rows.clone(), &[self.cslots, self.f])
+    }
+}
+
+/// A backend's handle on the shared store: the `Arc`'d row index plus this
+/// backend's own device-resident upload of the packed slab. Replica lanes
+/// each hold one handle over the **same** store (DESIGN.md §7).
+pub struct CacheHandle<B: ExecBackend> {
+    pub store: Arc<ResidentStore>,
+    /// The `[CSLOTS, F]` resident slab on this backend's device.
+    pub dev: B::Dev,
+}
+
+impl<B: ExecBackend> CacheHandle<B> {
+    /// Upload the packed slab to `eng` (a one-time H2D transfer of the full
+    /// occupied prefix — amortized over every subsequent batch), after
+    /// checking the store against the backend's profile constants.
+    pub fn upload(eng: &B, store: Arc<ResidentStore>) -> Result<CacheHandle<B>> {
+        ensure!(
+            store.cslots == eng.cst("CSLOTS"),
+            "resident store capacity {} != profile CSLOTS {}",
+            store.cslots,
+            eng.cst("CSLOTS")
+        );
+        ensure!(
+            store.f == eng.cst("F"),
+            "resident store feature dim {} != profile F {}",
+            store.f,
+            eng.cst("F")
+        );
+        let staged = store.as_tensor();
+        let dev = eng.upload(&staged, store.rows_cached() * store.f)?;
+        Ok(CacheHandle { store, dev })
+    }
+}
+
+/// SplitMix64 of `(seed, type, vertex)` — the seeded tiebreak of the
+/// presampling rank.
+fn tie_hash(seed: u64, t: usize, v: u32) -> u64 {
+    let mut z = seed
+        .wrapping_add((t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((v as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_graph;
+    use crate::graph::Layout;
+
+    #[test]
+    fn build_is_deterministic_in_graph_frac_seed() {
+        let g = tiny_graph(7);
+        let a = ResidentStore::build(&g, 0.25, 160, 42);
+        let b = ResidentStore::build(&g, 0.25, 160, 42);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.slot_of, b.slot_of);
+        let c = ResidentStore::build(&g, 0.25, 160, 43);
+        // A different seed may reorder ties but never the budget.
+        assert_eq!(a.rows_cached(), c.rows_cached());
+    }
+
+    #[test]
+    fn budget_respects_frac_and_cslots() {
+        let g = tiny_graph(3);
+        let none = ResidentStore::build(&g, 0.0, 160, 1);
+        assert_eq!(none.rows_cached(), 0);
+        let quarter = ResidentStore::build(&g, 0.25, 160, 1);
+        assert!(quarter.rows_cached() > 0);
+        assert!(quarter.rows_cached() < g.total_nodes());
+        for (t, &n) in g.num_nodes.iter().enumerate() {
+            assert!(quarter.per_type()[t] <= (0.25 * n as f64).ceil() as usize);
+        }
+        let full = ResidentStore::build(&g, 1.0, 160, 1);
+        assert_eq!(full.rows_cached(), g.total_nodes(), "CSLOTS=160 covers tiny");
+        // A capacity below the budget clamps proportionally.
+        let clamped = ResidentStore::build(&g, 1.0, 64, 1);
+        assert!(clamped.rows_cached() <= 64);
+        assert!(clamped.rows_cached() > 0);
+    }
+
+    #[test]
+    fn cached_rows_are_byte_copies_of_the_feature_store() {
+        let mut g = tiny_graph(5);
+        let store = ResidentStore::build(&g, 0.5, 160, 9);
+        let mut row = vec![0.0f32; g.feat_dim];
+        let mut seen = 0usize;
+        for t in 0..g.n_types() {
+            for v in 0..g.num_nodes[t] {
+                let s = store.slot(t, v);
+                if s < 0 {
+                    continue;
+                }
+                g.features.copy_row(t, v, &mut row);
+                assert_eq!(store.row(s as usize), &row[..], "({t},{v})");
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, store.rows_cached());
+        // The store outlives layout changes: rows were copied at build.
+        g.features.ensure_layout(Layout::IndexMajor);
+        for t in 0..g.n_types() {
+            for v in 0..g.num_nodes[t] {
+                let s = store.slot(t, v);
+                if s >= 0 {
+                    g.features.copy_row(t, v, &mut row);
+                    assert_eq!(store.row(s as usize), &row[..]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn presampling_prefers_hot_vertices() {
+        let g = tiny_graph(11);
+        let store = ResidentStore::build(&g, 0.25, 160, 1);
+        // Within each type, the coldest cached vertex must be at least as
+        // hot as the hottest uncached one (degree-ranked contract).
+        let mut heat: Vec<Vec<u64>> = g.num_nodes.iter().map(|&n| vec![0u64; n]).collect();
+        for rel in &g.relations {
+            for &s in &rel.src_ids {
+                heat[rel.src_type][s as usize] += 1;
+            }
+        }
+        for &v in &g.train_idx {
+            heat[g.target_type][v as usize] += 1;
+        }
+        for t in 0..g.n_types() {
+            let cached_min = (0..g.num_nodes[t])
+                .filter(|&v| store.slot(t, v) >= 0)
+                .map(|v| heat[t][v])
+                .min();
+            let uncached_max = (0..g.num_nodes[t])
+                .filter(|&v| store.slot(t, v) < 0)
+                .map(|v| heat[t][v])
+                .max();
+            if let (Some(lo), Some(hi)) = (cached_min, uncached_max) {
+                assert!(lo >= hi, "type {t}: cached heat {lo} < uncached heat {hi}");
+            }
+        }
+    }
+
+    #[test]
+    fn slots_are_unique_and_in_range() {
+        let g = tiny_graph(2);
+        let store = ResidentStore::build(&g, 1.0, 160, 0);
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..g.n_types() {
+            for v in 0..g.num_nodes[t] {
+                let s = store.slot(t, v);
+                if s >= 0 {
+                    assert!((s as usize) < store.cslots());
+                    assert!(seen.insert(s), "slot {s} assigned twice");
+                }
+            }
+        }
+        assert_eq!(seen.len(), store.rows_cached());
+    }
+}

@@ -10,6 +10,9 @@ use std::time::Duration;
 /// Which pipeline stage issued a dispatch (paper's stage taxonomy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Stage {
+    /// Feature collection on device (the `feature_gather` cache-assembly
+    /// dispatch — only present with `--cache-frac` > 0, DESIGN.md §7).
+    Collection,
     /// Semantic graph build (edge index selection on "GPU" — baseline only).
     SemanticBuild,
     /// Feature projection.
@@ -24,7 +27,8 @@ pub enum Stage {
     Calib,
 }
 
-pub const STAGES: [Stage; 5] = [
+pub const STAGES: [Stage; 6] = [
+    Stage::Collection,
     Stage::SemanticBuild,
     Stage::Projection,
     Stage::Aggregation,
@@ -35,6 +39,7 @@ pub const STAGES: [Stage; 5] = [
 impl Stage {
     pub fn name(self) -> &'static str {
         match self {
+            Stage::Collection => "collection",
             Stage::SemanticBuild => "semantic_build",
             Stage::Projection => "projection",
             Stage::Aggregation => "aggregation",
@@ -108,6 +113,28 @@ pub struct Counters {
     counts: std::collections::HashMap<(Stage, Phase), usize>,
     stage_time: std::collections::HashMap<Stage, Duration>,
     pub gpu_time: Duration,
+    /// Cumulative host→device transfer bytes since the last reset: every
+    /// non-calibration dispatch's host-argument uploads (the per-event
+    /// `bytes_in`) plus explicit transfers recorded via
+    /// [`Counters::add_h2d`] — the feature channel the cache shrinks
+    /// ([`ExecBackend::upload`](super::ExecBackend::upload) partial copies,
+    /// and the modeled full-slab shipment on the cache-off path;
+    /// DESIGN.md §7). Comparisons between cache modes are meaningful
+    /// because the dispatch-argument term is identical in both (the step
+    /// executor's inputs don't change); the explicit feature-channel term
+    /// is the differential.
+    pub h2d_bytes: u64,
+    /// Cumulative device→host transfer bytes since the last reset: outputs
+    /// of host-returning (`run`) dispatches. `run_dev` results stay
+    /// device-resident and contribute nothing until a caller round-trips
+    /// them (untracked — the sim backend's "device" is host memory).
+    pub d2h_bytes: u64,
+    /// Batch-slot feature reads served by the device-resident cache
+    /// (recorded by `assemble_batch` alongside the gather dispatch).
+    pub cache_hits: u64,
+    /// Batch-slot feature reads that had to be gathered on the CPU and
+    /// uploaded (the miss rows of the gather dispatch).
+    pub cache_misses: u64,
     /// Snapshot of the backend's buffer-arena traffic (cumulative since
     /// backend construction; refreshed by the sim backend on every
     /// dispatch, all-zero on backends without an arena).
@@ -125,7 +152,43 @@ impl Counters {
         self.counts.clear();
         self.stage_time.clear();
         self.gpu_time = Duration::ZERO;
+        self.h2d_bytes = 0;
+        self.d2h_bytes = 0;
+        self.cache_hits = 0;
+        self.cache_misses = 0;
         self.epoch_start = Some(std::time::Instant::now());
+    }
+
+    /// Record an explicit host→device transfer that happened outside a
+    /// dispatch's argument uploads (e.g. the partial miss-row copy of
+    /// [`ExecBackend::upload`](super::ExecBackend::upload), or the modeled
+    /// per-batch slab shipment of the cache-off feature channel).
+    pub fn add_h2d(&mut self, bytes: u64) {
+        self.h2d_bytes += bytes;
+    }
+
+    /// Record an explicit device→host transfer (outputs of host-returning
+    /// dispatches).
+    pub fn add_d2h(&mut self, bytes: u64) {
+        self.d2h_bytes += bytes;
+    }
+
+    /// Record one batch's cache hit/miss split (feature rows served from
+    /// the device-resident store vs gathered on CPU and uploaded).
+    pub fn add_cache(&mut self, hits: u64, misses: u64) {
+        self.cache_hits += hits;
+        self.cache_misses += misses;
+    }
+
+    /// Fraction of batch-slot feature reads served by the resident cache
+    /// since the last reset (0.0 when the cache never ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     pub fn record(
@@ -141,6 +204,7 @@ impl Counters {
             *self.counts.entry((stage, phase)).or_insert(0) += 1;
             *self.stage_time.entry(stage).or_insert(Duration::ZERO) += dur;
             self.gpu_time += dur;
+            self.h2d_bytes += bytes_in as u64;
         }
         if self.keep_events {
             let t_start = self
@@ -209,6 +273,33 @@ mod tests {
         c.record("x", Stage::Calib, Phase::Fwd, Duration::from_micros(50), 1, 1);
         assert_eq!(c.total(), 0);
         assert_eq!(c.gpu_time, Duration::ZERO);
+        assert_eq!(c.h2d_bytes, 0, "calib uploads must not count as h2d");
+    }
+
+    #[test]
+    fn h2d_accumulates_dispatch_args_and_explicit_transfers() {
+        let mut c = Counters::new(false);
+        c.reset();
+        c.record("a", Stage::Projection, Phase::Fwd, Duration::from_micros(1), 100, 40);
+        assert_eq!(c.h2d_bytes, 100);
+        c.add_h2d(28);
+        c.add_d2h(40);
+        assert_eq!(c.h2d_bytes, 128);
+        assert_eq!(c.d2h_bytes, 40);
+        c.reset();
+        assert_eq!((c.h2d_bytes, c.d2h_bytes), (0, 0));
+    }
+
+    #[test]
+    fn cache_hit_rate_is_guarded_and_resets() {
+        let mut c = Counters::new(false);
+        c.reset();
+        assert_eq!(c.cache_hit_rate(), 0.0);
+        c.add_cache(3, 1);
+        assert_eq!((c.cache_hits, c.cache_misses), (3, 1));
+        assert!((c.cache_hit_rate() - 0.75).abs() < 1e-12);
+        c.reset();
+        assert_eq!((c.cache_hits, c.cache_misses), (0, 0));
     }
 
     #[test]

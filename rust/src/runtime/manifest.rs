@@ -165,6 +165,10 @@ impl Manifest {
                 ("F", 8),
                 ("H", 16),
                 ("C", 4),
+                // Device-resident feature-cache rows (DESIGN.md §7): covers
+                // the whole tiny graph (136 vertices after the target-type
+                // bump) at --cache-frac 1.0.
+                ("CSLOTS", 160),
             ],
             "bench" => &[
                 ("NS", 512),
@@ -174,6 +178,10 @@ impl Manifest {
                 ("F", 32),
                 ("H", 64),
                 ("C", 16),
+                // 8192 rows × 32 f32 = 1 MiB resident store; --cache-frac
+                // budgets above this are clamped (the cap is the profile's
+                // static shape, like NS/EP).
+                ("CSLOTS", 8192),
             ],
             other => bail!("unknown builtin profile {other:?} (expected tiny|bench)"),
         };
@@ -181,6 +189,7 @@ impl Manifest {
             base.iter().map(|&(k, v)| (k.to_string(), v)).collect();
         let (ns, ep, rp, tp) = (consts["NS"], consts["EP"], consts["RPAD"], consts["TPAD"]);
         let (f, h, c) = (consts["F"], consts["H"], consts["C"]);
+        let cslots = consts["CSLOTS"];
         let elp = rp * ep;
         consts.insert("ELP".to_string(), elp);
 
@@ -217,6 +226,22 @@ impl Manifest {
                 "edge_select",
                 vec![("edge_type", I32, vec![elp]), ("rel", I32, vec![])],
                 vec![(I32, vec![elp]), (I32, vec![])],
+            );
+
+            // -- on-device feature collection (cache path, DESIGN.md §7) ----
+            // Assembles the fused [TPAD, NS, F] batch slab from the
+            // device-resident cache rows, the (partially) uploaded miss
+            // rows, and per-slot scatter indices: idx >= 0 reads cache row
+            // idx, idx == -1 writes a zero padding row, idx <= -2 reads
+            // miss row (-idx - 2).
+            add(
+                "feature_gather",
+                vec![
+                    ("cache", F32, vec![cslots, f]),
+                    ("miss", F32, vec![tp * ns, f]),
+                    ("idx", I32, vec![tp, ns]),
+                ],
+                vec![(F32, vec![tp, ns, f])],
             );
 
             // -- feature projection -----------------------------------------
@@ -463,12 +488,14 @@ end
             (32, 16, 8, 8)
         );
         assert_eq!((t.cst("F"), t.cst("H"), t.cst("C"), t.cst("ELP")), (8, 16, 4, 128));
-        // Full module inventory: 1 select + 8 projection + 16 aggregation
-        // + 4 fusion + 1 head.
-        assert_eq!(t.modules.len(), 30);
+        assert_eq!(t.cst("CSLOTS"), 160);
+        // Full module inventory: 1 select + 1 feature gather + 8 projection
+        // + 16 aggregation + 4 fusion + 1 head.
+        assert_eq!(t.modules.len(), 31);
         let b = Manifest::builtin("bench").unwrap();
         assert_eq!((b.cst("NS"), b.cst("RPAD"), b.cst("ELP")), (512, 128, 32768));
-        assert_eq!(b.modules.len(), 30);
+        assert_eq!(b.cst("CSLOTS"), 8192);
+        assert_eq!(b.modules.len(), 31);
         assert!(Manifest::builtin("nope").is_err());
     }
 
@@ -489,6 +516,12 @@ end
         let e = m.module("edge_select").unwrap();
         assert_eq!(e.args[0].dtype, DType::I32);
         assert_eq!(e.args[0].shape, vec![128]);
+        let g = m.module("feature_gather").unwrap();
+        assert_eq!(g.args[0].shape, vec![160, 8]); // [CSLOTS, F]
+        assert_eq!(g.args[1].shape, vec![8 * 32, 8]); // [TPAD*NS, F]
+        assert_eq!(g.args[2].dtype, DType::I32);
+        assert_eq!(g.args[2].shape, vec![8, 32]);
+        assert_eq!(g.rets[0].shape, vec![8, 32, 8]);
     }
 
     #[test]

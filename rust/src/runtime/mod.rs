@@ -15,6 +15,7 @@
 //! via [`ExecBackend::measure_dispatch_overhead`].
 
 pub mod arena;
+pub mod cache;
 pub mod counters;
 pub mod manifest;
 pub mod sim;
@@ -25,6 +26,7 @@ pub mod literal;
 pub mod pjrt;
 
 pub use arena::{Arena, ArenaStats};
+pub use cache::{CacheHandle, ResidentStore};
 pub use counters::{Counters, CpuStageTimes, Event, Phase, Stage, STAGES};
 pub use manifest::{DType, Manifest, ModuleSpec};
 #[cfg(feature = "pjrt")]
@@ -132,6 +134,17 @@ pub trait ExecBackend {
         *c = Counters::new(keep_events);
         c.reset();
     }
+
+    /// Place a host tensor on the device as an explicit H2D copy outside
+    /// any dispatch, transferring only the leading `valid_elems` elements —
+    /// the static-shape analogue of a partial `cudaMemcpyH2D` into a
+    /// preallocated device buffer. The returned buffer carries `t`'s full
+    /// declared shape (elements past `valid_elems` are device garbage the
+    /// caller must never address), and only `valid_elems * 4` bytes count
+    /// toward [`Counters::h2d_bytes`]. The feature cache uses this for the
+    /// per-batch miss-row upload and the one-time resident store
+    /// (DESIGN.md §7).
+    fn upload(&self, t: &HostTensor, valid_elems: usize) -> Result<Self::Dev>;
 
     /// Hand a consumed dispatch output back to the backend for storage
     /// reuse (the sim backend recycles it through its buffer arena;

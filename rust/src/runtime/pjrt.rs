@@ -178,10 +178,34 @@ impl ExecBackend for Engine {
         };
         let dur = t0.elapsed();
         let bytes_out: usize = outs.iter().map(|t| t.size_bytes()).sum();
-        self.counters
-            .borrow_mut()
-            .record(name, stage, phase, dur, bytes_in, bytes_out);
+        {
+            let mut c = self.counters.borrow_mut();
+            c.record(name, stage, phase, dur, bytes_in, bytes_out);
+            if stage != Stage::Calib {
+                // Host-returning dispatch: outputs cross back to the host.
+                c.add_d2h(bytes_out as u64);
+            }
+        }
         Ok(outs)
+    }
+
+    /// Explicit H2D placement of a host tensor (feature-cache resident
+    /// store / miss rows). PJRT's host-buffer copy has no partial-length
+    /// form, so the whole tensor is copied; the *accounted* transfer is the
+    /// valid prefix, matching the sim backend's model of a partial
+    /// `cudaMemcpyH2D` into a preallocated static buffer.
+    fn upload(&self, t: &HostTensor, valid_elems: usize) -> Result<DevTensor> {
+        let buf = match t {
+            HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+            HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+        }?;
+        let valid = valid_elems.min(t.len());
+        self.counters.borrow_mut().add_h2d(valid as u64 * 4);
+        Ok(DevTensor {
+            buf,
+            dtype: super::host_dtype(t),
+            shape: t.shape().to_vec(),
+        })
     }
 
     /// Dispatch a **single-output** module keeping the result on the

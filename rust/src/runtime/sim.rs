@@ -215,7 +215,14 @@ impl ExecBackend for SimBackend {
         args: &[&HostTensor],
     ) -> Result<Vec<HostTensor>> {
         let wrapped: Vec<Arg<'_, SimDev>> = args.iter().map(|&a| Arg::Host(a)).collect();
-        self.exec(name, stage, phase, &wrapped)
+        let outs = self.exec(name, stage, phase, &wrapped)?;
+        if stage != Stage::Calib {
+            // `run` returns host tensors: its outputs cross the device
+            // boundary back (unlike `run_dev`, whose results stay resident).
+            let bytes: usize = outs.iter().map(|t| t.size_bytes()).sum();
+            self.counters.borrow_mut().add_d2h(bytes as u64);
+        }
+        Ok(outs)
     }
 
     fn run_dev(
@@ -230,6 +237,28 @@ impl ExecBackend for SimBackend {
             bail!("{name}: run_dev requires a single-output module");
         }
         Ok(SimDev(outs.swap_remove(0)))
+    }
+
+    /// Partial H2D copy into a full-shape "device" buffer: only the leading
+    /// `valid_elems` elements transfer (and count). The buffer comes from
+    /// the arena, whose checkouts are zeroed, so the untransferred tail is
+    /// deterministically zero — callers must still never address it.
+    fn upload(&self, t: &HostTensor, valid_elems: usize) -> Result<SimDev> {
+        let valid = valid_elems.min(t.len());
+        let dev = match t {
+            HostTensor::F32(d, s) => {
+                let mut buf = self.take_f32(d.len());
+                buf[..valid].copy_from_slice(&d[..valid]);
+                HostTensor::f32(buf, s)
+            }
+            HostTensor::I32(d, s) => {
+                let mut buf = self.take_i32(d.len());
+                buf[..valid].copy_from_slice(&d[..valid]);
+                HostTensor::i32(buf, s)
+            }
+        };
+        self.counters.borrow_mut().add_h2d(valid as u64 * 4);
+        Ok(SimDev(dev))
     }
 
     fn recycle(&self, t: HostTensor) {
@@ -281,6 +310,35 @@ impl SimBackend {
                     *v = elp as i32; // sentinel = ELP, like the HLO module
                 }
                 Ok(vec![HostTensor::i32(pos, &[elp]), HostTensor::scalar_i32(count as i32)])
+            }
+
+            "feature_gather" => {
+                let (cslots, f) = (dim(0, 0), dim(0, 1));
+                let mrows = dim(1, 0);
+                let (tp, ns) = (dim(2, 0), dim(2, 1));
+                let cache = args[0].as_f32()?;
+                let miss = args[1].as_f32()?;
+                let idxs = args[2].as_i32()?;
+                let mut out = self.take_f32(tp * ns * f);
+                // Pure per-slot copies partitioned by output row: bit-exact
+                // for any thread count. Padding rows (idx == -1) stay at the
+                // arena checkout's zeros — the same bytes the CPU collector
+                // writes for unused slots.
+                self.pool.try_for_row_chunks(&mut out, tp * ns, PAR_MIN_ROWS, |s0, s1, rows| {
+                    for s in s0..s1 {
+                        let dst = &mut rows[(s - s0) * f..(s - s0 + 1) * f];
+                        let ix = idxs[s];
+                        if ix >= 0 {
+                            let ci = idx(ix, cslots, "cache slot")?;
+                            dst.copy_from_slice(&cache[ci * f..(ci + 1) * f]);
+                        } else if ix <= -2 {
+                            let mi = idx(-ix - 2, mrows, "miss row")?;
+                            dst.copy_from_slice(&miss[mi * f..(mi + 1) * f]);
+                        }
+                    }
+                    Ok(())
+                })?;
+                Ok(vec![HostTensor::f32(out, &[tp, ns, f])])
             }
 
             n if n.starts_with("proj_stacked_fwd") => {
@@ -1877,6 +1935,79 @@ mod tests {
             &fuse_bwd(dtf, aggf, doutf, rp, ns, h, tp, true).unwrap()[..],
             "fuse bwd"
         );
+    }
+
+    /// The on-device gather assembles exactly the slab a CPU gather would:
+    /// cache rows where idx >= 0, miss rows where idx <= -2, zeros at -1 —
+    /// bit-identical serial vs threaded.
+    #[test]
+    fn feature_gather_assembles_cache_miss_and_padding_rows() {
+        let mut rng = Rng::new(23);
+        for threads in [1usize, 4] {
+            let eng = SimBackend::builtin_threaded("tiny", threads).unwrap();
+            let (cs, tp, ns, f) =
+                (eng.cst("CSLOTS"), eng.cst("TPAD"), eng.cst("NS"), eng.cst("F"));
+            let cache = HostTensor::f32(randv(&mut rng, cs * f), &[cs, f]);
+            let miss = HostTensor::f32(randv(&mut rng, tp * ns * f), &[tp * ns, f]);
+            // Mix of cache slots, miss rows and padding across the slab.
+            let mut ix = vec![-1i32; tp * ns];
+            for (s, v) in ix.iter_mut().enumerate() {
+                *v = match s % 3 {
+                    0 => (s % cs) as i32,
+                    1 => -2 - ((s % (tp * ns)) as i32),
+                    _ => -1,
+                };
+            }
+            let idx_t = HostTensor::i32(ix.clone(), &[tp, ns]);
+            let out = eng
+                .run("feature_gather", Stage::Calib, Phase::Fwd, &[&cache, &miss, &idx_t])
+                .unwrap();
+            assert_eq!(out[0].shape(), &[tp, ns, f]);
+            let of = out[0].as_f32().unwrap();
+            let (cf, mf) = (cache.as_f32().unwrap(), miss.as_f32().unwrap());
+            for (s, &v) in ix.iter().enumerate() {
+                let got = &of[s * f..(s + 1) * f];
+                if v >= 0 {
+                    assert_eq!(got, &cf[v as usize * f..(v as usize + 1) * f], "slot {s}");
+                } else if v <= -2 {
+                    let m = (-v - 2) as usize;
+                    assert_eq!(got, &mf[m * f..(m + 1) * f], "slot {s}");
+                } else {
+                    assert!(got.iter().all(|&x| x == 0.0), "padding slot {s} not zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feature_gather_rejects_out_of_range_indices() {
+        let eng = SimBackend::builtin("tiny").unwrap();
+        let (cs, tp, ns, f) = (eng.cst("CSLOTS"), eng.cst("TPAD"), eng.cst("NS"), eng.cst("F"));
+        let cache = HostTensor::zeros_f32(&[cs, f]);
+        let miss = HostTensor::zeros_f32(&[tp * ns, f]);
+        let mut ix = vec![-1i32; tp * ns];
+        ix[0] = cs as i32; // one past the resident store
+        let idx_t = HostTensor::i32(ix, &[tp, ns]);
+        assert!(eng
+            .run("feature_gather", Stage::Calib, Phase::Fwd, &[&cache, &miss, &idx_t])
+            .is_err());
+    }
+
+    /// `upload` transfers (and counts) only the valid prefix; the tail of
+    /// the full-shape device buffer is deterministically zero.
+    #[test]
+    fn upload_counts_partial_bytes_and_zero_fills_the_tail() {
+        let eng = SimBackend::builtin("tiny").unwrap();
+        eng.reset_counters(false);
+        let t = HostTensor::f32(vec![7.0; 100], &[100]);
+        let dev = eng.upload(&t, 30).unwrap();
+        assert_eq!(eng.counters().borrow().h2d_bytes, 30 * 4);
+        assert_eq!(dev.shape(), &[100]);
+        let h = dev.into_host().unwrap();
+        let d = h.as_f32().unwrap();
+        assert!(d[..30].iter().all(|&x| x == 7.0));
+        assert!(d[30..].iter().all(|&x| x == 0.0));
+        eng.recycle(h);
     }
 
     /// Recycled dispatch outputs are reused: after the first dispatch of a

@@ -13,14 +13,23 @@
 //! the memory streams the way the paper's OpenMP collection stage does.
 
 use crate::graph::{HeteroGraph, Layout};
+use crate::runtime::ResidentStore;
 use crate::sampler::MiniBatch;
 use crate::util::{HostTensor, WorkerPool};
 
 /// Collected batch tensors, ready for upload. Reusable: [`collect_into`]
 /// refills an existing instance in place (the shapes are profile constants,
 /// so a recycled `Collected` never reallocates).
+///
+/// With a device-resident feature cache (DESIGN.md §7) the collector skips
+/// `xs` entirely: it fills `gather_idx` (per-slot scatter indices) and
+/// `miss_rows` (the CPU-gathered non-resident rows, packed) instead, and
+/// `assemble_batch` dispatches the `feature_gather` module to build the
+/// slab on-device. The `xs` buffer still travels with the set so the
+/// recycle loop keeps a constant buffer population either way.
 pub struct Collected {
-    /// `[TPAD, NS, F]` raw-feature slabs, zero-padded.
+    /// `[TPAD, NS, F]` raw-feature slabs, zero-padded. Stale (recycled
+    /// bytes) when the cache path filled `miss_rows`/`gather_idx` instead.
     pub xs: HostTensor,
     /// `[NS]` i32 labels of target-type slots (0 where unused).
     pub labels: HostTensor,
@@ -28,17 +37,41 @@ pub struct Collected {
     pub seed_mask: HostTensor,
     /// Number of distinct seeds (mask population).
     pub n_seed: usize,
+    /// Cache path only: `[TPAD*NS, F]` miss-row staging (leading `n_miss`
+    /// rows valid — only those bytes upload). Empty when built uncached.
+    pub miss_rows: HostTensor,
+    /// Cache path only: `[TPAD, NS]` i32 scatter indices (>= 0: cache slot,
+    /// -1: zero padding, <= -2: miss row `-idx - 2`). Empty when uncached.
+    pub gather_idx: HostTensor,
+    /// Cache path: slot reads served by the resident store this batch.
+    pub n_hit: usize,
+    /// Cache path: slot reads gathered on CPU into `miss_rows` this batch.
+    pub n_miss: usize,
 }
 
 impl Collected {
     /// Zeroed tensors at the profile shapes (one-time allocation; the
-    /// producer recycling loop keeps them alive across batches).
-    pub fn new(tpad: usize, ns: usize, f: usize) -> Self {
+    /// producer recycling loop keeps them alive across batches). `cached`
+    /// additionally sizes the miss-staging and scatter-index buffers, so a
+    /// cache-path buffer set never grows on first use either.
+    pub fn new(tpad: usize, ns: usize, f: usize, cached: bool) -> Self {
+        let (miss_rows, gather_idx) = if cached {
+            (
+                HostTensor::zeros_f32(&[tpad * ns, f]),
+                HostTensor::i32(vec![-1i32; tpad * ns], &[tpad, ns]),
+            )
+        } else {
+            (HostTensor::f32(Vec::new(), &[0]), HostTensor::i32(Vec::new(), &[0]))
+        };
         Collected {
             xs: HostTensor::zeros_f32(&[tpad, ns, f]),
             labels: HostTensor::i32(vec![0i32; ns], &[ns]),
             seed_mask: HostTensor::zeros_f32(&[ns]),
             n_seed: 0,
+            miss_rows,
+            gather_idx,
+            n_hit: 0,
+            n_miss: 0,
         }
     }
 }
@@ -67,7 +100,72 @@ fn collect_type_rows(g: &HeteroGraph, t: usize, slot_list: &[u32], f: usize, out
     }
 }
 
-/// Gather raw features + labels + seed mask for a mini-batch.
+/// Cache path of [`collect_into`]: write per-slot scatter indices and pack
+/// the non-resident rows into the miss staging buffer. Misses keep the
+/// run-length discipline: a run of consecutive miss slots whose vertex ids
+/// are also consecutive copies with one `memcpy` on the type-major layout
+/// (index-major falls back to `copy_row`, exactly like the full gather).
+///
+/// Serial across types, unlike the full-slab gather: each type's miss rows
+/// pack densely after the previous type's, so the write regions are
+/// data-dependent rather than row-uniform — and with any useful hit rate
+/// there is far less to copy than the full gather parallelizes over.
+fn split_hits_and_misses(
+    g: &HeteroGraph,
+    mb: &MiniBatch,
+    tpad: usize,
+    ns: usize,
+    f: usize,
+    store: &ResidentStore,
+    out: &mut Collected,
+) {
+    let idx = out.gather_idx.as_i32_mut().expect("gather_idx is i32");
+    assert_eq!(idx.len(), tpad * ns, "recycled Collected was built without cache buffers");
+    let miss = out.miss_rows.as_f32_mut().expect("miss_rows is f32");
+    assert_eq!(miss.len(), tpad * ns * f, "recycled miss staging has a different shape");
+    idx.fill(-1);
+    let mut n_hit = 0usize;
+    let mut n_miss = 0usize;
+    for (t, slot_list) in mb.slots.iter().enumerate() {
+        let mut s = 0usize;
+        while s < slot_list.len() {
+            let v0 = slot_list[s] as usize;
+            let cs = store.slot(t, v0);
+            if cs >= 0 {
+                idx[t * ns + s] = cs;
+                n_hit += 1;
+                s += 1;
+                continue;
+            }
+            // Maximal run of consecutive-id misses starting at slot s.
+            let mut run = 1usize;
+            while s + run < slot_list.len()
+                && slot_list[s + run] as usize == v0 + run
+                && store.slot(t, v0 + run) < 0
+            {
+                run += 1;
+            }
+            for r in 0..run {
+                idx[t * ns + s + r] = -2 - (n_miss + r) as i32;
+            }
+            let dst = &mut miss[n_miss * f..(n_miss + run) * f];
+            match g.features.rows(t, v0, run) {
+                Some(src) => dst.copy_from_slice(src),
+                None => {
+                    for r in 0..run {
+                        g.features.copy_row(t, v0 + r, &mut dst[r * f..(r + 1) * f]);
+                    }
+                }
+            }
+            n_miss += run;
+            s += run;
+        }
+    }
+    out.n_hit = n_hit;
+    out.n_miss = n_miss;
+}
+
+/// Gather raw features + labels + seed mask for a mini-batch (cache-off).
 ///
 /// `tpad`/`ns` are the profile paddings; `f` is the raw feature dim;
 /// `pool` partitions the per-type slab fills across workers. One-shot
@@ -80,13 +178,19 @@ pub fn collect(
     f: usize,
     pool: &WorkerPool,
 ) -> Collected {
-    let mut out = Collected::new(tpad, ns, f);
-    collect_into(g, mb, tpad, ns, f, pool, &mut out);
+    let mut out = Collected::new(tpad, ns, f, false);
+    collect_into(g, mb, tpad, ns, f, pool, None, &mut out);
     out
 }
 
 /// Zero-alloc variant of [`collect`]: refill `out` (a recycled
 /// [`Collected`] of the same profile shapes) in place.
+///
+/// With `cache` present, the full-slab gather is replaced by the hit/miss
+/// split: resident rows become scatter indices into the device store, and
+/// only the miss rows are gathered on the CPU (packed into
+/// `out.miss_rows`, reusing the run-length memcpy path on consecutive-id
+/// miss runs). `out` must have been built with `cached = true`.
 pub fn collect_into(
     g: &HeteroGraph,
     mb: &MiniBatch,
@@ -94,20 +198,30 @@ pub fn collect_into(
     ns: usize,
     f: usize,
     pool: &WorkerPool,
+    cache: Option<&ResidentStore>,
     out: &mut Collected,
 ) {
     assert!(g.n_types() <= tpad, "graph has more types than TPAD");
     assert_eq!(g.feat_dim, f);
-    let xs = out.xs.as_f32_mut().expect("xs is f32");
-    assert_eq!(xs.len(), tpad * ns * f, "recycled xs has a different profile shape");
-    xs.fill(0.0);
     let n_types = mb.slots.len();
-    pool.for_row_chunks(&mut xs[..n_types * ns * f], n_types, 1, |t0, t1, slab| {
-        for t in t0..t1 {
-            let out = &mut slab[(t - t0) * ns * f..(t - t0 + 1) * ns * f];
-            collect_type_rows(g, t, &mb.slots[t], f, out);
+    match cache {
+        None => {
+            let xs = out.xs.as_f32_mut().expect("xs is f32");
+            assert_eq!(xs.len(), tpad * ns * f, "recycled xs has a different profile shape");
+            xs.fill(0.0);
+            pool.for_row_chunks(&mut xs[..n_types * ns * f], n_types, 1, |t0, t1, slab| {
+                for t in t0..t1 {
+                    let out = &mut slab[(t - t0) * ns * f..(t - t0 + 1) * ns * f];
+                    collect_type_rows(g, t, &mb.slots[t], f, out);
+                }
+            });
+            out.n_hit = 0;
+            out.n_miss = 0;
         }
-    });
+        Some(store) => {
+            split_hits_and_misses(g, mb, tpad, ns, f, store, out);
+        }
+    }
 
     let labels = out.labels.as_i32_mut().expect("labels is i32");
     assert_eq!(labels.len(), ns, "recycled labels has a different profile shape");
@@ -216,6 +330,107 @@ mod tests {
         }
     }
 
+    /// IndexMajor vs TypeMajor gather is bitwise identical for crafted
+    /// slot lists covering every run shape: singleton runs, runs touching
+    /// a type slab's first and last vertex (the type-boundary rows, where
+    /// a run-length overshoot would read the neighboring type's memory),
+    /// and a maximal whole-type run.
+    #[test]
+    fn layout_parity_on_type_boundary_and_singleton_runs() {
+        let (mut g, _) = setup();
+        let f = 8;
+        for t in 0..g.n_types() {
+            let n = g.num_nodes[t] as u32;
+            let cases: Vec<Vec<u32>> = vec![
+                vec![0],                                  // first row singleton
+                vec![n - 1],                              // last row singleton
+                vec![n - 2, n - 1],                       // run ending exactly at the boundary
+                vec![0, 1, 2.min(n - 1)],                 // run starting at the boundary
+                vec![n - 1, 0],                           // wrap: two boundary singletons
+                (0..n).collect(),                         // the whole type as one run
+                vec![1, 3, 4, 5, n - 1, 0, 2],            // mixed singletons + interior run
+            ];
+            for (ci, slots) in cases.iter().enumerate() {
+                g.features.ensure_layout(Layout::TypeMajor);
+                let mut tm = vec![0.0f32; slots.len() * f];
+                collect_type_rows(&g, t, slots, f, &mut tm);
+                g.features.ensure_layout(Layout::IndexMajor);
+                let mut im = vec![0.0f32; slots.len() * f];
+                collect_type_rows(&g, t, slots, f, &mut im);
+                assert_eq!(
+                    tm.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    im.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "type {t} case {ci}: layouts disagree bitwise"
+                );
+            }
+        }
+    }
+
+    /// Full-batch layout parity through `collect_into`, bitwise: the slabs
+    /// (not just values — the exact bit patterns) agree between layouts and
+    /// between serial and threaded pools.
+    #[test]
+    fn collect_layout_parity_is_bitwise_over_full_batches() {
+        let (mut g, mb) = setup();
+        let bits = |c: &Collected| -> Vec<u32> {
+            c.xs.as_f32().unwrap().iter().map(|x| x.to_bits()).collect()
+        };
+        g.features.ensure_layout(Layout::TypeMajor);
+        let tm = collect(&g, &mb, 8, 32, 8, &serial());
+        g.features.ensure_layout(Layout::IndexMajor);
+        let im = collect(&g, &mb, 8, 32, 8, &serial());
+        let im4 = collect(&g, &mb, 8, 32, 8, &WorkerPool::new(4));
+        assert_eq!(bits(&tm), bits(&im), "layout parity broke bitwise");
+        assert_eq!(bits(&im), bits(&im4), "threading broke bitwise parity");
+    }
+
+    /// The cache split partitions every occupied slot into exactly one of
+    /// {hit, miss}, packs miss rows densely in slot order, and the
+    /// reassembled slab (cache row for hits, miss row for misses, zeros
+    /// for padding) equals the cache-off gather bit for bit — on both
+    /// layouts.
+    #[test]
+    fn cache_split_reassembles_the_uncached_slab_bitwise() {
+        let (mut g, mb) = setup();
+        let (tpad, ns, f) = (8usize, 32usize, 8usize);
+        let reference = collect(&g, &mb, tpad, ns, f, &serial());
+        for frac in [0.25f64, 1.0] {
+            let store = ResidentStore::build(&g, frac, 160, 42);
+            for layout in [Layout::TypeMajor, Layout::IndexMajor] {
+                g.features.ensure_layout(layout);
+                let mut c = Collected::new(tpad, ns, f, true);
+                collect_into(&g, &mb, tpad, ns, f, &serial(), Some(&store), &mut c);
+                let occupied: usize = mb.slots.iter().map(|s| s.len()).sum();
+                assert_eq!(c.n_hit + c.n_miss, occupied, "frac {frac}: split lost slots");
+                if frac == 1.0 {
+                    assert_eq!(c.n_miss, 0, "full cache still missed");
+                }
+                // Reassemble on the CPU exactly like the gather kernel.
+                let idx = c.gather_idx.as_i32().unwrap();
+                let miss = c.miss_rows.as_f32().unwrap();
+                let mut slab = vec![0.0f32; tpad * ns * f];
+                for (s, &ix) in idx.iter().enumerate() {
+                    let dst = &mut slab[s * f..(s + 1) * f];
+                    if ix >= 0 {
+                        dst.copy_from_slice(store.row(ix as usize));
+                    } else if ix <= -2 {
+                        let m = (-ix - 2) as usize;
+                        assert!(m < c.n_miss, "miss index past the packed rows");
+                        dst.copy_from_slice(&miss[m * f..(m + 1) * f]);
+                    }
+                }
+                let want: Vec<u32> =
+                    reference.xs.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+                let got: Vec<u32> = slab.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "frac {frac} {layout:?}: reassembly diverged");
+                // Labels/mask are unaffected by the cache path.
+                assert_eq!(c.labels, reference.labels);
+                assert_eq!(c.seed_mask, reference.seed_mask);
+                assert_eq!(c.n_seed, reference.n_seed);
+            }
+        }
+    }
+
     #[test]
     fn labels_and_mask_line_up_with_seeds() {
         let (g, mb) = setup();
@@ -242,9 +457,9 @@ mod tests {
             SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: 32, ep: 16 },
         );
         let other = s.sample(&Rng::new(99), 1, 2);
-        let mut recycled = Collected::new(8, 32, 8);
-        collect_into(&g, &other, 8, 32, 8, &serial(), &mut recycled);
-        collect_into(&g, &mb, 8, 32, 8, &serial(), &mut recycled);
+        let mut recycled = Collected::new(8, 32, 8, false);
+        collect_into(&g, &other, 8, 32, 8, &serial(), None, &mut recycled);
+        collect_into(&g, &mb, 8, 32, 8, &serial(), None, &mut recycled);
         let fresh = collect(&g, &mb, 8, 32, 8, &serial());
         assert_eq!(recycled.xs, fresh.xs);
         assert_eq!(recycled.labels, fresh.labels);

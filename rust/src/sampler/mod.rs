@@ -27,8 +27,28 @@
 
 pub mod collect;
 
+use std::sync::Arc;
+
 use crate::graph::HeteroGraph;
 use crate::util::Rng;
+
+/// Fork stream of the per-epoch train-split shuffle — shared by the lazy
+/// in-scratch path and [`epoch_perm`], so both derive identical bytes.
+const EPOCH_PERM_STREAM: u64 = 0xE90C;
+
+/// The epoch permutation of the train split: exactly the bytes
+/// `sample_into` would derive lazily (`train_idx` shuffled by
+/// `rng.fork(EPOCH_PERM_STREAM ^ epoch)`), computed once and shared via
+/// `Arc` across all of an epoch's producers — replacing the per-producer
+/// byte-identical shuffles (DESIGN.md §5; the slot maps stay per-producer,
+/// the permutation need not). Install with
+/// [`SamplerScratch::install_epoch_perm`].
+pub fn epoch_perm(g: &HeteroGraph, rng: &Rng, epoch: u64) -> Arc<Vec<u32>> {
+    let mut v = g.train_idx.clone();
+    let mut r = rng.fork(EPOCH_PERM_STREAM ^ epoch);
+    r.shuffle(&mut v);
+    Arc::new(v)
+}
 
 /// Per-relation edges of one layer, in *slot* coordinates.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -185,7 +205,12 @@ pub struct SamplerCfg {
 ///   permutation (`perm`), the pre-shuffle COO staging list (`tag_tmp`) and
 ///   the per-layer frontier snapshot.
 pub struct SamplerScratch {
-    order: Vec<u32>,
+    /// The epoch permutation — `Arc` so the feed-spawning paths can share
+    /// one read-only copy across every producer of an epoch instead of
+    /// each producer shuffling its own byte-identical vector. The lazy
+    /// single-owner path refills it in place (`Arc::get_mut`), keeping the
+    /// inline producers allocation-free at epoch boundaries too.
+    order: Arc<Vec<u32>>,
     /// `(rng fork key, epoch)` the cached permutation was computed for —
     /// keyed on the generator too, so reusing one scratch across
     /// differently-seeded runs can never serve a stale permutation.
@@ -212,7 +237,7 @@ impl SamplerScratch {
             .max()
             .unwrap_or(0);
         SamplerScratch {
-            order: Vec::with_capacity(g.train_idx.len()),
+            order: Arc::new(Vec::with_capacity(g.train_idx.len())),
             order_key: None,
             slot_of: g.num_nodes.iter().map(|&n| vec![0u32; n]).collect(),
             stamp: g.num_nodes.iter().map(|&n| vec![0u32; n]).collect(),
@@ -222,6 +247,16 @@ impl SamplerScratch {
             tag_tmp: TaggedEdges::default(),
             frontier: Vec::with_capacity(g.n_types()),
         }
+    }
+
+    /// Install a precomputed shared epoch permutation (one [`epoch_perm`]
+    /// `Arc` handed to every producer of an epoch — the slot maps stay
+    /// per-producer, the permutation need not; DESIGN.md §5). The cache
+    /// key matches the lazy path's, so a scratch driven with a different
+    /// `(rng, epoch)` afterwards reshuffles as usual.
+    pub fn install_epoch_perm(&mut self, perm: Arc<Vec<u32>>, rng: &Rng, epoch: u64) {
+        self.order = perm;
+        self.order_key = Some((rng.fork_key(), epoch));
     }
 
     /// Reserve the cfg-dependent pooled buffers (shuffle permutation, COO
@@ -357,13 +392,20 @@ impl<'g> NeighborSampler<'g> {
 
         // Epoch-shuffled train split: derived from (base rng, epoch) ONLY,
         // so every batch of an epoch agrees on the permutation — computed
-        // once per (rng, epoch) and cached. Keying on the rng's fork key
-        // keeps scratch reuse safe across differently-seeded runs.
+        // once per (rng, epoch) and cached (or installed pre-shared via
+        // `install_epoch_perm`). Keying on the rng's fork key keeps scratch
+        // reuse safe across differently-seeded runs. A uniquely-owned Arc
+        // is refilled in place (no allocation); one still shared from a
+        // previous epoch's install is replaced.
         if *order_key != Some((rng.fork_key(), epoch)) {
-            order.clear();
-            order.extend_from_slice(&g.train_idx);
-            let mut epoch_rng = rng.fork(0xE90C ^ epoch);
-            epoch_rng.shuffle(order);
+            if Arc::get_mut(order).is_none() {
+                *order = Arc::new(Vec::with_capacity(g.train_idx.len()));
+            }
+            let v = Arc::get_mut(order).expect("epoch permutation uniquely owned");
+            v.clear();
+            v.extend_from_slice(&g.train_idx);
+            let mut epoch_rng = rng.fork(EPOCH_PERM_STREAM ^ epoch);
+            epoch_rng.shuffle(v);
             *order_key = Some((rng.fork_key(), epoch));
         }
         // Everything below is per-(epoch, batch) randomness.
@@ -625,6 +667,36 @@ mod tests {
         // lockstep with each other) must also agree.
         s.sample_into(&rng, 0, 1, &mut scratch, &mut mb);
         assert_eq!(mb, s.sample(&rng, 0, 1));
+    }
+
+    /// A pre-shared `epoch_perm` Arc installed into several scratches is
+    /// byte-identical to each producer's own lazy shuffle — the identity
+    /// the multi-producer feed relies on when it shares one permutation
+    /// across workers — and a later epoch (or rng) correctly invalidates
+    /// the install.
+    #[test]
+    fn installed_shared_perm_matches_lazy_shuffle() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(42);
+        let perm = epoch_perm(&g, &rng, 1);
+        let mut shared_a = SamplerScratch::new(&g);
+        let mut shared_b = SamplerScratch::new(&g);
+        shared_a.install_epoch_perm(perm.clone(), &rng, 1);
+        shared_b.install_epoch_perm(perm, &rng, 1);
+        let mut lazy = SamplerScratch::new(&g);
+        let (mut ma, mut mb, mut ml) =
+            (MiniBatch::default(), MiniBatch::default(), MiniBatch::default());
+        for b in 0..s.batches_per_epoch() {
+            s.sample_into(&rng, 1, b, &mut shared_a, &mut ma);
+            s.sample_into(&rng, 1, b, &mut shared_b, &mut mb);
+            s.sample_into(&rng, 1, b, &mut lazy, &mut ml);
+            assert_eq!(ma, ml, "shared perm diverged from lazy at batch {b}");
+            assert_eq!(mb, ml, "second sharer diverged at batch {b}");
+        }
+        // Moving on to the next epoch reshuffles despite the install.
+        s.sample_into(&rng, 2, 0, &mut shared_a, &mut ma);
+        assert_eq!(ma, s.sample(&rng, 2, 0), "stale shared perm served for epoch 2");
     }
 
     /// The permutation cache is keyed on the generator, not just the

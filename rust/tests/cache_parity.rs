@@ -1,0 +1,260 @@
+//! Device-resident feature-cache regression tests (DESIGN.md §7): the
+//! cache is a *transport* optimization, never a semantic one.
+//!
+//! * Training trajectories are bitwise identical for
+//!   `cache-frac ∈ {0, 0.25, 1.0}` × `replicas ∈ {1, 2}` × pipeline
+//!   on/off — cached rows are byte-copies of the same f32 data, so the
+//!   assembled `[TPAD, NS, F]` slab is the same bytes the CPU gather
+//!   produces.
+//! * With any hit rate > 0, steady-state H2D bytes per epoch are
+//!   **strictly lower** than cache-off (the full slab shipment is replaced
+//!   by scatter indices + miss rows only).
+//! * The steady state stays allocation-free: backend-arena misses and
+//!   producer-pool stats are flat across post-warm-up epochs with the
+//!   cache on, same contract as `tests/perf_path.rs` /
+//!   `tests/producer_parity.rs`.
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg, Trainer,
+    DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::ModelKind;
+use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
+
+fn cfg() -> TrainCfg {
+    TrainCfg {
+        epochs: 1,
+        batch_size: 4,
+        fanout: 3,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers: 2,
+    }
+}
+
+fn store_for(g: &hifuse::graph::HeteroGraph, frac: f64) -> Arc<ResidentStore> {
+    Arc::new(ResidentStore::build(g, frac, 160, 42))
+}
+
+/// Single-backend trajectory over 3 epochs for a cache fraction.
+fn trainer_trajectory(model: ModelKind, pipeline: bool, frac: f64) -> Vec<(f64, f64)> {
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+    if frac > 0.0 {
+        tr.attach_cache(store_for(&g, frac)).unwrap();
+    }
+    (0..3)
+        .map(|e| {
+            let m = tr.train_epoch(e).unwrap();
+            (m.loss, m.acc)
+        })
+        .collect()
+}
+
+/// Replica-group trajectory over 2 epochs.
+fn replica_trajectory(replicas: usize, pipeline: bool, frac: f64) -> Vec<(f64, f64)> {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let t = replica_thread_budget(4, replicas);
+    let engines: Vec<SimBackend> =
+        (0..replicas).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    if frac > 0.0 {
+        grp.attach_cache(store_for(&g, frac)).unwrap();
+    }
+    (0..2)
+        .map(|e| {
+            let m = grp.train_epoch(e).unwrap();
+            (m.group.loss, m.group.acc)
+        })
+        .collect()
+}
+
+/// The headline contract: the full issue grid — cache-frac {0, 0.25, 1.0}
+/// × replicas {1, 2} × pipeline on/off — follows one bitwise trajectory.
+#[test]
+fn cache_frac_never_changes_the_trajectory() {
+    // Single-backend paths, both models.
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let reference = trainer_trajectory(model, false, 0.0);
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25, 1.0] {
+                let t = trainer_trajectory(model, pipeline, frac);
+                assert_eq!(
+                    t,
+                    reference,
+                    "{}: frac {frac} pipeline {pipeline} diverged",
+                    model.name()
+                );
+            }
+        }
+    }
+    // Replica paths (their round semantics differ from per-batch SGD, so
+    // they have their own reference).
+    let reference = replica_trajectory(1, false, 0.0);
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25, 1.0] {
+                let t = replica_trajectory(replicas, pipeline, frac);
+                assert_eq!(
+                    t, reference,
+                    "replicas={replicas} pipeline={pipeline} frac={frac} diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Steady-state H2D bytes per epoch are strictly lower with the cache on,
+/// and the hit rate is positive on the builtin tiny manifest; a full cache
+/// misses nothing after the resident store is pinned.
+#[test]
+fn cache_cuts_h2d_bytes_with_positive_hit_rate() {
+    let run = |frac: f64| -> (u64, u64, u64) {
+        let eng = SimBackend::builtin("tiny").unwrap();
+        let opt = OptConfig { pipeline: false, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        if frac > 0.0 {
+            tr.attach_cache(store_for(&g, frac)).unwrap();
+        }
+        tr.train_epoch(0).unwrap(); // warm up
+        let m = tr.train_epoch(1).unwrap(); // steady-state epoch
+        (m.h2d_bytes, m.cache_hits, m.cache_misses)
+    };
+    let (off_h2d, off_hits, off_misses) = run(0.0);
+    assert_eq!((off_hits, off_misses), (0, 0), "cache-off recorded cache traffic");
+    for frac in [0.25f64, 1.0] {
+        let (on_h2d, hits, misses) = run(frac);
+        assert!(hits > 0, "frac {frac}: no cache hits on the tiny manifest");
+        assert!(
+            on_h2d < off_h2d,
+            "frac {frac}: h2d did not shrink ({on_h2d} vs {off_h2d})"
+        );
+        if frac == 1.0 {
+            assert_eq!(misses, 0, "full cache still missed");
+        }
+    }
+    // More cache ⇒ no more H2D: the fractions order monotonically.
+    let (quarter, _, _) = run(0.25);
+    let (full, _, _) = run(1.0);
+    assert!(full <= quarter, "frac 1.0 moved more bytes than 0.25");
+}
+
+/// The cache path keeps the zero-allocation steady state: backend-arena
+/// misses and producer-pool stats are flat after warm-up (the gather
+/// output and the recycled slab swap through the arena every batch).
+#[test]
+fn cache_path_reaches_zero_steady_state_allocations() {
+    for pipeline in [false, true] {
+        let eng = SimBackend::builtin_threaded("tiny", 2).unwrap();
+        let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        tr.attach_cache(store_for(&g, 0.25)).unwrap();
+        tr.train_epoch(0).unwrap();
+        let warm = tr.train_epoch(1).unwrap();
+        let steady = tr.train_epoch(2).unwrap();
+        assert_eq!(
+            steady.arena.misses, warm.arena.misses,
+            "pipeline {pipeline}: steady-state dispatch allocated \
+             ({:?} -> {:?})",
+            warm.arena, steady.arena
+        );
+        assert_eq!(
+            steady.producer.fresh, warm.producer.fresh,
+            "pipeline {pipeline}: steady state constructed a buffer set"
+        );
+        assert_eq!(
+            steady.producer.grown, warm.producer.grown,
+            "pipeline {pipeline}: steady state grew a pooled buffer"
+        );
+        assert!(steady.producer.reused > warm.producer.reused);
+    }
+}
+
+/// Replica groups report cache traffic per lane and in the group totals,
+/// and every lane hits (the store is shared, the handles per-backend).
+#[test]
+fn replica_lanes_share_the_store_and_count_cache_traffic() {
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let t = replica_thread_budget(4, 2);
+    let engines: Vec<SimBackend> =
+        (0..2).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    let store = store_for(&g, 0.5);
+    grp.attach_cache(store.clone()).unwrap();
+    assert!(Arc::ptr_eq(grp.cache_store().unwrap(), &store), "store not shared");
+    let m = grp.train_epoch(0).unwrap();
+    for (i, r) in m.per_replica.iter().enumerate() {
+        assert!(r.cache_hits > 0, "lane {i} never hit the shared store");
+    }
+    let lane_hits: u64 = m.per_replica.iter().map(|r| r.cache_hits).sum();
+    let lane_misses: u64 = m.per_replica.iter().map(|r| r.cache_misses).sum();
+    assert_eq!(m.group.cache_hits, lane_hits);
+    assert_eq!(m.group.cache_misses, lane_misses);
+    assert!(m.group.cache_hit_rate() > 0.0);
+}
+
+/// Attaching a cache mid-run is rejected: recycled buffer sets are sized
+/// for the active collection mode.
+#[test]
+fn late_attach_is_rejected() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let opt = OptConfig { pipeline: false, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    tr.train_epoch(0).unwrap();
+    assert!(tr.attach_cache(store_for(&g, 0.5)).is_err(), "late attach must fail");
+    // And double attach too.
+    let mut tr2 = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    tr2.attach_cache(store_for(&g, 0.5)).unwrap();
+    assert!(tr2.attach_cache(store_for(&g, 0.5)).is_err(), "double attach must fail");
+    // The replica group enforces the same contract (a late attach would
+    // otherwise hand uncached recycled buffer sets to the split).
+    let engines: Vec<SimBackend> =
+        (0..2).map(|_| SimBackend::builtin_threaded("tiny", 2).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    grp.train_epoch(0).unwrap();
+    assert!(grp.attach_cache(store_for(&g, 0.5)).is_err(), "replica late attach must fail");
+}
+
+/// The gather dispatch is visible in the counters: exactly one
+/// `collection`-stage dispatch per batch with the cache on, zero off.
+#[test]
+fn gather_dispatch_counts_one_per_batch() {
+    use hifuse::runtime::{Phase, Stage};
+    let run = |frac: f64| -> (usize, usize) {
+        let eng = SimBackend::builtin("tiny").unwrap();
+        let opt = OptConfig { pipeline: false, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        if frac > 0.0 {
+            tr.attach_cache(store_for(&g, frac)).unwrap();
+        }
+        let m = tr.train_epoch(0).unwrap();
+        let c = eng.counters().borrow();
+        (c.count_phase(Stage::Collection, Phase::Fwd), m.batches)
+    };
+    let (off, _) = run(0.0);
+    assert_eq!(off, 0);
+    let (on, batches) = run(0.5);
+    assert_eq!(on, batches, "expected one feature_gather per batch");
+}

@@ -3,7 +3,9 @@
 //! equivalence of execution plans, and measured kernel counts vs the
 //! analytic plan. Runs on a clean checkout — no AOT artifacts, no Python.
 
-use hifuse::coordinator::{gpu_select, prepare_graph_layout, OptConfig, TrainCfg, Trainer};
+use hifuse::coordinator::{
+    gpu_select, prepare_graph_layout, AssembleScratch, OptConfig, TrainCfg, Trainer,
+};
 use hifuse::graph::datasets::tiny_graph;
 use hifuse::models::step::Dims;
 use hifuse::models::ModelKind;
@@ -87,8 +89,9 @@ fn gpu_select_matches_cpu_select() {
     let g = tiny_graph(7);
     let scfg = SamplerCfg { batch_size: 8, fanout: 3, layers: 2, ns: d.ns, ep: d.ep };
     let mb = NeighborSampler::new(&g, scfg).sample(&Rng::new(3), 0, 0);
+    let mut scratch = AssembleScratch::default();
     for tagged in &mb.tagged {
-        let gpu = gpu_select(&eng, &d, tagged, g.n_relations()).unwrap();
+        let gpu = gpu_select(&eng, &d, tagged, g.n_relations(), &mut scratch).unwrap();
         let cpu = semantic::select_serial(tagged, g.n_relations());
         let par = semantic::select_parallel(tagged, g.n_relations(), 3);
         for r in 0..g.n_relations() {
