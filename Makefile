@@ -11,7 +11,7 @@
 #   3. `cargo build --release --features pjrt`
 #   4. run with `repro train --backend pjrt --artifacts artifacts/bench`
 
-.PHONY: build test bench bench-json bench-cache artifacts fmt clippy
+.PHONY: build test bench bench-json bench-cache bench-serve artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -42,6 +42,14 @@ bench-json: build
 # fast pass.
 bench-cache: build
 	cargo bench --bench cache_sweep
+
+# Serve latency sweep (open-loop arrival rate vs p50/p95/p99 + throughput
+# on RGCN/aifb over 2 replica lanes), written to
+# results/serve_latency.{md,csv}. Predictions are bitwise rate- and
+# parallelism-independent (DESIGN.md §8); the percentile columns show the
+# coalescing-vs-queueing trade-off. HIFUSE_BENCH_QUICK=1 for a fast pass.
+bench-serve: build
+	cargo bench --bench serve_latency
 
 # OPTIONAL: emit the AOT HLO artifacts for the PJRT backend. The default
 # (sim) backend never needs this.

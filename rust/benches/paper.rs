@@ -80,6 +80,9 @@ struct RunRow {
     /// Host→device bytes over the measured epoch (dispatch argument
     /// uploads + the explicit feature channel).
     h2d_bytes: u64,
+    /// Device→host bytes over the measured epoch (loss/accuracy scalar
+    /// readbacks in training; the serve path's logits readback).
+    d2h_bytes: u64,
     /// Feature-cache hit rate over the measured epoch (0.0 = cache off;
     /// the main matrix runs cache-off, the cache_sweep bench varies it).
     cache_hit_rate: f64,
@@ -131,6 +134,7 @@ fn run_one<B: ExecBackend>(
             m.cpu_by_stage.collect.as_secs_f64() * 1e3,
         ),
         h2d_bytes: m.h2d_bytes,
+        d2h_bytes: m.d2h_bytes,
         cache_hit_rate: m.cache_hit_rate(),
     }
 }
@@ -576,7 +580,7 @@ fn write_bench_json(
             "    {{\"dataset\": \"{}\", \"model\": \"{}\", \"mode\": \"{}\", \
              \"wall_ms\": {:.3}, \"cpu_ms\": {:.3}, \"gpu_ms\": {:.3}, \
              \"kernels\": {}, \"allocs_per_step\": {:.3}, \
-             \"h2d_bytes\": {}, \"cache_hit_rate\": {:.4}, \
+             \"h2d_bytes\": {}, \"d2h_bytes\": {}, \"cache_hit_rate\": {:.4}, \
              \"cpu_ms_by_stage\": {{\"sample\": {smp:.3}, \"select\": {sel:.3}, \
              \"collect\": {col:.3}}}, \
              \"gpu_ms_by_stage\": {{{}}}, \"kernels_by_stage\": {{{}}}}}",
@@ -589,6 +593,7 @@ fn write_bench_json(
             r.kernels,
             r.allocs_per_step,
             r.h2d_bytes,
+            r.d2h_bytes,
             r.cache_hit_rate,
             stages_ms.join(", "),
             stages_k.join(", ")

@@ -1,0 +1,90 @@
+//! Serve latency sweep (`make bench-serve`): open-loop arrival rate vs
+//! latency percentiles + throughput for `repro serve` on RGCN/aifb with
+//! the full HiFuse plan over 2 replica lanes, written to
+//! `results/serve_latency.{md,csv}`.
+//!
+//! Latency lives on the virtual clock (1 tick = 1 µs): each batch's
+//! measured service time is replayed onto the arrival schedule, so the
+//! sweep shows the coalescing/queueing trade-off — low rates pay the
+//! coalescing window, high rates pay lane queueing — while predictions
+//! stay bitwise rate-independent (DESIGN.md §8).
+//!
+//! HIFUSE_BENCH_QUICK=1 shrinks the dataset and the request count.
+
+use std::time::Duration;
+
+use hifuse::coordinator::{prepare_graph_layout, OptConfig, ReplicaGroup, TrainCfg, DEFAULT_ROUND};
+use hifuse::graph::datasets::{generate, spec_by_name};
+use hifuse::models::step::Dims;
+use hifuse::models::ModelKind;
+use hifuse::report::{f2, write_csv, write_md_table};
+use hifuse::runtime::{ExecBackend, SimBackend};
+use hifuse::serving;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("HIFUSE_BENCH_QUICK").is_ok();
+    let cfg = TrainCfg {
+        epochs: 1,
+        batch_size: 64,
+        fanout: 4,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers: 0,
+    };
+    let opt = OptConfig::hifuse();
+    let spec = spec_by_name("aifb").unwrap();
+    let scale = if quick { 0.25 } else { 1.0 };
+    let requests = if quick { 64 } else { 512 };
+    let window = 1_000u64; // 1 ms coalescing window
+
+    let mut rows = Vec::new();
+    for rate in [250.0f64, 1000.0, 4000.0, 16000.0] {
+        eprintln!("[serve-latency] rate {rate} req/s ...");
+        // Fresh lanes per point: independent arenas/counters per rate.
+        let probe = SimBackend::builtin("bench")?;
+        let d = Dims::from_backend(&probe);
+        let mut g = generate(&spec, d.f, scale, cfg.seed);
+        prepare_graph_layout(&mut g, &opt);
+        let mut group = ReplicaGroup::builtin(
+            "bench",
+            2,
+            Duration::ZERO,
+            &g,
+            ModelKind::Rgcn,
+            opt,
+            cfg,
+            DEFAULT_ROUND,
+        )?;
+        let trace = serving::trace::generate(&g, cfg.seed, rate, requests, 4);
+        let out = serving::serve(&mut group, &trace, cfg.batch_size, window)?;
+        let mut h2d = 0u64;
+        for e in group.engines() {
+            h2d += e.counters().borrow().h2d_bytes;
+        }
+        let h = &out.hist;
+        rows.push(vec![
+            format!("{rate}"),
+            out.batches.len().to_string(),
+            format!("{:.3}", h.percentile(50.0) as f64 / 1e3),
+            format!("{:.3}", h.percentile(95.0) as f64 / 1e3),
+            format!("{:.3}", h.percentile(99.0) as f64 / 1e3),
+            f2(out.virtual_throughput()),
+            f2(h2d as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    write_md_table(
+        "serve_latency.md",
+        "Serve latency — open-loop rate sweep (RGCN/aifb, hifuse, 2 lanes, 1 ms window)",
+        &["rate req/s", "batches", "p50 ms", "p95 ms", "p99 ms", "throughput req/s",
+          "h2d MiB"],
+        &rows,
+    )?;
+    write_csv(
+        "serve_latency.csv",
+        &["rate", "batches", "p50_ms", "p95_ms", "p99_ms", "throughput_rps", "h2d_mib"],
+        &rows,
+    )?;
+    eprintln!("[serve-latency] wrote results/serve_latency.{{md,csv}}");
+    Ok(())
+}

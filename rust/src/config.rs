@@ -66,9 +66,28 @@ pub struct RunConfig {
     /// Device-resident feature-cache budget in `[0, 1]` (`--cache-frac`):
     /// the fraction of each vertex type pinned on the device by the
     /// deterministic presampling pass (DESIGN.md §7). `0` (default) = off;
-    /// the trajectory is bitwise identical for every value. Train + sim
-    /// backend only (the PJRT path bails).
+    /// the trajectory is bitwise identical for every value. Train + serve,
+    /// sim backend only (the PJRT path bails).
     pub cache_frac: f64,
+    /// Serve: offered load of the generated arrival stream, requests per
+    /// second of *virtual* time (1 tick = 1 µs; DESIGN.md §8).
+    pub rate: f64,
+    /// Serve: number of requests to generate when not replaying a trace.
+    pub requests: usize,
+    /// Serve: coalescing window in virtual ticks — how long a batch keeps
+    /// accepting requests past its first arrival.
+    pub coalesce_window: u64,
+    /// Serve: write the arrival schedule (ids, seed sets, ticks) here.
+    pub record_trace: Option<PathBuf>,
+    /// Serve: replay this schedule instead of generating one — same
+    /// coalescing and bitwise-identical predictions at any parallelism.
+    pub replay_trace: Option<PathBuf>,
+    /// Load model parameters from this checkpoint before running
+    /// (first-class form of `HIFUSE_LOAD_CKPT`, which remains a fallback).
+    pub load_ckpt: Option<PathBuf>,
+    /// Save model parameters to this checkpoint after running
+    /// (first-class form of `HIFUSE_SAVE_CKPT`, which remains a fallback).
+    pub save_ckpt: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -86,6 +105,13 @@ impl Default for RunConfig {
             sim_overhead_us: 0.0,
             replicas: None,
             cache_frac: 0.0,
+            rate: 1000.0,
+            requests: 64,
+            coalesce_window: 1000,
+            record_trace: None,
+            replay_trace: None,
+            load_ckpt: None,
+            save_ckpt: None,
         }
     }
 }
@@ -152,6 +178,27 @@ impl RunConfig {
                     }
                     cfg.cache_frac = f;
                 }
+                "rate" => {
+                    let r: f64 = v.parse().context("--rate")?;
+                    if r.is_nan() || r <= 0.0 {
+                        bail!("--rate must be positive, got {r}");
+                    }
+                    cfg.rate = r;
+                }
+                "requests" => {
+                    let n: usize = v.parse().context("--requests")?;
+                    if n == 0 {
+                        bail!("--requests must be >= 1");
+                    }
+                    cfg.requests = n;
+                }
+                "coalesce-window" => {
+                    cfg.coalesce_window = v.parse().context("--coalesce-window")?
+                }
+                "record-trace" => cfg.record_trace = Some(PathBuf::from(v)),
+                "replay-trace" => cfg.replay_trace = Some(PathBuf::from(v)),
+                "load-ckpt" => cfg.load_ckpt = Some(PathBuf::from(v)),
+                "save-ckpt" => cfg.save_ckpt = Some(PathBuf::from(v)),
                 other => bail!("unknown flag --{other}"),
             }
         }
@@ -254,6 +301,40 @@ mod tests {
         assert!(RunConfig::from_args(&argv("--cache-frac 1.5")).is_err());
         assert!(RunConfig::from_args(&argv("--cache-frac -0.1")).is_err());
         assert!(RunConfig::from_args(&argv("--cache-frac x")).is_err());
+    }
+
+    #[test]
+    fn serve_flags_parse_and_reject_bad_values() {
+        let c = RunConfig::from_args(&[]).unwrap();
+        assert_eq!(c.rate, 1000.0);
+        assert_eq!(c.requests, 64);
+        assert_eq!(c.coalesce_window, 1000);
+        assert_eq!(c.record_trace, None);
+        assert_eq!(c.replay_trace, None);
+        let c = RunConfig::from_args(&argv(
+            "--rate 250.5 --requests 128 --coalesce-window 5000 \
+             --record-trace /tmp/t.bin --replay-trace /tmp/u.bin",
+        ))
+        .unwrap();
+        assert_eq!(c.rate, 250.5);
+        assert_eq!(c.requests, 128);
+        assert_eq!(c.coalesce_window, 5000);
+        assert_eq!(c.record_trace, Some(PathBuf::from("/tmp/t.bin")));
+        assert_eq!(c.replay_trace, Some(PathBuf::from("/tmp/u.bin")));
+        assert!(RunConfig::from_args(&argv("--rate 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--rate -5")).is_err());
+        assert!(RunConfig::from_args(&argv("--requests 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--coalesce-window x")).is_err());
+    }
+
+    #[test]
+    fn ckpt_flags_parse() {
+        let c = RunConfig::from_args(&[]).unwrap();
+        assert_eq!(c.load_ckpt, None);
+        assert_eq!(c.save_ckpt, None);
+        let c = RunConfig::from_args(&argv("--load-ckpt a.ckpt --save-ckpt b.ckpt")).unwrap();
+        assert_eq!(c.load_ckpt, Some(PathBuf::from("a.ckpt")));
+        assert_eq!(c.save_ckpt, Some(PathBuf::from("b.ckpt")));
     }
 
     #[test]

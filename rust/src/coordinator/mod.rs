@@ -406,6 +406,13 @@ pub struct CpuProducer<'g> {
     pub stats: ProducerStats,
 }
 
+/// Which sampling entry a `produce` call drives: the training
+/// epoch-permutation walk or the serve path's explicit coalesced seed set.
+enum SampleSpec<'a> {
+    Train { epoch: u64, batch_idx: usize },
+    Request { batch_idx: u64, seeds: &'a [u32] },
+}
+
 /// A producer's persistent state between epochs: scratch + recycled buffer
 /// sets (the [`ProducerArsenal`] hands these out and takes them back).
 pub(crate) struct ProducerSeed {
@@ -523,6 +530,19 @@ impl<'g> CpuProducer<'g> {
     /// Prepare one batch. Serves from the recycled pool when possible; a
     /// fresh buffer set otherwise (counted in [`ProducerStats`]).
     pub fn produce(&mut self, epoch: u64, batch_idx: usize) -> PreparedCpu {
+        self.produce_spec(SampleSpec::Train { epoch, batch_idx })
+    }
+
+    /// Prepare one **serve-path** batch from an explicit coalesced seed set
+    /// (DESIGN.md §8): identical stage structure and buffer economy to
+    /// [`CpuProducer::produce`], with sampling driven by
+    /// [`NeighborSampler::sample_request_into`] — deterministic in the
+    /// coalesced-batch index alone, not an (epoch, batch) pair.
+    pub fn produce_request(&mut self, batch_idx: u64, seeds: &[u32]) -> PreparedCpu {
+        self.produce_spec(SampleSpec::Request { batch_idx, seeds })
+    }
+
+    fn produce_spec(&mut self, spec: SampleSpec<'_>) -> PreparedCpu {
         let mut bufs = match self.spare.pop() {
             Some(b) => {
                 self.stats.reused += 1;
@@ -536,13 +556,19 @@ impl<'g> CpuProducer<'g> {
         };
         let before = self.scratch.capacity_footprint() + bufs.capacity_footprint();
         let t0 = Instant::now();
-        NeighborSampler::new(self.graph, self.scfg).sample_into(
-            &self.rng,
-            epoch,
-            batch_idx,
-            &mut self.scratch,
-            &mut bufs.mb,
-        );
+        let sampler = NeighborSampler::new(self.graph, self.scfg);
+        match spec {
+            SampleSpec::Train { epoch, batch_idx } => {
+                sampler.sample_into(&self.rng, epoch, batch_idx, &mut self.scratch, &mut bufs.mb)
+            }
+            SampleSpec::Request { batch_idx, seeds } => sampler.sample_request_into(
+                &self.rng,
+                batch_idx,
+                seeds,
+                &mut self.scratch,
+                &mut bufs.mb,
+            ),
+        }
         let sample = t0.elapsed();
 
         let t1 = Instant::now();

@@ -44,23 +44,24 @@
 //! participate. The `Rc`-based PJRT engine is `!Send` and stays
 //! single-backend.
 
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{self, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use super::pipeline::{spawn_feed, BatchFeed};
 use super::{
-    assemble_batch, lane_producer_count, sampler_cfg, AssembleScratch, CpuProducer,
-    EpochMetrics, OptConfig, ProducerArsenal, ProducerState, TrainCfg,
+    assemble_batch, lane_producer_count, sampler_cfg, AssembleScratch, BatchBufs, CpuProducer,
+    EpochMetrics, OptConfig, PreparedCpu, ProducerArsenal, ProducerState, ProducerStats,
+    TrainCfg, PIPELINE_DEPTH,
 };
 use crate::graph::HeteroGraph;
 use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, StepResult};
 use crate::models::{ModelKind, Params};
 use crate::runtime::{CacheHandle, CpuStageTimes, ExecBackend, ResidentStore, SimBackend};
 use crate::sampler::{epoch_perm, NeighborSampler};
-use crate::util::{Rng, WorkerPool};
+use crate::util::{HostTensor, Rng, WorkerPool};
 
 /// Default round width (global batches per synchronous update). A constant
 /// — *not* derived from the replica count — so the trajectory is invariant
@@ -202,6 +203,17 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
     /// The per-replica backends (e.g. for arena/counter inspection).
     pub fn engines(&self) -> &[B] {
         &self.engines
+    }
+
+    /// Cumulative producer buffer-pool traffic summed over every lane's
+    /// arsenal — the CPU half of the group's zero-alloc witnesses
+    /// (cf. [`super::Trainer::producer_stats`]).
+    pub fn producer_stats(&self) -> ProducerStats {
+        let mut s = ProducerStats::default();
+        for a in &self.arsenals {
+            s += a.stats;
+        }
+        s
     }
 }
 
@@ -438,6 +450,181 @@ where
         group.loss = loss_sum / n_batches.max(1) as f64;
         group.acc = total_correct / total_seed.max(1) as f64;
         Ok(ReplicaMetrics { group, per_replica })
+    }
+
+    /// Forward-only, epoch-less drive of the replica lanes over a
+    /// coalesced serve schedule (DESIGN.md §8): coalesced batch `i` —
+    /// seed set `batches[i]` — is sampled through the serve stream
+    /// ([`NeighborSampler::sample_request_into`] via
+    /// [`CpuProducer::produce_request`]), assembled exactly like a
+    /// training batch (same feature channel, including the resident
+    /// cache), and run through `StepExecutor::forward_step` on lane
+    /// `i % replicas` against the group's current (frozen) parameters. No
+    /// gradients, no all-reduce, no parameter update.
+    ///
+    /// With `OptConfig::pipeline` on, each lane overlaps CPU batch
+    /// preparation with its forward compute through a depth-bounded queue
+    /// ([`PIPELINE_DEPTH`]); consumed buffers cycle back to the lane's
+    /// producer and its arsenal persists across calls, extending the
+    /// zero-alloc steady state to serving. Either way every prediction is
+    /// a bitwise function of (params, batch index, seed set): the lane
+    /// count, producer mode, and thread budget are scheduling choices,
+    /// never semantic ones (pinned by `tests/serve_parity.rs`).
+    ///
+    /// Returns per-batch `[NS, C]` logits plus the wall service time of
+    /// the assemble+forward step, in batch order.
+    pub fn serve_forward(&mut self, batches: &[Vec<u32>]) -> Result<Vec<(HostTensor, Duration)>> {
+        let d = self.d;
+        let opt = self.opt;
+        let model = self.model;
+        let cfg = self.cfg;
+        let scfg = sampler_cfg(&cfg, &d);
+        let graph = self.graph;
+        let n_lanes = self.engines.len();
+        let pool = WorkerPool::new(replica_thread_budget(cfg.threads, n_lanes));
+        let rng = self.rng.clone();
+        let schema: &SchemaTensors = &self.schema;
+        let params: &Params = &self.params;
+        let engines: &mut Vec<B> = &mut self.engines;
+        let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
+        let caches: &[CacheHandle<B>] = &self.caches;
+        let cache_store = caches.first().map(|h| h.store.clone());
+
+        // Round-robin lane schedule: a pure function of the batch index
+        // alone, so demux order never depends on the lane count.
+        let sched: Vec<Vec<usize>> = (0..n_lanes)
+            .map(|l| (l..batches.len()).step_by(n_lanes.max(1)).collect())
+            .collect();
+
+        let mut results: Vec<Option<(HostTensor, Duration)>> =
+            (0..batches.len()).map(|_| None).collect();
+        let mut lane_err: Result<()> = Ok(());
+
+        std::thread::scope(|s| {
+            let mut consumers = Vec::new();
+            let mut state_rxs: Vec<(usize, Receiver<ProducerState>)> = Vec::new();
+            for (li, (eng, lane_sched)) in engines.iter_mut().zip(&sched).enumerate() {
+                if lane_sched.is_empty() {
+                    continue;
+                }
+                let seed = arsenals[li].checkout(graph, 1).pop().expect("one seed");
+                let cache = caches.get(li);
+                let lane_rng = rng.clone();
+                let lane_store = cache_store.clone();
+                let (stx, srx) = mpsc::channel::<ProducerState>();
+                state_rxs.push((li, srx));
+                if opt.pipeline {
+                    // Depth-bounded lane queue: the producer thread stays
+                    // at most PIPELINE_DEPTH batches ahead; consumed
+                    // buffers return through the recycle channel.
+                    let (tx, rx) = mpsc::sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
+                    let (btx, brx) = mpsc::channel::<BatchBufs>();
+                    s.spawn(move || {
+                        let mut p = CpuProducer::from_seed(
+                            graph, scfg, d, opt, pool, lane_rng, lane_store, seed,
+                        );
+                        // Fixed circulating population: never fresh-allocate
+                        // mid-stream because a return raced the schedule.
+                        p.preallocate(PIPELINE_DEPTH + 1);
+                        for &bi in lane_sched {
+                            while let Ok(b) = brx.try_recv() {
+                                p.reclaim(b);
+                            }
+                            let prep = p.produce_request(bi as u64, &batches[bi]);
+                            if tx.send(prep).is_err() {
+                                break; // consumer aborted
+                            }
+                        }
+                        drop(tx);
+                        let mut state = p.into_state();
+                        // Keep the recycle queue alive: a return that raced
+                        // this exit is recovered at arsenal check-in.
+                        state.returns = Some(brx);
+                        let _ = stx.send(state);
+                    });
+                    consumers.push(s.spawn(
+                        move || -> Result<Vec<(usize, HostTensor, Duration)>> {
+                            let exec = StepExecutor::new(&*eng, model, opt);
+                            let mut assemble = AssembleScratch::default();
+                            let mut out = Vec::with_capacity(lane_sched.len());
+                            for &bi in lane_sched {
+                                let prep = rx.recv().map_err(|_| {
+                                    anyhow!("serve producer for lane {li} exited early")
+                                })?;
+                                let t0 = Instant::now();
+                                let (batch, spent) = assemble_batch(
+                                    &*eng, &d, schema, cache, &mut assemble, prep,
+                                )?;
+                                let logits = exec.forward_step(params, schema, &batch)?;
+                                out.push((bi, logits, t0.elapsed()));
+                                let _ = btx.send(spent.reclaim(batch));
+                            }
+                            Ok(out)
+                        },
+                    ));
+                } else {
+                    consumers.push(s.spawn(
+                        move || -> Result<Vec<(usize, HostTensor, Duration)>> {
+                            let mut p = CpuProducer::from_seed(
+                                graph, scfg, d, opt, pool, lane_rng, lane_store, seed,
+                            );
+                            let exec = StepExecutor::new(&*eng, model, opt);
+                            let mut assemble = AssembleScratch::default();
+                            let mut out = Vec::with_capacity(lane_sched.len());
+                            let mut err = None;
+                            for &bi in lane_sched {
+                                let prep = p.produce_request(bi as u64, &batches[bi]);
+                                let t0 = Instant::now();
+                                let step = assemble_batch(
+                                    &*eng, &d, schema, cache, &mut assemble, prep,
+                                )
+                                .and_then(|(batch, spent)| {
+                                    let logits = exec.forward_step(params, schema, &batch)?;
+                                    Ok((logits, spent.reclaim(batch)))
+                                });
+                                match step {
+                                    Ok((logits, bufs)) => {
+                                        out.push((bi, logits, t0.elapsed()));
+                                        p.reclaim(bufs);
+                                    }
+                                    Err(e) => {
+                                        err = Some(e);
+                                        break;
+                                    }
+                                }
+                            }
+                            let _ = stx.send(p.into_state());
+                            match err {
+                                Some(e) => Err(e),
+                                None => Ok(out),
+                            }
+                        },
+                    ));
+                }
+            }
+            for h in consumers {
+                match h.join().expect("serve lane panicked") {
+                    Ok(items) => {
+                        for (bi, logits, dur) in items {
+                            results[bi] = Some((logits, dur));
+                        }
+                    }
+                    Err(e) => lane_err = Err(e),
+                }
+            }
+            // Recover every lane's producer state (blocking: the send
+            // happens on every exit path, including consumer aborts).
+            for (li, srx) in state_rxs {
+                for state in srx.iter().take(1) {
+                    arsenals[li].checkin(state);
+                }
+            }
+        });
+        lane_err?;
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("serve batch missing from lane output"))
+            .collect())
     }
 }
 

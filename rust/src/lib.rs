@@ -9,6 +9,8 @@
 //!   execution planner (PyG-style baseline vs HiFuse), asynchronous
 //!   CPU/GPU pipeline, data-parallel replica training
 //!   ([`coordinator::ReplicaGroup`], bit-identical for any replica count),
+//!   online inference serving ([`serving`]: request coalescing +
+//!   deterministic trace replay over forward-only replica lanes),
 //!   metrics and roofline accounting.
 //! * **L2** — the stage-module interface (`runtime::Manifest`), executed by
 //!   a pluggable [`runtime::ExecBackend`]: the pure-Rust
@@ -66,6 +68,7 @@ pub mod report;
 pub mod runtime;
 pub mod sampler;
 pub mod semantic;
+pub mod serving;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   datasets                       print Table 2 (generator statistics)
 //!   train `[flags]`                train a model, print per-epoch metrics
+//!   serve `[flags]`                online inference: coalesce an open-loop
+//!                                  request stream into batches, report
+//!                                  latency percentiles (DESIGN.md §8)
 //!   counts `[flags]`               measured vs predicted kernel counts
 //!   calibrate `[flags]`            machine peaks (compute / bandwidth / launch)
 //!   profile `[flags]`              per-module time breakdown of one step
@@ -18,15 +21,25 @@
 //!   --artifacts DIR (pjrt backend artifact dir, default artifacts/bench)
 //!   --replicas N (train only, sim backend: data-parallel replica rounds
 //!   with a bit-identical trajectory for every N — DESIGN.md §4)
-//!   --cache-frac F (train only, sim backend: pin the hottest F of each
-//!   vertex type on the device and assemble batch slabs with the
+//!   --cache-frac F (train + serve, sim backend: pin the hottest F of
+//!   each vertex type on the device and assemble batch slabs with the
 //!   feature_gather kernel; trajectory bit-identical for every F —
 //!   DESIGN.md §7)
+//!   --load-ckpt P / --save-ckpt P (train + serve: parameter checkpoint
+//!   to load before / save after the run; the HIFUSE_LOAD_CKPT /
+//!   HIFUSE_SAVE_CKPT env vars remain as fallbacks)
+//!   --rate F --requests N --coalesce-window T (serve: offered load in
+//!   req/s of virtual time, request count, and the batch coalescing
+//!   window in ticks — 1 tick = 1 µs)
+//!   --record-trace P / --replay-trace P (serve: serialize the arrival
+//!   schedule / replay one — same coalescing, bitwise-identical
+//!   predictions at any --replicas/--producers/--threads/pipeline)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
 //! `make artifacts`. See README.md.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -42,6 +55,7 @@ use hifuse::models::plan;
 use hifuse::models::step::Dims;
 use hifuse::perf;
 use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
+use hifuse::serving;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -52,6 +66,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "datasets" => cmd_datasets(),
         "train" => dispatch(rest, Action::Train),
+        "serve" => dispatch(rest, Action::Serve),
         "counts" => dispatch(rest, Action::Counts),
         "calibrate" => dispatch(rest, Action::Calibrate),
         "profile" => dispatch(rest, Action::Profile),
@@ -66,11 +81,13 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "repro — HiFuse-RS launcher\n\
-         usage: repro <datasets|train|counts|calibrate|profile> [--flag value ...]\n\
+         usage: repro <datasets|train|serve|counts|calibrate|profile> [--flag value ...]\n\
          \n\
          subcommands:\n\
          \x20 datasets    print Table 2 (generator statistics)\n\
          \x20 train       train a model, print per-epoch metrics\n\
+         \x20 serve       online inference over an open-loop request stream:\n\
+         \x20             coalesced batches, latency p50/p95/p99, trace replay\n\
          \x20 counts      measured vs predicted kernel counts\n\
          \x20 calibrate   machine peaks (compute / bandwidth / launch overhead)\n\
          \x20 profile     per-module time breakdown of one training step\n\
@@ -82,10 +99,17 @@ fn print_usage() {
          \x20 --sim-overhead-us F                 --artifacts DIR (pjrt)\n\
          \x20 --epochs N --batch-size N --fanout N --lr F --seed N\n\
          \x20 --threads N --producers M --scale F\n\
-         \x20 --replicas N (train, sim: data-parallel replica rounds;\n\
-         \x20               trajectory bit-identical for every N)\n\
-         \x20 --cache-frac F (train, sim: device-resident feature cache;\n\
-         \x20               trajectory bit-identical for every F)\n\
+         \x20 --replicas N (train + serve, sim: data-parallel lanes;\n\
+         \x20               results bit-identical for every N)\n\
+         \x20 --cache-frac F (train + serve, sim: device-resident cache;\n\
+         \x20               results bit-identical for every F)\n\
+         \x20 --load-ckpt P --save-ckpt P (train + serve: parameter\n\
+         \x20               checkpoints; env vars remain as fallback)\n\
+         serve flags:\n\
+         \x20 --rate F (virtual req/s)  --requests N  --coalesce-window T\n\
+         \x20 --record-trace P  --replay-trace P (deterministic replay:\n\
+         \x20               same coalescing + bitwise predictions at any\n\
+         \x20               parallelism — DESIGN.md §8)\n\
          see README.md and DESIGN.md for details"
     );
 }
@@ -94,6 +118,7 @@ fn print_usage() {
 #[derive(Clone, Copy)]
 enum Action {
     Train,
+    Serve,
     Counts,
     Calibrate,
     Profile,
@@ -105,8 +130,8 @@ enum Action {
 fn dispatch(args: &[String], action: Action) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
     if cfg.cache_frac > 0.0 {
-        if !matches!(action, Action::Train) {
-            bail!("--cache-frac is only supported by the `train` subcommand");
+        if !matches!(action, Action::Train | Action::Serve) {
+            bail!("--cache-frac is only supported by the `train` and `serve` subcommands");
         }
         if cfg.backend != BackendKind::Sim {
             bail!(
@@ -116,9 +141,9 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
             );
         }
     }
-    if let Some(n) = cfg.replicas {
-        if !matches!(action, Action::Train) {
-            bail!("--replicas is only supported by the `train` subcommand");
+    if cfg.replicas.is_some() {
+        if !matches!(action, Action::Train | Action::Serve) {
+            bail!("--replicas is only supported by the `train` and `serve` subcommands");
         }
         if cfg.backend != BackendKind::Sim {
             bail!(
@@ -126,6 +151,22 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
                  Send backend; the PJRT client is Rc-based)"
             );
         }
+    }
+    if (cfg.record_trace.is_some() || cfg.replay_trace.is_some())
+        && !matches!(action, Action::Serve)
+    {
+        bail!("--record-trace/--replay-trace are only supported by the `serve` subcommand");
+    }
+    if matches!(action, Action::Serve) {
+        if cfg.backend != BackendKind::Sim {
+            bail!(
+                "serve requires the sim backend (forward lanes need a Send \
+                 backend; the PJRT client is Rc-based)"
+            );
+        }
+        return cmd_serve(&cfg);
+    }
+    if let Some(n) = cfg.replicas {
         return cmd_train_replicas(&cfg, n);
     }
     match cfg.backend {
@@ -178,7 +219,7 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         group.attach_cache(store)?;
     }
     let threads_per = replica_thread_budget(cfg.train.threads, group.replicas());
-    load_ckpt_env(&mut group.params)?;
+    load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
     println!(
         "dataset={} model={} mode={} ({}) backend=sim profile={} replicas={} \
          round={} threads/replica={} batches/epoch={}",
@@ -202,19 +243,123 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
             String::new()
         };
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB{} | kernels {} (per replica: {})",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {} (per replica: {})",
             m.group.loss,
             m.group.acc,
             m.group.wall,
             m.group.cpu_time,
             m.group.gpu_time,
             m.group.h2d_bytes as f64 / (1024.0 * 1024.0),
+            m.group.d2h_bytes as f64 / (1024.0 * 1024.0),
             cache_note,
             m.group.kernels_total,
             per_rep.join("/"),
         );
     }
-    save_ckpt_env(&group.params)?;
+    save_ckpt(cfg.save_ckpt.as_deref(), &group.params)?;
+    Ok(())
+}
+
+/// Online inference over an open-loop request stream (DESIGN.md §8):
+/// generate or replay an arrival trace, coalesce it into static-shape
+/// batches, run them forward-only across the replica lanes, and report
+/// per-request latency percentiles + throughput. Always the replica path
+/// (`--replicas` defaults to 1) so serving and replica training share one
+/// execution engine.
+fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    let round = hifuse::coordinator::DEFAULT_ROUND;
+    let n = cfg.replicas.unwrap_or(1);
+    if n > round {
+        eprintln!(
+            "note: clamping --replicas {n} to the round width {round} (extra lanes would idle)"
+        );
+    }
+    let probe = SimBackend::builtin(cfg.resolved_profile())?;
+    let d = Dims::from_backend(&probe);
+    let cfg = &clamped(cfg, &d);
+    let mut graph = cfg.load_graph(d.f)?;
+    prepare_graph_layout(&mut graph, &cfg.opt);
+    let overhead = Duration::from_secs_f64(cfg.sim_overhead_us.max(0.0) * 1e-6);
+    let mut group = ReplicaGroup::builtin(
+        cfg.resolved_profile(),
+        n,
+        overhead,
+        &graph,
+        cfg.model,
+        cfg.opt,
+        cfg.train,
+        round,
+    )?;
+    if cfg.cache_frac > 0.0 {
+        let store = build_cache(cfg, &graph, probe.cst("CSLOTS"));
+        group.attach_cache(store)?;
+    }
+    load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
+    let trace = match &cfg.replay_trace {
+        Some(p) => {
+            let t = serving::trace::load(p)?;
+            println!("replaying {} requests from {}", t.requests.len(), p.display());
+            t
+        }
+        // Requests carry 1..=min(4, batch_size) seeds: small like real
+        // point queries, large enough to exercise multi-seed demux.
+        None => serving::trace::generate(
+            &graph,
+            cfg.train.seed,
+            cfg.rate,
+            cfg.requests,
+            cfg.train.batch_size.clamp(1, 4),
+        ),
+    };
+    if let Some(p) = &cfg.record_trace {
+        serving::trace::save(&trace, p)?;
+        println!("recorded trace -> {}", p.display());
+    }
+    println!(
+        "dataset={} model={} mode={} ({}) backend=sim profile={} replicas={} \
+         rate={} req/s window={} ticks requests={}",
+        cfg.dataset,
+        cfg.model.name(),
+        cfg.mode_name,
+        cfg.opt.label(),
+        group.engines()[0].profile(),
+        group.replicas(),
+        cfg.rate,
+        cfg.coalesce_window,
+        trace.requests.len(),
+    );
+    let out = serving::serve(&mut group, &trace, cfg.train.batch_size, cfg.coalesce_window)?;
+    let (mut h2d, mut d2h) = (0u64, 0u64);
+    for e in group.engines() {
+        let c = e.counters().borrow();
+        h2d += c.h2d_bytes;
+        d2h += c.d2h_bytes;
+    }
+    let ps = group.producer_stats();
+    let h = &out.hist;
+    println!(
+        "served {} requests as {} coalesced batches | wall {:>8.1?}",
+        h.count(),
+        out.batches.len(),
+        out.wall,
+    );
+    println!(
+        "latency p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | {:.0} req/s (virtual)",
+        h.percentile(50.0) as f64 / 1e3,
+        h.percentile(95.0) as f64 / 1e3,
+        h.percentile(99.0) as f64 / 1e3,
+        h.mean() / 1e3,
+        out.virtual_throughput(),
+    );
+    println!(
+        "h2d {:.1} MiB | d2h {:.1} MiB | producer bufs fresh/reused/grown {}/{}/{}",
+        h2d as f64 / (1024.0 * 1024.0),
+        d2h as f64 / (1024.0 * 1024.0),
+        ps.fresh,
+        ps.reused,
+        ps.grown,
+    );
+    save_ckpt(cfg.save_ckpt.as_deref(), &group.params)?;
     Ok(())
 }
 
@@ -233,21 +378,31 @@ fn build_cache(cfg: &RunConfig, graph: &HeteroGraph, cslots: usize) -> Arc<Resid
     store
 }
 
-/// Apply `HIFUSE_LOAD_CKPT` to a parameter set if the env var is present —
-/// one implementation for both the single-backend and replica train paths.
-fn load_ckpt_env(params: &mut hifuse::models::Params) -> Result<()> {
-    if let Ok(path) = std::env::var("HIFUSE_LOAD_CKPT") {
-        *params = hifuse::models::checkpoint::load(std::path::Path::new(&path))?;
-        println!("loaded checkpoint {path}");
+/// Load a parameter checkpoint before a run: the `--load-ckpt` flag wins,
+/// the `HIFUSE_LOAD_CKPT` env var remains as a fallback — one
+/// implementation for the single-backend, replica, and serve paths.
+fn load_ckpt(flag: Option<&Path>, params: &mut hifuse::models::Params) -> Result<()> {
+    let path = match flag {
+        Some(p) => Some(p.to_path_buf()),
+        None => std::env::var("HIFUSE_LOAD_CKPT").ok().map(PathBuf::from),
+    };
+    if let Some(path) = path {
+        *params = hifuse::models::checkpoint::load(&path)?;
+        println!("loaded checkpoint {}", path.display());
     }
     Ok(())
 }
 
-/// Counterpart of [`load_ckpt_env`] for `HIFUSE_SAVE_CKPT`.
-fn save_ckpt_env(params: &hifuse::models::Params) -> Result<()> {
-    if let Ok(path) = std::env::var("HIFUSE_SAVE_CKPT") {
-        hifuse::models::checkpoint::save(params, std::path::Path::new(&path))?;
-        println!("saved checkpoint {path}");
+/// Counterpart of [`load_ckpt`]: `--save-ckpt`, falling back to
+/// `HIFUSE_SAVE_CKPT`.
+fn save_ckpt(flag: Option<&Path>, params: &hifuse::models::Params) -> Result<()> {
+    let path = match flag {
+        Some(p) => Some(p.to_path_buf()),
+        None => std::env::var("HIFUSE_SAVE_CKPT").ok().map(PathBuf::from),
+    };
+    if let Some(path) = path {
+        hifuse::models::checkpoint::save(params, &path)?;
+        println!("saved checkpoint {}", path.display());
     }
     Ok(())
 }
@@ -274,6 +429,9 @@ fn pjrt_dispatch(_cfg: &RunConfig, _action: Action) -> Result<()> {
 fn run_action<B: ExecBackend>(eng: &B, cfg: &RunConfig, action: Action) -> Result<()> {
     match action {
         Action::Train => cmd_train(eng, cfg),
+        // Serve is routed to `cmd_serve` in `dispatch` (it always runs the
+        // replica path and is sim-only), never through a generic backend.
+        Action::Serve => unreachable!("serve dispatches before backend selection"),
         Action::Counts => cmd_counts(eng, cfg),
         Action::Calibrate => cmd_calibrate(eng),
         Action::Profile => cmd_profile(eng, cfg),
@@ -329,7 +487,7 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         let store = build_cache(cfg, &graph, eng.cst("CSLOTS"));
         tr.attach_cache(store)?;
     }
-    load_ckpt_env(&mut tr.params)?;
+    load_ckpt(cfg.load_ckpt.as_deref(), &mut tr.params)?;
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
         let cache_note = if cfg.cache_frac > 0.0 {
@@ -338,7 +496,7 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             String::new()
         };
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB{} | kernels {}",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {}",
             m.loss,
             m.acc,
             m.wall,
@@ -348,11 +506,12 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             m.cpu_by_stage.collect,
             m.gpu_time,
             m.h2d_bytes as f64 / (1024.0 * 1024.0),
+            m.d2h_bytes as f64 / (1024.0 * 1024.0),
             cache_note,
             m.kernels_total
         );
     }
-    save_ckpt_env(&tr.params)?;
+    save_ckpt(cfg.save_ckpt.as_deref(), &tr.params)?;
     Ok(())
 }
 

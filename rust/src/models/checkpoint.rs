@@ -106,9 +106,14 @@ mod tests {
         let path = std::env::temp_dir().join("hifuse_ckpt_test.bin");
         save(&p, &path).unwrap();
         let q = load(&path).unwrap();
+        // Bitwise equality of the full parameter set: every tensor and
+        // every dim (the serve path's --load-ckpt contract — a served
+        // checkpoint predicts exactly what the trainer would).
         assert_eq!(p.w0, q.w0);
         assert_eq!(p.w1, q.w1);
         assert_eq!(p.a_src0, q.a_src0);
+        assert_eq!(p.a_dst0, q.a_dst0);
+        assert_eq!(p.a_src1, q.a_src1);
         assert_eq!(p.a_dst1, q.a_dst1);
         assert_eq!((q.rpad, q.f, q.h, q.c), (4, 8, 16, 4));
         std::fs::remove_file(path).ok();

@@ -819,6 +819,34 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         self.recycle_layer(l0);
         Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
     }
+
+    /// Inference forward: the forward half of [`StepExecutor::grad_step`]
+    /// with no head dispatch, no labels, and no optimizer state — the unit
+    /// the serving path runs per coalesced batch (DESIGN.md §8). Returns
+    /// the target-type `[NS, C]` logits; the readback is charged to the
+    /// dispatch log as D2H traffic (`Counters::d2h_bytes`), which is the
+    /// serve path's whole device→host footprint per batch.
+    ///
+    /// Like `grad_step`, the output is bitwise-deterministic in
+    /// (`params`, `batch`) for any thread count, which is what makes
+    /// per-request predictions invariant under `--replicas`/`--producers`/
+    /// `--threads`/pipeline (pinned by `tests/serve_parity.rs`).
+    pub fn forward_step(
+        &self,
+        params: &Params,
+        schema: &SchemaTensors,
+        batch: &BatchData,
+    ) -> Result<HostTensor> {
+        let (d, eng) = (&self.d, self.eng);
+        assert_eq!(batch.layers.len(), 2, "2-layer model");
+        let l0 = self.layer_forward(0, &batch.xs, params, schema, &batch.layers[0])?;
+        let l1 = self.layer_forward(1, &l0.hout, params, schema, &batch.layers[1])?;
+        let logits = slab(&l1.hout, schema.target_type, d.ns, d.c)?;
+        eng.counters().borrow_mut().add_d2h(logits.size_bytes() as u64);
+        self.recycle_layer(l1);
+        self.recycle_layer(l0);
+        Ok(logits)
+    }
 }
 
 #[cfg(test)]

@@ -36,6 +36,13 @@ use crate::util::Rng;
 /// in-scratch path and [`epoch_perm`], so both derive identical bytes.
 const EPOCH_PERM_STREAM: u64 = 0xE90C;
 
+/// Fork stream of serve-path coalesced batches
+/// ([`NeighborSampler::sample_request_into`]): keyed on the coalesced-batch
+/// index alone, disjoint from the training `(epoch, batch)` streams, so a
+/// trace replay expands identical neighborhoods no matter how the batch is
+/// scheduled (DESIGN.md §8).
+const SERVE_BATCH_STREAM: u64 = 0x5E11_EB47;
+
 /// The epoch permutation of the train split: exactly the bytes
 /// `sample_into` would derive lazily (`train_idx` shuffled by
 /// `rng.fork(EPOCH_PERM_STREAM ^ epoch)`), computed once and shared via
@@ -377,18 +384,6 @@ impl<'g> NeighborSampler<'g> {
         let cfg = self.cfg;
         debug_assert_eq!(scratch.slot_of.len(), g.n_types(), "scratch built for another graph");
         out.reset(&cfg, g.n_types(), g.n_relations());
-        let SamplerScratch {
-            order,
-            order_key,
-            slot_of,
-            stamp,
-            gen,
-            idx,
-            perm,
-            tag_tmp,
-            frontier,
-        } = scratch;
-        let MiniBatch { seeds, slots, tagged, oracle_edges, dropped_nodes, dropped_edges } = out;
 
         // Epoch-shuffled train split: derived from (base rng, epoch) ONLY,
         // so every batch of an epoch agrees on the permutation — computed
@@ -397,16 +392,16 @@ impl<'g> NeighborSampler<'g> {
         // reuse safe across differently-seeded runs. A uniquely-owned Arc
         // is refilled in place (no allocation); one still shared from a
         // previous epoch's install is replaced.
-        if *order_key != Some((rng.fork_key(), epoch)) {
-            if Arc::get_mut(order).is_none() {
-                *order = Arc::new(Vec::with_capacity(g.train_idx.len()));
+        if scratch.order_key != Some((rng.fork_key(), epoch)) {
+            if Arc::get_mut(&mut scratch.order).is_none() {
+                scratch.order = Arc::new(Vec::with_capacity(g.train_idx.len()));
             }
-            let v = Arc::get_mut(order).expect("epoch permutation uniquely owned");
+            let v = Arc::get_mut(&mut scratch.order).expect("epoch permutation uniquely owned");
             v.clear();
             v.extend_from_slice(&g.train_idx);
             let mut epoch_rng = rng.fork(EPOCH_PERM_STREAM ^ epoch);
             epoch_rng.shuffle(v);
-            *order_key = Some((rng.fork_key(), epoch));
+            scratch.order_key = Some((rng.fork_key(), epoch));
         }
         // Everything below is per-(epoch, batch) randomness.
         let rng = rng.fork(epoch.wrapping_mul(1_000_003) + batch_idx as u64 + 1);
@@ -414,10 +409,50 @@ impl<'g> NeighborSampler<'g> {
         // Wrap the tail batch to keep the batch size static; modular
         // indexing into the cached permutation (a cycled iterator would
         // pay an O(start) skip walk per batch).
-        if !order.is_empty() {
-            let len = order.len();
-            seeds.extend((0..cfg.batch_size).map(|i| order[(start + i) % len]));
+        if !scratch.order.is_empty() {
+            let len = scratch.order.len();
+            out.seeds.extend((0..cfg.batch_size).map(|i| scratch.order[(start + i) % len]));
         }
+        self.sample_core(rng, scratch, out);
+    }
+
+    /// Sample a serving batch from an **explicit seed set** (the
+    /// coalescer's merge of pending request seeds, DESIGN.md §8). Seeds are
+    /// installed verbatim — first-seen order, so distinct seeds occupy the
+    /// leading target-type slots exactly as in training batches (the
+    /// seed-mask contract in [`collect`]) — and the layered expansion draws
+    /// all randomness from a stream forked purely on `batch_idx` (the
+    /// coalesced-batch index). Deterministic in (`rng` seed, `batch_idx`,
+    /// `seeds`) and independent of worker/replica scheduling: the serve
+    /// replay contract, pinned by `tests/serve_parity.rs`.
+    pub fn sample_request_into(
+        &self,
+        rng: &Rng,
+        batch_idx: u64,
+        seeds: &[u32],
+        scratch: &mut SamplerScratch,
+        out: &mut MiniBatch,
+    ) {
+        let g = self.graph;
+        let cfg = self.cfg;
+        assert!(seeds.len() <= cfg.batch_size, "coalesced batch exceeds batch_size");
+        debug_assert_eq!(scratch.slot_of.len(), g.n_types(), "scratch built for another graph");
+        out.reset(&cfg, g.n_types(), g.n_relations());
+        out.seeds.extend_from_slice(seeds);
+        let rng = rng.fork(SERVE_BATCH_STREAM ^ batch_idx);
+        self.sample_core(rng, scratch, out);
+    }
+
+    /// The seed-independent sampling core shared by the training and serve
+    /// entries: slot assignment, nested-frontier layer expansion, and the
+    /// shuffled tagged COO build, driven entirely by the already-forked
+    /// per-batch `rng`. `out` must be reset and `out.seeds` filled (at most
+    /// `batch_size` entries); everything else is produced here.
+    fn sample_core(&self, rng: Rng, scratch: &mut SamplerScratch, out: &mut MiniBatch) {
+        let g = self.graph;
+        let cfg = self.cfg;
+        let SamplerScratch { slot_of, stamp, gen, idx, perm, tag_tmp, frontier, .. } = scratch;
+        let MiniBatch { seeds, slots, tagged, oracle_edges, dropped_nodes, dropped_edges } = out;
 
         // New slot-map generation; on (unlikely) wrap, reset the stamps so
         // generation 1 can never collide with a stale entry.
@@ -712,6 +747,66 @@ mod tests {
         let b = Rng::new(2);
         s.sample_into(&b, 0, 0, &mut scratch, &mut mb);
         assert_eq!(mb, s.sample(&b, 0, 0), "stale epoch permutation served across rngs");
+    }
+
+    /// Serve-path request sampling is a pure function of
+    /// (rng seed, coalesced-batch index, seed set): two fresh scratches
+    /// produce bitwise-identical batches, and the installed seeds survive
+    /// verbatim.
+    #[test]
+    fn request_sampling_is_deterministic_and_seed_driven() {
+        let g = tiny_graph(1);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(42);
+        let seeds: Vec<u32> = g.train_idx.iter().take(5).copied().collect();
+        let mut sc1 = SamplerScratch::new(&g);
+        let mut sc2 = SamplerScratch::new(&g);
+        let (mut a, mut b) = (MiniBatch::default(), MiniBatch::default());
+        s.sample_request_into(&rng, 3, &seeds, &mut sc1, &mut a);
+        s.sample_request_into(&rng, 3, &seeds, &mut sc2, &mut b);
+        assert_eq!(a, b, "request batch not deterministic");
+        assert_eq!(a.seeds, seeds, "installed seeds were altered");
+        // Scratch reuse across interleaved training batches stays safe:
+        // the serve entry never touches the epoch-permutation cache.
+        s.sample_into(&rng, 0, 0, &mut sc1, &mut b);
+        s.sample_request_into(&rng, 3, &seeds, &mut sc1, &mut b);
+        assert_eq!(a, b, "request batch diverged after scratch reuse");
+    }
+
+    /// Explicit (possibly duplicated) request seeds land in the leading
+    /// target-type slots in first-seen order — the same contract training
+    /// batches satisfy, which the seed-mask build in `collect` depends on.
+    #[test]
+    fn request_seeds_occupy_leading_target_slots() {
+        let g = tiny_graph(5);
+        let s = NeighborSampler::new(&g, cfg());
+        let (v0, v1) = (g.train_idx[0], g.train_idx[1]);
+        let seeds = vec![v0, v1, v0]; // duplicate seed across two requests
+        let mut sc = SamplerScratch::new(&g);
+        let mut mb = MiniBatch::default();
+        s.sample_request_into(&Rng::new(13), 0, &seeds, &mut sc, &mut mb);
+        assert_eq!(mb.seeds, seeds);
+        assert_eq!(&mb.slots[g.target_type][..2], &[v0, v1]);
+    }
+
+    /// Request sampling keeps the zero-alloc contract: after a warm-up
+    /// call, repeated coalesced batches grow no scratch or batch buffer.
+    #[test]
+    fn request_sampling_footprint_is_flat_after_warmup() {
+        let g = tiny_graph(2);
+        let s = NeighborSampler::new(&g, cfg());
+        let rng = Rng::new(7);
+        let seeds: Vec<u32> = g.train_idx.iter().take(8).copied().collect();
+        let mut sc = SamplerScratch::new(&g);
+        let mut mb = MiniBatch::default();
+        s.sample_request_into(&rng, 0, &seeds, &mut sc, &mut mb);
+        let warm = sc.capacity_footprint() + mb.capacity_footprint();
+        for b in 1..20u64 {
+            let take = 1 + (b as usize % seeds.len());
+            s.sample_request_into(&rng, b, &seeds[..take], &mut sc, &mut mb);
+            let now = sc.capacity_footprint() + mb.capacity_footprint();
+            assert_eq!(now, warm, "request batch {b} grew a buffer");
+        }
     }
 
     /// After one warm epoch, further sampling grows no buffer: the scratch

@@ -1,0 +1,159 @@
+//! Request coalescing: fold an arrival stream into the static-shape
+//! mini-batches the training path already runs (DESIGN.md §8).
+//!
+//! The coalescer is a single pass over the trace in arrival order, and its
+//! decisions depend on **nothing but the trace** and two scalars
+//! (`batch_size`, the window). No queue depth, lane count, or wall-clock
+//! enters — which is exactly why replaying a trace reproduces the same
+//! batches under any `--replicas`/`--producers`/`--threads`/pipeline
+//! setting. A batch closes when (a) the next request would overflow the
+//! seed capacity, (b) the batch fills exactly, or (c) the next arrival
+//! falls outside the batch's coalescing window.
+
+use anyhow::{ensure, Result};
+
+use super::trace::Trace;
+
+/// One request's span inside a coalesced batch: `len` seeds starting at
+/// `offset` in [`CoalescedBatch::seeds`], belonging to trace request `req`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchMember {
+    pub req: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A closed batch: the concatenated seed sets of its member requests plus
+/// the virtual-time bracket the latency model needs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoalescedBatch {
+    /// Member seed sets back to back (duplicates across members allowed —
+    /// the sampler dedups into slots; the demux maps each position back).
+    pub seeds: Vec<u32>,
+    pub members: Vec<BatchMember>,
+    /// Arrival tick of the first member — the tick the window opens.
+    pub open_tick: u64,
+    /// The tick the batch stopped accepting requests and became runnable.
+    pub close_tick: u64,
+}
+
+/// Fold `trace` into batches of at most `batch_size` seeds, each batch
+/// accepting arrivals for at most `window` ticks past its first member.
+///
+/// Close-tick semantics (all three are pure functions of the stream):
+/// * window timeout → `open_tick + window` (the batch timer fires whether
+///   or not anything else arrives);
+/// * capacity overflow → the overflowing request's arrival tick (that is
+///   when the server learns the batch cannot grow);
+/// * exact fill → the filling request's arrival tick;
+/// * end of stream → `open_tick + window` (an open-loop server cannot see
+///   that no more requests are coming).
+pub fn coalesce(trace: &Trace, batch_size: usize, window: u64) -> Result<Vec<CoalescedBatch>> {
+    assert!(batch_size >= 1);
+    let mut out = Vec::new();
+    let mut cur: Option<CoalescedBatch> = None;
+    let mut last_tick = 0u64;
+    for (ri, r) in trace.requests.iter().enumerate() {
+        ensure!(!r.seeds.is_empty(), "request {ri} has no seeds");
+        ensure!(
+            r.seeds.len() <= batch_size,
+            "request {ri} carries {} seeds but batches hold at most {batch_size}",
+            r.seeds.len()
+        );
+        ensure!(
+            r.arrival_tick >= last_tick,
+            "request {ri} arrives out of order (tick {} after {last_tick})",
+            r.arrival_tick
+        );
+        last_tick = r.arrival_tick;
+        if let Some(b) = &cur {
+            let timeout = r.arrival_tick > b.open_tick + window;
+            let overflow = b.seeds.len() + r.seeds.len() > batch_size;
+            if timeout || overflow {
+                let mut b = cur.take().expect("checked above");
+                b.close_tick = if timeout { b.open_tick + window } else { r.arrival_tick };
+                out.push(b);
+            }
+        }
+        let b = cur.get_or_insert_with(|| CoalescedBatch {
+            open_tick: r.arrival_tick,
+            ..CoalescedBatch::default()
+        });
+        b.members.push(BatchMember { req: ri, offset: b.seeds.len(), len: r.seeds.len() });
+        b.seeds.extend_from_slice(&r.seeds);
+        if b.seeds.len() == batch_size {
+            let mut b = cur.take().expect("just inserted");
+            b.close_tick = r.arrival_tick;
+            out.push(b);
+        }
+    }
+    if let Some(mut b) = cur.take() {
+        b.close_tick = b.open_tick + window;
+        out.push(b);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{Request, Trace};
+    use super::*;
+
+    fn req(id: u32, tick: u64, seeds: &[u32]) -> Request {
+        Request { id, arrival_tick: tick, seeds: seeds.to_vec() }
+    }
+
+    #[test]
+    fn window_and_capacity_both_close_batches() {
+        let t = Trace {
+            requests: vec![
+                req(0, 10, &[1, 2]),
+                req(1, 15, &[3]),     // fits: 3 seeds, inside window
+                req(2, 500, &[4]),    // outside 10+100 -> new batch
+                req(3, 505, &[5, 6, 7]), // 1+3 = 4 = capacity -> exact fill
+                req(4, 510, &[8, 9]), // tail batch, closed by end of stream
+            ],
+        };
+        let bs = coalesce(&t, 4, 100).unwrap();
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].seeds, vec![1, 2, 3]);
+        assert_eq!(bs[0].open_tick, 10);
+        assert_eq!(bs[0].close_tick, 110, "closed by the window timer");
+        assert_eq!(bs[1].seeds, vec![4, 5, 6, 7]);
+        assert_eq!(bs[1].close_tick, 505, "closed by exact fill");
+        assert_eq!(bs[2].seeds, vec![8, 9]);
+        assert_eq!(bs[2].close_tick, 610, "tail closes a full window after opening");
+        // Membership bookkeeping: every request appears exactly once and
+        // its (offset, len) span reproduces its seed set.
+        let mut seen = vec![0u32; t.requests.len()];
+        for b in &bs {
+            for m in &b.members {
+                seen[m.req] += 1;
+                assert_eq!(
+                    &b.seeds[m.offset..m.offset + m.len],
+                    &t.requests[m.req].seeds[..]
+                );
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn overflow_closes_at_the_overflowing_arrival() {
+        let t = Trace {
+            requests: vec![req(0, 10, &[1, 2, 3]), req(1, 20, &[4, 5])],
+        };
+        let bs = coalesce(&t, 4, 1_000).unwrap();
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].close_tick, 20, "closed the moment the overflow arrived");
+        assert_eq!(bs[1].open_tick, 20);
+    }
+
+    #[test]
+    fn rejects_oversized_and_disordered_requests() {
+        let t = Trace { requests: vec![req(0, 0, &[1, 2, 3, 4, 5])] };
+        assert!(coalesce(&t, 4, 100).is_err());
+        let t = Trace { requests: vec![req(0, 50, &[1]), req(1, 10, &[2])] };
+        assert!(coalesce(&t, 4, 100).is_err());
+    }
+}

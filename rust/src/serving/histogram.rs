@@ -1,0 +1,124 @@
+//! Streaming latency histogram: fixed-footprint log₂ buckets over virtual
+//! ticks (DESIGN.md §8).
+//!
+//! Bucket `k` holds every value whose bit length is `k` — bucket 0 is
+//! exactly `{0}`, bucket `k ≥ 1` spans `[2^(k-1), 2^k)` — so recording is
+//! one `leading_zeros` and one increment: no allocation, no sort, and the
+//! structure's size is independent of the request count (the serving
+//! loop's zero-alloc discipline extends to its metrology). Percentiles
+//! are nearest-rank over the cumulative bucket walk, reported at the
+//! bucket's inclusive upper bound (clamped to the observed extremes), so
+//! `p50 ≤ p95 ≤ p99` holds by construction.
+
+/// 64 possible bit lengths of a non-zero `u64`, plus bucket 0 for zero.
+const BUCKETS: usize = 65;
+
+/// Fixed-size streaming histogram of `u64` latencies (virtual ticks).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; BUCKETS], total: 0, min: u64::MAX, max: 0, sum: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, ticks: u64) {
+        self.counts[Self::bucket(ticks)] += 1;
+        self.total += 1;
+        self.min = self.min.min(ticks);
+        self.max = self.max.max(ticks);
+        self.sum += ticks as u128;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean latency in ticks (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 100]`), at bucket resolution:
+    /// the inclusive upper bound of the bucket holding the ranked sample,
+    /// clamped to the observed `[min, max]`. Monotone in `p`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let hi = if k == 0 { 0 } else { (1u64 << k) - 1 };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_split_at_powers_of_two() {
+        assert_eq!(LatencyHistogram::bucket(0), 0);
+        assert_eq!(LatencyHistogram::bucket(1), 1);
+        assert_eq!(LatencyHistogram::bucket(2), 2);
+        assert_eq!(LatencyHistogram::bucket(3), 2);
+        assert_eq!(LatencyHistogram::bucket(4), 3);
+        assert_eq!(LatencyHistogram::bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bracketed() {
+        let mut h = LatencyHistogram::default();
+        for v in [3u64, 5, 9, 17, 33, 65, 129, 1025] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        let (p50, p95, p99) = (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 >= 3 && p99 <= 1025, "clamped to observed extremes");
+        assert!((h.mean() - 1286.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn constant_stream_collapses_to_its_bucket() {
+        let mut h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record(1000);
+        }
+        // Bucket [512, 1024) clamps to the observed value on both ends.
+        assert_eq!(h.percentile(50.0), 1000);
+        assert_eq!(h.percentile(99.0), 1000);
+    }
+}

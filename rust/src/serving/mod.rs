@@ -1,0 +1,168 @@
+//! Online inference serving (DESIGN.md §8): an open-loop request
+//! front-end over the training stack's batch machinery.
+//!
+//! `repro serve` drives four stages, each reusing a training-path
+//! subsystem rather than duplicating it:
+//!
+//! 1. **Arrival stream** ([`trace`]) — a seeded schedule of per-request
+//!    seed-vertex sets on an integer virtual clock (1 tick = 1 µs),
+//!    recordable to and replayable from a small binary codec.
+//! 2. **Coalescer** ([`coalesce`]) — folds pending requests into the same
+//!    static-shape mini-batches the trainer runs, purely from the stream,
+//!    so batch membership is independent of all parallelism knobs.
+//! 3. **Forward drive** (`ReplicaGroup::serve_forward`) — round-robins
+//!    the coalesced batches over the replica lanes, sampling through
+//!    `NeighborSampler::sample_request_into` and executing the
+//!    `StepExecutor::forward_step` split of `grad_step`; producer
+//!    arsenals, `BatchBufs` recycling, and the `--cache-frac` resident
+//!    cache all carry over, so the steady state allocates nothing.
+//! 4. **Demux + metrology** ([`serve`]) — maps each batch's slot rows
+//!    back to per-request predictions and folds per-request latencies
+//!    into a fixed-footprint [`LatencyHistogram`].
+//!
+//! Determinism contract: predictions and coalescing are bitwise functions
+//! of `(params, trace, batch_size, window)` — pinned across
+//! `--replicas`/`--producers`/`--threads`/pipeline by
+//! `tests/serve_parity.rs`. Latency *values* are performance metrology
+//! (each batch's measured service time replayed onto the virtual clock)
+//! and are not part of the bitwise contract; the histogram's shape
+//! invariants are.
+
+pub mod coalesce;
+pub mod histogram;
+pub mod trace;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+pub use coalesce::{coalesce, BatchMember, CoalescedBatch};
+pub use histogram::LatencyHistogram;
+pub use trace::{Request, Trace};
+
+use crate::coordinator::ReplicaGroup;
+use crate::runtime::ExecBackend;
+use crate::util::HostTensor;
+
+/// Everything one serve run produces.
+pub struct ServeOutcome {
+    /// Per-request `[seeds, C]` logit rows, in trace order — bitwise
+    /// identical for a given (params, trace, batch_size, window) whatever
+    /// the parallelism.
+    pub predictions: Vec<HostTensor>,
+    /// Per-request latency in virtual ticks (completion − arrival).
+    pub latencies: Vec<u64>,
+    /// The coalescing decisions (batch membership is part of the replay
+    /// determinism contract).
+    pub batches: Vec<CoalescedBatch>,
+    pub hist: LatencyHistogram,
+    /// Wall time of the forward drive (metrology only).
+    pub wall: Duration,
+    /// Virtual span: first arrival tick → last completion tick.
+    pub span_ticks: u64,
+}
+
+impl ServeOutcome {
+    /// Sustained throughput on the virtual clock, requests per second.
+    pub fn virtual_throughput(&self) -> f64 {
+        if self.span_ticks == 0 {
+            return 0.0;
+        }
+        self.predictions.len() as f64 * 1e6 / self.span_ticks as f64
+    }
+}
+
+/// Run one serve pass: coalesce `trace`, drive the batches forward-only
+/// across the group's lanes, then demultiplex predictions and account
+/// per-request latency on the virtual clock.
+///
+/// The latency model replays each batch's measured service time onto
+/// virtual time: batch `i` runs on lane `i % replicas` (mirroring
+/// `serve_forward`'s schedule), starting at
+/// `max(close_tick, lane_free)` and completing `service` ticks later;
+/// a request's latency is its batch's completion minus its own arrival.
+/// Queueing delay from lane contention is therefore visible in the
+/// histogram, while the predictions stay schedule-independent.
+pub fn serve<B>(
+    group: &mut ReplicaGroup<B>,
+    trace: &Trace,
+    batch_size: usize,
+    window: u64,
+) -> Result<ServeOutcome>
+where
+    B: ExecBackend + Send,
+    B::Dev: Sync,
+{
+    ensure!(!trace.requests.is_empty(), "serving an empty trace");
+    let batches = coalesce(trace, batch_size, window)?;
+    let seed_sets: Vec<Vec<u32>> = batches.iter().map(|b| b.seeds.clone()).collect();
+    let t0 = Instant::now();
+    let stepped = group.serve_forward(&seed_sets)?;
+    let wall = t0.elapsed();
+
+    let n_lanes = group.replicas().max(1);
+    let mut lane_free = vec![0u64; n_lanes];
+    let mut predictions: Vec<Option<HostTensor>> =
+        (0..trace.requests.len()).map(|_| None).collect();
+    let mut latencies = vec![0u64; trace.requests.len()];
+    let mut hist = LatencyHistogram::default();
+    let mut last_done = 0u64;
+    // Per-batch slot map, rebuilt by the same first-seen scan the
+    // sampler's assign_slot performs: position i of batch.seeds lives in
+    // logits row slot_idx[i].
+    let mut slots: Vec<u32> = Vec::with_capacity(batch_size);
+    let mut slot_idx: Vec<usize> = Vec::with_capacity(batch_size);
+    for (bi, ((logits, dur), b)) in stepped.iter().zip(&batches).enumerate() {
+        let shape = logits.shape();
+        ensure!(shape.len() == 2, "forward logits must be [NS, C], got {shape:?}");
+        let c = shape[1];
+        let rows = logits.as_f32()?;
+        slots.clear();
+        slot_idx.clear();
+        for &s in &b.seeds {
+            match slots.iter().position(|&x| x == s) {
+                Some(k) => slot_idx.push(k),
+                None => {
+                    slot_idx.push(slots.len());
+                    slots.push(s);
+                }
+            }
+        }
+        let lane = bi % n_lanes;
+        let service = (dur.as_micros() as u64).max(1);
+        let start = b.close_tick.max(lane_free[lane]);
+        let done = start + service;
+        lane_free[lane] = done;
+        last_done = last_done.max(done);
+        for m in &b.members {
+            let mut data = Vec::with_capacity(m.len * c);
+            for k in 0..m.len {
+                let slot = slot_idx[m.offset + k];
+                data.extend_from_slice(&rows[slot * c..(slot + 1) * c]);
+            }
+            ensure!(
+                predictions[m.req].is_none(),
+                "request {} demuxed twice",
+                m.req
+            );
+            predictions[m.req] = Some(HostTensor::f32(data, &[m.len, c]));
+            let lat = done - trace.requests[m.req].arrival_tick;
+            latencies[m.req] = lat;
+            hist.record(lat);
+        }
+    }
+    let first_arrival = trace.requests[0].arrival_tick;
+    let predictions = predictions
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| p.ok_or_else(|| anyhow::anyhow!("request {i} never coalesced")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ServeOutcome {
+        predictions,
+        latencies,
+        batches,
+        hist,
+        wall,
+        span_ticks: last_done.saturating_sub(first_arrival),
+    })
+}

@@ -1,0 +1,207 @@
+//! Arrival traces: open-loop request schedules in **virtual time**, plus
+//! the record/replay codec (DESIGN.md §8).
+//!
+//! A trace is the serving subsystem's unit of determinism: request ids,
+//! per-request seed-vertex sets, and integer *arrival ticks* (1 tick =
+//! 1 µs of virtual time). Generation is a pure function of
+//! `(seed, rate, n_requests)` — no wall clock anywhere — so a generated
+//! schedule, a recorded file, and a replayed file all coalesce
+//! identically on any machine at any parallelism (`tests/serve_parity.rs`).
+//!
+//! The on-disk format follows `models/checkpoint.rs`: a magic tag, a
+//! version word, then length-prefixed little-endian payloads — small,
+//! self-describing, and serde-free.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::HeteroGraph;
+use crate::util::Rng;
+
+/// Fork stream of the arrival-schedule generator: disjoint from every
+/// training stream (`sampler::EPOCH_PERM_STREAM`, the per-batch forks) so
+/// serving traffic never perturbs a training trajectory run from the same
+/// root seed.
+const TRACE_STREAM: u64 = 0xA221_7A1E;
+
+const MAGIC: &[u8; 8] = b"HIFUSEtr";
+const VERSION: u32 = 1;
+
+/// One inference request: a client-visible id, its virtual arrival tick,
+/// and the target-type seed vertices it asks predictions for.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub id: u32,
+    /// Virtual arrival time in ticks (1 µs); non-decreasing across a trace.
+    pub arrival_tick: u64,
+    /// Target-type vertex ids (≥ 1; duplicates allowed — the sampler
+    /// dedups them into slots, the demux fans the shared row back out).
+    pub seeds: Vec<u32>,
+}
+
+/// An open-loop arrival schedule: the whole input of a serve run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+/// Generate a seeded open-loop trace: inter-arrival gaps drawn uniformly
+/// from `[1, 2·mean]` ticks (mean = 1e6/`rate`, so the expected offered
+/// load matches `--rate` requests/s of virtual time), and each request
+/// carrying `1..=max_seeds` seed vertices drawn from the graph's labeled
+/// target set. Pure in its arguments — the record/replay contract's
+/// "generate" half.
+pub fn generate(
+    graph: &HeteroGraph,
+    seed: u64,
+    rate: f64,
+    n_requests: usize,
+    max_seeds: usize,
+) -> Trace {
+    assert!(rate > 0.0, "--rate must be positive");
+    assert!(max_seeds >= 1, "a request carries at least one seed");
+    let pool = &graph.train_idx;
+    assert!(!pool.is_empty(), "graph has no labeled target vertices to serve");
+    let mut rng = Rng::new(seed).fork(TRACE_STREAM);
+    let mean = (1_000_000.0 / rate).max(1.0) as usize;
+    let mut tick = 0u64;
+    let mut requests = Vec::with_capacity(n_requests);
+    for id in 0..n_requests {
+        tick += (1 + rng.below(2 * mean)) as u64;
+        let n = 1 + rng.below(max_seeds);
+        let seeds = (0..n).map(|_| pool[rng.below(pool.len())]).collect();
+        requests.push(Request { id: id as u32, arrival_tick: tick, seeds });
+    }
+    Trace { requests }
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Serialize a trace (`--record-trace`).
+pub fn save(trace: &Trace, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, trace.requests.len() as u32)?;
+    for r in &trace.requests {
+        write_u32(&mut w, r.id)?;
+        write_u64(&mut w, r.arrival_tick)?;
+        write_u32(&mut w, r.seeds.len() as u32)?;
+        for &s in &r.seeds {
+            write_u32(&mut w, s)?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize and validate a trace (`--replay-trace`): the arrival order
+/// must be non-decreasing and every request non-empty, so the coalescer's
+/// single-pass scan is well-defined on anything this returns.
+pub fn load(path: &Path) -> Result<Trace> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a hifuse arrival trace");
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != VERSION {
+        bail!("{path:?}: unsupported trace version {ver}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut requests = Vec::with_capacity(n);
+    let mut last_tick = 0u64;
+    for i in 0..n {
+        let id = read_u32(&mut r)?;
+        let arrival_tick = read_u64(&mut r)?;
+        ensure!(
+            arrival_tick >= last_tick,
+            "{path:?}: request {i} arrives at tick {arrival_tick}, before its predecessor"
+        );
+        last_tick = arrival_tick;
+        let k = read_u32(&mut r)? as usize;
+        ensure!(k >= 1, "{path:?}: request {i} has no seeds");
+        let mut seeds = Vec::with_capacity(k);
+        for _ in 0..k {
+            seeds.push(read_u32(&mut r)?);
+        }
+        requests.push(Request { id, arrival_tick, seeds });
+    }
+    Ok(Trace { requests })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny_graph;
+
+    #[test]
+    fn generation_is_pure_in_its_arguments() {
+        let g = tiny_graph(1);
+        let a = generate(&g, 42, 1000.0, 16, 3);
+        let b = generate(&g, 42, 1000.0, 16, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.requests.len(), 16);
+        let c = generate(&g, 43, 1000.0, 16, 3);
+        assert_ne!(a, c, "seed must steer the schedule");
+        for w in a.requests.windows(2) {
+            assert!(w[1].arrival_tick >= w[0].arrival_tick);
+        }
+        for r in &a.requests {
+            assert!((1..=3).contains(&r.seeds.len()));
+            assert!(r.seeds.iter().all(|s| g.train_idx.contains(s)));
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_bitwise() {
+        let g = tiny_graph(2);
+        let t = generate(&g, 7, 500.0, 12, 4);
+        let path = std::env::temp_dir().join("hifuse_trace_roundtrip.bin");
+        save(&t, &path).unwrap();
+        let u = load(&path).unwrap();
+        assert_eq!(t, u);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_disorder() {
+        let path = std::env::temp_dir().join("hifuse_trace_garbage.bin");
+        std::fs::write(&path, b"not a trace at all........").unwrap();
+        assert!(load(&path).is_err());
+        // A syntactically valid file with decreasing ticks must be refused.
+        let bad = Trace {
+            requests: vec![
+                Request { id: 0, arrival_tick: 100, seeds: vec![1] },
+                Request { id: 1, arrival_tick: 50, seeds: vec![2] },
+            ],
+        };
+        save(&bad, &path).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Serving determinism regression tests (DESIGN.md §8): replaying a
+//! recorded arrival trace is a *semantic* no-op under every scheduling
+//! knob.
+//!
+//! * Per-request predictions are bitwise identical for
+//!   `replicas ∈ {1, 2}` × pipeline on/off × `cache-frac ∈ {0, 0.25}` —
+//!   the serve grid of the issue.
+//! * Coalescing decisions (batch count, per-batch request membership,
+//!   open/close ticks) are identical across the same grid: they are a
+//!   pure function of the trace, never of the lane layout.
+//! * The forward path keeps the zero-allocation steady state: arena
+//!   misses and producer-pool stats are flat across post-warm-up serve
+//!   passes, same contract as `tests/cache_parity.rs` for training.
+//! * The latency histogram is well-formed: p50 ≤ p95 ≤ p99 and the
+//!   sample count equals the request count.
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg,
+    DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::ModelKind;
+use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
+use hifuse::serving::{self, ServeOutcome, Trace};
+
+const WINDOW: u64 = 2_000;
+
+fn cfg() -> TrainCfg {
+    TrainCfg {
+        epochs: 1,
+        batch_size: 4,
+        fanout: 3,
+        lr: 0.05,
+        seed: 42,
+        threads: 4,
+        producers: 2,
+    }
+}
+
+fn test_trace() -> Trace {
+    // Seed sets of 1..=3 on batch capacity 4: the coalescer exercises
+    // multi-request batches, overflow closes, and window closes.
+    serving::trace::generate(&tiny_graph(1), 42, 1000.0, 24, 3)
+}
+
+fn group_for(
+    g: &hifuse::graph::HeteroGraph,
+    replicas: usize,
+    pipeline: bool,
+    frac: f64,
+) -> ReplicaGroup<'_, SimBackend> {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let t = replica_thread_budget(4, replicas);
+    let engines: Vec<SimBackend> =
+        (0..replicas).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    if frac > 0.0 {
+        grp.attach_cache(Arc::new(ResidentStore::build(g, frac, 160, 42))).unwrap();
+    }
+    grp
+}
+
+fn serve_once(trace: &Trace, replicas: usize, pipeline: bool, frac: f64) -> ServeOutcome {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp = group_for(&g, replicas, pipeline, frac);
+    serving::serve(&mut grp, trace, cfg().batch_size, WINDOW).unwrap()
+}
+
+/// The headline contract: one recorded trace, replayed across the full
+/// grid, produces bitwise-identical per-request predictions and identical
+/// coalescing decisions.
+#[test]
+fn replay_is_parallelism_invariant() {
+    // Round-trip the schedule through the record/replay codec first, so
+    // the grid below replays the *file*, not the in-memory generation.
+    let recorded = test_trace();
+    let path = std::env::temp_dir().join("hifuse_serve_parity_trace.bin");
+    serving::trace::save(&recorded, &path).unwrap();
+    let trace = serving::trace::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(trace, recorded, "codec round-trip changed the schedule");
+
+    let reference = serve_once(&trace, 1, false, 0.0);
+    assert_eq!(reference.predictions.len(), trace.requests.len());
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25] {
+                let out = serve_once(&trace, replicas, pipeline, frac);
+                assert_eq!(
+                    out.batches, reference.batches,
+                    "replicas={replicas} pipeline={pipeline} frac={frac}: \
+                     coalescing diverged"
+                );
+                assert_eq!(
+                    out.predictions, reference.predictions,
+                    "replicas={replicas} pipeline={pipeline} frac={frac}: \
+                     predictions diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Serving keeps the zero-allocation steady state: after a warm-up pass,
+/// repeated serves construct no buffer sets, grow nothing, and never miss
+/// the backend arena — the producer pool cycles the same buffers.
+#[test]
+fn serve_steady_state_allocates_nothing() {
+    for pipeline in [false, true] {
+        let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp = group_for(&g, 2, pipeline, 0.25);
+        let trace = test_trace();
+        let snapshot = |grp: &ReplicaGroup<'_, SimBackend>| -> (u64, u64, u64, u64) {
+            let arena: u64 =
+                grp.engines().iter().map(|e| e.counters().borrow().arena.misses).sum();
+            let p = grp.producer_stats();
+            (arena, p.fresh, p.grown, p.reused)
+        };
+        serving::serve(&mut grp, &trace, cfg().batch_size, WINDOW).unwrap(); // warm-up
+        let warm = snapshot(&grp);
+        serving::serve(&mut grp, &trace, cfg().batch_size, WINDOW).unwrap();
+        let steady = snapshot(&grp);
+        assert_eq!(
+            steady.0, warm.0,
+            "pipeline {pipeline}: steady-state serve missed the arena"
+        );
+        assert_eq!(
+            steady.1, warm.1,
+            "pipeline {pipeline}: steady-state serve constructed a buffer set"
+        );
+        assert_eq!(
+            steady.2, warm.2,
+            "pipeline {pipeline}: steady-state serve grew a pooled buffer"
+        );
+        assert!(
+            steady.3 > warm.3,
+            "pipeline {pipeline}: steady-state serve never reused the pool"
+        );
+    }
+}
+
+/// Histogram well-formedness: percentiles are ordered, every request is
+/// accounted for exactly once, and every latency is non-negative virtual
+/// ticks measured from the request's own arrival.
+#[test]
+fn histogram_is_well_formed() {
+    let trace = test_trace();
+    let out = serve_once(&trace, 2, true, 0.0);
+    let h = &out.hist;
+    assert_eq!(h.count(), trace.requests.len() as u64);
+    let (p50, p95, p99) = (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0));
+    assert!(p50 <= p95 && p95 <= p99, "percentiles out of order: {p50} {p95} {p99}");
+    assert_eq!(out.latencies.len(), trace.requests.len());
+    // Every prediction row block matches its request's seed count, and the
+    // batches partition the request set exactly once.
+    let mut seen = vec![0u32; trace.requests.len()];
+    for b in &out.batches {
+        for m in &b.members {
+            seen[m.req] += 1;
+            assert_eq!(m.len, trace.requests[m.req].seeds.len());
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "coalescing lost or duplicated a request");
+    for (r, p) in trace.requests.iter().zip(&out.predictions) {
+        assert_eq!(p.shape()[0], r.seeds.len(), "prediction rows != request seeds");
+    }
+}
+
+/// Shared-vertex demux: two requests naming the same seed vertex inside
+/// one batch get the same logit row back (the sampler dedups the vertex
+/// into one slot; the demux fans it back out per request).
+#[test]
+fn duplicate_seeds_share_one_slot_row() {
+    let g = tiny_graph(1);
+    let v = g.train_idx[0];
+    let w = g.train_idx[1];
+    let trace = Trace {
+        requests: vec![
+            serving::Request { id: 0, arrival_tick: 10, seeds: vec![v, w] },
+            serving::Request { id: 1, arrival_tick: 20, seeds: vec![v] },
+        ],
+    };
+    let out = serve_once(&trace, 1, false, 0.0);
+    assert_eq!(out.batches.len(), 1, "both requests fit one window and batch");
+    let a = out.predictions[0].as_f32().unwrap();
+    let b = out.predictions[1].as_f32().unwrap();
+    let c = out.predictions[1].shape()[1];
+    assert_eq!(&a[..c], b, "the shared vertex must produce identical rows");
+    assert_ne!(&a[c..], b, "distinct vertices should (generically) differ");
+}
