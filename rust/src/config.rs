@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{OptConfig, TrainCfg};
 use crate::graph::{self, HeteroGraph};
 use crate::models::ModelKind;
+use crate::util::FaultPlan;
 
 /// Which `ExecBackend` implementation a run executes on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,6 +89,18 @@ pub struct RunConfig {
     /// Save model parameters to this checkpoint after running
     /// (first-class form of `HIFUSE_SAVE_CKPT`, which remains a fallback).
     pub save_ckpt: Option<PathBuf>,
+    /// Deterministic fault-injection schedule (`--fault-spec`, DESIGN.md
+    /// §9): comma-separated `site@EPOCH:SEQ[xN]` / `site~PERIOD` entries
+    /// over the sites `dispatch`, `producer`, `lane`. `None` (default) =
+    /// the fault plane is off and zero-cost.
+    pub fault_spec: Option<String>,
+    /// Seed steering `site~PERIOD` sprinkle rules in `--fault-spec`; inert
+    /// without one.
+    pub fault_seed: u64,
+    /// Serve: admission-control bound on the virtual batch queue
+    /// (`--max-queue`, DESIGN.md §9). Batches arriving while this many are
+    /// pending are shed deterministically. `None` (default) = unbounded.
+    pub max_queue: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -112,6 +125,9 @@ impl Default for RunConfig {
             replay_trace: None,
             load_ckpt: None,
             save_ckpt: None,
+            fault_spec: None,
+            fault_seed: 0,
+            max_queue: None,
         }
     }
 }
@@ -199,10 +215,44 @@ impl RunConfig {
                 "replay-trace" => cfg.replay_trace = Some(PathBuf::from(v)),
                 "load-ckpt" => cfg.load_ckpt = Some(PathBuf::from(v)),
                 "save-ckpt" => cfg.save_ckpt = Some(PathBuf::from(v)),
+                "fault-seed" => cfg.fault_seed = v.parse().context("--fault-seed")?,
+                "fault-spec" => {
+                    // Validate eagerly (seed 0 — the grammar is seed-free)
+                    // so a typo bails at the CLI, not mid-run.
+                    FaultPlan::parse(&v, 0)
+                        .with_context(|| format!("--fault-spec {v:?}"))?;
+                    cfg.fault_spec = Some(v);
+                }
+                "max-queue" => {
+                    let n: usize = v.parse().context("--max-queue")?;
+                    if n == 0 {
+                        bail!("--max-queue must be >= 1 (omit the flag for an unbounded queue)");
+                    }
+                    cfg.max_queue = Some(n);
+                }
                 other => bail!("unknown flag --{other}"),
             }
         }
+        // Cross-flag checks live after the loop: `kv` is a HashMap, so
+        // arm order within it is arbitrary.
+        if cfg.record_trace.is_some() && cfg.replay_trace.is_some() {
+            bail!(
+                "--record-trace and --replay-trace conflict: a replayed run \
+                 would just re-record its own input (pick one)"
+            );
+        }
         Ok(cfg)
+    }
+
+    /// The fault plan this config describes: `Some` only when
+    /// `--fault-spec` was given (`--fault-seed` alone is inert). Parsing
+    /// here cannot fail for configs built by [`from_args`] (the spec was
+    /// validated there), but hand-built configs get the same typed error.
+    pub fn fault_plan(&self) -> Result<Option<FaultPlan>> {
+        match &self.fault_spec {
+            Some(spec) => Ok(Some(FaultPlan::parse(spec, self.fault_seed)?)),
+            None => Ok(None),
+        }
     }
 
     /// Sim-backend profile: explicit `--profile` wins; otherwise the tiny
@@ -312,19 +362,62 @@ mod tests {
         assert_eq!(c.record_trace, None);
         assert_eq!(c.replay_trace, None);
         let c = RunConfig::from_args(&argv(
-            "--rate 250.5 --requests 128 --coalesce-window 5000 \
-             --record-trace /tmp/t.bin --replay-trace /tmp/u.bin",
+            "--rate 250.5 --requests 128 --coalesce-window 5000 --record-trace /tmp/t.bin",
         ))
         .unwrap();
         assert_eq!(c.rate, 250.5);
         assert_eq!(c.requests, 128);
         assert_eq!(c.coalesce_window, 5000);
         assert_eq!(c.record_trace, Some(PathBuf::from("/tmp/t.bin")));
+        let c = RunConfig::from_args(&argv("--replay-trace /tmp/u.bin")).unwrap();
         assert_eq!(c.replay_trace, Some(PathBuf::from("/tmp/u.bin")));
         assert!(RunConfig::from_args(&argv("--rate 0")).is_err());
         assert!(RunConfig::from_args(&argv("--rate -5")).is_err());
         assert!(RunConfig::from_args(&argv("--requests 0")).is_err());
         assert!(RunConfig::from_args(&argv("--coalesce-window x")).is_err());
+    }
+
+    #[test]
+    fn record_and_replay_trace_conflict() {
+        let err = RunConfig::from_args(&argv(
+            "--record-trace /tmp/t.bin --replay-trace /tmp/u.bin",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("conflict"), "{err}");
+    }
+
+    #[test]
+    fn fault_flags_parse_and_reject_bad_specs() {
+        let c = RunConfig::from_args(&[]).unwrap();
+        assert_eq!(c.fault_spec, None);
+        assert_eq!(c.fault_seed, 0);
+        assert!(c.fault_plan().unwrap().is_none(), "no spec => no plan");
+
+        let c = RunConfig::from_args(&argv(
+            "--fault-spec dispatch@0:3x2,lane~7 --fault-seed 99",
+        ))
+        .unwrap();
+        assert_eq!(c.fault_spec.as_deref(), Some("dispatch@0:3x2,lane~7"));
+        assert_eq!(c.fault_seed, 99);
+        let plan = c.fault_plan().unwrap().expect("spec => plan");
+        assert_eq!(plan.fires(crate::util::FaultSite::Dispatch, 0, 3), 2);
+
+        // Seed without a spec is inert, not an error.
+        let c = RunConfig::from_args(&argv("--fault-seed 7")).unwrap();
+        assert!(c.fault_plan().unwrap().is_none());
+
+        assert!(RunConfig::from_args(&argv("--fault-spec gpu@0:0")).is_err());
+        assert!(RunConfig::from_args(&argv("--fault-spec dispatch@0")).is_err());
+        assert!(RunConfig::from_args(&argv("--fault-seed x")).is_err());
+    }
+
+    #[test]
+    fn max_queue_flag_parses_and_rejects_zero() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().max_queue, None);
+        let c = RunConfig::from_args(&argv("--max-queue 3")).unwrap();
+        assert_eq!(c.max_queue, Some(3));
+        assert!(RunConfig::from_args(&argv("--max-queue 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--max-queue x")).is_err());
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::sampler::{
     MiniBatch, NeighborSampler, RelEdges, SamplerCfg, SamplerScratch, TaggedEdges,
 };
 use crate::semantic;
-use crate::util::{HostTensor, Rng, WorkerPool};
+use crate::util::{FaultPlan, HostTensor, Rng, WorkerPool};
 
 /// Training-run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -156,6 +156,15 @@ pub struct EpochMetrics {
     pub batches: usize,
     pub dropped_nodes: usize,
     pub dropped_edges: usize,
+    /// Transient dispatch failures absorbed by the backend's bounded
+    /// retry-with-backoff (DESIGN.md §9); 0 on every fault-free run.
+    pub dispatch_retries: u64,
+    /// Batches a standby producer re-derived after an injected producer
+    /// death left a hole in the reorder ring (pipelined paths only).
+    pub producer_recoveries: u64,
+    /// Replica lanes lost mid-epoch whose remaining slots the surviving
+    /// lanes absorbed (counted once per lost lane, on the group metrics).
+    pub lane_failovers: u64,
 }
 
 impl EpochMetrics {
@@ -175,6 +184,7 @@ impl EpochMetrics {
         self.kernels_by_stage = c.by_stage();
         self.time_by_stage = c.time_by_stage();
         self.arena = c.arena;
+        self.dispatch_retries = c.dispatch_retries;
     }
 
     /// Fraction of batch-slot feature reads served by the resident cache
@@ -212,6 +222,9 @@ impl EpochMetrics {
         self.batches += other.batches;
         self.dropped_nodes += other.dropped_nodes;
         self.dropped_edges += other.dropped_edges;
+        self.dispatch_retries += other.dispatch_retries;
+        self.producer_recoveries += other.producer_recoveries;
+        self.lane_failovers += other.lane_failovers;
     }
 }
 
@@ -844,6 +857,9 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub(crate) cache: Option<CacheHandle<B>>,
     /// Consumer-side pooled scratch for [`assemble_batch`].
     assemble: AssembleScratch,
+    /// Deterministic fault-injection plan (DESIGN.md §9); `None` (default)
+    /// keeps every probe site a single `Option` check.
+    pub(crate) fault: Option<Arc<FaultPlan>>,
 }
 
 impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
@@ -873,7 +889,18 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             arsenal: ProducerArsenal::default(),
             cache: None,
             assemble: AssembleScratch::default(),
+            fault: None,
         })
+    }
+
+    /// Attach a deterministic fault-injection plan (DESIGN.md §9): the
+    /// backend consults it for dispatch faults (bounded retry), the
+    /// pipelined feed for producer deaths (missing-sequence re-derivation).
+    /// The recovery contract: the trajectory stays bitwise identical to a
+    /// fault-free run; only the retry/recovery counters differ.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.eng.set_fault_plan(plan.clone());
+        self.fault = Some(plan);
     }
 
     /// Pin a resident feature store on this trainer's backend (DESIGN.md
@@ -929,20 +956,44 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
 
     /// Train one epoch; dispatches to the pipelined loop when enabled.
     pub fn train_epoch(&mut self, epoch: u64) -> Result<EpochMetrics> {
+        self.train_epoch_range(epoch, 0, usize::MAX)
+    }
+
+    /// Train the contiguous sub-range `[first, last)` of one epoch's batch
+    /// schedule (`last` is clamped to the schedule length) — the mid-epoch
+    /// resume primitive behind the checkpoint cursor (DESIGN.md §9).
+    /// Sampling is a pure function of `(seed, epoch, batch)`, so computing
+    /// batches `cursor..` of the cursor epoch after reloading params
+    /// reproduces the uninterrupted trajectory bitwise;
+    /// [`Trainer::train_epoch`] is the full range.
+    pub fn train_epoch_range(
+        &mut self,
+        epoch: u64,
+        first: usize,
+        last: usize,
+    ) -> Result<EpochMetrics> {
+        let scfg = self.sampler_cfg();
+        let n_batches = NeighborSampler::new(self.graph, scfg).batches_per_epoch();
+        let last = last.min(n_batches);
+        let first = first.min(last);
         if self.opt.pipeline {
-            pipeline::train_epoch_pipelined(self, epoch)
+            pipeline::train_epoch_pipelined(self, epoch, first, last)
         } else {
-            self.train_epoch_sequential(epoch)
+            self.train_epoch_sequential(epoch, first, last)
         }
     }
 
-    fn train_epoch_sequential(&mut self, epoch: u64) -> Result<EpochMetrics> {
+    fn train_epoch_sequential(
+        &mut self,
+        epoch: u64,
+        first: usize,
+        last: usize,
+    ) -> Result<EpochMetrics> {
         let scfg = self.sampler_cfg();
-        let n_batches = NeighborSampler::new(self.graph, scfg).batches_per_epoch();
         let d = self.exec.d;
         let graph = self.graph;
         let wall0 = Instant::now();
-        let mut m = EpochMetrics { batches: n_batches, ..Default::default() };
+        let mut m = EpochMetrics { batches: last - first, ..Default::default() };
         self.eng.reset_counters(false);
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
@@ -959,12 +1010,13 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             seed,
         );
         let mut result: Result<()> = Ok(());
-        for b in 0..n_batches {
+        for b in first..last {
             let prep = producer.produce(epoch, b);
             m.cpu_time += prep.cpu_time;
             m.cpu_by_stage += prep.cpu_by_stage;
             m.dropped_nodes += prep.dropped_nodes();
             m.dropped_edges += prep.dropped_edges();
+            self.eng.fault_cursor(epoch, b as u64);
             match self.compute_batch(prep) {
                 Ok((loss, ncorrect, n_seed, bufs)) => {
                     producer.reclaim(bufs);
@@ -1059,6 +1111,9 @@ mod tests {
             batches: 3,
             dropped_nodes: 1,
             dropped_edges: 2,
+            dispatch_retries: 2,
+            producer_recoveries: 1,
+            lane_failovers: 1,
         };
         let b = EpochMetrics {
             loss: 9.0,
@@ -1085,6 +1140,9 @@ mod tests {
             batches: 2,
             dropped_nodes: 0,
             dropped_edges: 1,
+            dispatch_retries: 3,
+            producer_recoveries: 0,
+            lane_failovers: 2,
         };
         a.absorb(&b);
         // Additive counters sum ...
@@ -1110,6 +1168,9 @@ mod tests {
         assert_eq!(a.producer, ProducerStats { fresh: 3, reused: 12, grown: 3 });
         assert_eq!(a.dropped_nodes, 1);
         assert_eq!(a.dropped_edges, 3);
+        assert_eq!(a.dispatch_retries, 5);
+        assert_eq!(a.producer_recoveries, 1);
+        assert_eq!(a.lane_failovers, 3);
         // ... stage rows merge by stage, appending unseen stages ...
         assert!(a.kernels_by_stage.contains(&(Stage::Projection, 5)));
         assert!(a.kernels_by_stage.contains(&(Stage::Head, 1)));

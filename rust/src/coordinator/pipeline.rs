@@ -46,42 +46,88 @@ use super::{
 use crate::graph::HeteroGraph;
 use crate::models::step::Dims;
 use crate::runtime::{ExecBackend, ResidentStore};
-use crate::sampler::{epoch_perm, NeighborSampler, SamplerCfg};
-use crate::util::{Rng, WorkerPool};
+use crate::sampler::{epoch_perm, SamplerCfg};
+use crate::util::{FaultPlan, FaultSite, Rng, WorkerPool};
 
 /// Buffer sets each producer may have in flight (its flow-control credit);
 /// total pipeline depth is `producers × PIPELINE_DEPTH`.
 pub const PIPELINE_DEPTH: usize = 2;
 
+/// One sequence-tagged message from a producer: a prepared batch, or the
+/// tombstone a worker emits when an injected fault kills it (DESIGN.md §9).
+/// Because delivery is FIFO per sender, a tombstone at position `p` also
+/// proves every later position of that producer's stride is lost.
+pub(crate) enum FeedMsg {
+    Batch(PreparedCpu),
+    Died,
+}
+
+/// What [`BatchFeed::recv_next`] delivers for one schedule position: the
+/// prepared batch, or notice that its producer died first and the caller
+/// must re-derive the batch from `(epoch_perm, seq)` — sampling is a pure
+/// function of the schedule, so the re-derived batch is bitwise the one
+/// the dead worker would have produced.
+pub(crate) enum FeedSlot {
+    Batch(PreparedCpu),
+    Lost,
+}
+
 /// The consumer end of a multi-producer batch pipeline: receives
 /// sequence-tagged batches, restores global order, and routes consumed
 /// buffers back to their producers.
 pub(crate) struct BatchFeed {
-    rx: Receiver<(usize, PreparedCpu)>,
+    rx: Receiver<(usize, FeedMsg)>,
     back: Vec<Sender<BatchBufs>>,
     /// Fixed-capacity reorder ring indexed by `position % capacity`; the
     /// credit bound keeps every in-flight position within one window.
     ring: Vec<Option<PreparedCpu>>,
+    /// Producers that sent a death tombstone: every undelivered position of
+    /// `back.len()`-strided producer `p` with `dead[p]` is a missing
+    /// sequence number.
+    dead: Vec<bool>,
     next: usize,
     leftover: Vec<BatchBufs>,
 }
 
 impl BatchFeed {
-    /// Deliver the next batch in exact schedule order, buffering
-    /// out-of-order arrivals in the ring.
-    pub(crate) fn recv_next(&mut self) -> Result<PreparedCpu> {
+    /// Deliver the next schedule position in exact global order, buffering
+    /// out-of-order arrivals in the ring. A position whose producer died
+    /// before delivering it comes back as [`FeedSlot::Lost`] — the reorder
+    /// ring's missing-sequence detection.
+    pub(crate) fn recv_next(&mut self) -> Result<FeedSlot> {
         let cap = self.ring.len();
         if let Some(p) = self.ring[self.next % cap].take() {
             self.next += 1;
-            return Ok(p);
+            return Ok(FeedSlot::Batch(p));
+        }
+        if self.dead[self.next % self.back.len()] {
+            // The owner of this sequence died and nothing for it is
+            // buffered; per-sender FIFO order means nothing is in flight
+            // either. Report the hole instead of blocking forever.
+            self.next += 1;
+            return Ok(FeedSlot::Lost);
         }
         loop {
-            let (pos, p) = self.rx.recv().map_err(|_| {
+            let (pos, msg) = self.rx.recv().map_err(|_| {
                 anyhow!("batch producers disconnected before position {}", self.next)
             })?;
+            let p = match msg {
+                FeedMsg::Batch(p) => p,
+                FeedMsg::Died => {
+                    self.dead[pos % self.back.len()] = true;
+                    if pos == self.next {
+                        self.next += 1;
+                        return Ok(FeedSlot::Lost);
+                    }
+                    // Tombstone for a later position: keep draining — the
+                    // producer that owns `next` is still alive (a dead
+                    // owner would have been caught above).
+                    continue;
+                }
+            };
             if pos == self.next {
                 self.next += 1;
-                return Ok(p);
+                return Ok(FeedSlot::Batch(p));
             }
             debug_assert!(pos > self.next, "position {pos} delivered twice");
             assert!(
@@ -113,8 +159,10 @@ impl BatchFeed {
                 self.leftover.push(p.into_bufs());
             }
         }
-        while let Ok((_, p)) = self.rx.try_recv() {
-            self.leftover.push(p.into_bufs());
+        while let Ok((_, msg)) = self.rx.try_recv() {
+            if let FeedMsg::Batch(p) = msg {
+                self.leftover.push(p.into_bufs());
+            }
         }
         self.leftover
     }
@@ -128,7 +176,10 @@ impl BatchFeed {
 /// shuffles (DESIGN.md §5). `cache` is the run's shared resident-store
 /// index, if a feature cache is attached. Each worker's final state arrives
 /// on the returned state channel once it exits; the caller drains it after
-/// dropping/finishing the feed.
+/// dropping/finishing the feed. `fault` is the run's injection plan, if
+/// any: a worker that hits a [`FaultSite::Producer`] entry for one of its
+/// batches dies there — tombstone, state surrender, thread exit — and the
+/// consumer re-derives the hole (DESIGN.md §9).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_feed<'scope, 'env>(
     s: &'scope Scope<'scope, 'env>,
@@ -144,10 +195,11 @@ pub(crate) fn spawn_feed<'scope, 'env>(
     seeds: Vec<ProducerSeed>,
     perm: &Arc<Vec<u32>>,
     cache: Option<&Arc<ResidentStore>>,
+    fault: Option<&Arc<FaultPlan>>,
 ) -> (BatchFeed, Receiver<ProducerState>) {
     let m = producers.max(1);
     assert_eq!(seeds.len(), m, "one seed per producer");
-    let (tx, rx) = sync_channel::<(usize, PreparedCpu)>(m * PIPELINE_DEPTH);
+    let (tx, rx) = sync_channel::<(usize, FeedMsg)>(m * PIPELINE_DEPTH);
     let (state_tx, state_rx) = channel::<ProducerState>();
     let mut back = Vec::with_capacity(m);
     for (pi, mut seed) in seeds.into_iter().enumerate() {
@@ -179,6 +231,7 @@ pub(crate) fn spawn_feed<'scope, 'env>(
         let state_tx = state_tx.clone();
         let rng = rng.clone();
         let cache = cache.cloned();
+        let fault = fault.cloned();
         s.spawn(move || {
             let mut producer =
                 CpuProducer::from_seed(graph, scfg, d, opt, pool, rng, cache, seed);
@@ -190,9 +243,21 @@ pub(crate) fn spawn_feed<'scope, 'env>(
             // consumer's returns.
             producer.preallocate(credit);
             for (pos, b) in my {
+                if fault
+                    .as_ref()
+                    .is_some_and(|p| p.fires(FaultSite::Producer, epoch, b as u64) > 0)
+                {
+                    // Injected death before delivering `pos`: the tombstone
+                    // is the missing-sequence notice (FIFO per sender makes
+                    // it also cover every later stride position), and the
+                    // state surrender below models the runtime reclaiming
+                    // the dead worker's buffers.
+                    let _ = tx.send((pos, FeedMsg::Died));
+                    break;
+                }
                 refill(&mut producer, &brx);
                 let prep = producer.produce(epoch, b);
-                if tx.send((pos, prep)).is_err() {
+                if tx.send((pos, FeedMsg::Batch(prep))).is_err() {
                     break; // consumer bailed
                 }
             }
@@ -211,6 +276,7 @@ pub(crate) fn spawn_feed<'scope, 'env>(
         rx,
         back,
         ring: (0..cap).map(|_| None).collect(),
+        dead: vec![false; m],
         next: 0,
         leftover: Vec::new(),
     };
@@ -233,12 +299,16 @@ fn refill(producer: &mut CpuProducer<'_>, returns: &Receiver<BatchBufs>) {
     }
 }
 
+/// Pipelined epoch over the batch sub-range `[first, last)` (the caller —
+/// [`Trainer::train_epoch_range`] — has already clamped it to the epoch's
+/// schedule length; the full epoch is `[0, batches_per_epoch)`).
 pub fn train_epoch_pipelined<B: ExecBackend>(
     tr: &mut Trainer<'_, '_, B>,
     epoch: u64,
+    first: usize,
+    last: usize,
 ) -> Result<EpochMetrics> {
     let scfg = tr.sampler_cfg();
-    let n_batches = NeighborSampler::new(tr.graph, scfg).batches_per_epoch();
     let d = tr.exec.d;
     let opt = tr.opt;
     let rng = tr.rng.clone();
@@ -248,7 +318,8 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     // lanes' split), so `--producers` never oversubscribes `--threads`.
     let pool = WorkerPool::new(super::replica_thread_budget(tr.cfg.threads, m_prod));
     let seeds = tr.arsenal.checkout(graph, m_prod);
-    let batches: Vec<usize> = (0..n_batches).collect();
+    let batches: Vec<usize> = (first..last).collect();
+    let n_batches = batches.len();
     // One shared epoch permutation + resident-store index for all workers.
     let perm = epoch_perm(graph, &rng, epoch);
     let cache_store = tr.cache.as_ref().map(|h| h.store.clone());
@@ -259,6 +330,7 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let mut total_correct = 0.0f64;
     let mut total_seed = 0usize;
 
+    let fault = tr.fault.clone();
     let mut result: Result<()> = Ok(());
     let mut leftover: Vec<BatchBufs> = Vec::new();
     let state_rx = std::thread::scope(|s| {
@@ -276,10 +348,38 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
             seeds,
             &perm,
             cache_store.as_ref(),
+            fault.as_ref(),
         );
+        // Standby producer for re-deriving batches a dead worker never
+        // delivered — built lazily from an arsenal seed on the first hole,
+        // so the fault-free path allocates nothing for it.
+        let mut standby: Option<CpuProducer<'_>> = None;
         for pos in 0..n_batches {
-            let prep = match feed.recv_next() {
-                Ok(p) => p,
+            let (prep, recovered) = match feed.recv_next() {
+                Ok(FeedSlot::Batch(p)) => (p, false),
+                Ok(FeedSlot::Lost) => {
+                    if standby.is_none() {
+                        let mut seed = tr
+                            .arsenal
+                            .checkout(graph, 1)
+                            .pop()
+                            .expect("arsenal always deals a seed");
+                        seed.scratch.install_epoch_perm(perm.clone(), &rng, epoch);
+                        standby = Some(CpuProducer::from_seed(
+                            graph,
+                            scfg,
+                            d,
+                            opt,
+                            pool,
+                            rng.clone(),
+                            cache_store.clone(),
+                            seed,
+                        ));
+                    }
+                    m.producer_recoveries += 1;
+                    let sb = standby.as_mut().expect("standby just installed");
+                    (sb.produce(epoch, batches[pos]), true)
+                }
                 Err(e) => {
                     result = Err(e);
                     break;
@@ -289,9 +389,18 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
             m.cpu_by_stage += prep.cpu_by_stage;
             m.dropped_nodes += prep.dropped_nodes();
             m.dropped_edges += prep.dropped_edges();
+            tr.eng.fault_cursor(epoch, batches[pos] as u64);
             match tr.compute_batch(prep) {
                 Ok((loss, ncorrect, n_seed, bufs)) => {
-                    feed.recycle(pos, bufs);
+                    if recovered {
+                        // A re-derived batch's buffers go back to the
+                        // standby, not the dead worker's channel, so the
+                        // recovery loop is itself allocation-free after
+                        // its first batch.
+                        standby.as_mut().expect("standby exists").reclaim(bufs);
+                    } else {
+                        feed.recycle(pos, bufs);
+                    }
                     m.loss += loss as f64;
                     total_correct += ncorrect as f64;
                     total_seed += n_seed;
@@ -301,6 +410,9 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
                     break;
                 }
             }
+        }
+        if let Some(sb) = standby.take() {
+            tr.arsenal.checkin(sb.into_state());
         }
         // Dropping the feed's channels unblocks the producers; the scope
         // then joins them, which flushes every state message.

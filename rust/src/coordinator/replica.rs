@@ -38,6 +38,21 @@
 //! producer arsenal persists that state across epochs, extending the
 //! zero-alloc steady state to replica training (DESIGN.md §5).
 //!
+//! **Fault plane (DESIGN.md §9).** With an attached [`FaultPlan`], a
+//! [`FaultSite::Lane`] entry addressed at `(epoch, global batch seq)` kills
+//! whichever lane owns that batch *before* it consumes the batch's prepared
+//! input. The dead lane's remaining slots — the tail of its current round
+//! slice, and its whole slice in every later round — are absorbed by the
+//! first surviving lane: preps keep flowing from the dead lane's own
+//! producers (its feed stays alive), compute moves to the survivor's
+//! backend, and the recovered gradients slot into the all-reduce at exactly
+//! their global batch positions. Because the merge is batch-ordered for any
+//! contiguous assignment, the recovered trajectory is bitwise identical to
+//! the fault-free one. Producer deaths inside a lane's feed are re-derived
+//! on a per-lane standby producer (same contract as the single-backend
+//! pipeline); dispatch faults retry inside the backend. All of it is
+//! default-off and zero-cost without an attached plan.
+//!
 //! Backends must be [`Send`] (each lane thread takes exclusive ownership of
 //! its backend for the round); they need **not** be `Sync`, which is what
 //! lets the `RefCell`-based [`SimBackend`](crate::runtime::SimBackend)
@@ -50,7 +65,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::pipeline::{spawn_feed, BatchFeed};
+use super::pipeline::{spawn_feed, BatchFeed, FeedSlot};
 use super::{
     assemble_batch, lane_producer_count, sampler_cfg, AssembleScratch, BatchBufs, CpuProducer,
     EpochMetrics, OptConfig, PreparedCpu, ProducerArsenal, ProducerState, ProducerStats,
@@ -61,7 +76,7 @@ use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, Ste
 use crate::models::{ModelKind, Params};
 use crate::runtime::{CacheHandle, CpuStageTimes, ExecBackend, ResidentStore, SimBackend};
 use crate::sampler::{epoch_perm, NeighborSampler};
-use crate::util::{HostTensor, Rng, WorkerPool};
+use crate::util::{FaultPlan, FaultSite, HostTensor, Rng, WorkerPool};
 
 /// Default round width (global batches per synchronous update). A constant
 /// — *not* derived from the replica count — so the trajectory is invariant
@@ -75,9 +90,18 @@ pub fn replica_thread_budget(total: usize, replicas: usize) -> usize {
     (total / replicas.max(1)).max(1)
 }
 
-/// What one lane returns for its slice of a round: `(step result,
-/// gradient)` per batch, in batch order.
-type RoundOutput = Result<Vec<(StepResult, Params)>>;
+/// What one lane computed for its slice of a round: `(step result,
+/// gradient)` per batch, in batch order — possibly cut short by an injected
+/// lane fault.
+struct LaneRound {
+    items: Vec<(StepResult, Params)>,
+    /// Offset into the round slice where a [`FaultSite::Lane`] entry killed
+    /// this lane; batches from that offset on were *not* consumed from the
+    /// lane's source and await failover. `None` = ran to completion.
+    died_at: Option<usize>,
+}
+
+type RoundOutput = Result<LaneRound>;
 
 /// One epoch's measurements from a replica group: the aggregated group view
 /// plus each replica's own counters.
@@ -111,6 +135,8 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     /// all sharing one read-only [`ResidentStore`] (DESIGN.md §7). Empty =
     /// cache off. Aligned with `engines`.
     caches: Vec<CacheHandle<B>>,
+    /// Deterministic fault-injection plan (DESIGN.md §9); `None` = off.
+    fault: Option<Arc<FaultPlan>>,
     rng: Rng,
     d: Dims,
 }
@@ -161,9 +187,22 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             engines,
             arsenals,
             caches: Vec::new(),
+            fault: None,
             rng: Rng::new(cfg.seed),
             d,
         })
+    }
+
+    /// Attach a deterministic fault-injection plan (DESIGN.md §9): every
+    /// replica backend consults it for dispatch faults, the lane feeds for
+    /// producer deaths, and the round loop for lane failures. Additive —
+    /// with the default (empty) plan behavior is bitwise identical to not
+    /// calling this at all.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        for e in &self.engines {
+            e.set_fault_plan(plan.clone());
+        }
+        self.fault = Some(plan);
     }
 
     /// Pin one shared resident feature store across every replica backend:
@@ -273,6 +312,7 @@ where
         // the single-backend pipelined path.
         let prod_pool = WorkerPool::new(replica_thread_budget(pool.threads(), m_prod));
         let rng = self.rng.clone();
+        let fault = self.fault.clone();
         let sched = lane_schedule(n_batches, round, n_lanes);
 
         for e in &self.engines {
@@ -294,6 +334,10 @@ where
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
         let mut lane_tallies: Vec<LaneTally> = Vec::new();
+        // Which lanes are still alive; an injected lane fault flips this
+        // for the rest of the epoch (and brands the lane's metrics with a
+        // failover). Fault-free runs never touch it.
+        let mut alive: Vec<bool> = vec![true; n_lanes];
         let mut epoch_result: Result<()> = Ok(());
 
         std::thread::scope(|s| {
@@ -320,6 +364,7 @@ where
                             seeds,
                             &perm,
                             cache_store.as_ref(),
+                            fault.as_ref(),
                         );
                         LaneSource::Feed { feed, state_rx, producers: m_prod }
                     } else {
@@ -336,12 +381,40 @@ where
                             seed,
                         ))
                     };
+                    // A feed-backed lane under a plan with producer deaths
+                    // arms one standby producer to re-derive lost batches
+                    // from `(epoch_perm, seq)`; its state checks back into
+                    // the arsenal at teardown so the steady state stays
+                    // zero-alloc. Off-plan runs skip it entirely.
+                    let standby = match (&src, &fault) {
+                        (LaneSource::Feed { .. }, Some(p))
+                            if p.has_site(FaultSite::Producer) =>
+                        {
+                            let mut seed =
+                                arsenals[i].checkout(graph, 1).pop().expect("one seed");
+                            seed.scratch.install_epoch_perm(perm.clone(), &rng, epoch);
+                            Some(CpuProducer::from_seed(
+                                graph,
+                                scfg,
+                                d,
+                                opt,
+                                pool,
+                                rng.clone(),
+                                cache_store.clone(),
+                                seed,
+                            ))
+                        }
+                        _ => None,
+                    };
                     Lane {
                         eng,
                         src,
+                        standby,
+                        fault: fault.clone(),
                         cache: caches.get(i),
                         assemble: AssembleScratch::default(),
                         pos: 0,
+                        recoveries: 0,
                         cpu_time: Duration::ZERO,
                         cpu_by_stage: CpuStageTimes::default(),
                         batches: 0,
@@ -360,7 +433,7 @@ where
                 std::thread::scope(|rs| {
                     let mut handles = Vec::new();
                     for (li, (lane, &(a, l))) in lanes.iter_mut().zip(&split).enumerate() {
-                        if l == 0 {
+                        if l == 0 || !alive[li] {
                             continue;
                         }
                         let batches: Vec<usize> = (r0 + a..r0 + a + l).collect();
@@ -376,6 +449,54 @@ where
                     }
                 });
 
+                // Failover (DESIGN.md §9): a lane that died this round left
+                // the tail of its slice unconsumed; a lane dead from an
+                // earlier round left its whole slice. The first surviving
+                // lane absorbs those slots in order — preps still come from
+                // the dead lane's own producers, compute moves to the
+                // survivor's backend — so the merge below sees every batch
+                // of the round at its global position.
+                for li in 0..n_lanes {
+                    let (a, l) = split[li];
+                    if l == 0 {
+                        continue;
+                    }
+                    let died_off = if alive[li] {
+                        let Some(Ok(r)) = &round_out[li] else { continue };
+                        let Some(k) = r.died_at else { continue };
+                        alive[li] = false;
+                        k
+                    } else {
+                        0
+                    };
+                    let Some(surv) = alive.iter().position(|&x| x) else {
+                        epoch_result = Err(anyhow!(
+                            "injected lane fault left no surviving replicas \
+                             (epoch {epoch}, round at batch {r0})"
+                        ));
+                        break 'rounds;
+                    };
+                    let slots: Vec<usize> = (r0 + a + died_off..r0 + a + l).collect();
+                    let recovered = {
+                        let (dead, survl) = lane_pair(&mut lanes, li, surv);
+                        absorb_slots(dead, survl, d, opt, model, schema, psnap, epoch, &slots)
+                    };
+                    match recovered {
+                        Ok(items) => {
+                            if let Some(Ok(r)) = &mut round_out[li] {
+                                r.items.extend(items);
+                            } else {
+                                round_out[li] =
+                                    Some(Ok(LaneRound { items, died_at: None }));
+                            }
+                        }
+                        Err(e) => {
+                            epoch_result = Err(e);
+                            break 'rounds;
+                        }
+                    }
+                }
+
                 // Fixed-order all-reduce: lanes hold contiguous batch
                 // ranges, so iterating replicas in index order and batches
                 // in lane order chains the f32 sum in global batch order —
@@ -384,8 +505,8 @@ where
                 let mut count = 0usize;
                 for lane_res in round_out.into_iter().flatten() {
                     match lane_res {
-                        Ok(items) => {
-                            for (res, g) in items {
+                        Ok(r) => {
+                            for (res, g) in r.items {
                                 loss_sum += res.loss as f64;
                                 total_correct += res.ncorrect as f64;
                                 total_seed += res.n_seed;
@@ -424,6 +545,9 @@ where
                     }
                     LaneSource::Inline(p) => arsenals[i].checkin(p.into_state()),
                 }
+                if let Some(sb) = lane.standby {
+                    arsenals[i].checkin(sb.into_state());
+                }
             }
         });
         epoch_result?;
@@ -437,6 +561,8 @@ where
                 batches: t.batches,
                 dropped_nodes: t.dropped_nodes,
                 dropped_edges: t.dropped_edges,
+                producer_recoveries: t.recoveries as u64,
+                lane_failovers: u64::from(!alive[i]),
                 ..Default::default()
             };
             pm.fill_from_counters(&eng.counters().borrow());
@@ -551,6 +677,7 @@ where
                                 let prep = rx.recv().map_err(|_| {
                                     anyhow!("serve producer for lane {li} exited early")
                                 })?;
+                                eng.fault_cursor(0, bi as u64);
                                 let t0 = Instant::now();
                                 let (batch, spent) = assemble_batch(
                                     &*eng, &d, schema, cache, &mut assemble, prep,
@@ -574,6 +701,7 @@ where
                             let mut err = None;
                             for &bi in lane_sched {
                                 let prep = p.produce_request(bi as u64, &batches[bi]);
+                                eng.fault_cursor(0, bi as u64);
                                 let t0 = Instant::now();
                                 let step = assemble_batch(
                                     &*eng, &d, schema, cache, &mut assemble, prep,
@@ -640,6 +768,13 @@ enum LaneSource<'g> {
 struct Lane<'e, 'g, B: ExecBackend> {
     eng: &'e mut B,
     src: LaneSource<'g>,
+    /// Re-derives batches lost to injected producer deaths from
+    /// `(epoch_perm, seq)` (DESIGN.md §9). Armed only for feed-backed lanes
+    /// under a plan with [`FaultSite::Producer`] entries.
+    standby: Option<CpuProducer<'g>>,
+    /// The attached fault plan, consulted per batch for lane deaths;
+    /// `None` = zero-cost fault-free path.
+    fault: Option<Arc<FaultPlan>>,
     /// This replica's feature-cache handle (shared read-only store, own
     /// device upload); `None` = cache off.
     cache: Option<&'e CacheHandle<B>>,
@@ -647,6 +782,8 @@ struct Lane<'e, 'g, B: ExecBackend> {
     assemble: AssembleScratch,
     /// Next position in this lane's schedule (feed sequence numbering).
     pos: usize,
+    /// Batches re-derived on the standby after an injected producer death.
+    recoveries: usize,
     cpu_time: Duration,
     cpu_by_stage: CpuStageTimes,
     batches: usize,
@@ -661,6 +798,7 @@ struct LaneTally {
     batches: usize,
     dropped_nodes: usize,
     dropped_edges: usize,
+    recoveries: usize,
 }
 
 impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
@@ -681,29 +819,33 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
     ) -> RoundOutput {
         let exec = StepExecutor::new(&*self.eng, model, opt);
         let mut out = Vec::with_capacity(batches.len());
-        for &b in batches {
-            let prep = match &mut self.src {
-                LaneSource::Feed { feed, .. } => feed.recv_next()?,
-                LaneSource::Inline(p) => p.produce(epoch, b),
-            };
+        for (off, &b) in batches.iter().enumerate() {
+            // An injected lane death fires *before* the batch's prep is
+            // consumed, so the failover path can pull it from this lane's
+            // still-running source.
+            if let Some(p) = &self.fault {
+                if p.fires(FaultSite::Lane, epoch, b as u64) > 0 {
+                    return Ok(LaneRound { items: out, died_at: Some(off) });
+                }
+            }
+            let (prep, from_standby) =
+                next_prep(&mut self.src, &mut self.standby, &mut self.recoveries, epoch, b)?;
             self.cpu_time += prep.cpu_time;
             self.cpu_by_stage += prep.cpu_by_stage;
             self.dropped_nodes += prep.dropped_nodes();
             self.dropped_edges += prep.dropped_edges();
             self.batches += 1;
+            self.eng.fault_cursor(epoch, b as u64);
             let (batch, spent) =
                 assemble_batch(&*self.eng, &d, schema, self.cache, &mut self.assemble, prep)?;
             let res = exec.grad_step(params, schema, &batch)?;
             let bufs = spent.reclaim(batch);
             let pos = self.pos;
             self.pos += 1;
-            match &mut self.src {
-                LaneSource::Feed { feed, .. } => feed.recycle(pos, bufs),
-                LaneSource::Inline(p) => p.reclaim(bufs),
-            }
+            route_bufs(&mut self.src, &mut self.standby, pos, bufs, from_standby);
             out.push(res);
         }
-        Ok(out)
+        Ok(LaneRound { items: out, died_at: None })
     }
 
     fn tally(&self) -> LaneTally {
@@ -713,7 +855,109 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
             batches: self.batches,
             dropped_nodes: self.dropped_nodes,
             dropped_edges: self.dropped_edges,
+            recoveries: self.recoveries,
         }
+    }
+}
+
+/// Pull a lane's next scheduled prepared batch from its source,
+/// re-deriving it on the standby producer when an injected producer death
+/// lost the sequence number. Returns `(prep, came_from_standby)`.
+fn next_prep<'g>(
+    src: &mut LaneSource<'g>,
+    standby: &mut Option<CpuProducer<'g>>,
+    recoveries: &mut usize,
+    epoch: u64,
+    b: usize,
+) -> Result<(PreparedCpu, bool)> {
+    match src {
+        LaneSource::Feed { feed, .. } => match feed.recv_next()? {
+            FeedSlot::Batch(p) => Ok((p, false)),
+            FeedSlot::Lost => {
+                let sb = standby
+                    .as_mut()
+                    .expect("standby producer armed whenever producer faults are planned");
+                *recoveries += 1;
+                Ok((sb.produce(epoch, b), true))
+            }
+        },
+        LaneSource::Inline(p) => Ok((p.produce(epoch, b), false)),
+    }
+}
+
+/// Cycle a consumed batch's buffers back to whoever produced them: the feed
+/// position's producer, the standby (for re-derived batches), or the inline
+/// producer.
+fn route_bufs(
+    src: &mut LaneSource<'_>,
+    standby: &mut Option<CpuProducer<'_>>,
+    pos: usize,
+    bufs: BatchBufs,
+    from_standby: bool,
+) {
+    if from_standby {
+        standby.as_mut().expect("standby produced this batch").reclaim(bufs);
+        return;
+    }
+    match src {
+        LaneSource::Feed { feed, .. } => feed.recycle(pos, bufs),
+        LaneSource::Inline(p) => p.reclaim(bufs),
+    }
+}
+
+/// Compute the global batches `slots` that a dead lane left behind: preps
+/// come from the dead lane's own source (its producers keep streaming its
+/// fixed schedule), compute runs on the surviving lane's backend against
+/// the round's parameter snapshot. Gradients return in slot order so the
+/// caller can splice them into the all-reduce at their global positions.
+#[allow(clippy::too_many_arguments)]
+fn absorb_slots<B: ExecBackend>(
+    dead: &mut Lane<'_, '_, B>,
+    surv: &mut Lane<'_, '_, B>,
+    d: Dims,
+    opt: OptConfig,
+    model: ModelKind,
+    schema: &SchemaTensors,
+    params: &Params,
+    epoch: u64,
+    slots: &[usize],
+) -> Result<Vec<(StepResult, Params)>> {
+    let exec = StepExecutor::new(&*surv.eng, model, opt);
+    let mut out = Vec::with_capacity(slots.len());
+    for &b in slots {
+        let (prep, from_standby) =
+            next_prep(&mut dead.src, &mut dead.standby, &mut dead.recoveries, epoch, b)?;
+        surv.cpu_time += prep.cpu_time;
+        surv.cpu_by_stage += prep.cpu_by_stage;
+        surv.dropped_nodes += prep.dropped_nodes();
+        surv.dropped_edges += prep.dropped_edges();
+        surv.batches += 1;
+        surv.eng.fault_cursor(epoch, b as u64);
+        let (batch, spent) =
+            assemble_batch(&*surv.eng, &d, schema, surv.cache, &mut surv.assemble, prep)?;
+        let res = exec.grad_step(params, schema, &batch)?;
+        let bufs = spent.reclaim(batch);
+        let pos = dead.pos;
+        dead.pos += 1;
+        route_bufs(&mut dead.src, &mut dead.standby, pos, bufs, from_standby);
+        out.push(res);
+    }
+    Ok(out)
+}
+
+/// Disjoint `&mut` access to two distinct lanes (dead + survivor).
+fn lane_pair<'a, 'e, 'g, B: ExecBackend>(
+    lanes: &'a mut [Lane<'e, 'g, B>],
+    i: usize,
+    j: usize,
+) -> (&'a mut Lane<'e, 'g, B>, &'a mut Lane<'e, 'g, B>) {
+    assert_ne!(i, j, "a lane cannot absorb its own slots");
+    if i < j {
+        let (lo, hi) = lanes.split_at_mut(j);
+        (&mut lo[i], &mut hi[0])
+    } else {
+        let (lo, hi) = lanes.split_at_mut(i);
+        (&mut hi[0], &mut lo[j])
     }
 }
 

@@ -34,6 +34,12 @@
 //!   --record-trace P / --replay-trace P (serve: serialize the arrival
 //!   schedule / replay one — same coalescing, bitwise-identical
 //!   predictions at any --replicas/--producers/--threads/pipeline)
+//!   --fault-spec S / --fault-seed N (train + serve, sim backend: the
+//!   deterministic fault plane — seeded dispatch/producer/lane faults
+//!   with bounded retry, standby re-derivation, and lane failover; the
+//!   recovered trajectory stays bit-identical — DESIGN.md §9)
+//!   --max-queue N (serve: admission-control bound on the virtual batch
+//!   queue; overflowing batches are shed deterministically)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
@@ -105,11 +111,17 @@ fn print_usage() {
          \x20               results bit-identical for every F)\n\
          \x20 --load-ckpt P --save-ckpt P (train + serve: parameter\n\
          \x20               checkpoints; env vars remain as fallback)\n\
+         \x20 --fault-spec S --fault-seed N (train + serve, sim: seeded\n\
+         \x20               fault injection — site@E:S[xN] / site~P over\n\
+         \x20               dispatch|producer|lane; recovery keeps the\n\
+         \x20               trajectory bit-identical — DESIGN.md §9)\n\
          serve flags:\n\
          \x20 --rate F (virtual req/s)  --requests N  --coalesce-window T\n\
          \x20 --record-trace P  --replay-trace P (deterministic replay:\n\
          \x20               same coalescing + bitwise predictions at any\n\
          \x20               parallelism — DESIGN.md §8)\n\
+         \x20 --max-queue N (admission control: deterministically shed\n\
+         \x20               batches beyond this virtual-queue depth)\n\
          see README.md and DESIGN.md for details"
     );
 }
@@ -156,6 +168,20 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
         && !matches!(action, Action::Serve)
     {
         bail!("--record-trace/--replay-trace are only supported by the `serve` subcommand");
+    }
+    if cfg.fault_spec.is_some() {
+        if !matches!(action, Action::Train | Action::Serve) {
+            bail!("--fault-spec is only supported by the `train` and `serve` subcommands");
+        }
+        if cfg.backend != BackendKind::Sim {
+            bail!(
+                "--fault-spec requires the sim backend (the fault plane hooks \
+                 its dispatch path; PJRT dispatches are opaque)"
+            );
+        }
+    }
+    if cfg.max_queue.is_some() && !matches!(action, Action::Serve) {
+        bail!("--max-queue is only supported by the `serve` subcommand");
     }
     if matches!(action, Action::Serve) {
         if cfg.backend != BackendKind::Sim {
@@ -218,6 +244,9 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         let store = build_cache(cfg, &graph, probe.cst("CSLOTS"));
         group.attach_cache(store)?;
     }
+    if let Some(plan) = cfg.fault_plan()? {
+        group.set_fault_plan(Arc::new(plan));
+    }
     let threads_per = replica_thread_budget(cfg.train.threads, group.replicas());
     load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
     println!(
@@ -242,6 +271,12 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         } else {
             String::new()
         };
+        if cfg.fault_spec.is_some() {
+            println!(
+                "  faults: dispatch retries {} | producer recoveries {} | lane failovers {}",
+                m.group.dispatch_retries, m.group.producer_recoveries, m.group.lane_failovers,
+            );
+        }
         println!(
             "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {} (per replica: {})",
             m.group.loss,
@@ -294,6 +329,9 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         let store = build_cache(cfg, &graph, probe.cst("CSLOTS"));
         group.attach_cache(store)?;
     }
+    if let Some(plan) = cfg.fault_plan()? {
+        group.set_fault_plan(Arc::new(plan));
+    }
     load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
     let trace = match &cfg.replay_trace {
         Some(p) => {
@@ -328,21 +366,37 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         cfg.coalesce_window,
         trace.requests.len(),
     );
-    let out = serving::serve(&mut group, &trace, cfg.train.batch_size, cfg.coalesce_window)?;
-    let (mut h2d, mut d2h) = (0u64, 0u64);
+    let out = serving::serve_bounded(
+        &mut group,
+        &trace,
+        cfg.train.batch_size,
+        cfg.coalesce_window,
+        cfg.max_queue,
+    )?;
+    let (mut h2d, mut d2h, mut retries) = (0u64, 0u64, 0u64);
     for e in group.engines() {
         let c = e.counters().borrow();
         h2d += c.h2d_bytes;
         d2h += c.d2h_bytes;
+        retries += c.dispatch_retries;
     }
     let ps = group.producer_stats();
     let h = &out.hist;
+    let shed_note = if cfg.max_queue.is_some() {
+        format!(" | shed {} requests (peak backlog {})", h.shed(), out.max_backlog)
+    } else {
+        String::new()
+    };
     println!(
-        "served {} requests as {} coalesced batches | wall {:>8.1?}",
+        "served {} requests as {} coalesced batches{} | wall {:>8.1?}",
         h.count(),
         out.batches.len(),
+        shed_note,
         out.wall,
     );
+    if cfg.fault_spec.is_some() {
+        println!("faults: dispatch retries {retries}");
+    }
     println!(
         "latency p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | {:.0} req/s (virtual)",
         h.percentile(50.0) as f64 / 1e3,
@@ -487,6 +541,9 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         let store = build_cache(cfg, &graph, eng.cst("CSLOTS"));
         tr.attach_cache(store)?;
     }
+    if let Some(plan) = cfg.fault_plan()? {
+        tr.set_fault_plan(Arc::new(plan));
+    }
     load_ckpt(cfg.load_ckpt.as_deref(), &mut tr.params)?;
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
@@ -495,6 +552,12 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         } else {
             String::new()
         };
+        if cfg.fault_spec.is_some() {
+            println!(
+                "  faults: dispatch retries {} | producer recoveries {}",
+                m.dispatch_retries, m.producer_recoveries,
+            );
+        }
         println!(
             "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {}",
             m.loss,

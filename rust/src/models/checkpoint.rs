@@ -1,99 +1,245 @@
 //! Parameter checkpointing: a small self-describing binary format (no
-//! serde offline). Layout: magic, version, the five dims, then each
-//! parameter tensor as little-endian f32, in a fixed order.
+//! serde offline). Layout: magic, version, a mid-epoch resume cursor
+//! (v2), the five dims, each parameter tensor as little-endian f32 in a
+//! fixed order, then a CRC32 trailer over everything before it (v2).
+//!
+//! Crash consistency (DESIGN.md §9): [`save_at`] writes the whole image to
+//! a `*.tmp` sibling, fsyncs, and renames it into place — a crash mid-save
+//! leaves either the old checkpoint or the new one, never a torn file —
+//! and [`load`] validates magic, version, per-tensor lengths (before any
+//! allocation sized from file bytes), and the CRC, returning a typed
+//! [`CheckpointError`] instead of panicking on any malformed input.
+//! Version-1 files (no cursor, no CRC) still load.
 
-use std::io::{Read, Write};
+use std::fmt;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use super::Params;
 
 const MAGIC: &[u8; 8] = b"HIFUSEck";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
+/// Everything that can be wrong with a checkpoint file, as data — callers
+/// (and the negative tests) match on the variant via
+/// `err.downcast_ref::<CheckpointError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The file does not start with the checkpoint magic.
+    BadMagic,
+    /// Recognized magic but a version this build cannot read.
+    UnsupportedVersion(u32),
+    /// The file ends before the named field is complete.
+    Truncated { what: &'static str },
+    /// A tensor's stored length disagrees with the stored dims.
+    ShapeMismatch { name: &'static str, got: usize, want: usize },
+    /// The CRC32 trailer does not match the file contents.
+    CrcMismatch { stored: u32, computed: u32 },
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    write_u32(w, xs.len() as u32)?;
-    for &x in xs {
-        w.write_all(&x.to_le_bytes())?;
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::BadMagic => write!(f, "not a hifuse checkpoint (bad magic)"),
+            CheckpointError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v}")
+            }
+            CheckpointError::Truncated { what } => {
+                write!(f, "checkpoint truncated while reading {what}")
+            }
+            CheckpointError::ShapeMismatch { name, got, want } => {
+                write!(f, "tensor {name} has {got} elements, expected {want}")
+            }
+            CheckpointError::CrcMismatch { stored, computed } => {
+                write!(f, "checkpoint CRC mismatch (stored {stored:#010x}, computed {computed:#010x})")
+            }
+        }
     }
-    Ok(())
 }
 
-fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
-    let n = read_u32(r)? as usize;
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+impl std::error::Error for CheckpointError {}
+
+/// Mid-epoch resume cursor: the training position a checkpoint captured —
+/// the first `batch` batches of epoch `epoch` are already applied to the
+/// saved parameters, so resuming runs `train_epoch_range(epoch, batch, ..)`
+/// and then the remaining epochs (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Cursor {
+    pub epoch: u64,
+    pub batch: u64,
 }
 
-/// Save trainable parameters to `path`.
-pub fn save(params: &Params, path: &Path) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
-    let mut w = std::io::BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    write_u32(&mut w, VERSION)?;
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    push_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over the checkpoint image; every
+/// out-of-bounds read is a typed [`CheckpointError::Truncated`].
+struct Reader<'a> {
+    data: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CheckpointError> {
+        let end = self.at.checked_add(n).ok_or(CheckpointError::Truncated { what })?;
+        if end > self.data.len() {
+            return Err(CheckpointError::Truncated { what });
+        }
+        let s = &self.data[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, CheckpointError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CheckpointError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("eight bytes")))
+    }
+
+    /// Read one tensor, validating its stored length against `want`
+    /// *before* allocating anything sized from file bytes.
+    fn f32s(&mut self, name: &'static str, want: usize) -> Result<Vec<f32>, CheckpointError> {
+        let got = self.u32(name)? as usize;
+        if got != want {
+            return Err(CheckpointError::ShapeMismatch { name, got, want });
+        }
+        let bytes = self.take(got * 4, name)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn encode(params: &Params, cursor: Cursor) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, VERSION);
+    out.extend_from_slice(&cursor.epoch.to_le_bytes());
+    out.extend_from_slice(&cursor.batch.to_le_bytes());
     for d in [params.rpad, params.f, params.h, params.c] {
-        write_u32(&mut w, d as u32)?;
+        push_u32(&mut out, d as u32);
     }
     for t in [&params.w0, &params.w1, &params.a_src0, &params.a_dst0, &params.a_src1,
               &params.a_dst1] {
-        write_f32s(&mut w, t)?;
+        push_f32s(&mut out, t);
+    }
+    let crc = crc32(&out);
+    push_u32(&mut out, crc);
+    out
+}
+
+/// Save trainable parameters to `path` (cursor = start of epoch 0; use
+/// [`save_at`] to record a mid-training position).
+pub fn save(params: &Params, path: &Path) -> Result<()> {
+    save_at(params, Cursor::default(), path)
+}
+
+/// Crash-consistently save parameters plus a resume cursor: the image goes
+/// to `<path>.tmp`, is fsynced, and is renamed over `path` — readers see
+/// the old file or the new file, never a partial write.
+pub fn save_at(params: &Params, cursor: Cursor, path: &Path) -> Result<()> {
+    let image = encode(params, cursor);
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let write = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        std::io::Write::write_all(&mut f, &image)?;
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("renaming {tmp:?} into {path:?}"));
     }
     Ok(())
 }
 
 /// Load parameters from `path`; dims must match the running profile.
 pub fn load(path: &Path) -> Result<Params> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let mut r = std::io::BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not a hifuse checkpoint");
+    Ok(load_with_cursor(path)?.0)
+}
+
+/// Load parameters plus the resume cursor (v1 files report the default
+/// cursor). Every malformed input — wrong magic or version, truncation
+/// anywhere, tensor/dim disagreement, CRC mismatch — is a typed
+/// [`CheckpointError`] wrapped with the path, never a panic.
+pub fn load_with_cursor(path: &Path) -> Result<(Params, Cursor)> {
+    let data = std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+    decode(&data).with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+fn decode(data: &[u8]) -> Result<(Params, Cursor)> {
+    let mut r = Reader { data, at: 0 };
+    if r.take(MAGIC.len(), "magic").map_err(anyhow::Error::new)? != MAGIC {
+        return Err(CheckpointError::BadMagic.into());
     }
-    let ver = read_u32(&mut r)?;
-    if ver != VERSION {
-        bail!("{path:?}: unsupported checkpoint version {ver}");
+    let ver = r.u32("version")?;
+    if ver != 1 && ver != VERSION {
+        return Err(CheckpointError::UnsupportedVersion(ver).into());
     }
-    let rpad = read_u32(&mut r)? as usize;
-    let fdim = read_u32(&mut r)? as usize;
-    let h = read_u32(&mut r)? as usize;
-    let c = read_u32(&mut r)? as usize;
-    let mut p = Params::init(rpad, fdim, h, c, 0);
-    p.w0 = read_f32s(&mut r)?;
-    p.w1 = read_f32s(&mut r)?;
-    p.a_src0 = read_f32s(&mut r)?;
-    p.a_dst0 = read_f32s(&mut r)?;
-    p.a_src1 = read_f32s(&mut r)?;
-    p.a_dst1 = read_f32s(&mut r)?;
-    for (name, t, want) in [
-        ("w0", p.w0.len(), rpad * fdim * h),
-        ("w1", p.w1.len(), rpad * h * c),
-        ("a_src0", p.a_src0.len(), rpad * h),
-        ("a_dst0", p.a_dst0.len(), rpad * h),
-        ("a_src1", p.a_src1.len(), rpad * c),
-        ("a_dst1", p.a_dst1.len(), rpad * c),
-    ] {
-        if t != want {
-            bail!("{path:?}: tensor {name} has {t} elements, expected {want}");
+    if ver >= 2 {
+        // The CRC trailer covers every byte before it; verify up front so
+        // a bit-flipped image fails as corrupt, not as some downstream
+        // shape error.
+        if data.len() < 4 {
+            return Err(CheckpointError::Truncated { what: "crc trailer" }.into());
         }
+        let body = &data[..data.len() - 4];
+        let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().expect("four bytes"));
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(CheckpointError::CrcMismatch { stored, computed }.into());
+        }
+        r.data = body;
     }
-    Ok(p)
+    let cursor = if ver >= 2 {
+        Cursor { epoch: r.u64("cursor epoch")?, batch: r.u64("cursor batch")? }
+    } else {
+        Cursor::default()
+    };
+    let rpad = r.u32("dim rpad")? as usize;
+    let fdim = r.u32("dim f")? as usize;
+    let h = r.u32("dim h")? as usize;
+    let c = r.u32("dim c")? as usize;
+    let mut p = Params::init(rpad, fdim, h, c, 0);
+    p.w0 = r.f32s("w0", rpad * fdim * h)?;
+    p.w1 = r.f32s("w1", rpad * h * c)?;
+    p.a_src0 = r.f32s("a_src0", rpad * h)?;
+    p.a_dst0 = r.f32s("a_dst0", rpad * h)?;
+    p.a_src1 = r.f32s("a_src1", rpad * c)?;
+    p.a_dst1 = r.f32s("a_dst1", rpad * c)?;
+    Ok((p, cursor))
 }
 
 #[cfg(test)]
@@ -120,10 +266,24 @@ mod tests {
     }
 
     #[test]
+    fn cursor_roundtrips_and_tmp_never_lingers() {
+        let p = Params::init(2, 4, 8, 2, 9);
+        let path = std::env::temp_dir().join("hifuse_ckpt_cursor.bin");
+        save_at(&p, Cursor { epoch: 3, batch: 7 }, &path).unwrap();
+        let (_, cur) = load_with_cursor(&path).unwrap();
+        assert_eq!(cur, Cursor { epoch: 3, batch: 7 });
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        assert!(!std::path::Path::new(&tmp).exists(), "atomic save left its tmp file");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_garbage_files() {
         let path = std::env::temp_dir().join("hifuse_ckpt_garbage.bin");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err();
+        assert_eq!(err.downcast_ref::<CheckpointError>(), Some(&CheckpointError::BadMagic));
         std::fs::remove_file(path).ok();
     }
 
@@ -133,8 +293,74 @@ mod tests {
         let path = std::env::temp_dir().join("hifuse_ckpt_trunc.bin");
         save(&p, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        for cut in [bytes.len() / 2, 10, 3] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = load(&path).unwrap_err();
+            assert!(
+                err.downcast_ref::<CheckpointError>().is_some(),
+                "cut at {cut}: expected a typed checkpoint error, got {err:#}"
+            );
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bit_flips_via_crc() {
+        let p = Params::init(2, 4, 8, 2, 11);
+        let path = std::env::temp_dir().join("hifuse_ckpt_bitflip.bin");
+        save(&p, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CheckpointError>(),
+                Some(CheckpointError::CrcMismatch { .. })
+            ),
+            "expected CRC mismatch, got {err:#}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let path = std::env::temp_dir().join("hifuse_ckpt_badver.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(&CheckpointError::UnsupportedVersion(99))
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_without_allocating_from_length_field() {
+        // Hand-build a v1 image (no CRC shielding the tamper) whose w0
+        // length field claims far more elements than the dims allow; the
+        // loader must fail typed — before trusting the length.
+        let path = std::env::temp_dir().join("hifuse_ckpt_shape.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        for d in [2u32, 4, 8, 2] {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd w0 length
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CheckpointError>(),
+                Some(CheckpointError::ShapeMismatch { name: "w0", .. })
+            ),
+            "expected w0 shape mismatch, got {err:#}"
+        );
         std::fs::remove_file(path).ok();
     }
 }

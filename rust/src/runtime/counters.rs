@@ -135,6 +135,12 @@ pub struct Counters {
     /// Batch-slot feature reads that had to be gathered on the CPU and
     /// uploaded (the miss rows of the gather dispatch).
     pub cache_misses: u64,
+    /// Transient dispatch failures absorbed by the backend's bounded
+    /// retry-with-backoff (DESIGN.md §9). Only injected faults produce
+    /// these today (the sim backend cannot fail spontaneously), so under a
+    /// `--fault-spec` this equals the number of planned dispatch failures
+    /// actually exercised; it is 0 on every fault-free run.
+    pub dispatch_retries: u64,
     /// Snapshot of the backend's buffer-arena traffic (cumulative since
     /// backend construction; refreshed by the sim backend on every
     /// dispatch, all-zero on backends without an arena).
@@ -156,6 +162,7 @@ impl Counters {
         self.d2h_bytes = 0;
         self.cache_hits = 0;
         self.cache_misses = 0;
+        self.dispatch_retries = 0;
         self.epoch_start = Some(std::time::Instant::now());
     }
 

@@ -34,11 +34,12 @@ pub use pjrt::{DevTensor, Engine};
 pub use sim::{SimBackend, SimDev};
 
 use std::cell::RefCell;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::util::HostTensor;
+use crate::util::{FaultPlan, HostTensor};
 
 /// A module argument: host data (uploaded per dispatch) or an output buffer
 /// from a previous dispatch kept resident on the backend's device — the
@@ -134,6 +135,21 @@ pub trait ExecBackend {
         *c = Counters::new(keep_events);
         c.reset();
     }
+
+    /// Attach a deterministic fault-injection plan (DESIGN.md §9). The
+    /// backend consults it for [`FaultSite::Dispatch`](crate::util::FaultSite)
+    /// entries at the cursor set by [`ExecBackend::fault_cursor`] and
+    /// performs a bounded retry-with-backoff, counting each simulated
+    /// failure in [`Counters::dispatch_retries`]. Backends without
+    /// injection support ignore the plan (the default).
+    fn set_fault_plan(&self, _plan: Arc<FaultPlan>) {}
+
+    /// Address the next dispatches at `(epoch, seq)` for fault injection.
+    /// Called by the coordinator before each batch's kernel chain; a
+    /// planned dispatch fault fires on the first dispatch after the cursor
+    /// moves, so retries are counted once per addressed batch. No-op
+    /// without an attached plan (the default implementation is empty).
+    fn fault_cursor(&self, _epoch: u64, _seq: u64) {}
 
     /// Place a host tensor on the device as an explicit H2D copy outside
     /// any dispatch, transferring only the leading `valid_elems` elements —

@@ -17,6 +17,7 @@
 
 use std::cell::RefCell;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -25,7 +26,7 @@ use super::{
     check_args, host_dtype, Arena, ArenaStats, Arg, Counters, DType, DevBuf, ExecBackend,
     Manifest, ModuleSpec, Phase, Stage,
 };
-use crate::util::{HostTensor, WorkerPool};
+use crate::util::{FaultPlan, FaultSite, HostTensor, WorkerPool, MAX_DISPATCH_RETRIES};
 
 /// LeakyReLU negative slope (ref.py `LEAKY_SLOPE`).
 const LEAKY_SLOPE: f32 = 0.2;
@@ -74,6 +75,19 @@ pub struct SimBackend {
     pool: WorkerPool,
     /// Dispatch buffer arena (scratch + result storage reuse).
     arena: RefCell<Arena>,
+    /// Attached fault-injection plan + address cursor (DESIGN.md §9).
+    /// `None` (the default) keeps the per-dispatch probe to one borrow and
+    /// an `Option` check — the plane is zero-cost when off.
+    fault: RefCell<Option<FaultState>>,
+}
+
+/// Where the next dispatches are addressed for injection, and whether the
+/// first launch since the cursor moved is still pending.
+struct FaultState {
+    plan: Arc<FaultPlan>,
+    epoch: u64,
+    seq: u64,
+    armed: bool,
 }
 
 impl SimBackend {
@@ -103,7 +117,50 @@ impl SimBackend {
             launch_overhead: Duration::ZERO,
             pool,
             arena: RefCell::new(Arena::new()),
+            fault: RefCell::new(None),
         }
+    }
+
+    /// Dispatch-fault probe: on the first launch after the fault cursor
+    /// moved, consult the plan and absorb any planned transient failures
+    /// with a bounded deterministic retry-with-backoff. Each absorbed
+    /// failure counts once in [`Counters::dispatch_retries`]; the real
+    /// dispatch runs exactly once afterward, so kernel counts, byte
+    /// accounting, and outputs are identical to a fault-free run.
+    fn fault_preflight(&self) -> Result<()> {
+        let mut guard = self.fault.borrow_mut();
+        let Some(f) = guard.as_mut() else { return Ok(()) };
+        if !f.armed {
+            return Ok(());
+        }
+        f.armed = false;
+        let planned = f.plan.fires(FaultSite::Dispatch, f.epoch, f.seq);
+        if planned == 0 {
+            return Ok(());
+        }
+        if planned > MAX_DISPATCH_RETRIES {
+            bail!(
+                "dispatch at (epoch {}, seq {}) still failing after {} retries",
+                f.epoch,
+                f.seq,
+                MAX_DISPATCH_RETRIES
+            );
+        }
+        drop(guard);
+        for attempt in 0..planned {
+            // Deterministic backoff: a linearly growing busy-wait in units
+            // of the simulated launch overhead (zero-length when that knob
+            // is off, making the retry accounting-only).
+            let backoff = self.launch_overhead * (attempt + 1);
+            if !backoff.is_zero() {
+                let spin = Instant::now();
+                while spin.elapsed() < backoff {
+                    std::hint::spin_loop();
+                }
+            }
+            self.counters.borrow_mut().dispatch_retries += 1;
+        }
+        Ok(())
     }
 
     /// Set the simulated per-dispatch launch overhead.
@@ -150,6 +207,7 @@ impl SimBackend {
         phase: Phase,
         args: &[Arg<'_, SimDev>],
     ) -> Result<Vec<HostTensor>> {
+        self.fault_preflight()?;
         let spec = self.manifest.module(name)?;
         let bytes_in = check_args(name, spec, args)?;
         let t0 = Instant::now();
@@ -267,6 +325,18 @@ impl ExecBackend for SimBackend {
 
     fn recycle_dev(&self, d: SimDev) {
         self.arena.borrow_mut().reclaim(d.0);
+    }
+
+    fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.fault.borrow_mut() = Some(FaultState { plan, epoch: 0, seq: 0, armed: false });
+    }
+
+    fn fault_cursor(&self, epoch: u64, seq: u64) {
+        if let Some(f) = self.fault.borrow_mut().as_mut() {
+            f.epoch = epoch;
+            f.seq = seq;
+            f.armed = true;
+        }
     }
 }
 

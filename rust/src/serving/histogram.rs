@@ -21,11 +21,23 @@ pub struct LatencyHistogram {
     min: u64,
     max: u64,
     sum: u128,
+    /// Requests shed by admission control: counted here so the histogram
+    /// stays the single serving scoreboard, but **never** folded into the
+    /// latency buckets — a shed request has no completion time, and mixing
+    /// zeros in would corrupt the percentiles.
+    shed: u64,
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        LatencyHistogram { counts: [0; BUCKETS], total: 0, min: u64::MAX, max: 0, sum: 0 }
+        LatencyHistogram {
+            counts: [0; BUCKETS],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+            shed: 0,
+        }
     }
 }
 
@@ -41,6 +53,16 @@ impl LatencyHistogram {
         self.min = self.min.min(ticks);
         self.max = self.max.max(ticks);
         self.sum += ticks as u128;
+    }
+
+    /// Count one request shed by admission control (no latency sample).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Requests shed by admission control (disjoint from [`count`](Self::count)).
+    pub fn shed(&self) -> u64 {
+        self.shed
     }
 
     /// Number of recorded samples.
@@ -109,6 +131,17 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.percentile(50.0), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn sheds_count_separately_from_samples() {
+        let mut h = LatencyHistogram::default();
+        h.record(10);
+        h.record_shed();
+        h.record_shed();
+        assert_eq!(h.count(), 1, "sheds are not latency samples");
+        assert_eq!(h.shed(), 2);
+        assert_eq!(h.percentile(50.0), 10, "percentiles ignore sheds");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod coalesce;
 pub mod histogram;
 pub mod trace;
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
@@ -44,13 +45,23 @@ use crate::coordinator::ReplicaGroup;
 use crate::runtime::ExecBackend;
 use crate::util::HostTensor;
 
+/// Virtual service cost of one coalesced batch inside the admission
+/// model, in ticks. Admission must be a pure function of the trace — the
+/// *measured* per-batch service times feeding the latency histogram are
+/// wall-clock and would make the shed set nondeterministic — so
+/// [`serve_bounded`] queues batches on a single virtual server at this
+/// constant rate and sheds only against that model (DESIGN.md §9).
+pub const VIRT_SERVICE_PER_BATCH: u64 = 50;
+
 /// Everything one serve run produces.
 pub struct ServeOutcome {
     /// Per-request `[seeds, C]` logit rows, in trace order — bitwise
     /// identical for a given (params, trace, batch_size, window) whatever
-    /// the parallelism.
+    /// the parallelism. A request shed by admission control gets a `[0, C]`
+    /// placeholder (no rows were computed for it).
     pub predictions: Vec<HostTensor>,
-    /// Per-request latency in virtual ticks (completion − arrival).
+    /// Per-request latency in virtual ticks (completion − arrival); 0 for
+    /// shed requests (they never complete).
     pub latencies: Vec<u64>,
     /// The coalescing decisions (batch membership is part of the replay
     /// determinism contract).
@@ -60,6 +71,12 @@ pub struct ServeOutcome {
     pub wall: Duration,
     /// Virtual span: first arrival tick → last completion tick.
     pub span_ticks: u64,
+    /// Requests shed by admission control ([`serve_bounded`]), ascending
+    /// trace order. Always empty without a queue bound.
+    pub shed: Vec<u32>,
+    /// Peak admitted-batch backlog the admission model observed (0 without
+    /// a queue bound).
+    pub max_backlog: usize,
 }
 
 impl ServeOutcome {
@@ -93,13 +110,70 @@ where
     B: ExecBackend + Send,
     B::Dev: Sync,
 {
+    serve_bounded(group, trace, batch_size, window, None)
+}
+
+/// [`serve`] with admission control: `max_queue` bounds the virtual batch
+/// queue. Every coalesced batch is offered to a single-server admission
+/// model ([`VIRT_SERVICE_PER_BATCH`] ticks per batch); a batch arriving
+/// while `max_queue` admitted batches are still pending is **shed whole** —
+/// its requests get `[0, C]` placeholder predictions, zero latency, and a
+/// shed mark in the histogram instead of a sample. The shed set is a pure
+/// function of `(trace, batch_size, window, max_queue)` — independent of
+/// replicas, producers, threads, and measured service times — so bounded
+/// runs replay bitwise too. `None` is exactly [`serve`].
+pub fn serve_bounded<B>(
+    group: &mut ReplicaGroup<B>,
+    trace: &Trace,
+    batch_size: usize,
+    window: u64,
+    max_queue: Option<usize>,
+) -> Result<ServeOutcome>
+where
+    B: ExecBackend + Send,
+    B::Dev: Sync,
+{
     ensure!(!trace.requests.is_empty(), "serving an empty trace");
     let batches = coalesce(trace, batch_size, window)?;
-    let seed_sets: Vec<Vec<u32>> = batches.iter().map(|b| b.seeds.clone()).collect();
+
+    // Admission pass: walk the batches in close order against the virtual
+    // single-server queue, deciding shed/admit before any compute runs.
+    let mut admitted = vec![true; batches.len()];
+    let mut shed: Vec<u32> = Vec::new();
+    let mut max_backlog = 0usize;
+    if let Some(q) = max_queue {
+        let mut pending: VecDeque<u64> = VecDeque::new();
+        let mut virt_free = 0u64;
+        for (bi, b) in batches.iter().enumerate() {
+            while pending.front().is_some_and(|&done| done <= b.close_tick) {
+                pending.pop_front();
+            }
+            if pending.len() >= q {
+                admitted[bi] = false;
+                for m in &b.members {
+                    shed.push(m.req as u32);
+                }
+                continue;
+            }
+            let done = b.close_tick.max(virt_free) + VIRT_SERVICE_PER_BATCH;
+            virt_free = done;
+            pending.push_back(done);
+            max_backlog = max_backlog.max(pending.len());
+        }
+        shed.sort_unstable();
+    }
+
+    let seed_sets: Vec<Vec<u32>> = batches
+        .iter()
+        .zip(&admitted)
+        .filter(|&(_, &a)| a)
+        .map(|(b, _)| b.seeds.clone())
+        .collect();
     let t0 = Instant::now();
     let stepped = group.serve_forward(&seed_sets)?;
     let wall = t0.elapsed();
 
+    let c_dim = group.dims().c;
     let n_lanes = group.replicas().max(1);
     let mut lane_free = vec![0u64; n_lanes];
     let mut predictions: Vec<Option<HostTensor>> =
@@ -112,7 +186,25 @@ where
     // logits row slot_idx[i].
     let mut slots: Vec<u32> = Vec::with_capacity(batch_size);
     let mut slot_idx: Vec<usize> = Vec::with_capacity(batch_size);
-    for (bi, ((logits, dur), b)) in stepped.iter().zip(&batches).enumerate() {
+    // `si` indexes the admitted (served) batches — the order serve_forward
+    // saw them and the index its round-robin lane schedule used.
+    let mut si = 0usize;
+    for (b, adm) in batches.iter().zip(&admitted) {
+        if !*adm {
+            for m in &b.members {
+                ensure!(
+                    predictions[m.req].is_none(),
+                    "request {} demuxed twice",
+                    m.req
+                );
+                predictions[m.req] = Some(HostTensor::f32(Vec::new(), &[0, c_dim]));
+                hist.record_shed();
+            }
+            continue;
+        }
+        let (logits, dur) = &stepped[si];
+        let lane = si % n_lanes;
+        si += 1;
         let shape = logits.shape();
         ensure!(shape.len() == 2, "forward logits must be [NS, C], got {shape:?}");
         let c = shape[1];
@@ -128,7 +220,6 @@ where
                 }
             }
         }
-        let lane = bi % n_lanes;
         let service = (dur.as_micros() as u64).max(1);
         let start = b.close_tick.max(lane_free[lane]);
         let done = start + service;
@@ -164,5 +255,7 @@ where
         hist,
         wall,
         span_ticks: last_done.saturating_sub(first_arrival),
+        shed,
+        max_backlog,
     })
 }

@@ -12,10 +12,11 @@
 //! version word, then length-prefixed little-endian payloads — small,
 //! self-describing, and serde-free.
 
-use std::io::{Read, Write};
+use std::fmt;
+use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::graph::HeteroGraph;
 use crate::util::Rng;
@@ -87,16 +88,78 @@ fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     Ok(())
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// Everything that can be wrong with a trace file, as data (mirrors
+/// `models::checkpoint::CheckpointError`); callers and the negative tests
+/// match the variant via `err.downcast_ref::<TraceError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceError {
+    /// The file does not start with the trace magic.
+    BadMagic,
+    /// Recognized magic but a version this build cannot read.
+    UnsupportedVersion(u32),
+    /// The file ends before the named field is complete (including a
+    /// request-count or seed-count header claiming more payload than the
+    /// file holds).
+    Truncated { what: &'static str },
+    /// Arrival ticks must be non-decreasing for the coalescer's single
+    /// pass to be well-defined.
+    OutOfOrder { index: usize, tick: u64, prev: u64 },
+    /// Every request carries at least one seed vertex.
+    EmptyRequest { index: usize },
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::BadMagic => write!(f, "not a hifuse arrival trace (bad magic)"),
+            TraceError::UnsupportedVersion(v) => write!(f, "unsupported trace version {v}"),
+            TraceError::Truncated { what } => {
+                write!(f, "trace truncated while reading {what}")
+            }
+            TraceError::OutOfOrder { index, tick, prev } => write!(
+                f,
+                "request {index} arrives at tick {tick}, before its predecessor at {prev}"
+            ),
+            TraceError::EmptyRequest { index } => {
+                write!(f, "request {index} has no seeds")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Bounds-checked little-endian reader over the raw trace bytes; every
+/// out-of-bounds read is a typed [`TraceError::Truncated`].
+struct Reader<'a> {
+    data: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&[u8], TraceError> {
+        let end = self.at.checked_add(n).ok_or(TraceError::Truncated { what })?;
+        if end > self.data.len() {
+            return Err(TraceError::Truncated { what });
+        }
+        let s = &self.data[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, TraceError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, TraceError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("eight bytes")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.data.len() - self.at
+    }
 }
 
 /// Serialize a trace (`--record-trace`).
@@ -119,36 +182,53 @@ pub fn save(trace: &Trace, path: &Path) -> Result<()> {
 
 /// Deserialize and validate a trace (`--replay-trace`): the arrival order
 /// must be non-decreasing and every request non-empty, so the coalescer's
-/// single-pass scan is well-defined on anything this returns.
+/// single-pass scan is well-defined on anything this returns. Malformed
+/// input — wrong magic/version, truncation anywhere (including length
+/// headers claiming more payload than the file holds), out-of-order
+/// ticks, zero-seed requests — fails with a typed [`TraceError`]; no
+/// allocation is ever sized from an unvalidated length field.
 pub fn load(path: &Path) -> Result<Trace> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let mut r = std::io::BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not a hifuse arrival trace");
+    let data = std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+    decode(&data).with_context(|| format!("loading trace {path:?}"))
+}
+
+fn decode(data: &[u8]) -> Result<Trace> {
+    let mut r = Reader { data, at: 0 };
+    if r.take(MAGIC.len(), "magic")? != MAGIC {
+        return Err(TraceError::BadMagic.into());
     }
-    let ver = read_u32(&mut r)?;
+    let ver = r.u32("version")?;
     if ver != VERSION {
-        bail!("{path:?}: unsupported trace version {ver}");
+        return Err(TraceError::UnsupportedVersion(ver).into());
     }
-    let n = read_u32(&mut r)? as usize;
+    let n = r.u32("request count")? as usize;
+    // Each record is ≥ 16 bytes (id + tick + seed count), so a count
+    // claiming more records than the remaining bytes could hold is
+    // corrupt; checking now keeps the preallocation honest.
+    if n > r.remaining() / 16 {
+        return Err(TraceError::Truncated { what: "request count" }.into());
+    }
     let mut requests = Vec::with_capacity(n);
     let mut last_tick = 0u64;
     for i in 0..n {
-        let id = read_u32(&mut r)?;
-        let arrival_tick = read_u64(&mut r)?;
-        ensure!(
-            arrival_tick >= last_tick,
-            "{path:?}: request {i} arrives at tick {arrival_tick}, before its predecessor"
-        );
-        last_tick = arrival_tick;
-        let k = read_u32(&mut r)? as usize;
-        ensure!(k >= 1, "{path:?}: request {i} has no seeds");
-        let mut seeds = Vec::with_capacity(k);
-        for _ in 0..k {
-            seeds.push(read_u32(&mut r)?);
+        let id = r.u32("request id")?;
+        let arrival_tick = r.u64("arrival tick")?;
+        if arrival_tick < last_tick {
+            return Err(
+                TraceError::OutOfOrder { index: i, tick: arrival_tick, prev: last_tick }.into()
+            );
         }
+        last_tick = arrival_tick;
+        let k = r.u32("seed count")? as usize;
+        if k == 0 {
+            return Err(TraceError::EmptyRequest { index: i }.into());
+        }
+        // Bounds-check the whole seed payload before building the vector.
+        let bytes = r.take(k * 4, "seeds")?;
+        let seeds = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
         requests.push(Request { id, arrival_tick, seeds });
     }
     Ok(Trace { requests })
@@ -192,7 +272,8 @@ mod tests {
     fn load_rejects_garbage_and_disorder() {
         let path = std::env::temp_dir().join("hifuse_trace_garbage.bin");
         std::fs::write(&path, b"not a trace at all........").unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err();
+        assert_eq!(err.downcast_ref::<TraceError>(), Some(&TraceError::BadMagic));
         // A syntactically valid file with decreasing ticks must be refused.
         let bad = Trace {
             requests: vec![
@@ -201,7 +282,66 @@ mod tests {
             ],
         };
         save(&bad, &path).unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<TraceError>(),
+                Some(TraceError::OutOfOrder { index: 1, tick: 50, prev: 100 })
+            ),
+            "expected out-of-order tick, got {err:#}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncation_mid_record() {
+        let g = tiny_graph(1);
+        let t = generate(&g, 11, 800.0, 6, 3);
+        let path = std::env::temp_dir().join("hifuse_trace_trunc.bin");
+        save(&t, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut inside the header, inside a record, and inside a seed list:
+        // every prefix must fail typed, never panic or misparse.
+        for cut in [bytes.len() - 3, bytes.len() / 2, 14, 9] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = load(&path).unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<TraceError>(), Some(TraceError::Truncated { .. })),
+                "cut at {cut}: expected truncation, got {err:#}"
+            );
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_zero_seed_requests() {
+        let path = std::env::temp_dir().join("hifuse_trace_noseeds.bin");
+        let bad = Trace { requests: vec![Request { id: 0, arrival_tick: 5, seeds: vec![] }] };
+        save(&bad, &path).unwrap();
+        let err = load(&path).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<TraceError>(),
+            Some(&TraceError::EmptyRequest { index: 0 })
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_never_preallocates_from_a_lying_count() {
+        // A header claiming u32::MAX requests on a 40-byte file must fail
+        // fast as truncation — not attempt a giant Vec::with_capacity.
+        let path = std::env::temp_dir().join("hifuse_trace_lying.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 24]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<TraceError>(), Some(TraceError::Truncated { .. })),
+            "expected truncation, got {err:#}"
+        );
         std::fs::remove_file(path).ok();
     }
 }

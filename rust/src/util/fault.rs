@@ -1,0 +1,269 @@
+//! Deterministic fault-injection plane (DESIGN.md §9).
+//!
+//! A [`FaultPlan`] maps named sites × (epoch, global batch sequence) to an
+//! injected-failure count. The plan is a pure function of
+//! `--fault-spec`/`--fault-seed`: the same flags produce the same plan, so
+//! every injected failure — and therefore every recovery path — replays
+//! exactly. The recovery contract the plan exists to pin (DESIGN.md §5,
+//! extended by §9): *a recovered run is bitwise identical to a fault-free
+//! one*; only the retry/failover/shed counters differ.
+//!
+//! Sites:
+//! * [`FaultSite::Dispatch`] — a transient backend dispatch error on the
+//!   first kernel launch of the addressed batch. Recovered by the
+//!   backend's bounded retry-with-backoff ([`MAX_DISPATCH_RETRIES`]).
+//! * [`FaultSite::Producer`] — a sampling producer dies before delivering
+//!   the addressed sequence number. The reorder ring reports the missing
+//!   sequence and the consumer re-derives the batch from
+//!   `(epoch_perm, seq)` on a standby producer.
+//! * [`FaultSite::Lane`] — a replica lane's engine dies before computing
+//!   the addressed batch. Surviving lanes absorb its remaining slots; the
+//!   fixed-order all-reduce keeps the trajectory bitwise fault-free.
+//!
+//! Spec grammar (comma-separated entries):
+//! * `site@EPOCH:SEQ` — one failure at that address.
+//! * `site@EPOCH:SEQxN` — `N` back-to-back failures at that address
+//!   (e.g. to exercise the retry bound).
+//! * `site~PERIOD` — a seeded pseudo-random sprinkle: the site fails once
+//!   at every `(epoch, seq)` whose keyed hash is `0 (mod PERIOD)`. Pure in
+//!   `--fault-seed`, so the sprinkle is schedule-addressed without knowing
+//!   the schedule length.
+//!
+//! With no plan attached (the default) every probe site is a single
+//! `Option` check — the plane is zero-cost when off.
+
+use anyhow::{bail, Context, Result};
+
+/// Upper bound on back-to-back dispatch retries before the error is
+/// surfaced to the caller (the "bounded" in bounded retry).
+pub const MAX_DISPATCH_RETRIES: u32 = 3;
+
+/// A named injection point (see module docs for recovery semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    Dispatch,
+    Producer,
+    Lane,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Dispatch => "dispatch",
+            FaultSite::Producer => "producer",
+            FaultSite::Lane => "lane",
+        }
+    }
+
+    fn tag(self) -> u64 {
+        match self {
+            FaultSite::Dispatch => 0xD15B,
+            FaultSite::Producer => 0xB0D0,
+            FaultSite::Lane => 0x1A9E,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dispatch" => Ok(FaultSite::Dispatch),
+            "producer" => Ok(FaultSite::Producer),
+            "lane" => Ok(FaultSite::Lane),
+            other => bail!(
+                "unknown fault site {other:?} (expected dispatch, producer, or lane)"
+            ),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Rule {
+    /// Fail `count` times at exactly `(epoch, seq)`.
+    At { site: FaultSite, epoch: u64, seq: u64, count: u32 },
+    /// Fail once at every `(epoch, seq)` whose seeded hash ≡ 0 (mod period).
+    Every { site: FaultSite, period: u64 },
+}
+
+/// The full injection schedule. Addressing is by `(site, epoch, seq)`
+/// where `seq` is the global batch sequence number within the epoch
+/// (serve runs address epoch 0, seq = coalesced batch index).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+}
+
+/// SplitMix64 finalizer over the (seed, site, epoch, seq) address — the
+/// pure hash behind `site~PERIOD` rules.
+fn mix(seed: u64, tag: u64, epoch: u64, seq: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(epoch.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(seq.wrapping_mul(0x94D0_49BB_1331_11EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-spec` string under a `--fault-seed`. Empty specs
+    /// are rejected — "no plan" is expressed by not attaching one.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            rules.push(Self::parse_entry(entry).with_context(|| {
+                format!("bad --fault-spec entry {entry:?}")
+            })?);
+        }
+        if rules.is_empty() {
+            bail!("--fault-spec {spec:?} contains no entries");
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    fn parse_entry(entry: &str) -> Result<Rule> {
+        if let Some((site, addr)) = entry.split_once('@') {
+            let site = FaultSite::parse(site)?;
+            let (addr, count) = match addr.split_once('x') {
+                Some((a, n)) => {
+                    (a, n.parse::<u32>().context("count after 'x' must be a u32")?)
+                }
+                None => (addr, 1),
+            };
+            if count == 0 {
+                bail!("count must be >= 1");
+            }
+            let (e, s) = addr
+                .split_once(':')
+                .context("expected site@EPOCH:SEQ (e.g. dispatch@0:3)")?;
+            Ok(Rule::At {
+                site,
+                epoch: e.parse().context("epoch must be a u64")?,
+                seq: s.parse().context("seq must be a u64")?,
+                count,
+            })
+        } else if let Some((site, period)) = entry.split_once('~') {
+            let site = FaultSite::parse(site)?;
+            let period: u64 = period.parse().context("period must be a u64")?;
+            if period == 0 {
+                bail!("period must be >= 1");
+            }
+            Ok(Rule::Every { site, period })
+        } else {
+            bail!("expected site@EPOCH:SEQ[xN] or site~PERIOD");
+        }
+    }
+
+    /// How many injected failures fire for `site` at `(epoch, seq)`.
+    /// Pure: same plan, same address → same answer, every call.
+    pub fn fires(&self, site: FaultSite, epoch: u64, seq: u64) -> u32 {
+        let mut n = 0u32;
+        for r in &self.rules {
+            match *r {
+                Rule::At { site: s, epoch: e, seq: q, count }
+                    if s == site && e == epoch && q == seq =>
+                {
+                    n += count;
+                }
+                Rule::Every { site: s, period }
+                    if s == site && mix(self.seed, s.tag(), epoch, seq) % period == 0 =>
+                {
+                    n += 1;
+                }
+                _ => {}
+            }
+        }
+        n
+    }
+
+    /// Whether the plan contains any rule for `site` at all — lets callers
+    /// skip standby setup entirely when a site is never exercised.
+    pub fn has_site(&self, site: FaultSite) -> bool {
+        self.rules.iter().any(|r| match *r {
+            Rule::At { site: s, .. } | Rule::Every { site: s, .. } => s == site,
+        })
+    }
+
+    /// Total explicit (`site@e:s`) failures planned for `site` — the
+    /// expected counter value when only explicit rules are used.
+    pub fn planned(&self, site: FaultSite) -> u64 {
+        self.rules
+            .iter()
+            .map(|r| match *r {
+                Rule::At { site: s, count, .. } if s == site => count as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_entries_address_exactly() {
+        let p = FaultPlan::parse("dispatch@0:3x2,producer@1:5,lane@0:4", 7).unwrap();
+        assert_eq!(p.fires(FaultSite::Dispatch, 0, 3), 2);
+        assert_eq!(p.fires(FaultSite::Dispatch, 0, 4), 0);
+        assert_eq!(p.fires(FaultSite::Dispatch, 1, 3), 0);
+        assert_eq!(p.fires(FaultSite::Producer, 1, 5), 1);
+        assert_eq!(p.fires(FaultSite::Producer, 0, 5), 0);
+        assert_eq!(p.fires(FaultSite::Lane, 0, 4), 1);
+        assert!(p.has_site(FaultSite::Dispatch));
+        assert_eq!(p.planned(FaultSite::Dispatch), 2);
+        assert_eq!(p.planned(FaultSite::Lane), 1);
+    }
+
+    #[test]
+    fn seeded_sprinkle_is_pure_and_seed_sensitive() {
+        let a = FaultPlan::parse("dispatch~4", 1).unwrap();
+        let b = FaultPlan::parse("dispatch~4", 1).unwrap();
+        let c = FaultPlan::parse("dispatch~4", 2).unwrap();
+        let hits = |p: &FaultPlan| -> Vec<(u64, u64)> {
+            let mut v = Vec::new();
+            for e in 0..4u64 {
+                for s in 0..64u64 {
+                    if p.fires(FaultSite::Dispatch, e, s) > 0 {
+                        v.push((e, s));
+                    }
+                }
+            }
+            v
+        };
+        let (ha, hb, hc) = (hits(&a), hits(&b), hits(&c));
+        assert_eq!(ha, hb, "same seed must give the same sprinkle");
+        assert!(!ha.is_empty(), "period 4 over 256 addresses should fire");
+        assert_ne!(ha, hc, "different seeds should move the sprinkle");
+        // The sprinkle never bleeds across sites.
+        assert!(hits(&a)
+            .iter()
+            .all(|&(e, s)| a.fires(FaultSite::Producer, e, s) == 0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            " , ",
+            "dispatch",
+            "dispatch@3",
+            "dispatch@0:1x0",
+            "dispatch~0",
+            "gpu@0:1",
+            "dispatch@a:b",
+            "lane~x",
+        ] {
+            assert!(
+                FaultPlan::parse(bad, 0).is_err(),
+                "spec {bad:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn default_plan_fires_nowhere() {
+        let p = FaultPlan::default();
+        assert_eq!(p.fires(FaultSite::Dispatch, 0, 0), 0);
+        assert!(!p.has_site(FaultSite::Lane));
+    }
+}

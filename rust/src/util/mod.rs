@@ -2,11 +2,13 @@
 //! `serde`, or `criterion`, so the PRNG, stats, and timing helpers live
 //! here).
 
+pub mod fault;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod tensor;
 
+pub use fault::{FaultPlan, FaultSite, MAX_DISPATCH_RETRIES};
 pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::Stats;

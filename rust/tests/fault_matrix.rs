@@ -1,0 +1,397 @@
+//! Fault-plane matrix (DESIGN.md §9): injected failures are *recoverable
+//! scheduling events*, never semantic ones. Across the grid
+//! {fault site × train/serve × replicas {1, 2} × pipeline on/off}:
+//!
+//! * the recovered trajectory (per-epoch loss/acc and every final
+//!   parameter tensor) is bitwise identical to the fault-free run;
+//! * retry / recovery / failover counters account for exactly the work
+//!   the plan injected, and roll up per-lane → group;
+//! * the zero-allocation steady state survives recovery (standby
+//!   producers and retries recycle the same pools);
+//! * admission control sheds deterministically — the shed set is a pure
+//!   function of `(trace, batch_size, window, max_queue)`;
+//! * the crash path works: a mid-epoch checkpoint cursor resumes to the
+//!   bitwise-identical end state.
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, ReplicaMetrics,
+    TrainCfg, Trainer, DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::checkpoint::{self, Cursor};
+use hifuse::models::{ModelKind, Params};
+use hifuse::runtime::{ExecBackend, SimBackend};
+use hifuse::serving::{self, ServeOutcome, Trace};
+use hifuse::util::{FaultPlan, FaultSite};
+
+/// 6 batches/epoch on tiny's 24 train seeds; `producers: 2` pins the
+/// stride layout the producer-fault accounting below relies on (producer
+/// `p` owns schedule positions `p, p+2, p+4`).
+fn cfg() -> TrainCfg {
+    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4, producers: 2 }
+}
+
+fn plan(spec: &str) -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse(spec, 0).unwrap())
+}
+
+fn assert_params_eq(a: &Params, b: &Params, ctx: &str) {
+    assert_eq!(a.w0, b.w0, "{ctx}: w0 diverged");
+    assert_eq!(a.w1, b.w1, "{ctx}: w1 diverged");
+    assert_eq!(a.a_src0, b.a_src0, "{ctx}: a_src0 diverged");
+    assert_eq!(a.a_dst0, b.a_dst0, "{ctx}: a_dst0 diverged");
+    assert_eq!(a.a_src1, b.a_src1, "{ctx}: a_src1 diverged");
+    assert_eq!(a.a_dst1, b.a_dst1, "{ctx}: a_dst1 diverged");
+}
+
+/// One single-backend training run; returns the per-epoch (loss, acc)
+/// trajectory, final params, and summed fault counters
+/// (dispatch_retries, producer_recoveries).
+fn run_trainer(
+    pipeline: bool,
+    spec: Option<&str>,
+    epochs: u64,
+) -> (Vec<(f64, f64)>, Params, u64, u64) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    if let Some(s) = spec {
+        tr.set_fault_plan(plan(s));
+    }
+    let mut traj = Vec::new();
+    let (mut retries, mut recov) = (0u64, 0u64);
+    for e in 0..epochs {
+        let m = tr.train_epoch(e).unwrap();
+        traj.push((m.loss, m.acc));
+        retries += m.dispatch_retries;
+        recov += m.producer_recoveries;
+    }
+    (traj, tr.params.clone(), retries, recov)
+}
+
+fn engines(n: usize) -> Vec<SimBackend> {
+    let t = replica_thread_budget(4, n);
+    (0..n).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect()
+}
+
+/// One replica-group training run; returns the trajectory, final params,
+/// and the full per-epoch metrics for counter-rollup assertions.
+fn run_group(
+    replicas: usize,
+    pipeline: bool,
+    spec: Option<&str>,
+    epochs: u64,
+) -> (Vec<(f64, f64)>, Params, Vec<ReplicaMetrics>) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+            .unwrap();
+    if let Some(s) = spec {
+        grp.set_fault_plan(plan(s));
+    }
+    let ms: Vec<ReplicaMetrics> = (0..epochs).map(|e| grp.train_epoch(e).unwrap()).collect();
+    let traj = ms.iter().map(|m| (m.group.loss, m.group.acc)).collect();
+    (traj, grp.params.clone(), ms)
+}
+
+/// Transient dispatch faults retry with a bounded budget and change
+/// nothing: bitwise trajectory and parameter parity across the full
+/// {replicas × pipeline} grid, with retries == the plan's explicit count.
+#[test]
+fn dispatch_faults_retry_and_preserve_the_trajectory() {
+    let spec = "dispatch@0:2,dispatch@1:4x3";
+    let planned = plan(spec).planned(FaultSite::Dispatch);
+    assert_eq!(planned, 4);
+    for pipeline in [false, true] {
+        let (base_t, base_p, base_r, _) = run_trainer(pipeline, None, 2);
+        assert_eq!(base_r, 0, "fault-free run must not count retries");
+        let (t, p, retries, _) = run_trainer(pipeline, Some(spec), 2);
+        assert_eq!(t, base_t, "pipeline={pipeline}: trajectory diverged");
+        assert_params_eq(&p, &base_p, &format!("trainer pipeline={pipeline}"));
+        assert_eq!(retries, planned, "pipeline={pipeline}: retry accounting");
+    }
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            let (base_t, base_p, _) = run_group(replicas, pipeline, None, 2);
+            let (t, p, ms) = run_group(replicas, pipeline, Some(spec), 2);
+            let ctx = format!("replicas={replicas} pipeline={pipeline}");
+            assert_eq!(t, base_t, "{ctx}: trajectory diverged");
+            assert_params_eq(&p, &base_p, &ctx);
+            let retries: u64 = ms.iter().map(|m| m.group.dispatch_retries).sum();
+            assert_eq!(retries, planned, "{ctx}: retry accounting");
+        }
+    }
+}
+
+/// A fault burst past the retry budget is an error, not a hang or a wrong
+/// answer — on both the single-backend and replica paths.
+#[test]
+fn dispatch_faults_past_the_retry_budget_bail() {
+    let spec = "dispatch@0:1x4"; // 4 > MAX_DISPATCH_RETRIES
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    tr.set_fault_plan(plan(spec));
+    assert!(tr.train_epoch(0).is_err(), "trainer must surface a hard dispatch fault");
+
+    let mut grp =
+        ReplicaGroup::new(engines(2), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    grp.set_fault_plan(plan(spec));
+    assert!(grp.train_epoch(0).is_err(), "group must surface a hard dispatch fault");
+}
+
+/// A producer death mid-epoch is recovered by re-deriving every lost
+/// batch from `(epoch_perm, seq)` on a standby producer — bitwise parity,
+/// with recoveries counting exactly the dead worker's remaining stride.
+#[test]
+fn producer_death_recovers_bitwise() {
+    // Death while producing batch 5 — the last position of its stride —
+    // loses exactly one batch.
+    let (base_t, base_p, _, base_rec) = run_trainer(true, None, 2);
+    assert_eq!(base_rec, 0);
+    let (t, p, _, rec) = run_trainer(true, Some("producer@0:5"), 2);
+    assert_eq!(t, base_t, "single lost batch: trajectory diverged");
+    assert_params_eq(&p, &base_p, "trainer producer@0:5");
+    assert_eq!(rec, 1, "one lost batch => one recovery");
+
+    // Death at position 0: producer 0's whole stride {0, 2, 4} is lost.
+    let (t, p, _, rec) = run_trainer(true, Some("producer@0:0"), 2);
+    assert_eq!(t, base_t, "lost stride: trajectory diverged");
+    assert_params_eq(&p, &base_p, "trainer producer@0:0");
+    assert_eq!(rec, 3, "a death at position 0 loses the producer's full stride");
+
+    // Same contract through the replica lanes' feeds.
+    for replicas in [1usize, 2] {
+        let (base_t, base_p, _) = run_group(replicas, true, None, 2);
+        let (t, p, ms) = run_group(replicas, true, Some("producer@0:5"), 2);
+        let ctx = format!("group replicas={replicas} producer@0:5");
+        assert_eq!(t, base_t, "{ctx}: trajectory diverged");
+        assert_params_eq(&p, &base_p, &ctx);
+        let rec: u64 = ms.iter().map(|m| m.group.producer_recoveries).sum();
+        assert_eq!(rec, 1, "{ctx}: recovery accounting");
+    }
+}
+
+/// A lane dying mid-epoch hands its remaining round slots to the first
+/// surviving lane; the fixed-order merge keeps the trajectory bitwise
+/// equal to fault-free, whatever the death position.
+#[test]
+fn lane_death_fails_over_bitwise() {
+    // Batch 4 (round 1, lane 0), batch 0 (first batch of the epoch), and
+    // an epoch-1 death on lane 1's share (batch 2).
+    for spec in ["lane@0:4", "lane@0:0", "lane@1:2"] {
+        for pipeline in [false, true] {
+            let (base_t, base_p, _) = run_group(2, pipeline, None, 2);
+            let (t, p, ms) = run_group(2, pipeline, Some(spec), 2);
+            let ctx = format!("{spec} pipeline={pipeline}");
+            assert_eq!(t, base_t, "{ctx}: trajectory diverged");
+            assert_params_eq(&p, &base_p, &ctx);
+            let fo: u64 = ms.iter().map(|m| m.group.lane_failovers).sum();
+            assert_eq!(fo, 1, "{ctx}: failover accounting");
+        }
+    }
+}
+
+/// Zero survivors is an error, not undefined behavior: a lane fault with
+/// one replica, and a cascade killing both of two replicas, both bail.
+#[test]
+fn lane_death_with_no_survivor_bails() {
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(1), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    grp.set_fault_plan(plan("lane@0:2"));
+    assert!(grp.train_epoch(0).is_err(), "sole lane dying must error");
+
+    let mut grp =
+        ReplicaGroup::new(engines(2), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    grp.set_fault_plan(plan("lane@0:0,lane@0:5"));
+    assert!(grp.train_epoch(0).is_err(), "cascading deaths of both lanes must error");
+}
+
+/// Per-lane fault counters roll up to the group totals, and a run mixing
+/// all three sites still lands bitwise on the fault-free trajectory.
+#[test]
+fn fault_counters_roll_up_per_lane_to_group() {
+    let spec = "dispatch@0:2,producer@0:5,lane@1:4";
+    let (base_t, base_p, _) = run_group(2, true, None, 2);
+    let (t, p, ms) = run_group(2, true, Some(spec), 2);
+    assert_eq!(t, base_t, "mixed-site run: trajectory diverged");
+    assert_params_eq(&p, &base_p, "mixed-site run");
+    for (e, m) in ms.iter().enumerate() {
+        let per =
+            |f: fn(&hifuse::coordinator::EpochMetrics) -> u64| -> u64 {
+                m.per_replica.iter().map(f).sum()
+            };
+        assert_eq!(m.group.dispatch_retries, per(|r| r.dispatch_retries), "epoch {e}");
+        assert_eq!(m.group.producer_recoveries, per(|r| r.producer_recoveries), "epoch {e}");
+        assert_eq!(m.group.lane_failovers, per(|r| r.lane_failovers), "epoch {e}");
+    }
+    assert_eq!(ms.iter().map(|m| m.group.dispatch_retries).sum::<u64>(), 1);
+    assert_eq!(ms.iter().map(|m| m.group.producer_recoveries).sum::<u64>(), 1);
+    assert_eq!(ms.iter().map(|m| m.group.lane_failovers).sum::<u64>(), 1);
+}
+
+/// Recovery preserves the zero-allocation steady state: with faults
+/// firing in *every* epoch, post-warm-up epochs still never miss the
+/// backend arena (standby producers and retries recycle pooled buffers).
+#[test]
+fn recovery_keeps_the_zero_alloc_steady_state() {
+    let spec = "producer@0:5,producer@1:5,producer@2:5,dispatch@1:1,dispatch@2:3";
+    let (base_t, base_p, _, _) = run_trainer(true, None, 3);
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    tr.set_fault_plan(plan(spec));
+    let ms: Vec<_> = (0..3).map(|e| tr.train_epoch(e).unwrap()).collect();
+    let traj: Vec<(f64, f64)> = ms.iter().map(|m| (m.loss, m.acc)).collect();
+    assert_eq!(traj, base_t, "faulted steady-state run: trajectory diverged");
+    assert_params_eq(&tr.params, &base_p, "faulted steady-state run");
+    assert_eq!(ms[0].producer_recoveries, 1, "epoch 0 recovery");
+    assert_eq!(ms[2].dispatch_retries, 1, "epoch 2 retry");
+    // EpochMetrics.arena is the cumulative snapshot at epoch end: flat
+    // misses between epochs 1 and 2 = zero allocations in epoch 2, even
+    // though epoch 2 both recovered a batch and retried a dispatch.
+    assert_eq!(
+        ms[2].arena.misses, ms[1].arena.misses,
+        "steady-state epoch with faults allocated ({:?} -> {:?})",
+        ms[1].arena, ms[2].arena
+    );
+    assert!(ms[2].arena.hits > ms[1].arena.hits, "arena unused");
+}
+
+/// Crash consistency: training interrupted mid-epoch, checkpointed with a
+/// cursor, reloaded, and resumed from `(epoch, batch)` lands bitwise on
+/// the uninterrupted end state — through the atomic-save file format.
+#[test]
+fn mid_epoch_resume_matches_the_uninterrupted_run() {
+    for pipeline in [false, true] {
+        let (_, base_p, _, _) = run_trainer(pipeline, None, 2);
+
+        let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let path = std::env::temp_dir().join(format!("hifuse_fault_resume_{pipeline}.ckpt"));
+
+        // "Crash" after batch 3 of epoch 0: persist params + cursor.
+        {
+            let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+            let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+            tr.train_epoch_range(0, 0, 3).unwrap();
+            checkpoint::save_at(&tr.params, Cursor { epoch: 0, batch: 3 }, &path).unwrap();
+        }
+
+        // Fresh process: reload, finish epoch 0 from the cursor, run epoch 1.
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        let (params, cur) = checkpoint::load_with_cursor(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cur, Cursor { epoch: 0, batch: 3 });
+        tr.params = params;
+        tr.train_epoch_range(cur.epoch, cur.batch as usize, usize::MAX).unwrap();
+        tr.train_epoch(1).unwrap();
+        assert_params_eq(&tr.params, &base_p, &format!("resume pipeline={pipeline}"));
+    }
+}
+
+// ---------------------------------------------------------------- serve --
+
+const WINDOW: u64 = 2_000;
+
+/// Back-to-back arrivals (1M req/s of virtual time) so a bounded queue
+/// actually overflows: batches close faster than the virtual server's
+/// service rate.
+fn burst_trace() -> Trace {
+    serving::trace::generate(&tiny_graph(1), 42, 1_000_000.0, 24, 3)
+}
+
+fn serve_once(
+    trace: &Trace,
+    replicas: usize,
+    pipeline: bool,
+    max_queue: Option<usize>,
+    spec: Option<&str>,
+) -> (ServeOutcome, u64) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+            .unwrap();
+    if let Some(s) = spec {
+        grp.set_fault_plan(plan(s));
+    }
+    let out =
+        serving::serve_bounded(&mut grp, trace, cfg().batch_size, WINDOW, max_queue).unwrap();
+    let retries: u64 =
+        grp.engines().iter().map(|e| e.counters().borrow().dispatch_retries).sum();
+    (out, retries)
+}
+
+/// Admission control sheds whole batches deterministically: the shed set
+/// is identical across the {replicas × pipeline} grid, every request is
+/// either served or shed exactly once, and admitted predictions stay
+/// bitwise equal to the unbounded run's.
+#[test]
+fn shedding_is_deterministic_and_fully_accounted() {
+    let trace = burst_trace();
+    let n = trace.requests.len();
+    let (unbounded, _) = serve_once(&trace, 1, false, None, None);
+    assert!(unbounded.shed.is_empty(), "no bound => no sheds");
+    assert_eq!(unbounded.max_backlog, 0);
+    let (reference, _) = serve_once(&trace, 1, false, Some(1), None);
+    assert!(!reference.shed.is_empty(), "burst at queue depth 1 must shed");
+    assert!(reference.hist.count() > 0, "something must still be served");
+    assert_eq!(reference.hist.shed(), reference.shed.len() as u64);
+    assert_eq!(reference.hist.count() + reference.hist.shed(), n as u64);
+    assert!(reference.max_backlog <= 1, "backlog exceeded the bound");
+    let shed_set: Vec<bool> =
+        (0..n).map(|i| reference.shed.binary_search(&(i as u32)).is_ok()).collect();
+    for (i, &s) in shed_set.iter().enumerate() {
+        if s {
+            assert_eq!(reference.predictions[i].shape()[0], 0, "shed request {i} has rows");
+            assert_eq!(reference.latencies[i], 0, "shed request {i} has latency");
+        } else {
+            assert_eq!(
+                reference.predictions[i], unbounded.predictions[i],
+                "admitted request {i}: prediction diverged from the unbounded run"
+            );
+        }
+    }
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            let (out, _) = serve_once(&trace, replicas, pipeline, Some(1), None);
+            assert_eq!(
+                out.shed, reference.shed,
+                "replicas={replicas} pipeline={pipeline}: shed set diverged"
+            );
+            assert_eq!(
+                out.predictions, reference.predictions,
+                "replicas={replicas} pipeline={pipeline}: predictions diverged"
+            );
+        }
+    }
+}
+
+/// Dispatch faults on the serve path retry transparently: predictions
+/// stay bitwise identical and the retries land in the engine counters.
+#[test]
+fn serve_dispatch_faults_retry_without_changing_predictions() {
+    let trace = burst_trace();
+    let (base, base_retries) = serve_once(&trace, 2, true, None, None);
+    assert_eq!(base_retries, 0);
+    let (out, retries) = serve_once(&trace, 2, true, None, Some("dispatch@0:0x2,dispatch@0:1"));
+    assert_eq!(out.predictions, base.predictions, "faulted serve: predictions diverged");
+    assert_eq!(retries, 3, "serve retry accounting");
+}

@@ -152,3 +152,33 @@ fn training_beats_chance_accuracy() {
     let chance = 1.0 / g.num_classes as f64;
     assert!(last > chance + 0.1, "acc {last} not above chance {chance}");
 }
+
+/// CLI validation bails early with friendly messages instead of failing
+/// deep inside a run: out-of-range fractions, zero worker counts,
+/// conflicting trace flags, malformed fault specs, and a zero queue
+/// bound are all rejected at parse time (ISSUE 7 satellite).
+#[test]
+fn cli_rejects_invalid_flag_combinations() {
+    use hifuse::config::RunConfig;
+    let argv = |s: &str| -> Vec<String> { s.split_whitespace().map(String::from).collect() };
+    let err = |s: &str| RunConfig::from_args(&argv(s)).unwrap_err().to_string();
+
+    assert!(err("--cache-frac 1.5").contains("[0, 1]"));
+    assert!(err("--cache-frac -0.1").contains("[0, 1]"));
+    assert!(err("--replicas 0").contains(">= 1"));
+    assert!(err("--producers 0").contains(">= 1"));
+    assert!(err("--rate 0").contains("positive"));
+    assert!(err("--record-trace /tmp/a.bin --replay-trace /tmp/b.bin").contains("conflict"));
+    assert!(err("--fault-spec gpu@0:0").contains("--fault-spec"));
+    assert!(err("--max-queue 0").contains(">= 1"));
+
+    // The same flags parse individually: validation is about the values,
+    // not the features.
+    let ok = RunConfig::from_args(&argv(
+        "--cache-frac 0.5 --replicas 2 --producers 2 --rate 100 \
+         --fault-spec dispatch@0:1 --fault-seed 9 --max-queue 4",
+    ))
+    .unwrap();
+    assert_eq!(ok.max_queue, Some(4));
+    assert!(ok.fault_plan().unwrap().is_some());
+}
