@@ -88,6 +88,10 @@ def module_table(p):
         add(f"proj_stacked_bwd_{l}", model.proj_stacked_bwd,
             ("xs", spec((tp, ns, fin))), ("w", spec((rp, fin, fout))),
             ("src_type", spec((rp,), I32)), ("dy", spec((rp, ns, fout))))
+        add(f"proj_resident_bwd_{l}", model.proj_resident_bwd,
+            ("xs", spec((tp, ns, fin))), ("w", spec((rp, fin, fout))),
+            ("src_type", spec((rp,), I32)), ("dy", spec((rp, ns, fout))),
+            ("dhin_acc", spec((tp, ns, fin))))
 
     # -- neighbor aggregation (RGCN mean) -----------------------------------
     for sfx, fd in (("h", h), ("c", c)):
@@ -138,6 +142,26 @@ def module_table(p):
     add("head", model.head,
         ("logits", spec((ns, c))), ("labels", spec((ns,), I32)),
         ("seed_mask", spec((ns,))))
+    add("head_full", model.head_full,
+        ("hout", spec((tp, ns, c))), ("labels", spec((ns,), I32)),
+        ("seed_mask", spec((ns,))), ("target_type", spec((), I32)))
+    add("slab_pick", model.slab_pick,
+        ("hout", spec((tp, ns, c))), ("target_type", spec((), I32)))
+
+    # -- on-device optimizer (device-resident mode, DESIGN.md §7) -----------
+    add("sgd_rgcn", model.sgd_rgcn,
+        ("w0", spec((rp, f, h))), ("w1", spec((rp, h, c))),
+        ("dw0", spec((rp, f, h))), ("dw1", spec((rp, h, c))),
+        ("lr", spec(())))
+    add("sgd_rgat", model.sgd_rgat,
+        ("w0", spec((rp, f, h))), ("w1", spec((rp, h, c))),
+        ("a_src0", spec((rp, h))), ("a_dst0", spec((rp, h))),
+        ("a_src1", spec((rp, c))), ("a_dst1", spec((rp, c))),
+        ("dw0_src", spec((rp, f, h))), ("dw0_dst", spec((rp, f, h))),
+        ("dw1_src", spec((rp, h, c))), ("dw1_dst", spec((rp, h, c))),
+        ("da_src0", spec((rp, h))), ("da_dst0", spec((rp, h))),
+        ("da_src1", spec((rp, c))), ("da_dst1", spec((rp, c))),
+        ("lr", spec(())))
 
     return t
 

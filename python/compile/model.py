@@ -194,3 +194,61 @@ def proj_stacked_bwd(xs, w, src_type, dy):
     """VJP of ``proj_stacked`` w.r.t. (xs, w)."""
     _, vjp = jax.vjp(lambda a, b: proj_stacked(a, b, src_type), xs, w)
     return vjp(dy)
+
+
+def proj_resident_bwd(xs, w, src_type, dy, dhin_acc):
+    """``proj_stacked_bwd`` with a device-resident accumulator: returns
+    (dhin_acc + dxs, dw) so the two RGAT endpoint passes chain on-device
+    instead of staging partial sums on the host (DESIGN.md §7)."""
+    dxs, dw = proj_stacked_bwd(xs, w, src_type, dy)
+    return dhin_acc + dxs, dw
+
+
+# --------------------------------------------------------------------------
+# Device-resident step seams: full-slab head, serve logits pick, fused SGD.
+# --------------------------------------------------------------------------
+
+def head_full(hout, labels, seed_mask, target_type):
+    """``head`` over the full fused output: extracts the target-type slab
+    on-device and scatters dlogits back into a [TPAD, NS, C] gradient, so
+    only the two scalars ever leave the device.
+
+    hout: [TPAD, NS, C]; target_type: scalar i32.
+    Returns (loss scalar, dh2 [TPAD, NS, C], ncorrect scalar)."""
+    logits = jax.lax.dynamic_index_in_dim(hout, target_type, axis=0,
+                                          keepdims=False)
+    loss, dlogits, ncorrect = head(logits, labels, seed_mask)
+    dh2 = jnp.zeros_like(hout).at[target_type].set(dlogits)
+    return loss, dh2, ncorrect
+
+
+def slab_pick(hout, target_type):
+    """Serve-path logits extraction: the device-side target-type slab copy.
+
+    hout: [TPAD, NS, C]; target_type: scalar i32 -> [NS, C]."""
+    return jax.lax.dynamic_index_in_dim(hout, target_type, axis=0,
+                                        keepdims=False)
+
+
+def sgd_rgcn(w0, w1, dw0, dw1, lr):
+    """Fused on-device SGD over the RGCN parameter set: w -= lr * dw.
+
+    The ``0.0 +`` fold mirrors the host path's accumulate-into-zeros
+    (`Params::add_assign` on a `zeros_like`), which differs bitwise when a
+    gradient element is -0.0 — required for trajectory identity."""
+    return w0 - lr * (0.0 + dw0), w1 - lr * (0.0 + dw1)
+
+
+def sgd_rgat(w0, w1, a_src0, a_dst0, a_src1, a_dst1,
+             dw0_src, dw0_dst, dw1_src, dw1_dst,
+             da_src0, da_dst0, da_src1, da_dst1, lr):
+    """Fused on-device SGD over the RGAT parameter set. Projection weights
+    fold their two endpoint-pass gradients (src then dst) before the
+    update; attention vectors carry a single gradient each. The ``0.0 +``
+    fold mirrors the host accumulate-into-zeros order (see sgd_rgcn)."""
+    return (w0 - lr * ((0.0 + dw0_src) + dw0_dst),
+            w1 - lr * ((0.0 + dw1_src) + dw1_dst),
+            a_src0 - lr * da_src0,
+            a_dst0 - lr * da_dst0,
+            a_src1 - lr * da_src1,
+            a_dst1 - lr * da_dst1)

@@ -18,6 +18,13 @@ pub struct OptConfig {
     /// EXTENSION (beyond the paper): merge the projection stage too, via
     /// the stacked-einsum module (DESIGN.md §3).
     pub stacked_proj: bool,
+    /// EXTENSION: device-resident step (DESIGN.md §7) — activations,
+    /// gradients and parameters stay on-device between dispatches; only
+    /// the batch metadata crosses H2D and the head scalars (or serve
+    /// logits) cross D2H. Requires `merge` + `stacked_proj` (the resident
+    /// modules only exist for the fully-merged plan; enforced by
+    /// `StepExecutor::assert_dev_plan`).
+    pub dev_resident: bool,
 }
 
 impl OptConfig {
@@ -31,6 +38,7 @@ impl OptConfig {
             parallel: false,
             pipeline: false,
             stacked_proj: false,
+            dev_resident: false,
         }
     }
 
@@ -43,7 +51,14 @@ impl OptConfig {
             parallel: true,
             pipeline: true,
             stacked_proj: false,
+            dev_resident: false,
         }
+    }
+
+    /// Device-resident step on top of the fully-merged plan
+    /// (hifuse + stacked + dev_resident — DESIGN.md §7).
+    pub fn resident() -> Self {
+        OptConfig { stacked_proj: true, dev_resident: true, ..Self::hifuse() }
     }
 
     /// The Fig. 9 ablation ladder, in the paper's order:
@@ -66,6 +81,7 @@ impl OptConfig {
             "base" | "baseline" => Some(Self::baseline()),
             "hifuse" => Some(Self::hifuse()),
             "hifuse+stacked" => Some(OptConfig { stacked_proj: true, ..Self::hifuse() }),
+            "resident" => Some(Self::resident()),
             _ => Self::ablation_ladder()
                 .into_iter()
                 .find(|(n, _)| *n == name)
@@ -96,6 +112,9 @@ impl OptConfig {
         if self.stacked_proj {
             parts.push("S");
         }
+        if self.dev_resident {
+            parts.push("Dev");
+        }
         parts.join("+")
     }
 }
@@ -125,8 +144,16 @@ mod tests {
     }
 
     #[test]
+    fn resident_implies_fully_merged_plan() {
+        let r = OptConfig::parse("resident").unwrap();
+        assert_eq!(r, OptConfig::resident());
+        assert!(r.dev_resident && r.merge && r.stacked_proj);
+    }
+
+    #[test]
     fn labels_are_informative() {
         assert_eq!(OptConfig::baseline().label(), "base");
         assert_eq!(OptConfig::hifuse().label(), "R+M+O+P+Pipe");
+        assert_eq!(OptConfig::resident().label(), "R+M+O+P+Pipe+S+Dev");
     }
 }

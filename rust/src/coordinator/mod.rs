@@ -24,7 +24,8 @@ use anyhow::{ensure, Result};
 
 use crate::graph::{HeteroGraph, Layout};
 use crate::models::step::{
-    pad_layer_edges, schema_tensors, BatchData, Dims, SchemaTensors, StepExecutor,
+    pad_layer_edges, schema_tensors, BatchData, DevParams, DevSchema, Dims, SchemaTensors,
+    StepExecutor,
 };
 use crate::models::{ModelKind, Params};
 use crate::runtime::{
@@ -135,6 +136,10 @@ pub struct EpochMetrics {
     pub h2d_bytes: u64,
     /// Device→host bytes (outputs of host-returning dispatches).
     pub d2h_bytes: u64,
+    /// Modeled peer-interconnect bytes of the replica paths (per-round
+    /// parameter broadcast + per-batch gradient collection in the
+    /// device-resident mode); 0 on single-backend runs.
+    pub p2p_bytes: u64,
     /// Feature-cache slot reads served by the device-resident store.
     pub cache_hits: u64,
     /// Feature-cache slot reads gathered on CPU and uploaded.
@@ -176,6 +181,7 @@ impl EpochMetrics {
         self.gpu_time = c.gpu_time;
         self.h2d_bytes = c.h2d_bytes;
         self.d2h_bytes = c.d2h_bytes;
+        self.p2p_bytes = c.p2p_bytes;
         self.cache_hits = c.cache_hits;
         self.cache_misses = c.cache_misses;
         self.kernels_total = c.total();
@@ -210,6 +216,7 @@ impl EpochMetrics {
         self.gpu_time += other.gpu_time;
         self.h2d_bytes += other.h2d_bytes;
         self.d2h_bytes += other.d2h_bytes;
+        self.p2p_bytes += other.p2p_bytes;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         self.kernels_total += other.kernels_total;
@@ -779,14 +786,16 @@ pub fn gpu_select<B: ExecBackend>(
 /// identical slab on-device from {resident store, miss rows, scatter
 /// indices} — cutting the steady-state feature-channel H2D roughly by the
 /// hit rate while the produced bytes stay bitwise equal to the cache-off
-/// gather. Accounting caveat: downstream dispatches still receive `xs` as
-/// a *host* argument (the step executor is untouched), so those
-/// per-dispatch argument re-uploads appear in `h2d_bytes` **identically in
-/// both modes** and cancel in any on-vs-off comparison; the two branches
-/// below are the differential term. The gather output is materialized back
-/// to host for the same reason (free on the sim backend, whose "device"
-/// memory is host memory); feeding it device-resident into the stacked
-/// projection is the ROADMAP follow-up.
+/// gather. Accounting caveat (host-staged modes only): downstream
+/// dispatches still receive `xs` as a *host* argument (the step executor
+/// is untouched), so those per-dispatch argument re-uploads appear in
+/// `h2d_bytes` **identically in both modes** and cancel in any on-vs-off
+/// comparison; the two branches below are the differential term, and the
+/// gather output materializes back to host (free on the sim backend,
+/// whose "device" memory is host memory). `--mode resident` closes the
+/// caveat: [`assemble_batch_dev`] keeps the gather output as a `DevBuf`
+/// feeding the stacked projection directly, so neither the slab nor any
+/// downstream activation ever re-crosses PCIe (`tests/residency.rs`).
 pub fn assemble_batch<B: ExecBackend>(
     eng: &B,
     d: &Dims,
@@ -796,21 +805,19 @@ pub fn assemble_batch<B: ExecBackend>(
     prep: PreparedCpu,
 ) -> Result<(BatchData, SpentBatch)> {
     let PreparedCpu { collected, mb, selected, cpu_selected, .. } = prep;
-    let layers = if cpu_selected {
-        selected.iter().map(|rels| pad_layer_edges(rels, d)).collect()
-    } else {
-        mb.tagged
-            .iter()
-            .map(|t| Ok(pad_layer_edges(&gpu_select(eng, d, t, schema.n_rel, scratch)?, d)))
-            .collect::<Result<Vec<_>>>()?
-    };
+    let layers = resolve_layers(eng, d, schema, scratch, &mb, &selected, cpu_selected)?;
     let Collected { xs, labels, seed_mask, n_seed, miss_rows, gather_idx, n_hit, n_miss } =
         collected;
     let xs = match cache {
         None => {
             // The whole collected slab ships host→device every batch (the
-            // implicit upload the resident cache removes).
-            eng.counters().borrow_mut().add_h2d(xs.size_bytes() as u64);
+            // implicit upload the resident cache removes). The bytes are
+            // charged by performing the upload, not by a hand-recorded
+            // counter bump, so the feature channel has exactly one
+            // accounting site with the same semantics as the cache path's
+            // partial miss-row transfer.
+            let dev = eng.upload(&xs, xs.len())?;
+            eng.recycle_dev(dev);
             xs
         }
         Some(handle) => {
@@ -836,6 +843,78 @@ pub fn assemble_batch<B: ExecBackend>(
     Ok((batch, SpentBatch { mb, selected, miss_rows, gather_idx }))
 }
 
+/// Shared edge-resolution half of [`assemble_batch`] /
+/// [`assemble_batch_dev`]: per-relation edges (CPU-selected or via the
+/// baseline `edge_select` dispatches) padded into module tensors.
+fn resolve_layers<B: ExecBackend>(
+    eng: &B,
+    d: &Dims,
+    schema: &SchemaTensors,
+    scratch: &mut AssembleScratch,
+    mb: &MiniBatch,
+    selected: &[Vec<RelEdges>],
+    cpu_selected: bool,
+) -> Result<Vec<crate::models::step::LayerEdges>> {
+    if cpu_selected {
+        Ok(selected.iter().map(|rels| pad_layer_edges(rels, d)).collect())
+    } else {
+        mb.tagged
+            .iter()
+            .map(|t| Ok(pad_layer_edges(&gpu_select(eng, d, t, schema.n_rel, scratch)?, d)))
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+/// [`assemble_batch`] for the device-resident step (DESIGN.md §7): the
+/// feature slab never materializes back to host. On the cache path the
+/// `feature_gather` output is returned as a device buffer for
+/// [`StepExecutor::upload_batch`] to adopt; on the cache-off path no
+/// transfer happens here — the slab uploads inside `upload_batch`, the one
+/// site that charges feature bytes to H2D in this mode. `BatchData::xs`
+/// keeps the producer's host slab buffer in both cases (stale on the cache
+/// path) so [`SpentBatch::reclaim`] returns a complete buffer set.
+pub fn assemble_batch_dev<B: ExecBackend>(
+    eng: &B,
+    d: &Dims,
+    schema: &SchemaTensors,
+    cache: Option<&CacheHandle<B>>,
+    scratch: &mut AssembleScratch,
+    prep: PreparedCpu,
+) -> Result<(BatchData, SpentBatch, Option<B::Dev>)> {
+    let PreparedCpu { collected, mb, selected, cpu_selected, .. } = prep;
+    let layers = resolve_layers(eng, d, schema, scratch, &mb, &selected, cpu_selected)?;
+    let Collected { xs, labels, seed_mask, n_seed, miss_rows, gather_idx, n_hit, n_miss } =
+        collected;
+    let xs_dev = match cache {
+        None => None,
+        Some(handle) => {
+            let miss_dev = eng.upload(&miss_rows, n_miss * d.f)?;
+            let out = eng.run_dev(
+                "feature_gather",
+                Stage::Collection,
+                Phase::Fwd,
+                &[Arg::Dev(&handle.dev), Arg::Dev(&miss_dev), Arg::Host(&gather_idx)],
+            )?;
+            eng.recycle_dev(miss_dev);
+            eng.counters().borrow_mut().add_cache(n_hit as u64, n_miss as u64);
+            Some(out)
+        }
+    };
+    let batch = BatchData { xs, labels, seed_mask, n_seed, layers };
+    Ok((batch, SpentBatch { mb, selected, miss_rows, gather_idx }, xs_dev))
+}
+
+/// Device-authoritative training state of the device-resident mode
+/// (DESIGN.md §7): the on-device parameter set plus the static per-run
+/// schema constants (type maps, target scalar, LR, zero-accumulator
+/// seeds). Uploaded once at [`Trainer::new`] — warm-up traffic, outside
+/// the per-epoch counters — and owned for the life of the trainer; the
+/// host [`Params`] only rematerializes at [`Trainer::sync_params`] points.
+pub(crate) struct DevState<B: ExecBackend> {
+    pub(crate) params: DevParams<B>,
+    pub(crate) schema: DevSchema<B>,
+}
+
 pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub eng: &'e B,
     pub graph: &'g HeteroGraph,
@@ -857,6 +936,10 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub(crate) cache: Option<CacheHandle<B>>,
     /// Consumer-side pooled scratch for [`assemble_batch`].
     assemble: AssembleScratch,
+    /// Device-authoritative params + schema constants; `Some` iff
+    /// `opt.dev_resident` (single-backend path — the replica lanes carry
+    /// their own per-round device state).
+    pub(crate) dev: Option<DevState<B>>,
     /// Deterministic fault-injection plan (DESIGN.md §9); `None` (default)
     /// keeps every probe site a single `Option` check.
     pub(crate) fault: Option<Arc<FaultPlan>>,
@@ -876,6 +959,16 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let schema = schema_tensors(graph, &d);
         let exec = StepExecutor::new(eng, model, opt);
         let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
+        // Device-resident mode stages its authoritative state up front:
+        // one-time warm-up H2D, before any epoch resets the counters.
+        let dev = if opt.dev_resident {
+            Some(DevState {
+                params: exec.upload_params(&params)?,
+                schema: exec.make_dev_schema(&schema, cfg.lr)?,
+            })
+        } else {
+            None
+        };
         Ok(Trainer {
             eng,
             graph,
@@ -889,6 +982,7 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             arsenal: ProducerArsenal::default(),
             cache: None,
             assemble: AssembleScratch::default(),
+            dev,
             fault: None,
         })
     }
@@ -942,6 +1036,26 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
     /// steady state allocation-free.
     pub fn compute_batch(&mut self, prep: PreparedCpu) -> Result<(f32, f32, usize, BatchBufs)> {
         let d = self.exec.d;
+        if self.opt.dev_resident {
+            // Device-resident step (DESIGN.md §7): activations, gradients
+            // and parameters stay on-device; only the idx/miss uploads (or
+            // the cache-off slab inside `upload_batch`) cross H2D and only
+            // the two head scalars cross D2H — pinned by tests/residency.rs.
+            let (batch, spent, xs_dev) = assemble_batch_dev(
+                self.eng,
+                &d,
+                &self.schema,
+                self.cache.as_ref(),
+                &mut self.assemble,
+                prep,
+            )?;
+            let dev_batch = self.exec.upload_batch(&batch, xs_dev)?;
+            let dev = self.dev.as_mut().expect("dev_resident mode carries device state");
+            let res =
+                self.exec.train_step_dev(&mut dev.params, &dev.schema, &dev_batch, self.cfg.lr)?;
+            self.exec.recycle_batch(dev_batch);
+            return Ok((res.loss, res.ncorrect, res.n_seed, spent.reclaim(batch)));
+        }
         let (batch, spent) = assemble_batch(
             self.eng,
             &d,
@@ -952,6 +1066,17 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         )?;
         let res = self.exec.train_step(&mut self.params, &self.schema, &batch, self.cfg.lr)?;
         Ok((res.loss, res.ncorrect, res.n_seed, spent.reclaim(batch)))
+    }
+
+    /// Read the authoritative device parameters back into `self.params`
+    /// (checkpoint/eval sync point of the device-resident mode — counted
+    /// D2H); no-op in the host-staged modes, where `self.params` is always
+    /// authoritative.
+    pub fn sync_params(&mut self) -> Result<()> {
+        if let Some(dev) = &self.dev {
+            self.exec.sync_params(&dev.params, &mut self.params)?;
+        }
+        Ok(())
     }
 
     /// Train one epoch; dispatches to the pipelined loop when enabled.
@@ -1099,6 +1224,7 @@ mod tests {
             gpu_time: Duration::from_millis(3),
             h2d_bytes: 100,
             d2h_bytes: 10,
+            p2p_bytes: 40,
             cache_hits: 6,
             cache_misses: 2,
             kernels_total: 10,
@@ -1128,6 +1254,7 @@ mod tests {
             gpu_time: Duration::from_millis(1),
             h2d_bytes: 11,
             d2h_bytes: 5,
+            p2p_bytes: 2,
             cache_hits: 1,
             cache_misses: 3,
             kernels_total: 5,
@@ -1161,6 +1288,7 @@ mod tests {
         );
         assert_eq!(a.gpu_time, Duration::from_millis(4));
         assert_eq!((a.h2d_bytes, a.d2h_bytes), (111, 15));
+        assert_eq!(a.p2p_bytes, 42);
         assert_eq!((a.cache_hits, a.cache_misses), (7, 5));
         assert!((a.cache_hit_rate() - 7.0 / 12.0).abs() < 1e-12);
         assert_eq!(a.arena.hits, 6);

@@ -31,6 +31,14 @@
 //! the design reason `PreparedCpu` contains no backend handles. The
 //! data-parallel replica path ([`super::replica`], DESIGN.md §4) fans the
 //! same machinery out to one feed per replica lane.
+//!
+//! Device residency (DESIGN.md §7) is orthogonal to the pipeline: producers
+//! only ever touch host data, and the consumer's `Trainer::compute_batch`
+//! carries the device-resident branch internally — in `--mode resident` the
+//! consumed `PreparedCpu` is assembled straight into `DevBuf`s and the
+//! buffer sets recycle exactly as in the host-staged modes
+//! (`SpentBatch::reclaim` keeps the host slab alive for reuse even when the
+//! device path never read it).
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::Arc;

@@ -67,12 +67,14 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::pipeline::{spawn_feed, BatchFeed, FeedSlot};
 use super::{
-    assemble_batch, lane_producer_count, sampler_cfg, AssembleScratch, BatchBufs, CpuProducer,
-    EpochMetrics, OptConfig, PreparedCpu, ProducerArsenal, ProducerState, ProducerStats,
-    TrainCfg, PIPELINE_DEPTH,
+    assemble_batch, assemble_batch_dev, lane_producer_count, sampler_cfg, AssembleScratch,
+    BatchBufs, CpuProducer, EpochMetrics, OptConfig, PreparedCpu, ProducerArsenal, ProducerState,
+    ProducerStats, TrainCfg, PIPELINE_DEPTH,
 };
 use crate::graph::HeteroGraph;
-use crate::models::step::{schema_tensors, Dims, SchemaTensors, StepExecutor, StepResult};
+use crate::models::step::{
+    schema_tensors, DevGrads, DevParams, DevSchema, Dims, SchemaTensors, StepExecutor, StepResult,
+};
 use crate::models::{ModelKind, Params};
 use crate::runtime::{CacheHandle, CpuStageTimes, ExecBackend, ResidentStore, SimBackend};
 use crate::sampler::{epoch_perm, NeighborSampler};
@@ -137,6 +139,14 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     caches: Vec<CacheHandle<B>>,
     /// Deterministic fault-injection plan (DESIGN.md §9); `None` = off.
     fault: Option<Arc<FaultPlan>>,
+    /// Per-lane device-resident schema constants (type maps, target/LR
+    /// scalars, zero-accumulator seeds), uploaded once at construction and
+    /// persisted across epochs; non-empty iff `opt.dev_resident`, aligned
+    /// with `engines`. The *parameters* are re-staged per round (the
+    /// broadcast, counted in `Counters::p2p_bytes`) — the group stays
+    /// host-authoritative so the fixed-order all-reduce and the round SGD
+    /// run unchanged, bitwise (DESIGN.md §4/§7).
+    dev_schemas: Vec<DevSchema<B>>,
     rng: Rng,
     d: Dims,
 }
@@ -176,6 +186,14 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
         let schema = schema_tensors(graph, &d);
         let params = Params::init(d.rpad, d.f, d.h, d.c, cfg.seed);
         let arsenals = (0..engines.len()).map(|_| ProducerArsenal::default()).collect();
+        // Device-resident mode: stage each lane's schema constants once,
+        // up front (warm-up traffic, before any epoch resets the counters).
+        let mut dev_schemas = Vec::new();
+        if opt.dev_resident {
+            for e in &engines {
+                dev_schemas.push(StepExecutor::new(e, model, opt).make_dev_schema(&schema, cfg.lr)?);
+            }
+        }
         Ok(ReplicaGroup {
             graph,
             model,
@@ -188,6 +206,7 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             arsenals,
             caches: Vec::new(),
             fault: None,
+            dev_schemas,
             rng: Rng::new(cfg.seed),
             d,
         })
@@ -324,6 +343,7 @@ where
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
         let caches: &[CacheHandle<B>] = &self.caches;
+        let dev_schemas: &[DevSchema<B>] = &self.dev_schemas;
         // One shared epoch permutation + resident-store index across every
         // lane's producers (DESIGN.md §5/§7).
         let perm = epoch_perm(graph, &rng, epoch);
@@ -412,6 +432,7 @@ where
                         standby,
                         fault: fault.clone(),
                         cache: caches.get(i),
+                        dev_schema: dev_schemas.get(i),
                         assemble: AssembleScratch::default(),
                         pos: 0,
                         recoveries: 0,
@@ -614,6 +635,7 @@ where
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
         let caches: &[CacheHandle<B>] = &self.caches;
+        let dev_schemas: &[DevSchema<B>] = &self.dev_schemas;
         let cache_store = caches.first().map(|h| h.store.clone());
 
         // Round-robin lane schedule: a pure function of the batch index
@@ -635,6 +657,7 @@ where
                 }
                 let seed = arsenals[li].checkout(graph, 1).pop().expect("one seed");
                 let cache = caches.get(li);
+                let lane_ds = dev_schemas.get(li);
                 let lane_rng = rng.clone();
                 let lane_store = cache_store.clone();
                 let (stx, srx) = mpsc::channel::<ProducerState>();
@@ -671,6 +694,12 @@ where
                     consumers.push(s.spawn(
                         move || -> Result<Vec<(usize, HostTensor, Duration)>> {
                             let exec = StepExecutor::new(&*eng, model, opt);
+                            // Device-resident serve: stage the frozen params
+                            // once per lane, before the batch loop.
+                            let mut dev_params = match lane_ds {
+                                Some(_) => Some(exec.upload_params_peer(params)?),
+                                None => None,
+                            };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
                             for &bi in lane_sched {
@@ -679,12 +708,22 @@ where
                                 })?;
                                 eng.fault_cursor(0, bi as u64);
                                 let t0 = Instant::now();
-                                let (batch, spent) = assemble_batch(
-                                    &*eng, &d, schema, cache, &mut assemble, prep,
+                                let (logits, bufs) = serve_one(
+                                    &*eng,
+                                    &exec,
+                                    &d,
+                                    schema,
+                                    params,
+                                    cache,
+                                    dev_params.as_ref().zip(lane_ds),
+                                    &mut assemble,
+                                    prep,
                                 )?;
-                                let logits = exec.forward_step(params, schema, &batch)?;
                                 out.push((bi, logits, t0.elapsed()));
-                                let _ = btx.send(spent.reclaim(batch));
+                                let _ = btx.send(bufs);
+                            }
+                            if let Some(dp) = dev_params.take() {
+                                exec.recycle_dev_params(dp);
                             }
                             Ok(out)
                         },
@@ -696,6 +735,10 @@ where
                                 graph, scfg, d, opt, pool, lane_rng, lane_store, seed,
                             );
                             let exec = StepExecutor::new(&*eng, model, opt);
+                            let mut dev_params = match lane_ds {
+                                Some(_) => Some(exec.upload_params_peer(params)?),
+                                None => None,
+                            };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
                             let mut err = None;
@@ -703,13 +746,17 @@ where
                                 let prep = p.produce_request(bi as u64, &batches[bi]);
                                 eng.fault_cursor(0, bi as u64);
                                 let t0 = Instant::now();
-                                let step = assemble_batch(
-                                    &*eng, &d, schema, cache, &mut assemble, prep,
-                                )
-                                .and_then(|(batch, spent)| {
-                                    let logits = exec.forward_step(params, schema, &batch)?;
-                                    Ok((logits, spent.reclaim(batch)))
-                                });
+                                let step = serve_one(
+                                    &*eng,
+                                    &exec,
+                                    &d,
+                                    schema,
+                                    params,
+                                    cache,
+                                    dev_params.as_ref().zip(lane_ds),
+                                    &mut assemble,
+                                    prep,
+                                );
                                 match step {
                                     Ok((logits, bufs)) => {
                                         out.push((bi, logits, t0.elapsed()));
@@ -720,6 +767,9 @@ where
                                         break;
                                     }
                                 }
+                            }
+                            if let Some(dp) = dev_params.take() {
+                                exec.recycle_dev_params(dp);
                             }
                             let _ = stx.send(p.into_state());
                             match err {
@@ -756,6 +806,39 @@ where
     }
 }
 
+/// One serve batch on one lane: assemble + forward, host-staged or
+/// device-resident depending on `dev` (the lane's staged frozen parameters
+/// + schema constants). Returns the `[NS, C]` logits — the serve path's
+/// only per-batch D2H in device-resident mode — and the reclaimed buffers.
+#[allow(clippy::too_many_arguments)]
+fn serve_one<B: ExecBackend>(
+    eng: &B,
+    exec: &StepExecutor<'_, B>,
+    d: &Dims,
+    schema: &SchemaTensors,
+    params: &Params,
+    cache: Option<&CacheHandle<B>>,
+    dev: Option<(&DevParams<B>, &DevSchema<B>)>,
+    assemble: &mut AssembleScratch,
+    prep: PreparedCpu,
+) -> Result<(HostTensor, BatchBufs)> {
+    match dev {
+        Some((dp, ds)) => {
+            let (batch, spent, xs_dev) =
+                assemble_batch_dev(eng, d, schema, cache, assemble, prep)?;
+            let dev_batch = exec.upload_batch(&batch, xs_dev)?;
+            let logits = exec.forward_step_dev(dp, ds, &dev_batch)?;
+            exec.recycle_batch(dev_batch);
+            Ok((logits, spent.reclaim(batch)))
+        }
+        None => {
+            let (batch, spent) = assemble_batch(eng, d, schema, cache, assemble, prep)?;
+            let logits = exec.forward_step(params, schema, &batch)?;
+            Ok((logits, spent.reclaim(batch)))
+        }
+    }
+}
+
 /// Where a lane's prepared batches come from: its multi-producer feed
 /// (pipeline mode) or an inline producer it drives itself.
 enum LaneSource<'g> {
@@ -778,6 +861,9 @@ struct Lane<'e, 'g, B: ExecBackend> {
     /// This replica's feature-cache handle (shared read-only store, own
     /// device upload); `None` = cache off.
     cache: Option<&'e CacheHandle<B>>,
+    /// This replica's device-resident schema constants; `Some` iff
+    /// `opt.dev_resident` (see [`ReplicaGroup::dev_schemas`]).
+    dev_schema: Option<&'e DevSchema<B>>,
     /// Consumer-side pooled scratch for `assemble_batch`.
     assemble: AssembleScratch,
     /// Next position in this lane's schedule (feed sequence numbering).
@@ -818,14 +904,24 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
         batches: &[usize],
     ) -> RoundOutput {
         let exec = StepExecutor::new(&*self.eng, model, opt);
+        // Device-resident round state (DESIGN.md §7): the round's parameter
+        // snapshot broadcast over the modeled interconnect (p2p), dropped
+        // back into the arena when the round ends. The schema constants
+        // persist across rounds and epochs ([`ReplicaGroup::dev_schemas`]).
+        let mut dev_params = match self.dev_schema {
+            Some(_) => Some(exec.upload_params_peer(params)?),
+            None => None,
+        };
         let mut out = Vec::with_capacity(batches.len());
+        let mut died_at = None;
         for (off, &b) in batches.iter().enumerate() {
             // An injected lane death fires *before* the batch's prep is
             // consumed, so the failover path can pull it from this lane's
             // still-running source.
             if let Some(p) = &self.fault {
                 if p.fires(FaultSite::Lane, epoch, b as u64) > 0 {
-                    return Ok(LaneRound { items: out, died_at: Some(off) });
+                    died_at = Some(off);
+                    break;
                 }
             }
             let (prep, from_standby) =
@@ -836,16 +932,46 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
             self.dropped_edges += prep.dropped_edges();
             self.batches += 1;
             self.eng.fault_cursor(epoch, b as u64);
-            let (batch, spent) =
-                assemble_batch(&*self.eng, &d, schema, self.cache, &mut self.assemble, prep)?;
-            let res = exec.grad_step(params, schema, &batch)?;
-            let bufs = spent.reclaim(batch);
+            let (res, bufs) = if let (Some(dp), Some(ds)) = (&dev_params, self.dev_schema) {
+                // Device-resident step: activations stay on-device; the
+                // per-batch gradient returns over the interconnect
+                // (fetch_grads_peer) in host accumulation order, so the
+                // all-reduce below is bitwise unchanged.
+                let (batch, spent, xs_dev) = assemble_batch_dev(
+                    &*self.eng,
+                    &d,
+                    schema,
+                    self.cache,
+                    &mut self.assemble,
+                    prep,
+                )?;
+                let dev_batch = exec.upload_batch(&batch, xs_dev)?;
+                let mut grads = DevGrads::empty();
+                let sres = exec.grad_step_dev(dp, ds, &dev_batch, &mut grads)?;
+                exec.recycle_batch(dev_batch);
+                let g = exec.fetch_grads_peer(grads, params)?;
+                ((sres, g), spent.reclaim(batch))
+            } else {
+                let (batch, spent) = assemble_batch(
+                    &*self.eng,
+                    &d,
+                    schema,
+                    self.cache,
+                    &mut self.assemble,
+                    prep,
+                )?;
+                let res = exec.grad_step(params, schema, &batch)?;
+                (res, spent.reclaim(batch))
+            };
             let pos = self.pos;
             self.pos += 1;
             route_bufs(&mut self.src, &mut self.standby, pos, bufs, from_standby);
             out.push(res);
         }
-        Ok(LaneRound { items: out, died_at: None })
+        if let Some(dp) = dev_params.take() {
+            exec.recycle_dev_params(dp);
+        }
+        Ok(LaneRound { items: out, died_at })
     }
 
     fn tally(&self) -> LaneTally {
@@ -923,6 +1049,13 @@ fn absorb_slots<B: ExecBackend>(
     slots: &[usize],
 ) -> Result<Vec<(StepResult, Params)>> {
     let exec = StepExecutor::new(&*surv.eng, model, opt);
+    // The survivor re-stages the round snapshot on *its* device for the
+    // absorbed slots (its own broadcast; the dead lane's copy is gone with
+    // its round thread).
+    let mut dev_params = match surv.dev_schema {
+        Some(_) => Some(exec.upload_params_peer(params)?),
+        None => None,
+    };
     let mut out = Vec::with_capacity(slots.len());
     for &b in slots {
         let (prep, from_standby) =
@@ -933,14 +1066,28 @@ fn absorb_slots<B: ExecBackend>(
         surv.dropped_edges += prep.dropped_edges();
         surv.batches += 1;
         surv.eng.fault_cursor(epoch, b as u64);
-        let (batch, spent) =
-            assemble_batch(&*surv.eng, &d, schema, surv.cache, &mut surv.assemble, prep)?;
-        let res = exec.grad_step(params, schema, &batch)?;
-        let bufs = spent.reclaim(batch);
+        let (res, bufs) = if let (Some(dp), Some(ds)) = (&dev_params, surv.dev_schema) {
+            let (batch, spent, xs_dev) =
+                assemble_batch_dev(&*surv.eng, &d, schema, surv.cache, &mut surv.assemble, prep)?;
+            let dev_batch = exec.upload_batch(&batch, xs_dev)?;
+            let mut grads = DevGrads::empty();
+            let sres = exec.grad_step_dev(dp, ds, &dev_batch, &mut grads)?;
+            exec.recycle_batch(dev_batch);
+            let g = exec.fetch_grads_peer(grads, params)?;
+            ((sres, g), spent.reclaim(batch))
+        } else {
+            let (batch, spent) =
+                assemble_batch(&*surv.eng, &d, schema, surv.cache, &mut surv.assemble, prep)?;
+            let res = exec.grad_step(params, schema, &batch)?;
+            (res, spent.reclaim(batch))
+        };
         let pos = dead.pos;
         dead.pos += 1;
         route_bufs(&mut dead.src, &mut dead.standby, pos, bufs, from_standby);
         out.push(res);
+    }
+    if let Some(dp) = dev_params.take() {
+        exec.recycle_dev_params(dp);
     }
     Ok(out)
 }

@@ -11,7 +11,7 @@
 //!   profile `[flags]`              per-module time breakdown of one step
 //!
 //! Common flags: --dataset aifb|mutag|bgs|am|tiny --model rgcn|rgat
-//!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked --epochs N
+//!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked|resident --epochs N
 //!   --batch-size N --fanout N --lr F --seed N --threads N --scale F
 //!   --producers M (pipelined modes: CPU sampling workers feeding the
 //!   reorder buffer; default max(1, threads/2) — trajectory bit-identical
@@ -100,7 +100,9 @@ fn print_usage() {
          \n\
          common flags:\n\
          \x20 --dataset aifb|mutag|bgs|am|tiny    --model rgcn|rgat\n\
-         \x20 --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked\n\
+         \x20 --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked|resident\n\
+         \x20        (resident: device-resident step — activations, grads\n\
+         \x20        and params stay on-device; sim backend — DESIGN.md §7)\n\
          \x20 --backend sim|pjrt (default sim)    --profile tiny|bench (sim)\n\
          \x20 --sim-overhead-us F                 --artifacts DIR (pjrt)\n\
          \x20 --epochs N --batch-size N --fanout N --lr F --seed N\n\
@@ -152,6 +154,13 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
                  constant)"
             );
         }
+    }
+    if cfg.opt.dev_resident && cfg.backend != BackendKind::Sim {
+        bail!(
+            "--mode resident requires the sim backend (the PJRT artifact \
+             manifests predate the device-resident modules — head_full, \
+             proj_resident_bwd, sgd_rgcn/sgd_rgat)"
+        );
     }
     if cfg.replicas.is_some() {
         if !matches!(action, Action::Train | Action::Serve) {
@@ -271,6 +280,13 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
         } else {
             String::new()
         };
+        // Resident lanes broadcast params and return gradients peer-to-peer
+        // (device-to-device), not over the host PCIe counters.
+        let p2p_note = if cfg.opt.dev_resident {
+            format!(" | p2p {:.1} MiB", m.group.p2p_bytes as f64 / (1024.0 * 1024.0))
+        } else {
+            String::new()
+        };
         if cfg.fault_spec.is_some() {
             println!(
                 "  faults: dispatch retries {} | producer recoveries {} | lane failovers {}",
@@ -286,7 +302,7 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
             m.group.gpu_time,
             m.group.h2d_bytes as f64 / (1024.0 * 1024.0),
             m.group.d2h_bytes as f64 / (1024.0 * 1024.0),
-            cache_note,
+            format!("{cache_note}{p2p_note}"),
             m.group.kernels_total,
             per_rep.join("/"),
         );
@@ -574,6 +590,9 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             m.kernels_total
         );
     }
+    // Device-resident runs keep the authoritative parameters on-device;
+    // read them back before checkpointing (no-op in host-staged modes).
+    tr.sync_params()?;
     save_ckpt(cfg.save_ckpt.as_deref(), &tr.params)?;
     Ok(())
 }

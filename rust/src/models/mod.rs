@@ -36,8 +36,12 @@ impl ModelKind {
 /// Host-resident trainable parameters (padded to RPAD relations; dead
 /// relations receive zero gradients and never move).
 ///
-/// The SGD update runs host-side in both execution modes (identical cost,
-/// so it cancels out of every comparison; DESIGN.md §5).
+/// The SGD update runs host-side in the host-staged execution modes
+/// (identical cost, so it cancels out of every comparison; DESIGN.md §5).
+/// The device-resident mode instead dispatches the fused `sgd_rgcn` /
+/// `sgd_rgat` modules and keeps the authoritative copy on-device; this
+/// struct then only materializes at checkpoint/eval sync points
+/// (DESIGN.md §7).
 #[derive(Clone, Debug)]
 pub struct Params {
     pub rpad: usize,

@@ -20,6 +20,10 @@ pub struct StepCounts {
     pub fuse_fwd: usize,
     pub fuse_bwd: usize,
     pub head: usize,
+    /// Fused on-device optimizer dispatch (`sgd_rgcn`/`sgd_rgat`, issued at
+    /// (Head, Bwd)); 1 in device-resident mode, 0 in the host-staged modes
+    /// (where the SGD update is host arithmetic, not a dispatch).
+    pub opt_step: usize,
 }
 
 impl StepCounts {
@@ -32,6 +36,7 @@ impl StepCounts {
             + self.fuse_fwd
             + self.fuse_bwd
             + self.head
+            + self.opt_step
     }
 
     pub fn forward_total(&self) -> usize {
@@ -52,7 +57,7 @@ impl StepCounts {
             (Stage::Fusion, Phase::Fwd) => self.fuse_fwd,
             (Stage::Fusion, Phase::Bwd) => self.fuse_bwd,
             (Stage::Head, Phase::Fwd) => self.head,
-            (Stage::Head, Phase::Bwd) => 0,
+            (Stage::Head, Phase::Bwd) => self.opt_step,
             (Stage::Calib, _) => 0,
         }
     }
@@ -99,7 +104,13 @@ pub fn expected_counts(model: ModelKind, opt: &OptConfig, n_rel: usize, live: &[
 
     c.fuse_fwd = layers;
     c.fuse_bwd = layers;
+    // Head: one dispatch either way — `head` on the host-staged plans,
+    // `head_full` (on-device slab extract + dlogits scatter) when resident.
     c.head = 1;
+    // Device-resident mode adds exactly one dispatch per step: the fused
+    // on-device SGD. Every other stage keeps its fully-merged count (the
+    // resident backward modules replace their host-staged counterparts 1:1).
+    c.opt_step = usize::from(opt.dev_resident);
     c
 }
 
@@ -138,6 +149,21 @@ mod tests {
         assert_eq!(c.proj_fwd, 2);
         let r = expected_counts(ModelKind::Rgat, &opt, 10, &[8, 6]);
         assert_eq!(r.proj_fwd, 4); // src + dst per layer
+    }
+
+    #[test]
+    fn resident_adds_exactly_the_optimizer_dispatch() {
+        let stacked = OptConfig { stacked_proj: true, ..OptConfig::hifuse() };
+        for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+            let host = expected_counts(model, &stacked, 10, &[8, 6]);
+            let dev = expected_counts(model, &OptConfig::resident(), 10, &[8, 6]);
+            assert_eq!(dev.total(), host.total() + 1, "{model:?}");
+            assert_eq!(dev.get(Stage::Head, Phase::Bwd), 1);
+            assert_eq!(host.get(Stage::Head, Phase::Bwd), 0);
+        }
+        // Absolute per-batch dispatch counts the residency suite pins.
+        assert_eq!(expected_counts(ModelKind::Rgcn, &OptConfig::resident(), 10, &[8, 6]).total(), 14);
+        assert_eq!(expected_counts(ModelKind::Rgat, &OptConfig::resident(), 10, &[8, 6]).total(), 18);
     }
 
     #[test]

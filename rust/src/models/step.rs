@@ -209,6 +209,105 @@ struct LayerFwd<D> {
 }
 
 // --------------------------------------------------------------------------
+// device-resident step state (DESIGN.md §7)
+// --------------------------------------------------------------------------
+
+/// Device-resident trainable parameters: the authoritative copy when the
+/// step runs fully on-device. In single-trainer mode they persist across
+/// batches and are updated in place by [`StepExecutor::opt_step`]; the host
+/// [`Params`] only rematerializes at sync points ([`StepExecutor::sync_params`]).
+pub struct DevParams<B: ExecBackend> {
+    /// `[RPAD, F, H]` layer-0 projection weights.
+    pub w0: B::Dev,
+    /// `[RPAD, H, C]` layer-1 projection weights.
+    pub w1: B::Dev,
+    /// RGAT attention vectors `(a_src0, a_dst0, a_src1, a_dst1)`. `None`
+    /// for RGCN: its attention vectors receive zero gradients, and
+    /// `x - lr*0.0 == x` bitwise, so the host copies stay authoritative.
+    pub att: Option<(B::Dev, B::Dev, B::Dev, B::Dev)>,
+}
+
+/// Device-resident schema constants plus reusable read-only seeds for the
+/// device-resident step: uploaded once per schema (warm-up, not per batch).
+pub struct DevSchema<B: ExecBackend> {
+    /// `[RPAD]` i32 source types (stacked-projection gather index).
+    pub src_type: B::Dev,
+    /// `[RPAD]` i32 destination types (fusion segment ids).
+    pub dst_type: B::Dev,
+    /// Scalar i32 target type (`head_full` / `slab_pick` input).
+    pub tgt: B::Dev,
+    /// Learning rate pinned when the schema was built;
+    /// [`StepExecutor::opt_step`] asserts bitwise agreement with its caller.
+    pub lr_val: f32,
+    /// Scalar f32 learning rate (the `sgd_*` module input).
+    lr: B::Dev,
+    /// `[TPAD, NS, F]` / `[TPAD, NS, H]` all-zero accumulator seeds for
+    /// `proj_resident_bwd_*`. Uploaded with `valid_elems = 0` — a zeroed
+    /// device allocation transfers nothing — and read-only, so one buffer
+    /// serves every batch.
+    zero_acc0: B::Dev,
+    zero_acc1: B::Dev,
+}
+
+/// One batch's gradients, all device-resident. RGCN fills only the `_src`
+/// weight slots; RGAT fills all eight (src/dst endpoint passes plus the
+/// four attention vectors).
+pub struct DevGrads<B: ExecBackend> {
+    pub dw0_src: Option<B::Dev>,
+    pub dw0_dst: Option<B::Dev>,
+    pub dw1_src: Option<B::Dev>,
+    pub dw1_dst: Option<B::Dev>,
+    pub da_src0: Option<B::Dev>,
+    pub da_dst0: Option<B::Dev>,
+    pub da_src1: Option<B::Dev>,
+    pub da_dst1: Option<B::Dev>,
+}
+
+impl<B: ExecBackend> DevGrads<B> {
+    pub fn empty() -> Self {
+        DevGrads {
+            dw0_src: None,
+            dw0_dst: None,
+            dw1_src: None,
+            dw1_dst: None,
+            da_src0: None,
+            da_dst0: None,
+            da_src1: None,
+            da_dst1: None,
+        }
+    }
+}
+
+/// One layer's merged edge tensors on the device (per-batch uploads — the
+/// legitimate per-batch H2D traffic alongside the feature channel).
+pub struct DevLayerEdges<B: ExecBackend> {
+    pub src: B::Dev,
+    pub dst: B::Dev,
+    pub valid: B::Dev,
+}
+
+/// A batch fully staged on the device: the unit
+/// [`StepExecutor::train_step_dev`] / [`StepExecutor::forward_step_dev`]
+/// consume without touching host feature memory again.
+pub struct DevBatch<B: ExecBackend> {
+    /// `[TPAD, NS, F]` feature slab (cache-gather output or full upload).
+    pub xs: B::Dev,
+    pub labels: B::Dev,
+    pub seed_mask: B::Dev,
+    pub n_seed: usize,
+    pub layers: Vec<DevLayerEdges<B>>,
+}
+
+/// Forward activations of one layer, all device-resident.
+struct DevLayerFwd<B: ExecBackend> {
+    pstack: B::Dev,
+    /// RGAT only.
+    pstack_dst: Option<B::Dev>,
+    astack: B::Dev,
+    hout: B::Dev,
+}
+
+// --------------------------------------------------------------------------
 // the step executor
 // --------------------------------------------------------------------------
 
@@ -846,6 +945,678 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
         self.recycle_layer(l1);
         self.recycle_layer(l0);
         Ok(logits)
+    }
+
+    // ----------------------------------------------------------------------
+    // device-resident step (DESIGN.md §7): activations, parameters, and
+    // gradients chain as DevBufs; only the idx/edge uploads (H2D) and the
+    // loss/metric scalars or serve logits (D2H) cross the PCIe boundary.
+    // Every dispatch reuses the host-staged modules' math, so trajectories
+    // are bitwise identical to the hifuse+stacked host path
+    // (tests/residency.rs).
+    // ----------------------------------------------------------------------
+
+    /// The device-resident step requires the merged + stacked plan: its
+    /// modules only exist in that configuration.
+    fn assert_dev_plan(&self) {
+        assert!(
+            self.opt.merge && self.opt.stacked_proj,
+            "device-resident step requires merge + stacked_proj"
+        );
+    }
+
+    /// Upload schema constants and zero-accumulator seeds (once per
+    /// schema/learning-rate, warm-up traffic).
+    pub fn make_dev_schema(&self, schema: &SchemaTensors, lr: f32) -> Result<DevSchema<B>> {
+        let (d, eng) = (&self.d, self.eng);
+        let tgt = HostTensor::scalar_i32(schema.target_type as i32);
+        let lrt = HostTensor::scalar_f32(lr);
+        let z0 = HostTensor::zeros_f32(&[d.tpad, d.ns, d.f]);
+        let z1 = HostTensor::zeros_f32(&[d.tpad, d.ns, d.h]);
+        Ok(DevSchema {
+            src_type: eng.upload(&schema.src_type_i32, d.rpad)?,
+            dst_type: eng.upload(&schema.dst_type_i32, d.rpad)?,
+            tgt: eng.upload(&tgt, 1)?,
+            lr_val: lr,
+            lr: eng.upload(&lrt, 1)?,
+            zero_acc0: eng.upload(&z0, 0)?,
+            zero_acc1: eng.upload(&z1, 0)?,
+        })
+    }
+
+    /// Place the full parameter set on the device (H2D, once at warm-up).
+    pub fn upload_params(&self, params: &Params) -> Result<DevParams<B>> {
+        self.upload_params_impl(params, false)
+    }
+
+    /// [`StepExecutor::upload_params`] over the modeled replica interconnect
+    /// (the per-round parameter broadcast of the data-parallel path —
+    /// counted in `Counters::p2p_bytes`).
+    pub fn upload_params_peer(&self, params: &Params) -> Result<DevParams<B>> {
+        self.upload_params_impl(params, true)
+    }
+
+    fn upload_params_impl(&self, params: &Params, peer: bool) -> Result<DevParams<B>> {
+        let d = &self.d;
+        let up = |t: HostTensor| {
+            let n = t.len();
+            if peer {
+                self.eng.upload_peer(&t, n)
+            } else {
+                self.eng.upload(&t, n)
+            }
+        };
+        let w0 = up(HostTensor::f32(params.w0.clone(), &[d.rpad, d.f, d.h]))?;
+        let w1 = up(HostTensor::f32(params.w1.clone(), &[d.rpad, d.h, d.c]))?;
+        let att = if self.model == ModelKind::Rgat {
+            Some((
+                up(HostTensor::f32(params.a_src0.clone(), &[d.rpad, d.h]))?,
+                up(HostTensor::f32(params.a_dst0.clone(), &[d.rpad, d.h]))?,
+                up(HostTensor::f32(params.a_src1.clone(), &[d.rpad, d.c]))?,
+                up(HostTensor::f32(params.a_dst1.clone(), &[d.rpad, d.c]))?,
+            ))
+        } else {
+            None
+        };
+        Ok(DevParams { w0, w1, att })
+    }
+
+    /// Stage a prepared batch on the device. `xs` carries the feature slab
+    /// when the caller already produced it there (the cache-gather path);
+    /// otherwise the full host slab uploads here — the one site that
+    /// charges feature bytes to H2D on the cache-off path.
+    pub fn upload_batch(&self, batch: &BatchData, xs: Option<B::Dev>) -> Result<DevBatch<B>> {
+        let eng = self.eng;
+        let xs = match xs {
+            Some(dv) => dv,
+            None => eng.upload(&batch.xs, batch.xs.len())?,
+        };
+        let mut layers = Vec::with_capacity(batch.layers.len());
+        for e in &batch.layers {
+            layers.push(DevLayerEdges {
+                src: eng.upload(&e.src, e.src.len())?,
+                dst: eng.upload(&e.dst, e.dst.len())?,
+                valid: eng.upload(&e.valid, e.valid.len())?,
+            });
+        }
+        Ok(DevBatch {
+            xs,
+            labels: eng.upload(&batch.labels, batch.labels.len())?,
+            seed_mask: eng.upload(&batch.seed_mask, batch.seed_mask.len())?,
+            n_seed: batch.n_seed,
+            layers,
+        })
+    }
+
+    pub fn recycle_batch(&self, b: DevBatch<B>) {
+        let eng = self.eng;
+        eng.recycle_dev(b.xs);
+        eng.recycle_dev(b.labels);
+        eng.recycle_dev(b.seed_mask);
+        for e in b.layers {
+            eng.recycle_dev(e.src);
+            eng.recycle_dev(e.dst);
+            eng.recycle_dev(e.valid);
+        }
+    }
+
+    pub fn recycle_dev_params(&self, p: DevParams<B>) {
+        let eng = self.eng;
+        eng.recycle_dev(p.w0);
+        eng.recycle_dev(p.w1);
+        if let Some((a, b, c, dd)) = p.att {
+            eng.recycle_dev(a);
+            eng.recycle_dev(b);
+            eng.recycle_dev(c);
+            eng.recycle_dev(dd);
+        }
+    }
+
+    pub fn recycle_dev_schema(&self, s: DevSchema<B>) {
+        let eng = self.eng;
+        eng.recycle_dev(s.src_type);
+        eng.recycle_dev(s.dst_type);
+        eng.recycle_dev(s.tgt);
+        eng.recycle_dev(s.lr);
+        eng.recycle_dev(s.zero_acc0);
+        eng.recycle_dev(s.zero_acc1);
+    }
+
+    fn dev_w<'p>(&self, dp: &'p DevParams<B>, l: usize) -> &'p B::Dev {
+        if l == 0 {
+            &dp.w0
+        } else {
+            &dp.w1
+        }
+    }
+
+    fn dev_att<'p>(&self, dp: &'p DevParams<B>, l: usize) -> (&'p B::Dev, &'p B::Dev) {
+        match dp.att.as_ref() {
+            Some((s0, d0, s1, d1)) => {
+                if l == 0 {
+                    (s0, d0)
+                } else {
+                    (s1, d1)
+                }
+            }
+            None => panic!("RGAT device params missing attention vectors"),
+        }
+    }
+
+    fn zero_acc<'s>(&self, ds: &'s DevSchema<B>, l: usize) -> &'s B::Dev {
+        if l == 0 {
+            &ds.zero_acc0
+        } else {
+            &ds.zero_acc1
+        }
+    }
+
+    fn layer_forward_dev(
+        &self,
+        l: usize,
+        hin: &B::Dev,
+        dp: &DevParams<B>,
+        ds: &DevSchema<B>,
+        edges: &DevLayerEdges<B>,
+    ) -> Result<DevLayerFwd<B>> {
+        let eng = self.eng;
+        let w = self.dev_w(dp, l);
+        let pstack = eng.run_dev(
+            Self::proj_name(l, false, true),
+            Stage::Projection,
+            Phase::Fwd,
+            &[Arg::Dev(hin), Arg::Dev(w), Arg::Dev(&ds.src_type)],
+        )?;
+        let (pstack_dst, astack) = match self.model {
+            ModelKind::Rgcn => {
+                let a = eng.run_dev(
+                    self.agg_name(l, false),
+                    Stage::Aggregation,
+                    Phase::Fwd,
+                    &[
+                        Arg::Dev(&pstack),
+                        Arg::Dev(&edges.src),
+                        Arg::Dev(&edges.dst),
+                        Arg::Dev(&edges.valid),
+                    ],
+                )?;
+                (None, a)
+            }
+            ModelKind::Rgat => {
+                let pdst = eng.run_dev(
+                    Self::proj_name(l, false, true),
+                    Stage::Projection,
+                    Phase::Fwd,
+                    &[Arg::Dev(hin), Arg::Dev(w), Arg::Dev(&ds.dst_type)],
+                )?;
+                let (a_s, a_d) = self.dev_att(dp, l);
+                let a = eng.run_dev(
+                    self.agg_name(l, false),
+                    Stage::Aggregation,
+                    Phase::Fwd,
+                    &[
+                        Arg::Dev(&pstack),
+                        Arg::Dev(&pdst),
+                        Arg::Dev(a_s),
+                        Arg::Dev(a_d),
+                        Arg::Dev(&edges.src),
+                        Arg::Dev(&edges.dst),
+                        Arg::Dev(&edges.valid),
+                    ],
+                )?;
+                (Some(pdst), a)
+            }
+        };
+        let fuse_name = if l == 0 { "fuse_relu_fwd_h" } else { "fuse_lin_fwd_c" };
+        let hout = eng.run_dev(
+            fuse_name,
+            Stage::Fusion,
+            Phase::Fwd,
+            &[Arg::Dev(&ds.dst_type), Arg::Dev(&astack)],
+        )?;
+        Ok(DevLayerFwd { pstack, pstack_dst, astack, hout })
+    }
+
+    /// Backward through one layer, fully on-device: consumes `dhout`
+    /// (borrowed; caller recycles), fills this layer's slots in `grads`,
+    /// returns the device-resident `dhin`.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_backward_dev(
+        &self,
+        l: usize,
+        hin: &B::Dev,
+        fwd: &DevLayerFwd<B>,
+        dhout: &B::Dev,
+        dp: &DevParams<B>,
+        ds: &DevSchema<B>,
+        edges: &DevLayerEdges<B>,
+        grads: &mut DevGrads<B>,
+    ) -> Result<B::Dev> {
+        let eng = self.eng;
+        let fuse_name = if l == 0 { "fuse_relu_bwd_h" } else { "fuse_lin_bwd_c" };
+        let da = eng.run_dev(
+            fuse_name,
+            Stage::Fusion,
+            Phase::Bwd,
+            &[Arg::Dev(&ds.dst_type), Arg::Dev(&fwd.astack), Arg::Dev(dhout)],
+        )?;
+        let resident_name =
+            if l == 0 { "proj_resident_bwd_l0" } else { "proj_resident_bwd_l1" };
+        let w = self.dev_w(dp, l);
+        match self.model {
+            ModelKind::Rgcn => {
+                let dpg = eng.run_dev(
+                    self.agg_name(l, true),
+                    Stage::Aggregation,
+                    Phase::Bwd,
+                    &[
+                        Arg::Dev(&edges.src),
+                        Arg::Dev(&edges.dst),
+                        Arg::Dev(&edges.valid),
+                        Arg::Dev(&da),
+                    ],
+                )?;
+                eng.recycle_dev(da);
+                let mut out = eng
+                    .run_dev_multi(
+                        resident_name,
+                        Stage::Projection,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(hin),
+                            Arg::Dev(w),
+                            Arg::Dev(&ds.src_type),
+                            Arg::Dev(&dpg),
+                            Arg::Dev(self.zero_acc(ds, l)),
+                        ],
+                    )?
+                    .into_iter();
+                let dhin = out.next().unwrap();
+                let dw = out.next().unwrap();
+                eng.recycle_dev(dpg);
+                let slot = if l == 0 { &mut grads.dw0_src } else { &mut grads.dw1_src };
+                *slot = Some(dw);
+                Ok(dhin)
+            }
+            ModelKind::Rgat => {
+                let (a_s, a_d) = self.dev_att(dp, l);
+                let mut out = eng
+                    .run_dev_multi(
+                        self.agg_name(l, true),
+                        Stage::Aggregation,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(&fwd.pstack),
+                            Arg::Dev(fwd.pstack_dst.as_ref().unwrap()),
+                            Arg::Dev(a_s),
+                            Arg::Dev(a_d),
+                            Arg::Dev(&edges.src),
+                            Arg::Dev(&edges.dst),
+                            Arg::Dev(&edges.valid),
+                            Arg::Dev(&da),
+                        ],
+                    )?
+                    .into_iter();
+                let dfs = out.next().unwrap();
+                let dfd = out.next().unwrap();
+                let das = out.next().unwrap();
+                let dad = out.next().unwrap();
+                eng.recycle_dev(da);
+                // Two endpoint passes chain through the resident
+                // accumulator: src seeds from zeros, dst folds on top —
+                // the exact `add_assign` order of the host executor.
+                let mut src_out = eng
+                    .run_dev_multi(
+                        resident_name,
+                        Stage::Projection,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(hin),
+                            Arg::Dev(w),
+                            Arg::Dev(&ds.src_type),
+                            Arg::Dev(&dfs),
+                            Arg::Dev(self.zero_acc(ds, l)),
+                        ],
+                    )?
+                    .into_iter();
+                let dhin_src = src_out.next().unwrap();
+                let dw_src = src_out.next().unwrap();
+                eng.recycle_dev(dfs);
+                let mut dst_out = eng
+                    .run_dev_multi(
+                        resident_name,
+                        Stage::Projection,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(hin),
+                            Arg::Dev(w),
+                            Arg::Dev(&ds.dst_type),
+                            Arg::Dev(&dfd),
+                            Arg::Dev(&dhin_src),
+                        ],
+                    )?
+                    .into_iter();
+                let dhin = dst_out.next().unwrap();
+                let dw_dst = dst_out.next().unwrap();
+                eng.recycle_dev(dfd);
+                eng.recycle_dev(dhin_src);
+                if l == 0 {
+                    grads.dw0_src = Some(dw_src);
+                    grads.dw0_dst = Some(dw_dst);
+                    grads.da_src0 = Some(das);
+                    grads.da_dst0 = Some(dad);
+                } else {
+                    grads.dw1_src = Some(dw_src);
+                    grads.dw1_dst = Some(dw_dst);
+                    grads.da_src1 = Some(das);
+                    grads.da_dst1 = Some(dad);
+                }
+                Ok(dhin)
+            }
+        }
+    }
+
+    fn recycle_layer_dev(&self, l: DevLayerFwd<B>) {
+        let eng = self.eng;
+        eng.recycle_dev(l.pstack);
+        if let Some(p) = l.pstack_dst {
+            eng.recycle_dev(p);
+        }
+        eng.recycle_dev(l.astack);
+        eng.recycle_dev(l.hout);
+    }
+
+    /// Fetch a device scalar (loss / ncorrect): the 4-byte D2H reads that
+    /// are the training path's entire per-batch device→host traffic.
+    fn fetch_scalar(&self, d: B::Dev) -> Result<f32> {
+        let t = self.eng.fetch(d)?;
+        let v = t.scalar()?;
+        self.eng.recycle(t);
+        Ok(v)
+    }
+
+    /// Device-resident forward + loss + backward: the analogue of
+    /// [`StepExecutor::grad_step`] with gradients left on the device in
+    /// `grads` (for [`StepExecutor::opt_step`] or
+    /// [`StepExecutor::fetch_grads_peer`]).
+    pub fn grad_step_dev(
+        &self,
+        dp: &DevParams<B>,
+        ds: &DevSchema<B>,
+        batch: &DevBatch<B>,
+        grads: &mut DevGrads<B>,
+    ) -> Result<StepResult> {
+        self.assert_dev_plan();
+        let eng = self.eng;
+        assert_eq!(batch.layers.len(), 2, "2-layer model");
+
+        let l0 = self.layer_forward_dev(0, &batch.xs, dp, ds, &batch.layers[0])?;
+        let l1 = self.layer_forward_dev(1, &l0.hout, dp, ds, &batch.layers[1])?;
+
+        let mut out = eng
+            .run_dev_multi(
+                "head_full",
+                Stage::Head,
+                Phase::Fwd,
+                &[
+                    Arg::Dev(&l1.hout),
+                    Arg::Dev(&batch.labels),
+                    Arg::Dev(&batch.seed_mask),
+                    Arg::Dev(&ds.tgt),
+                ],
+            )?
+            .into_iter();
+        let loss = self.fetch_scalar(out.next().unwrap())?;
+        let dh2 = out.next().unwrap();
+        let ncorrect = self.fetch_scalar(out.next().unwrap())?;
+
+        let dh1 = self.layer_backward_dev(1, &l0.hout, &l1, &dh2, dp, ds, &batch.layers[1],
+            grads)?;
+        eng.recycle_dev(dh2);
+        let dx = self.layer_backward_dev(0, &batch.xs, &l0, &dh1, dp, ds, &batch.layers[0],
+            grads)?;
+        eng.recycle_dev(dh1);
+        eng.recycle_dev(dx);
+        self.recycle_layer_dev(l1);
+        self.recycle_layer_dev(l0);
+
+        Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
+    }
+
+    /// Apply one fused on-device SGD dispatch, swapping the parameter
+    /// handles in place and consuming the gradients. `lr` must be bitwise
+    /// the rate pinned in `ds` — it rides in as a resident scalar, so a
+    /// drifting caller would silently train at the stale rate.
+    pub fn opt_step(
+        &self,
+        dp: &mut DevParams<B>,
+        ds: &DevSchema<B>,
+        grads: DevGrads<B>,
+        lr: f32,
+    ) -> Result<()> {
+        let eng = self.eng;
+        assert_eq!(
+            lr.to_bits(),
+            ds.lr_val.to_bits(),
+            "opt_step lr {lr} differs from the DevSchema rate {}",
+            ds.lr_val
+        );
+        match self.model {
+            ModelKind::Rgcn => {
+                let dw0 = grads.dw0_src.expect("missing layer-0 weight gradient");
+                let dw1 = grads.dw1_src.expect("missing layer-1 weight gradient");
+                let mut out = eng
+                    .run_dev_multi(
+                        "sgd_rgcn",
+                        Stage::Head,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(&dp.w0),
+                            Arg::Dev(&dp.w1),
+                            Arg::Dev(&dw0),
+                            Arg::Dev(&dw1),
+                            Arg::Dev(&ds.lr),
+                        ],
+                    )?
+                    .into_iter();
+                let nw0 = out.next().unwrap();
+                let nw1 = out.next().unwrap();
+                eng.recycle_dev(std::mem::replace(&mut dp.w0, nw0));
+                eng.recycle_dev(std::mem::replace(&mut dp.w1, nw1));
+                eng.recycle_dev(dw0);
+                eng.recycle_dev(dw1);
+            }
+            ModelKind::Rgat => {
+                let dw0s = grads.dw0_src.expect("missing dw0_src");
+                let dw0d = grads.dw0_dst.expect("missing dw0_dst");
+                let dw1s = grads.dw1_src.expect("missing dw1_src");
+                let dw1d = grads.dw1_dst.expect("missing dw1_dst");
+                let das0 = grads.da_src0.expect("missing da_src0");
+                let dad0 = grads.da_dst0.expect("missing da_dst0");
+                let das1 = grads.da_src1.expect("missing da_src1");
+                let dad1 = grads.da_dst1.expect("missing da_dst1");
+                let outs = {
+                    let (a_s0, a_d0, a_s1, a_d1) = match dp.att.as_ref() {
+                        Some((a, b, c, dd)) => (a, b, c, dd),
+                        None => panic!("RGAT device params missing attention vectors"),
+                    };
+                    eng.run_dev_multi(
+                        "sgd_rgat",
+                        Stage::Head,
+                        Phase::Bwd,
+                        &[
+                            Arg::Dev(&dp.w0),
+                            Arg::Dev(&dp.w1),
+                            Arg::Dev(a_s0),
+                            Arg::Dev(a_d0),
+                            Arg::Dev(a_s1),
+                            Arg::Dev(a_d1),
+                            Arg::Dev(&dw0s),
+                            Arg::Dev(&dw0d),
+                            Arg::Dev(&dw1s),
+                            Arg::Dev(&dw1d),
+                            Arg::Dev(&das0),
+                            Arg::Dev(&dad0),
+                            Arg::Dev(&das1),
+                            Arg::Dev(&dad1),
+                            Arg::Dev(&ds.lr),
+                        ],
+                    )?
+                };
+                let mut out = outs.into_iter();
+                let nw0 = out.next().unwrap();
+                let nw1 = out.next().unwrap();
+                let na_s0 = out.next().unwrap();
+                let na_d0 = out.next().unwrap();
+                let na_s1 = out.next().unwrap();
+                let na_d1 = out.next().unwrap();
+                eng.recycle_dev(std::mem::replace(&mut dp.w0, nw0));
+                eng.recycle_dev(std::mem::replace(&mut dp.w1, nw1));
+                let att = dp.att.as_mut().unwrap();
+                eng.recycle_dev(std::mem::replace(&mut att.0, na_s0));
+                eng.recycle_dev(std::mem::replace(&mut att.1, na_d0));
+                eng.recycle_dev(std::mem::replace(&mut att.2, na_s1));
+                eng.recycle_dev(std::mem::replace(&mut att.3, na_d1));
+                for g in [dw0s, dw0d, dw1s, dw1d, das0, dad0, das1, dad1] {
+                    eng.recycle_dev(g);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One full device-resident training step: forward, loss, backward, and
+    /// the fused on-device SGD update.
+    pub fn train_step_dev(
+        &self,
+        dp: &mut DevParams<B>,
+        ds: &DevSchema<B>,
+        batch: &DevBatch<B>,
+        lr: f32,
+    ) -> Result<StepResult> {
+        let mut grads = DevGrads::empty();
+        let res = self.grad_step_dev(dp, ds, batch, &mut grads)?;
+        self.opt_step(dp, ds, grads, lr)?;
+        Ok(res)
+    }
+
+    /// Pull one batch's device gradients into a host [`Params`] over the
+    /// modeled replica interconnect, reproducing the host executor's
+    /// accumulation order exactly: weight gradients fold `src` then `dst`
+    /// into zero-initialized buffers, attention gradients copy — so the
+    /// all-reduce input is bitwise the host path's.
+    pub fn fetch_grads_peer(&self, grads: DevGrads<B>, like: &Params) -> Result<Params> {
+        let eng = self.eng;
+        let mut g = like.zeros_like();
+        let mut add = |dst: &mut [f32], dev: Option<B::Dev>| -> Result<()> {
+            if let Some(dv) = dev {
+                let t = eng.fetch_peer(dv)?;
+                tensor::add_assign(dst, t.as_f32()?);
+                eng.recycle(t);
+            }
+            Ok(())
+        };
+        add(&mut g.w0, grads.dw0_src)?;
+        add(&mut g.w0, grads.dw0_dst)?;
+        add(&mut g.w1, grads.dw1_src)?;
+        add(&mut g.w1, grads.dw1_dst)?;
+        let mut copy = |dst: &mut [f32], dev: Option<B::Dev>| -> Result<()> {
+            if let Some(dv) = dev {
+                let t = eng.fetch_peer(dv)?;
+                dst.copy_from_slice(t.as_f32()?);
+                eng.recycle(t);
+            }
+            Ok(())
+        };
+        copy(&mut g.a_src0, grads.da_src0)?;
+        copy(&mut g.a_dst0, grads.da_dst0)?;
+        copy(&mut g.a_src1, grads.da_src1)?;
+        copy(&mut g.a_dst1, grads.da_dst1)?;
+        Ok(g)
+    }
+
+    /// Read the authoritative device parameters back into `host` (sync
+    /// points: checkpoint save, evaluation handoff). Counted as D2H — this
+    /// is a legitimate, non-steady-state boundary crossing. RGCN attention
+    /// vectors have no device copy and keep their host values, which the
+    /// host trajectory also never moves (`x - lr*0.0 == x` bitwise).
+    pub fn sync_params(&self, dp: &DevParams<B>, host: &mut Params) -> Result<()> {
+        let eng = self.eng;
+        let read = |dv: &B::Dev, dst: &mut [f32]| -> Result<()> {
+            eng.counters().borrow_mut().add_d2h(dv.size_bytes() as u64);
+            let t = dv.to_host()?;
+            dst.copy_from_slice(t.as_f32()?);
+            Ok(())
+        };
+        read(&dp.w0, &mut host.w0)?;
+        read(&dp.w1, &mut host.w1)?;
+        if let Some((s0, d0, s1, d1)) = dp.att.as_ref() {
+            read(s0, &mut host.a_src0)?;
+            read(d0, &mut host.a_dst0)?;
+            read(s1, &mut host.a_src1)?;
+            read(d1, &mut host.a_dst1)?;
+        }
+        Ok(())
+    }
+
+    /// Device-resident evaluation: forward + `head_full`, reading back only
+    /// the loss/accuracy scalars (the gradient output is discarded
+    /// on-device).
+    pub fn eval_step_dev(
+        &self,
+        dp: &DevParams<B>,
+        ds: &DevSchema<B>,
+        batch: &DevBatch<B>,
+    ) -> Result<StepResult> {
+        self.assert_dev_plan();
+        let eng = self.eng;
+        let l0 = self.layer_forward_dev(0, &batch.xs, dp, ds, &batch.layers[0])?;
+        let l1 = self.layer_forward_dev(1, &l0.hout, dp, ds, &batch.layers[1])?;
+        let mut out = eng
+            .run_dev_multi(
+                "head_full",
+                Stage::Head,
+                Phase::Fwd,
+                &[
+                    Arg::Dev(&l1.hout),
+                    Arg::Dev(&batch.labels),
+                    Arg::Dev(&batch.seed_mask),
+                    Arg::Dev(&ds.tgt),
+                ],
+            )?
+            .into_iter();
+        let loss = self.fetch_scalar(out.next().unwrap())?;
+        eng.recycle_dev(out.next().unwrap());
+        let ncorrect = self.fetch_scalar(out.next().unwrap())?;
+        self.recycle_layer_dev(l1);
+        self.recycle_layer_dev(l0);
+        Ok(StepResult { loss, ncorrect, n_seed: batch.n_seed })
+    }
+
+    /// Device-resident inference forward: the serve-path unit. The
+    /// target-type logits are extracted on-device (`slab_pick`) and fetched
+    /// as the batch's only D2H transfer — bitwise identical to the host
+    /// [`StepExecutor::forward_step`] slab copy.
+    pub fn forward_step_dev(
+        &self,
+        dp: &DevParams<B>,
+        ds: &DevSchema<B>,
+        batch: &DevBatch<B>,
+    ) -> Result<HostTensor> {
+        self.assert_dev_plan();
+        let eng = self.eng;
+        assert_eq!(batch.layers.len(), 2, "2-layer model");
+        let l0 = self.layer_forward_dev(0, &batch.xs, dp, ds, &batch.layers[0])?;
+        let l1 = self.layer_forward_dev(1, &l0.hout, dp, ds, &batch.layers[1])?;
+        let logits_dev = eng.run_dev(
+            "slab_pick",
+            Stage::Head,
+            Phase::Fwd,
+            &[Arg::Dev(&l1.hout), Arg::Dev(&ds.tgt)],
+        )?;
+        self.recycle_layer_dev(l1);
+        self.recycle_layer_dev(l0);
+        eng.fetch(logits_dev)
     }
 }
 

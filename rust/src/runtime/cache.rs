@@ -11,7 +11,11 @@
 //! device **once**. Per batch, only the rows *not* resident (the misses) are
 //! gathered on the CPU and uploaded; the `feature_gather` module then
 //! assembles the fused `[TPAD, NS, F]` batch slab on-device from
-//! {resident slab, miss upload, scatter indices}.
+//! {resident slab, miss upload, scatter indices}. In `--mode resident`
+//! the gather output is never read back: it stays a `DevBuf` and feeds the
+//! projection directly (`assemble_batch_dev`), so per-batch H2D traffic is
+//! just the scatter indices + miss rows (+ batch metadata) and the slab
+//! never crosses PCIe in either direction (`tests/residency.rs`).
 //!
 //! Bit-exactness contract: cached rows are byte-copies of the same f32 data
 //! the CPU collector would read, so for **any** `--cache-frac` the training

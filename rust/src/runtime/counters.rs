@@ -125,10 +125,22 @@ pub struct Counters {
     /// is the differential.
     pub h2d_bytes: u64,
     /// Cumulative device→host transfer bytes since the last reset: outputs
-    /// of host-returning (`run`) dispatches. `run_dev` results stay
-    /// device-resident and contribute nothing until a caller round-trips
-    /// them (untracked — the sim backend's "device" is host memory).
+    /// of host-returning (`run`) dispatches plus explicit readbacks
+    /// recorded via [`Counters::add_d2h`] (the device-resident path's
+    /// loss/metric/logit fetches). `run_dev`/`run_dev_multi` results stay
+    /// device-resident and contribute nothing until a caller fetches them.
     pub d2h_bytes: u64,
+    /// Cumulative **device↔device interconnect** bytes since the last
+    /// reset (the modeled NVLink/NCCL channel of the data-parallel replica
+    /// path): per-round parameter broadcasts
+    /// ([`ExecBackend::upload_peer`](super::ExecBackend::upload_peer)) and
+    /// per-batch gradient reductions
+    /// ([`ExecBackend::fetch_peer`](super::ExecBackend::fetch_peer)).
+    /// Deliberately separate from `h2d_bytes`/`d2h_bytes`: replica
+    /// synchronization does not cross the PCIe boundary the residency
+    /// contract pins (`tests/residency.rs`), so it must not pollute those
+    /// counters. 0 on every single-backend run.
+    pub p2p_bytes: u64,
     /// Batch-slot feature reads served by the device-resident cache
     /// (recorded by `assemble_batch` alongside the gather dispatch).
     pub cache_hits: u64,
@@ -160,6 +172,7 @@ impl Counters {
         self.gpu_time = Duration::ZERO;
         self.h2d_bytes = 0;
         self.d2h_bytes = 0;
+        self.p2p_bytes = 0;
         self.cache_hits = 0;
         self.cache_misses = 0;
         self.dispatch_retries = 0;
@@ -175,9 +188,15 @@ impl Counters {
     }
 
     /// Record an explicit device→host transfer (outputs of host-returning
-    /// dispatches).
+    /// dispatches, and the device-resident path's scalar/logit fetches).
     pub fn add_d2h(&mut self, bytes: u64) {
         self.d2h_bytes += bytes;
+    }
+
+    /// Record an explicit device↔device interconnect transfer (replica
+    /// parameter broadcast / gradient reduction — never PCIe).
+    pub fn add_p2p(&mut self, bytes: u64) {
+        self.p2p_bytes += bytes;
     }
 
     /// Record one batch's cache hit/miss split (feature rows served from
@@ -291,10 +310,12 @@ mod tests {
         assert_eq!(c.h2d_bytes, 100);
         c.add_h2d(28);
         c.add_d2h(40);
+        c.add_p2p(64);
         assert_eq!(c.h2d_bytes, 128);
         assert_eq!(c.d2h_bytes, 40);
+        assert_eq!(c.p2p_bytes, 64, "peer traffic is its own channel");
         c.reset();
-        assert_eq!((c.h2d_bytes, c.d2h_bytes), (0, 0));
+        assert_eq!((c.h2d_bytes, c.d2h_bytes, c.p2p_bytes), (0, 0, 0));
     }
 
     #[test]

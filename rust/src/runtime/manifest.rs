@@ -279,6 +279,21 @@ impl Manifest {
                     ],
                     vec![(F32, vec![tp, ns, fin]), (F32, vec![rp, fin, fout])],
                 );
+                // Stacked backward with a device-resident accumulator: the
+                // extra `dhin_acc` input lets the two RGAT endpoint passes
+                // chain on-device (dhin = acc + dxs) instead of staging the
+                // partial sums on the host (DESIGN.md §7).
+                add(
+                    &format!("proj_resident_bwd_{l}"),
+                    vec![
+                        ("xs", F32, vec![tp, ns, fin]),
+                        ("w", F32, vec![rp, fin, fout]),
+                        ("src_type", I32, vec![rp]),
+                        ("dy", F32, vec![rp, ns, fout]),
+                        ("dhin_acc", F32, vec![tp, ns, fin]),
+                    ],
+                    vec![(F32, vec![tp, ns, fin]), (F32, vec![rp, fin, fout])],
+                );
             }
 
             // -- neighbor aggregation (RGCN mean + RGAT attention) ----------
@@ -410,6 +425,67 @@ impl Manifest {
                 ],
                 vec![(F32, vec![]), (F32, vec![ns, c]), (F32, vec![])],
             );
+            // Device-resident head: takes the full fused [TPAD, NS, C]
+            // output plus the target type, returns the loss/accuracy scalars
+            // and the gradient already scattered into the full slab — so the
+            // loss seam never stages activations on the host.
+            add(
+                "head_full",
+                vec![
+                    ("hout", F32, vec![tp, ns, c]),
+                    ("labels", I32, vec![ns]),
+                    ("seed_mask", F32, vec![ns]),
+                    ("target_type", I32, vec![]),
+                ],
+                vec![(F32, vec![]), (F32, vec![tp, ns, c]), (F32, vec![])],
+            );
+            // Serve-path logits extraction (device-side `slab()`).
+            add(
+                "slab_pick",
+                vec![("hout", F32, vec![tp, ns, c]), ("target_type", I32, vec![])],
+                vec![(F32, vec![ns, c])],
+            );
+
+            // -- fused on-device optimizer (device-resident mode) ------------
+            add(
+                "sgd_rgcn",
+                vec![
+                    ("w0", F32, vec![rp, f, h]),
+                    ("w1", F32, vec![rp, h, c]),
+                    ("dw0", F32, vec![rp, f, h]),
+                    ("dw1", F32, vec![rp, h, c]),
+                    ("lr", F32, vec![]),
+                ],
+                vec![(F32, vec![rp, f, h]), (F32, vec![rp, h, c])],
+            );
+            add(
+                "sgd_rgat",
+                vec![
+                    ("w0", F32, vec![rp, f, h]),
+                    ("w1", F32, vec![rp, h, c]),
+                    ("a_src0", F32, vec![rp, h]),
+                    ("a_dst0", F32, vec![rp, h]),
+                    ("a_src1", F32, vec![rp, c]),
+                    ("a_dst1", F32, vec![rp, c]),
+                    ("dw0_src", F32, vec![rp, f, h]),
+                    ("dw0_dst", F32, vec![rp, f, h]),
+                    ("dw1_src", F32, vec![rp, h, c]),
+                    ("dw1_dst", F32, vec![rp, h, c]),
+                    ("da_src0", F32, vec![rp, h]),
+                    ("da_dst0", F32, vec![rp, h]),
+                    ("da_src1", F32, vec![rp, c]),
+                    ("da_dst1", F32, vec![rp, c]),
+                    ("lr", F32, vec![]),
+                ],
+                vec![
+                    (F32, vec![rp, f, h]),
+                    (F32, vec![rp, h, c]),
+                    (F32, vec![rp, h]),
+                    (F32, vec![rp, h]),
+                    (F32, vec![rp, c]),
+                    (F32, vec![rp, c]),
+                ],
+            );
         }
 
         Ok(Manifest { profile: profile.to_string(), consts, modules, dir })
@@ -489,13 +565,13 @@ end
         );
         assert_eq!((t.cst("F"), t.cst("H"), t.cst("C"), t.cst("ELP")), (8, 16, 4, 128));
         assert_eq!(t.cst("CSLOTS"), 160);
-        // Full module inventory: 1 select + 1 feature gather + 8 projection
-        // + 16 aggregation + 4 fusion + 1 head.
-        assert_eq!(t.modules.len(), 31);
+        // Full module inventory: 1 select + 1 feature gather + 10 projection
+        // + 16 aggregation + 4 fusion + 2 head + 1 slab pick + 2 optimizer.
+        assert_eq!(t.modules.len(), 37);
         let b = Manifest::builtin("bench").unwrap();
         assert_eq!((b.cst("NS"), b.cst("RPAD"), b.cst("ELP")), (512, 128, 32768));
         assert_eq!(b.cst("CSLOTS"), 8192);
-        assert_eq!(b.modules.len(), 31);
+        assert_eq!(b.modules.len(), 37);
         assert!(Manifest::builtin("nope").is_err());
     }
 
@@ -522,6 +598,25 @@ end
         assert_eq!(g.args[2].dtype, DType::I32);
         assert_eq!(g.args[2].shape, vec![8, 32]);
         assert_eq!(g.rets[0].shape, vec![8, 32, 8]);
+        // Device-resident additions: accumulator-carrying projection bwd,
+        // full-slab head, serve slab pick, fused optimizers.
+        let pr = m.module("proj_resident_bwd_l0").unwrap();
+        assert_eq!(pr.args.len(), 5);
+        assert_eq!(pr.args[4].shape, vec![8, 32, 8]); // dhin_acc = [TPAD, NS, F]
+        assert_eq!(pr.rets[0].shape, pr.args[4].shape);
+        let hf = m.module("head_full").unwrap();
+        assert_eq!(hf.args[0].shape, vec![8, 32, 4]); // [TPAD, NS, C]
+        assert!(hf.args[3].shape.is_empty()); // target_type scalar
+        assert_eq!(hf.rets[1].shape, vec![8, 32, 4]);
+        let sp = m.module("slab_pick").unwrap();
+        assert_eq!(sp.rets[0].shape, vec![32, 4]); // [NS, C]
+        let sg = m.module("sgd_rgcn").unwrap();
+        assert_eq!(sg.args.len(), 5);
+        assert_eq!(sg.rets.len(), 2);
+        let sa = m.module("sgd_rgat").unwrap();
+        assert_eq!(sa.args.len(), 15);
+        assert_eq!(sa.rets.len(), 6);
+        assert_eq!(sa.rets[2].shape, vec![8, 16]); // a_src0' = [RPAD, H]
     }
 
     #[test]

@@ -110,6 +110,54 @@ pub trait ExecBackend {
         args: &[Arg<'_, Self::Dev>],
     ) -> Result<Self::Dev>;
 
+    /// [`ExecBackend::run_dev`] for **multi-output** modules: every return
+    /// stays device-resident. The device-resident step uses this for the
+    /// backward dispatches that produce several gradients at once
+    /// (`head_full`, `att_merged_bwd`, `proj_resident_bwd_*`, `sgd_*`).
+    /// Backends that only support the single-output dev path bail (the
+    /// default).
+    fn run_dev_multi(
+        &self,
+        name: &'static str,
+        _stage: Stage,
+        _phase: Phase,
+        _args: &[Arg<'_, Self::Dev>],
+    ) -> Result<Vec<Self::Dev>> {
+        bail!("{name}: backend does not support multi-output device dispatch");
+    }
+
+    /// Read a device buffer back to host as an explicit D2H copy outside any
+    /// dispatch, counting its full byte size toward [`Counters::d2h_bytes`].
+    /// The device-resident step uses this for the loss/metric scalars and
+    /// the serve-path logits — the only values that legitimately cross the
+    /// PCIe boundary at steady state (`tests/residency.rs`).
+    fn fetch(&self, d: Self::Dev) -> Result<HostTensor> {
+        self.counters().borrow_mut().add_d2h(d.size_bytes() as u64);
+        d.into_host()
+    }
+
+    /// [`ExecBackend::fetch`] over the modeled replica interconnect
+    /// (NVLink/NCCL rather than PCIe): counts toward
+    /// [`Counters::p2p_bytes`], not `d2h_bytes`. The data-parallel replica
+    /// path uses this to pull per-batch gradients off each lane for the
+    /// host-side all-reduce.
+    fn fetch_peer(&self, d: Self::Dev) -> Result<HostTensor> {
+        self.counters().borrow_mut().add_p2p(d.size_bytes() as u64);
+        d.into_host()
+    }
+
+    /// [`ExecBackend::upload`] over the modeled replica interconnect:
+    /// counts `valid_elems * 4` toward [`Counters::p2p_bytes`], not
+    /// `h2d_bytes`. The replica path uses this for the per-round parameter
+    /// broadcast. Backends without an interconnect model bail (the default).
+    fn upload_peer(&self, t: &HostTensor, valid_elems: usize) -> Result<Self::Dev> {
+        let _ = valid_elems;
+        bail!(
+            "backend does not support peer upload (tensor shape {:?})",
+            t.shape()
+        );
+    }
+
     /// Profile name (e.g. "tiny", "bench").
     fn profile(&self) -> &str {
         &self.manifest().profile

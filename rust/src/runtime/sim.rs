@@ -198,6 +198,25 @@ impl SimBackend {
         self.arena.borrow_mut().put_f32(v);
     }
 
+    /// Shared copy body of `upload` / `upload_peer`: only the channel the
+    /// bytes are charged to differs between the two entry points.
+    fn upload_impl(&self, t: &HostTensor, valid_elems: usize) -> (SimDev, usize) {
+        let valid = valid_elems.min(t.len());
+        let dev = match t {
+            HostTensor::F32(d, s) => {
+                let mut buf = self.take_f32(d.len());
+                buf[..valid].copy_from_slice(&d[..valid]);
+                HostTensor::f32(buf, s)
+            }
+            HostTensor::I32(d, s) => {
+                let mut buf = self.take_i32(d.len());
+                buf[..valid].copy_from_slice(&d[..valid]);
+                HostTensor::i32(buf, s)
+            }
+        };
+        (SimDev(dev), valid)
+    }
+
     /// Dispatch core: check args, interpret, verify outputs against the
     /// declared returns, apply the simulated launch overhead, record.
     fn exec(
@@ -297,26 +316,33 @@ impl ExecBackend for SimBackend {
         Ok(SimDev(outs.swap_remove(0)))
     }
 
+    fn run_dev_multi(
+        &self,
+        name: &'static str,
+        stage: Stage,
+        phase: Phase,
+        args: &[Arg<'_, SimDev>],
+    ) -> Result<Vec<SimDev>> {
+        Ok(self.exec(name, stage, phase, args)?.into_iter().map(SimDev).collect())
+    }
+
     /// Partial H2D copy into a full-shape "device" buffer: only the leading
     /// `valid_elems` elements transfer (and count). The buffer comes from
     /// the arena, whose checkouts are zeroed, so the untransferred tail is
     /// deterministically zero — callers must still never address it.
     fn upload(&self, t: &HostTensor, valid_elems: usize) -> Result<SimDev> {
-        let valid = valid_elems.min(t.len());
-        let dev = match t {
-            HostTensor::F32(d, s) => {
-                let mut buf = self.take_f32(d.len());
-                buf[..valid].copy_from_slice(&d[..valid]);
-                HostTensor::f32(buf, s)
-            }
-            HostTensor::I32(d, s) => {
-                let mut buf = self.take_i32(d.len());
-                buf[..valid].copy_from_slice(&d[..valid]);
-                HostTensor::i32(buf, s)
-            }
-        };
+        let (dev, valid) = self.upload_impl(t, valid_elems);
         self.counters.borrow_mut().add_h2d(valid as u64 * 4);
-        Ok(SimDev(dev))
+        Ok(dev)
+    }
+
+    /// [`ExecBackend::upload`] over the modeled replica interconnect: the
+    /// same partial copy, counted in [`Counters::p2p_bytes`] instead of the
+    /// PCIe channel.
+    fn upload_peer(&self, t: &HostTensor, valid_elems: usize) -> Result<SimDev> {
+        let (dev, valid) = self.upload_impl(t, valid_elems);
+        self.counters.borrow_mut().add_p2p(valid as u64 * 4);
+        Ok(dev)
     }
 
     fn recycle(&self, t: HostTensor) {
@@ -439,57 +465,45 @@ impl SimBackend {
             n if n.starts_with("proj_stacked_bwd") => {
                 let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
                 let (rp, fout) = (dim(1, 0), dim(1, 2));
-                let xs = args[0].as_f32()?;
-                let w = args[1].as_f32()?;
-                let st = args[2].as_i32()?;
-                let dy = args[3].as_f32()?;
-                let mut dxs = self.take_f32(tp * ns * fin);
-                let mut dw = self.take_f32(rp * fin * fout);
-                // Per-relation dx lands in scratch; it is folded into the
-                // type slabs serially below so the accumulation order (r
-                // ascending) stays bit-identical to the scalar oracle.
-                let mut dx_scratch = self.take_f32(rp * ns * fin);
-                self.pool.try_for_row_chunks2(
-                    &mut dx_scratch,
-                    &mut dw,
+                let (dxs, dw) = self.proj_stacked_bwd_impl(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_i32()?,
+                    args[3].as_f32()?,
+                    tp,
+                    ns,
+                    fin,
                     rp,
-                    1,
-                    |r0, r1, dxc, dwc| {
-                        for r in r0..r1 {
-                            let t = idx(st[r], tp, "src_type")?;
-                            let dy_r = &dy[r * ns * fout..(r + 1) * ns * fout];
-                            matmul_nt_rows(
-                                dy_r,
-                                &w[r * fin * fout..(r + 1) * fin * fout],
-                                fout,
-                                fin,
-                                0,
-                                ns,
-                                &mut dxc[(r - r0) * ns * fin..(r - r0 + 1) * ns * fin],
-                            );
-                            matmul_tn_rows(
-                                &xs[t * ns * fin..(t + 1) * ns * fin],
-                                dy_r,
-                                ns,
-                                fin,
-                                fout,
-                                0,
-                                fin,
-                                &mut dwc[(r - r0) * fin * fout..(r - r0 + 1) * fin * fout],
-                            );
-                        }
-                        Ok(())
-                    },
+                    fout,
                 )?;
-                for r in 0..rp {
-                    let t = st[r] as usize; // validated by the worker pass
-                    let dst = &mut dxs[t * ns * fin..(t + 1) * ns * fin];
-                    let src = &dx_scratch[r * ns * fin..(r + 1) * ns * fin];
-                    for (acc, v) in dst.iter_mut().zip(src) {
-                        *acc += *v;
-                    }
+                Ok(vec![
+                    HostTensor::f32(dxs, &[tp, ns, fin]),
+                    HostTensor::f32(dw, &[rp, fin, fout]),
+                ])
+            }
+
+            n if n.starts_with("proj_resident_bwd") => {
+                let (tp, ns, fin) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let (rp, fout) = (dim(1, 0), dim(1, 2));
+                let acc = args[4].as_f32()?;
+                let (mut dxs, dw) = self.proj_stacked_bwd_impl(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_i32()?,
+                    args[3].as_f32()?,
+                    tp,
+                    ns,
+                    fin,
+                    rp,
+                    fout,
+                )?;
+                // dhin = acc + dxs, mirroring the host executor's
+                // `add_assign(dhin, dxs)` into the running accumulator so
+                // chaining the two RGAT endpoint passes stays bit-identical
+                // to the host-staged path.
+                for (o, &a) in dxs.iter_mut().zip(acc) {
+                    *o = a + *o;
                 }
-                self.reclaim_f32(dx_scratch);
                 Ok(vec![
                     HostTensor::f32(dxs, &[tp, ns, fin]),
                     HostTensor::f32(dw, &[rp, fin, fout]),
@@ -837,8 +851,162 @@ impl SimBackend {
                 ])
             }
 
+            "head_full" => {
+                // Device-resident head: target-slab extraction + softmax
+                // cross-entropy + dlogits scattered back into a full
+                // `[TPAD, NS, C]` gradient, so the whole loss/backward seam
+                // runs in one dispatch with only the two scalars ever
+                // crossing back to the host (tests/residency.rs).
+                let (tp, ns, c) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let hout = args[0].as_f32()?;
+                let labels = args[1].as_i32()?;
+                let mask = args[2].as_f32()?;
+                let t = idx(args[3].as_i32()?[0], tp, "target_type")?;
+                let logits = &hout[t * ns * c..(t + 1) * ns * c];
+                let mut z = self.take_f32(ns * c);
+                let mut dlogits = self.take_f32(ns * c);
+                let (loss, ncorrect) = head_into(logits, labels, mask, ns, c, &mut z,
+                    &mut dlogits);
+                self.reclaim_f32(z);
+                // Zeroed checkout: non-target slabs stay at the exact zeros
+                // the host executor writes into its dh2 staging buffer.
+                let mut dh2 = self.take_f32(tp * ns * c);
+                dh2[t * ns * c..(t + 1) * ns * c].copy_from_slice(&dlogits);
+                self.reclaim_f32(dlogits);
+                Ok(vec![
+                    HostTensor::scalar_f32(loss),
+                    HostTensor::f32(dh2, &[tp, ns, c]),
+                    HostTensor::scalar_f32(ncorrect),
+                ])
+            }
+
+            "slab_pick" => {
+                // Target-type logits extraction for the serve path: the
+                // device-side analogue of the host `slab()` copy.
+                let (tp, ns, c) = (dim(0, 0), dim(0, 1), dim(0, 2));
+                let hout = args[0].as_f32()?;
+                let t = idx(args[1].as_i32()?[0], tp, "target_type")?;
+                let mut out = self.take_f32(ns * c);
+                out.copy_from_slice(&hout[t * ns * c..(t + 1) * ns * c]);
+                Ok(vec![HostTensor::f32(out, &[ns, c])])
+            }
+
+            "sgd_rgcn" => {
+                // Fused on-device SGD for the RGCN parameter set. Mirrors
+                // the host optimizer bit-for-bit: gradients are accumulated
+                // into zero-initialized buffers there (`0.0 + dw`), then
+                // `w -= lr * g`.
+                let lr = args[4].as_f32()?[0];
+                let mut outs = Vec::with_capacity(2);
+                for (wi, di) in [(0usize, 2usize), (1, 3)] {
+                    let w = args[wi].as_f32()?;
+                    let dw = args[di].as_f32()?;
+                    let mut o = self.take_f32(w.len());
+                    for i in 0..w.len() {
+                        o[i] = w[i] - lr * (0.0 + dw[i]);
+                    }
+                    outs.push(HostTensor::f32(o, &spec.args[wi].shape));
+                }
+                Ok(outs)
+            }
+
+            "sgd_rgat" => {
+                // Fused on-device SGD for the RGAT parameter set. The two
+                // projection-weight gradients (src- and dst-endpoint passes)
+                // fold in the host executor's order — `(0.0 + dw_src) +
+                // dw_dst` — and the attention-vector gradients apply
+                // directly (the host stores them by copy, not accumulation).
+                let lr = args[14].as_f32()?[0];
+                let mut outs = Vec::with_capacity(6);
+                for (wi, dai, dbi) in [(0usize, 6usize, 7usize), (1, 8, 9)] {
+                    let w = args[wi].as_f32()?;
+                    let da = args[dai].as_f32()?;
+                    let db = args[dbi].as_f32()?;
+                    let mut o = self.take_f32(w.len());
+                    for i in 0..w.len() {
+                        o[i] = w[i] - lr * ((0.0 + da[i]) + db[i]);
+                    }
+                    outs.push(HostTensor::f32(o, &spec.args[wi].shape));
+                }
+                for (ai, di) in [(2usize, 10usize), (3, 11), (4, 12), (5, 13)] {
+                    let a = args[ai].as_f32()?;
+                    let dg = args[di].as_f32()?;
+                    let mut o = self.take_f32(a.len());
+                    for i in 0..a.len() {
+                        o[i] = a[i] - lr * dg[i];
+                    }
+                    outs.push(HostTensor::f32(o, &spec.args[ai].shape));
+                }
+                Ok(outs)
+            }
+
             other => bail!("SimBackend has no reference semantics for module {other:?}"),
         }
+    }
+
+    /// Shared body of `proj_stacked_bwd*` and `proj_resident_bwd*`:
+    /// per-relation dx lands in scratch (relation-parallel), then is folded
+    /// into the type slabs serially so the accumulation order (r ascending)
+    /// stays bit-identical to the scalar oracle. Returns
+    /// (`dxs [tp*ns*fin]`, `dw [rp*fin*fout]`) as arena checkouts.
+    #[allow(clippy::too_many_arguments)]
+    fn proj_stacked_bwd_impl(
+        &self,
+        xs: &[f32],
+        w: &[f32],
+        st: &[i32],
+        dy: &[f32],
+        tp: usize,
+        ns: usize,
+        fin: usize,
+        rp: usize,
+        fout: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut dxs = self.take_f32(tp * ns * fin);
+        let mut dw = self.take_f32(rp * fin * fout);
+        let mut dx_scratch = self.take_f32(rp * ns * fin);
+        self.pool.try_for_row_chunks2(
+            &mut dx_scratch,
+            &mut dw,
+            rp,
+            1,
+            |r0, r1, dxc, dwc| {
+                for r in r0..r1 {
+                    let t = idx(st[r], tp, "src_type")?;
+                    let dy_r = &dy[r * ns * fout..(r + 1) * ns * fout];
+                    matmul_nt_rows(
+                        dy_r,
+                        &w[r * fin * fout..(r + 1) * fin * fout],
+                        fout,
+                        fin,
+                        0,
+                        ns,
+                        &mut dxc[(r - r0) * ns * fin..(r - r0 + 1) * ns * fin],
+                    );
+                    matmul_tn_rows(
+                        &xs[t * ns * fin..(t + 1) * ns * fin],
+                        dy_r,
+                        ns,
+                        fin,
+                        fout,
+                        0,
+                        fin,
+                        &mut dwc[(r - r0) * fin * fout..(r - r0 + 1) * fin * fout],
+                    );
+                }
+                Ok(())
+            },
+        )?;
+        for r in 0..rp {
+            let t = st[r] as usize; // validated by the worker pass
+            let dst = &mut dxs[t * ns * fin..(t + 1) * ns * fin];
+            let src = &dx_scratch[r * ns * fin..(r + 1) * ns * fin];
+            for (acc, v) in dst.iter_mut().zip(src) {
+                *acc += *v;
+            }
+        }
+        self.reclaim_f32(dx_scratch);
+        Ok((dxs, dw))
     }
 }
 

@@ -114,6 +114,46 @@ fn cache_frac_never_changes_the_trajectory() {
     }
 }
 
+/// The same invariance holds on the device-resident path (`--mode
+/// resident`, DESIGN.md §7), where the gather output feeds the stacked
+/// projection as a `DevBuf` instead of materializing to host: cache-frac
+/// {0, 0.25, 1.0} follow one bitwise trajectory, which also equals the
+/// host-staged trajectory (the cross-plan half lives in
+/// `tests/residency.rs`).
+#[test]
+fn cache_frac_never_changes_the_resident_trajectory() {
+    let resident = |model: ModelKind, pipeline: bool, frac: f64| -> Vec<(f64, f64)> {
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let opt = OptConfig { pipeline, ..OptConfig::resident() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+        if frac > 0.0 {
+            tr.attach_cache(store_for(&g, frac)).unwrap();
+        }
+        (0..3)
+            .map(|e| {
+                let m = tr.train_epoch(e).unwrap();
+                (m.loss, m.acc)
+            })
+            .collect()
+    };
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let reference = resident(model, false, 0.0);
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25, 1.0] {
+                let t = resident(model, pipeline, frac);
+                assert_eq!(
+                    t,
+                    reference,
+                    "{}: resident frac {frac} pipeline {pipeline} diverged",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
 /// Steady-state H2D bytes per epoch are strictly lower with the cache on,
 /// and the hit rate is positive on the builtin tiny manifest; a full cache
 /// misses nothing after the resident store is pinned.

@@ -129,6 +129,77 @@ fn dispatch_faults_retry_and_preserve_the_trajectory() {
     }
 }
 
+/// The resident path (`--mode resident`, DESIGN.md §7) recovers dispatch
+/// faults the same way: every device-resident dispatch is pure (its
+/// arguments are untouched device buffers), so the bounded retry replays
+/// it bit-for-bit. Trajectory and final params stay bitwise equal to the
+/// fault-free resident run — which `tests/residency.rs` pins to the
+/// host-staged trajectory — with retries exactly as planned, on the
+/// single-backend and replica paths.
+#[test]
+fn resident_dispatch_faults_retry_and_preserve_the_trajectory() {
+    let spec = "dispatch@0:2,dispatch@1:4x3";
+    let planned = plan(spec).planned(FaultSite::Dispatch);
+    let opt_of = |pipeline| OptConfig {
+        stacked_proj: true,
+        dev_resident: true,
+        pipeline,
+        ..OptConfig::hifuse()
+    };
+    let run = |pipeline: bool, spec: Option<&str>| -> (Vec<(f64, f64)>, Params, u64) {
+        let opt = opt_of(pipeline);
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+        if let Some(s) = spec {
+            tr.set_fault_plan(plan(s));
+        }
+        let mut traj = Vec::new();
+        let mut retries = 0u64;
+        for e in 0..2 {
+            let m = tr.train_epoch(e).unwrap();
+            traj.push((m.loss, m.acc));
+            retries += m.dispatch_retries;
+        }
+        tr.sync_params().unwrap(); // device params are authoritative
+        (traj, tr.params.clone(), retries)
+    };
+    for pipeline in [false, true] {
+        let (base_t, base_p, base_r) = run(pipeline, None);
+        assert_eq!(base_r, 0, "fault-free resident run must not count retries");
+        let (t, p, retries) = run(pipeline, Some(spec));
+        assert_eq!(t, base_t, "resident pipeline={pipeline}: trajectory diverged");
+        assert_params_eq(&p, &base_p, &format!("resident trainer pipeline={pipeline}"));
+        assert_eq!(retries, planned, "resident pipeline={pipeline}: retry accounting");
+    }
+    // Replica lanes: device grads pulled over the peer channel feed the
+    // unchanged host all-reduce; a retried lane dispatch must not skew it.
+    let run_grp = |replicas: usize, spec: Option<&str>| -> (Vec<(f64, f64)>, Params, u64) {
+        let opt = opt_of(true);
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp =
+            ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+                .unwrap();
+        if let Some(s) = spec {
+            grp.set_fault_plan(plan(s));
+        }
+        let ms: Vec<ReplicaMetrics> = (0..2).map(|e| grp.train_epoch(e).unwrap()).collect();
+        let traj = ms.iter().map(|m| (m.group.loss, m.group.acc)).collect();
+        let retries = ms.iter().map(|m| m.group.dispatch_retries).sum();
+        (traj, grp.params.clone(), retries)
+    };
+    for replicas in [1usize, 2] {
+        let (base_t, base_p, _) = run_grp(replicas, None);
+        let (t, p, retries) = run_grp(replicas, Some(spec));
+        let ctx = format!("resident replicas={replicas}");
+        assert_eq!(t, base_t, "{ctx}: trajectory diverged");
+        assert_params_eq(&p, &base_p, &ctx);
+        assert_eq!(retries, planned, "{ctx}: retry accounting");
+    }
+}
+
 /// A fault burst past the retry budget is an error, not a hang or a wrong
 /// answer — on both the single-backend and replica paths.
 #[test]

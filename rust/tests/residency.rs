@@ -1,0 +1,506 @@
+//! Device-residency suite (DESIGN.md §7): in `--mode resident` the
+//! activation chain `feature_gather → projection → aggregation → head`
+//! hands `DevBuf`s between dispatches and the optimizer runs on-device, so
+//! the only steady-state PCIe traffic is
+//!
+//!   H2D: the batch metadata — scatter indices (or the raw slab with the
+//!        cache off), merged edge tensors, labels, seed mask — plus the
+//!        packed miss rows when `--cache-frac < 1`;
+//!   D2H: the head scalars (loss + ncorrect, 8 bytes/batch) in training,
+//!        the `[NS, C]` logits slab in serving.
+//!
+//! Every byte is pinned **exactly**, per batch, from the profile dims — no
+//! inequalities. Alongside the byte ledger the suite pins the trajectory:
+//! device-resident runs are bitwise identical to the host-staged
+//! `hifuse+stacked` plan across cache-frac {0, 0.25, 1.0} × replicas
+//! {1, 2} × pipeline on/off, in training and serving, and the
+//! `feature_gather` device path matches a host oracle bit-for-bit on its
+//! edge patterns (pad rows, miss rows, duplicate slots, empty types).
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, OptConfig, ReplicaGroup, TrainCfg, Trainer,
+    DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::step::Dims;
+use hifuse::models::{ModelKind, Params};
+use hifuse::runtime::{Arg, ExecBackend, Phase, ResidentStore, SimBackend, Stage};
+use hifuse::serving;
+use hifuse::util::HostTensor;
+
+/// 6 batches/epoch on tiny's 24 train seeds.
+fn cfg() -> TrainCfg {
+    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4, producers: 2 }
+}
+
+fn store_for(g: &hifuse::graph::HeteroGraph, frac: f64) -> Arc<ResidentStore> {
+    Arc::new(ResidentStore::build(g, frac, 160, 42))
+}
+
+fn engines(n: usize) -> Vec<SimBackend> {
+    let t = replica_thread_budget(4, n);
+    (0..n).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect()
+}
+
+/// The host-staged plan the resident mode must match bitwise: the same
+/// fully-merged dispatch set, activations staged through host memory.
+fn host_opt(pipeline: bool) -> OptConfig {
+    OptConfig { stacked_proj: true, pipeline, ..OptConfig::hifuse() }
+}
+
+fn resident_opt(pipeline: bool) -> OptConfig {
+    OptConfig { pipeline, ..OptConfig::resident() }
+}
+
+fn assert_params_eq(a: &Params, b: &Params, ctx: &str) {
+    assert_eq!(a.w0, b.w0, "{ctx}: w0 diverged");
+    assert_eq!(a.w1, b.w1, "{ctx}: w1 diverged");
+    assert_eq!(a.a_src0, b.a_src0, "{ctx}: a_src0 diverged");
+    assert_eq!(a.a_dst0, b.a_dst0, "{ctx}: a_dst0 diverged");
+    assert_eq!(a.a_src1, b.a_src1, "{ctx}: a_src1 diverged");
+    assert_eq!(a.a_dst1, b.a_dst1, "{ctx}: a_dst1 diverged");
+}
+
+/// Exact per-batch H2D bytes of the resident step, derived from the
+/// profile dims (all f32/i32 = 4 bytes):
+///   cached:    gather idx [TPAD, NS]  + edges + labels + seed mask
+///   cache-off: full slab [TPAD, NS, F] + edges + labels + seed mask
+/// where edges = 2 layers × {src, dst, valid} × [RPAD * EP].
+fn h2d_per_batch(d: &Dims, cached: bool) -> u64 {
+    let edges = 2 * 3 * (d.rpad * d.ep) as u64 * 4;
+    let meta = 2 * d.ns as u64 * 4; // labels [NS] i32 + seed_mask [NS] f32
+    let feat = if cached {
+        (d.tpad * d.ns) as u64 * 4 // scatter indices only
+    } else {
+        (d.tpad * d.ns * d.f) as u64 * 4 // the whole collected slab
+    };
+    feat + edges + meta
+}
+
+/// D2H per training batch: the loss and ncorrect scalars, nothing else.
+const TRAIN_D2H_PER_BATCH: u64 = 8;
+
+// ------------------------------------------------------------- transfers --
+
+/// Per-batch ledger on the single-backend trainer: every batch of the
+/// epoch (not just in aggregate) moves exactly the pinned byte counts, for
+/// cache-frac {off, 0.25, 1.0}. `train_epoch_range` resets the counters
+/// per call, so each call is one batch's isolated ledger.
+#[test]
+fn resident_train_moves_exactly_the_batch_metadata() {
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        for frac in [None, Some(0.25), Some(1.0)] {
+            let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+            let d = Dims::from_backend(&eng);
+            let opt = resident_opt(false);
+            let mut g = tiny_graph(1);
+            prepare_graph_layout(&mut g, &opt);
+            let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+            if let Some(f) = frac {
+                tr.attach_cache(store_for(&g, f)).unwrap();
+            }
+            let base = h2d_per_batch(&d, frac.is_some());
+            for b in 0..6 {
+                let m = tr.train_epoch_range(0, b, b + 1).unwrap();
+                let ctx = format!("{} frac {frac:?} batch {b}", model.name());
+                // Miss rows are the only data-dependent term: F floats per
+                // missed slot, zero at frac 1.0.
+                let miss = m.cache_misses * d.f as u64 * 4;
+                if frac == Some(1.0) {
+                    assert_eq!(m.cache_misses, 0, "{ctx}: full cache missed");
+                }
+                assert_eq!(m.h2d_bytes, base + miss, "{ctx}: h2d");
+                assert_eq!(m.d2h_bytes, TRAIN_D2H_PER_BATCH, "{ctx}: d2h");
+            }
+        }
+    }
+}
+
+/// The same ledger holds through the pipelined consumer and across whole
+/// epochs: per-epoch totals are exactly `batches ×` the per-batch pins.
+#[test]
+fn resident_epoch_totals_scale_per_batch_pins() {
+    for pipeline in [false, true] {
+        for frac in [None, Some(1.0)] {
+            let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+            let d = Dims::from_backend(&eng);
+            let opt = resident_opt(pipeline);
+            let mut g = tiny_graph(1);
+            prepare_graph_layout(&mut g, &opt);
+            let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+            if let Some(f) = frac {
+                tr.attach_cache(store_for(&g, f)).unwrap();
+            }
+            for epoch in 0..3 {
+                let m = tr.train_epoch(epoch).unwrap();
+                let n = m.batches as u64;
+                let ctx = format!("pipeline={pipeline} frac {frac:?} epoch {epoch}");
+                assert_eq!(m.h2d_bytes, n * h2d_per_batch(&d, frac.is_some()), "{ctx}: h2d");
+                assert_eq!(m.d2h_bytes, n * TRAIN_D2H_PER_BATCH, "{ctx}: d2h");
+            }
+        }
+    }
+}
+
+/// Replica lanes keep the same per-batch PCIe ledger; the round parameter
+/// broadcast and the per-batch gradient pulls ride the peer interconnect
+/// (`p2p_bytes`), which stays zero in the host-staged modes.
+#[test]
+fn resident_replica_traffic_is_pinned_and_peer_routed() {
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            let opt = resident_opt(pipeline);
+            let mut g = tiny_graph(1);
+            prepare_graph_layout(&mut g, &opt);
+            let mut grp =
+                ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+                    .unwrap();
+            grp.attach_cache(store_for(&g, 1.0)).unwrap();
+            let d = Dims::from_backend(&grp.engines()[0]);
+            for epoch in 0..2 {
+                let m = grp.train_epoch(epoch).unwrap();
+                let n = m.group.batches as u64;
+                let ctx = format!("replicas={replicas} pipeline={pipeline} epoch {epoch}");
+                assert_eq!(m.group.h2d_bytes, n * h2d_per_batch(&d, true), "{ctx}: h2d");
+                assert_eq!(m.group.d2h_bytes, n * TRAIN_D2H_PER_BATCH, "{ctx}: d2h");
+                assert!(m.group.p2p_bytes > 0, "{ctx}: no peer traffic recorded");
+                let lane_p2p: u64 = m.per_replica.iter().map(|r| r.p2p_bytes).sum();
+                assert_eq!(m.group.p2p_bytes, lane_p2p, "{ctx}: p2p rollup");
+            }
+        }
+    }
+    // Host-staged replicas never touch the peer channel.
+    let opt = host_opt(false);
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(2), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    let m = grp.train_epoch(0).unwrap();
+    assert_eq!(m.group.p2p_bytes, 0, "host-staged path recorded p2p traffic");
+}
+
+/// Serving ledger: per served batch, H2D is the same batch metadata and
+/// D2H is exactly the `[NS, C]` logits slab — across replicas × pipeline
+/// × cache on/off.
+#[test]
+fn resident_serve_moves_logits_only_d2h() {
+    let trace = serving::trace::generate(&tiny_graph(1), 42, 10_000.0, 24, 3);
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for cached in [false, true] {
+                let opt = resident_opt(pipeline);
+                let mut g = tiny_graph(1);
+                prepare_graph_layout(&mut g, &opt);
+                let mut grp = ReplicaGroup::new(
+                    engines(replicas),
+                    &g,
+                    ModelKind::Rgcn,
+                    opt,
+                    cfg(),
+                    DEFAULT_ROUND,
+                )
+                .unwrap();
+                if cached {
+                    grp.attach_cache(store_for(&g, 1.0)).unwrap();
+                }
+                let d = Dims::from_backend(&grp.engines()[0]);
+                // Clear the warm-up transfers (schema constants, the
+                // resident slab) so the window is pure steady state.
+                for e in grp.engines() {
+                    e.reset_counters(false);
+                }
+                let out =
+                    serving::serve_bounded(&mut grp, &trace, cfg().batch_size, 2_000, None)
+                        .unwrap();
+                let n = out.batches.len() as u64;
+                assert!(n > 0, "trace produced no batches");
+                let (mut h2d, mut d2h) = (0u64, 0u64);
+                for e in grp.engines() {
+                    let c = e.counters().borrow();
+                    h2d += c.h2d_bytes;
+                    d2h += c.d2h_bytes;
+                }
+                let ctx = format!("replicas={replicas} pipeline={pipeline} cached={cached}");
+                assert_eq!(h2d, n * h2d_per_batch(&d, cached), "{ctx}: h2d");
+                assert_eq!(d2h, n * (d.ns * d.c) as u64 * 4, "{ctx}: d2h");
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- parity ---
+
+/// The tentpole contract: device-resident trajectories are bitwise the
+/// host-staged `hifuse+stacked` trajectories — per-epoch loss/acc and
+/// every final parameter tensor — across both models × pipeline on/off ×
+/// cache-frac {0, 0.25, 1.0}.
+#[test]
+fn resident_matches_host_staged_bitwise() {
+    let run = |model: ModelKind, opt: OptConfig, frac: f64| -> (Vec<(f64, f64)>, Params) {
+        let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+        if frac > 0.0 {
+            tr.attach_cache(store_for(&g, frac)).unwrap();
+        }
+        let traj = (0..3)
+            .map(|e| {
+                let m = tr.train_epoch(e).unwrap();
+                (m.loss, m.acc)
+            })
+            .collect();
+        // Read the authoritative device params back (no-op host-staged).
+        tr.sync_params().unwrap();
+        (traj, tr.params.clone())
+    };
+    for model in [ModelKind::Rgcn, ModelKind::Rgat] {
+        let (ref_traj, ref_params) = run(model, host_opt(false), 0.0);
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25, 1.0] {
+                let (t, p) = run(model, resident_opt(pipeline), frac);
+                let ctx = format!("{} resident pipeline={pipeline} frac={frac}", model.name());
+                assert_eq!(t, ref_traj, "{ctx}: trajectory diverged");
+                assert_params_eq(&p, &ref_params, &ctx);
+            }
+        }
+    }
+}
+
+/// Replica groups: the resident lanes (device grads pulled over the peer
+/// channel into the unchanged host all-reduce) land bitwise on the
+/// host-staged group trajectory for every replicas × pipeline × frac.
+#[test]
+fn resident_replicas_match_host_staged_bitwise() {
+    let run = |opt: OptConfig, replicas: usize, frac: f64| -> (Vec<(f64, f64)>, Params) {
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp =
+            ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgat, opt, cfg(), DEFAULT_ROUND)
+                .unwrap();
+        if frac > 0.0 {
+            grp.attach_cache(store_for(&g, frac)).unwrap();
+        }
+        let traj = (0..2)
+            .map(|e| {
+                let m = grp.train_epoch(e).unwrap();
+                (m.group.loss, m.group.acc)
+            })
+            .collect();
+        (traj, grp.params.clone())
+    };
+    let (ref_traj, ref_params) = run(host_opt(false), 1, 0.0);
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 1.0] {
+                let (t, p) = run(resident_opt(pipeline), replicas, frac);
+                let ctx = format!("replicas={replicas} pipeline={pipeline} frac={frac}");
+                assert_eq!(t, ref_traj, "{ctx}: trajectory diverged");
+                assert_params_eq(&p, &ref_params, &ctx);
+            }
+        }
+    }
+}
+
+/// Serving: resident predictions (extracted on-device by `slab_pick`,
+/// fetched as the lone D2H) are bitwise the host-staged predictions for
+/// every request, across the full grid.
+#[test]
+fn resident_serve_predictions_match_host_staged() {
+    let trace = serving::trace::generate(&tiny_graph(1), 42, 10_000.0, 24, 3);
+    let serve = |opt: OptConfig, replicas: usize, cached: bool| {
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp =
+            ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+                .unwrap();
+        if cached {
+            grp.attach_cache(store_for(&g, 1.0)).unwrap();
+        }
+        serving::serve_bounded(&mut grp, &trace, cfg().batch_size, 2_000, None)
+            .unwrap()
+            .predictions
+    };
+    let reference = serve(host_opt(false), 1, false);
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for cached in [false, true] {
+                let p = serve(resident_opt(pipeline), replicas, cached);
+                assert_eq!(
+                    p, reference,
+                    "replicas={replicas} pipeline={pipeline} cached={cached}: \
+                     predictions diverged"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ dispatches --
+
+/// The resident plan's dispatch budget, measured: 14 kernels per RGCN
+/// batch, 18 per RGAT batch (the fully-merged host plan + exactly one
+/// fused on-device SGD at (Head, Bwd)), plus one `feature_gather` at
+/// (Collection, Fwd) per batch when the cache is attached — matching
+/// `plan::expected_counts`.
+#[test]
+fn resident_dispatch_counts_are_pinned() {
+    for (model, per_batch) in [(ModelKind::Rgcn, 14usize), (ModelKind::Rgat, 18)] {
+        for cached in [false, true] {
+            let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+            let opt = resident_opt(false);
+            let mut g = tiny_graph(1);
+            prepare_graph_layout(&mut g, &opt);
+            let mut tr = Trainer::new(&eng, &g, model, opt, cfg()).unwrap();
+            if cached {
+                tr.attach_cache(store_for(&g, 1.0)).unwrap();
+            }
+            let m = tr.train_epoch(0).unwrap();
+            let expect = (per_batch + usize::from(cached)) * m.batches;
+            let ctx = format!("{} cached={cached}", model.name());
+            assert_eq!(m.kernels_total, expect, "{ctx}: dispatch count");
+            let c = eng.counters().borrow();
+            assert_eq!(
+                c.count_phase(Stage::Head, Phase::Bwd),
+                m.batches,
+                "{ctx}: one fused SGD per batch"
+            );
+            assert_eq!(
+                c.count_phase(Stage::Collection, Phase::Fwd),
+                if cached { m.batches } else { 0 },
+                "{ctx}: gather dispatches"
+            );
+        }
+    }
+}
+
+/// The resident path keeps the zero-allocation steady state: arena misses
+/// and producer-pool construction are flat across post-warm-up epochs.
+#[test]
+fn resident_keeps_the_zero_alloc_steady_state() {
+    for pipeline in [false, true] {
+        let eng = SimBackend::builtin_threaded("tiny", 2).unwrap();
+        let opt = resident_opt(pipeline);
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut tr = Trainer::new(&eng, &g, ModelKind::Rgat, opt, cfg()).unwrap();
+        tr.attach_cache(store_for(&g, 0.25)).unwrap();
+        tr.train_epoch(0).unwrap();
+        let warm = tr.train_epoch(1).unwrap();
+        let steady = tr.train_epoch(2).unwrap();
+        assert_eq!(
+            steady.arena.misses, warm.arena.misses,
+            "pipeline {pipeline}: steady-state dispatch allocated ({:?} -> {:?})",
+            warm.arena, steady.arena
+        );
+        assert_eq!(
+            steady.producer.fresh, warm.producer.fresh,
+            "pipeline {pipeline}: steady state constructed a buffer set"
+        );
+        assert_eq!(
+            steady.producer.grown, warm.producer.grown,
+            "pipeline {pipeline}: steady state grew a pooled buffer"
+        );
+        assert!(steady.producer.reused > warm.producer.reused);
+    }
+}
+
+// ------------------------------------------------------ gather property --
+
+/// Host oracle for the `feature_gather` semantics: slot index `>= 0` reads
+/// the cache row, `-1` emits a zero pad row, `<= -2` reads miss row
+/// `-idx - 2`. Mirrors the CPU collector's `collect_into` assembly.
+fn gather_oracle(cache: &[f32], miss: &[f32], idx: &[i32], f: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; idx.len() * f];
+    for (slot, &i) in idx.iter().enumerate() {
+        let row = &mut out[slot * f..(slot + 1) * f];
+        if i >= 0 {
+            row.copy_from_slice(&cache[i as usize * f..(i as usize + 1) * f]);
+        } else if i <= -2 {
+            let m = (-i - 2) as usize;
+            row.copy_from_slice(&miss[m * f..(m + 1) * f]);
+        } // i == -1: stays the zero pad row
+    }
+    out
+}
+
+/// Dispatch `feature_gather` on the sim backend against the oracle,
+/// comparing bit patterns (not float equality) row for row.
+fn check_gather(eng: &SimBackend, d: &Dims, cache: &[f32], miss: &[f32], idx: &[i32], ctx: &str) {
+    let cslots = eng.cst("CSLOTS");
+    let cache_t = HostTensor::f32(cache.to_vec(), &[cslots, d.f]);
+    let miss_t = HostTensor::f32(miss.to_vec(), &[d.tpad * d.ns, d.f]);
+    let idx_t = HostTensor::i32(idx.to_vec(), &[d.tpad, d.ns]);
+    let cache_dev = eng.upload(&cache_t, cache.len()).unwrap();
+    let miss_dev = eng.upload(&miss_t, miss.len()).unwrap();
+    let out = eng
+        .run_dev(
+            "feature_gather",
+            Stage::Collection,
+            Phase::Fwd,
+            &[Arg::Dev(&cache_dev), Arg::Dev(&miss_dev), Arg::Host(&idx_t)],
+        )
+        .unwrap();
+    let got = eng.fetch(out).unwrap();
+    let got = got.as_f32().unwrap();
+    let want = gather_oracle(cache, miss, idx, d.f);
+    assert_eq!(got.len(), want.len(), "{ctx}: shape");
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: element {i} (slot {}, col {}) differs: {a} vs {b}",
+            i / d.f,
+            i % d.f
+        );
+    }
+}
+
+/// Property sweep over the gather index patterns the producer can emit:
+/// all-pad, hit-only with duplicate slots, whole-batch miss, empty types
+/// (a type whose rows are all pads), and a deterministic mixed pattern.
+#[test]
+fn feature_gather_matches_the_host_oracle_bitwise() {
+    let eng = SimBackend::builtin("tiny").unwrap();
+    let d = Dims::from_backend(&eng);
+    let cslots = eng.cst("CSLOTS");
+    let slots = d.tpad * d.ns;
+    // Distinct, sign-mixed row contents so any slot/row confusion flips
+    // bits: cache row r column c = -(r + c/16), miss row m column c
+    // = 1000 + m + c/16.
+    let cache: Vec<f32> =
+        (0..cslots * d.f).map(|i| -((i / d.f) as f32 + (i % d.f) as f32 / 16.0)).collect();
+    let miss: Vec<f32> =
+        (0..slots * d.f).map(|i| 1000.0 + (i / d.f) as f32 + (i % d.f) as f32 / 16.0).collect();
+
+    // All pad: the output must be entirely zero rows.
+    check_gather(&eng, &d, &cache, &miss, &vec![-1i32; slots], "all-pad");
+
+    // Hits with duplicates: every slot reads cache row (slot % 5) — rows
+    // reused across many slots, like a hot vertex sampled repeatedly.
+    let dup: Vec<i32> = (0..slots).map(|s| (s % 5) as i32).collect();
+    check_gather(&eng, &d, &cache, &miss, &dup, "duplicate-hits");
+
+    // Whole-batch miss: every slot reads its own packed miss row.
+    let all_miss: Vec<i32> = (0..slots).map(|s| -2 - s as i32).collect();
+    check_gather(&eng, &d, &cache, &miss, &all_miss, "whole-batch-miss");
+
+    // Empty types: type 0's rows all pad, later types mix hit/miss/pad.
+    let mut mixed = vec![-1i32; slots];
+    for (s, v) in mixed.iter_mut().enumerate().skip(d.ns) {
+        *v = match s % 3 {
+            0 => ((s * 7) % cslots) as i32,     // scattered cache hits
+            1 => -2 - ((s * 3) % slots) as i32, // shared miss rows
+            _ => -1,                            // interior padding
+        };
+    }
+    check_gather(&eng, &d, &cache, &miss, &mixed, "empty-type-mixed");
+
+    // Boundary rows: the last cache slot and the last miss row.
+    let mut edge = vec![-1i32; slots];
+    edge[0] = (cslots - 1) as i32;
+    edge[1] = -2 - (slots - 1) as i32;
+    check_gather(&eng, &d, &cache, &miss, &edge, "boundary-rows");
+}
