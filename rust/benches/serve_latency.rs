@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.3}", h.percentile(95.0) as f64 / 1e3),
             format!("{:.3}", h.percentile(99.0) as f64 / 1e3),
             f2(out.virtual_throughput()),
+            f2(out.mean_queue_depth),
             f2(h2d as f64 / (1024.0 * 1024.0)),
         ]);
     }
@@ -77,12 +78,13 @@ fn main() -> anyhow::Result<()> {
         "serve_latency.md",
         "Serve latency — open-loop rate sweep (RGCN/aifb, hifuse, 2 lanes, 1 ms window)",
         &["rate req/s", "batches", "p50 ms", "p95 ms", "p99 ms", "throughput req/s",
-          "h2d MiB"],
+          "mean queue", "h2d MiB"],
         &rows,
     )?;
     write_csv(
         "serve_latency.csv",
-        &["rate", "batches", "p50_ms", "p95_ms", "p99_ms", "throughput_rps", "h2d_mib"],
+        &["rate", "batches", "p50_ms", "p95_ms", "p99_ms", "throughput_rps",
+          "mean_queue_depth", "h2d_mib"],
         &rows,
     )?;
     eprintln!("[serve-latency] wrote results/serve_latency.{{md,csv}}");

@@ -6,7 +6,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{OptConfig, TrainCfg};
+use crate::coordinator::{OptConfig, TrainCfg, DEFAULT_PROBATION};
 use crate::graph::{self, HeteroGraph};
 use crate::models::ModelKind;
 use crate::util::FaultPlan;
@@ -101,6 +101,19 @@ pub struct RunConfig {
     /// (`--max-queue`, DESIGN.md §9). Batches arriving while this many are
     /// pending are shed deterministically. `None` (default) = unbounded.
     pub max_queue: Option<usize>,
+    /// Serve: hot model refreshes (`--refresh-at TICK[:PATH]`, repeatable
+    /// via comma-separated entries; DESIGN.md §10). At the first admitted
+    /// batch closing at or after `TICK`, every lane swaps to the
+    /// checkpoint at `PATH` (`None` falls back to `--load-ckpt`). A failed
+    /// load is counted, never fatal.
+    pub refresh_at: Vec<(u64, Option<PathBuf>)>,
+    /// Serve: `Some(n)` replaces the open-loop Poisson arrival stream with
+    /// `n` closed-loop virtual clients, each re-issuing only after its
+    /// previous response completes (`--closed-loop`, DESIGN.md §10).
+    pub closed_loop: Option<usize>,
+    /// Serve: shadow batches a quarantined lane must complete before
+    /// re-admission (`--probation`, DESIGN.md §10).
+    pub probation: usize,
 }
 
 impl Default for RunConfig {
@@ -128,8 +141,33 @@ impl Default for RunConfig {
             fault_spec: None,
             fault_seed: 0,
             max_queue: None,
+            refresh_at: Vec::new(),
+            closed_loop: None,
+            probation: DEFAULT_PROBATION,
         }
     }
+}
+
+/// Parse a `--refresh-at` value: comma-separated `TICK[:PATH]` entries
+/// (the repeatable form — the parser is last-wins per flag, so repeats go
+/// in one value, same as `--fault-spec`).
+fn parse_refresh_at(v: &str) -> Result<Vec<(u64, Option<PathBuf>)>> {
+    let mut out = Vec::new();
+    for entry in v.split(',').map(str::trim) {
+        if entry.is_empty() {
+            bail!("--refresh-at has an empty entry (expected TICK[:PATH])");
+        }
+        let (tick, path) = match entry.split_once(':') {
+            Some((t, p)) if !p.is_empty() => (t, Some(PathBuf::from(p))),
+            Some((t, _)) => (t, None),
+            None => (entry, None),
+        };
+        let tick: u64 = tick
+            .parse()
+            .with_context(|| format!("--refresh-at entry {entry:?}: bad tick"))?;
+        out.push((tick, path));
+    }
+    Ok(out)
 }
 
 impl RunConfig {
@@ -230,6 +268,21 @@ impl RunConfig {
                     }
                     cfg.max_queue = Some(n);
                 }
+                "refresh-at" => cfg.refresh_at = parse_refresh_at(&v)?,
+                "closed-loop" => {
+                    let n: usize = v.parse().context("--closed-loop")?;
+                    if n == 0 {
+                        bail!("--closed-loop needs at least one client");
+                    }
+                    cfg.closed_loop = Some(n);
+                }
+                "probation" => {
+                    let n: usize = v.parse().context("--probation")?;
+                    if n == 0 {
+                        bail!("--probation must be >= 1 (a lane must prove itself on something)");
+                    }
+                    cfg.probation = n;
+                }
                 other => bail!("unknown flag --{other}"),
             }
         }
@@ -239,6 +292,12 @@ impl RunConfig {
             bail!(
                 "--record-trace and --replay-trace conflict: a replayed run \
                  would just re-record its own input (pick one)"
+            );
+        }
+        if cfg.closed_loop.is_some() && cfg.replay_trace.is_some() {
+            bail!(
+                "--closed-loop and --replay-trace conflict: a replayed schedule \
+                 already fixes every arrival tick (pick one)"
             );
         }
         Ok(cfg)
@@ -418,6 +477,48 @@ mod tests {
         assert_eq!(c.max_queue, Some(3));
         assert!(RunConfig::from_args(&argv("--max-queue 0")).is_err());
         assert!(RunConfig::from_args(&argv("--max-queue x")).is_err());
+    }
+
+    #[test]
+    fn refresh_at_flag_parses_ticks_paths_and_rejects_garbage() {
+        assert!(RunConfig::from_args(&[]).unwrap().refresh_at.is_empty());
+        let c = RunConfig::from_args(&argv("--refresh-at 2000")).unwrap();
+        assert_eq!(c.refresh_at, vec![(2000, None)]);
+        let c = RunConfig::from_args(&argv("--refresh-at 2000:/tmp/a.ckpt,4000:/tmp/b.ckpt"))
+            .unwrap();
+        assert_eq!(
+            c.refresh_at,
+            vec![
+                (2000, Some(PathBuf::from("/tmp/a.ckpt"))),
+                (4000, Some(PathBuf::from("/tmp/b.ckpt"))),
+            ]
+        );
+        let c = RunConfig::from_args(&argv("--refresh-at 500:,1000:/x.ckpt")).unwrap();
+        assert_eq!(c.refresh_at[0], (500, None));
+        assert!(RunConfig::from_args(&argv("--refresh-at x")).is_err());
+        assert!(RunConfig::from_args(&argv("--refresh-at 5,,7")).is_err());
+        assert!(RunConfig::from_args(&argv("--refresh-at /tmp/a.ckpt")).is_err());
+    }
+
+    #[test]
+    fn closed_loop_flag_parses_and_rejects_zero_and_replay() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().closed_loop, None);
+        let c = RunConfig::from_args(&argv("--closed-loop 8")).unwrap();
+        assert_eq!(c.closed_loop, Some(8));
+        assert!(RunConfig::from_args(&argv("--closed-loop 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--closed-loop x")).is_err());
+        let err = RunConfig::from_args(&argv("--closed-loop 4 --replay-trace /tmp/t.bin"))
+            .unwrap_err();
+        assert!(err.to_string().contains("conflict"), "{err}");
+    }
+
+    #[test]
+    fn probation_flag_parses_and_rejects_zero() {
+        assert_eq!(RunConfig::from_args(&[]).unwrap().probation, DEFAULT_PROBATION);
+        let c = RunConfig::from_args(&argv("--probation 5")).unwrap();
+        assert_eq!(c.probation, 5);
+        assert!(RunConfig::from_args(&argv("--probation 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--probation x")).is_err());
     }
 
     #[test]

@@ -15,7 +15,10 @@ pub mod replica;
 
 pub use ablation::OptConfig;
 pub use pipeline::PIPELINE_DEPTH;
-pub use replica::{replica_thread_budget, ReplicaGroup, ReplicaMetrics, DEFAULT_ROUND};
+pub use replica::{
+    replica_thread_budget, ChurnStats, NoHealthyLanes, RefreshEvent, ReplicaGroup, ReplicaMetrics,
+    ServeDrive, DEFAULT_PROBATION, DEFAULT_ROUND,
+};
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};

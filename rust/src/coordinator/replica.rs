@@ -53,12 +53,25 @@
 //! pipeline); dispatch faults retry inside the backend. All of it is
 //! default-off and zero-cost without an attached plan.
 //!
+//! **Serve churn (DESIGN.md §10).** The forward-only serve drive gets the
+//! same deterministic treatment: [`FaultSite::LaneHard`] (`lane!`) entries
+//! quarantine a lane mid-trace — its batches re-dispatch to the next
+//! healthy lane in global batch order, it shadows a probation of batches
+//! with discarded output, then re-enters the rotation — and
+//! [`RefreshEvent`]s hot-swap the serving parameters at global batch
+//! boundaries ([`ReplicaGroup::serve_forward_churn`],
+//! [`ReplicaGroup::refresh_lane`]). Predictions stay a bitwise function of
+//! (params timeline, batch index, seed set); only latency moves. Counters
+//! land in [`ChurnStats`]; the all-lanes-dead state is the typed
+//! [`NoHealthyLanes`] error.
+//!
 //! Backends must be [`Send`] (each lane thread takes exclusive ownership of
 //! its backend for the round); they need **not** be `Sync`, which is what
 //! lets the `RefCell`-based [`SimBackend`](crate::runtime::SimBackend)
 //! participate. The `Rc`-based PJRT engine is `!Send` and stays
 //! single-backend.
 
+use std::fmt;
 use std::sync::mpsc::{self, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -90,6 +103,162 @@ pub const DEFAULT_ROUND: usize = 4;
 /// its backend's intra-kernel row parallelism.
 pub fn replica_thread_budget(total: usize, replicas: usize) -> usize {
     (total / replicas.max(1)).max(1)
+}
+
+/// Default probation length: shadow batches a quarantined lane must
+/// complete before re-admission to the serve rotation (DESIGN.md §10).
+pub const DEFAULT_PROBATION: usize = 2;
+
+/// Exact churn accounting for one serve drive (DESIGN.md §10). Every
+/// counter is deterministic in (fault plan, refresh schedule, batch
+/// count, lane count) — pinned by `tests/churn_matrix.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChurnStats {
+    /// Lanes pulled from the rotation by a [`FaultSite::LaneHard`] firing.
+    pub lane_quarantines: u64,
+    /// Lanes returned to the rotation after completing probation.
+    pub lane_readmissions: u64,
+    /// Probation batches executed with their output discarded.
+    pub shadow_batches: u64,
+    /// Batches moved off a just-quarantined lane to the next healthy one.
+    pub lane_redispatches: u64,
+    /// Hot model refreshes applied (checkpoint loaded + dims verified).
+    pub refreshes: u64,
+    /// Refresh attempts rejected (load error or shape mismatch); the old
+    /// parameters kept serving.
+    pub failed_refreshes: u64,
+}
+
+impl ChurnStats {
+    /// `true` iff the drive saw no churn at all.
+    pub fn is_quiet(&self) -> bool {
+        *self == ChurnStats::default()
+    }
+}
+
+/// Typed error for the unservable state: every lane quarantined at once,
+/// so batch `batch` has nowhere to run. Distinguishable from transient
+/// dispatch failures by downcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoHealthyLanes {
+    /// Global coalesced-batch index that could not be placed.
+    pub batch: usize,
+    /// Total lane count of the group (all quarantined).
+    pub lanes: usize,
+}
+
+impl fmt::Display for NoHealthyLanes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "no healthy serve lanes left: all {} lanes quarantined at coalesced batch {}",
+            self.lanes, self.batch
+        )
+    }
+}
+
+impl std::error::Error for NoHealthyLanes {}
+
+/// One hot model refresh in a serve drive: from admitted coalesced batch
+/// `at_batch` on, every lane serves `params` instead of whatever it served
+/// before. Expressed in *global batch order* — not per lane, not in wall
+/// time — so predictions stay a pure function of (params timeline, batch
+/// index) for any lane count (DESIGN.md §10).
+#[derive(Clone)]
+pub struct RefreshEvent {
+    /// First admitted coalesced batch served with the new parameters.
+    pub at_batch: usize,
+    /// The freshly loaded (verified) parameter set.
+    pub params: Arc<Params>,
+}
+
+/// What a churn-aware serve drive returns: per-batch logits + service
+/// times, the lane that actually executed each batch (after quarantine
+/// re-dispatch — feeds the demux latency model), and the churn counters.
+pub struct ServeDrive {
+    /// `[NS, C]` logits plus assemble+forward wall time, in batch order.
+    pub stepped: Vec<(HostTensor, Duration)>,
+    /// Executing lane per batch; `bi % replicas` when no lane was ever
+    /// quarantined.
+    pub primary_lane: Vec<usize>,
+    /// Quarantine/shadow/re-dispatch accounting (refresh counters are
+    /// filled by the serving layer, which owns checkpoint loading).
+    pub stats: ChurnStats,
+}
+
+/// One scheduled slot of a serve lane: the global coalesced-batch index
+/// plus whether this is probation shadow work (output discarded, no fault
+/// cursor — shadow compute must not perturb dispatch-fault accounting).
+type ServeSlot = (usize, bool);
+
+/// A churn-resolved serve schedule: per-lane ordered slot lists, the
+/// primary lane per batch, and the planner's share of the counters.
+struct ChurnSchedule {
+    lanes: Vec<Vec<ServeSlot>>,
+    primary: Vec<usize>,
+    stats: ChurnStats,
+}
+
+/// Resolve quarantine churn into a deterministic schedule, before any
+/// thread is spawned (DESIGN.md §10). Pure in its arguments:
+///
+/// * Primary selection starts at `bi % n_lanes` and scans forward for the
+///   first healthy lane. Each [`FaultSite::LaneHard`] firing at
+///   `(epoch 0, seq bi)` consumes the current candidate — quarantines it
+///   and re-dispatches the batch to the next healthy lane — so `x N`
+///   multiplicity cascades across N successive lanes.
+/// * A quarantined lane shadows every subsequent batch (same prep, same
+///   seq, output discarded) until it has completed `probation` of them,
+///   then re-enters the rotation from the next batch.
+/// * Zero healthy lanes is the typed [`NoHealthyLanes`] error.
+fn plan_churn(
+    n_batches: usize,
+    n_lanes: usize,
+    plan: Option<&FaultPlan>,
+    probation: usize,
+) -> Result<ChurnSchedule> {
+    let hard = plan.filter(|p| p.has_site(FaultSite::LaneHard));
+    let probation = probation.max(1);
+    let mut lanes: Vec<Vec<ServeSlot>> = (0..n_lanes).map(|_| Vec::new()).collect();
+    let mut primary = Vec::with_capacity(n_batches);
+    let mut stats = ChurnStats::default();
+    let mut healthy = vec![true; n_lanes];
+    let mut shadow_left = vec![0usize; n_lanes];
+    for bi in 0..n_batches {
+        // Lanes already quarantined when this batch arrives shadow it;
+        // snapshot before any kill this batch triggers.
+        let shadowing: Vec<usize> = (0..n_lanes).filter(|&l| !healthy[l]).collect();
+        let mut kills = hard.map_or(0, |p| p.fires(FaultSite::LaneHard, 0, bi as u64));
+        let mut probe = bi % n_lanes;
+        let chosen = loop {
+            let Some(l) = (0..n_lanes).map(|off| (probe + off) % n_lanes).find(|&l| healthy[l])
+            else {
+                return Err(NoHealthyLanes { batch: bi, lanes: n_lanes }.into());
+            };
+            if kills > 0 {
+                kills -= 1;
+                healthy[l] = false;
+                shadow_left[l] = probation;
+                stats.lane_quarantines += 1;
+                stats.lane_redispatches += 1;
+                probe = (l + 1) % n_lanes;
+                continue;
+            }
+            break l;
+        };
+        lanes[chosen].push((bi, false));
+        primary.push(chosen);
+        for l in shadowing {
+            lanes[l].push((bi, true));
+            stats.shadow_batches += 1;
+            shadow_left[l] -= 1;
+            if shadow_left[l] == 0 {
+                healthy[l] = true;
+                stats.lane_readmissions += 1;
+            }
+        }
+    }
+    Ok(ChurnSchedule { lanes, primary, stats })
 }
 
 /// What one lane computed for its slice of a round: `(step result,
@@ -139,6 +308,11 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     caches: Vec<CacheHandle<B>>,
     /// Deterministic fault-injection plan (DESIGN.md §9); `None` = off.
     fault: Option<Arc<FaultPlan>>,
+    /// Per-lane hot-refreshed serving parameters ([`Self::refresh_lane`],
+    /// DESIGN.md §10): `Some` overrides the shared `params` for that lane's
+    /// *forward* (serve) work only — training rounds always broadcast the
+    /// shared set. Aligned with `engines`.
+    lane_params: Vec<Option<Params>>,
     /// Per-lane device-resident schema constants (type maps, target/LR
     /// scalars, zero-accumulator seeds), uploaded once at construction and
     /// persisted across epochs; non-empty iff `opt.dev_resident`, aligned
@@ -194,6 +368,7 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
                 dev_schemas.push(StepExecutor::new(e, model, opt).make_dev_schema(&schema, cfg.lr)?);
             }
         }
+        let lane_params = (0..engines.len()).map(|_| None).collect();
         Ok(ReplicaGroup {
             graph,
             model,
@@ -206,6 +381,7 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             arsenals,
             caches: Vec::new(),
             fault: None,
+            lane_params,
             dev_schemas,
             rng: Rng::new(cfg.seed),
             d,
@@ -272,6 +448,44 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             s += a.stats;
         }
         s
+    }
+
+    /// Hot-swap one forward lane's serving parameters (DESIGN.md §10):
+    /// subsequent serve drives run lane `lane` against `params` instead of
+    /// the group's shared set — without rebuilding the group, re-uploading
+    /// caches, or draining the other lanes. Dimensions must match the
+    /// group's profile; a mismatch is an error and leaves the lane
+    /// untouched (refresh is atomic). Training is unaffected: the round
+    /// broadcast always snapshots the shared `params`, so a refreshed lane
+    /// rejoins the synchronous trajectory on the next `train_epoch`.
+    pub fn refresh_lane(&mut self, lane: usize, params: &Params) -> Result<()> {
+        ensure!(
+            lane < self.engines.len(),
+            "lane {lane} out of range ({} lanes)",
+            self.engines.len()
+        );
+        let d = self.d;
+        ensure!(
+            params.rpad == d.rpad && params.f == d.f && params.h == d.h && params.c == d.c,
+            "refresh params dims [rpad {}, f {}, h {}, c {}] do not match the \
+             group profile [rpad {}, f {}, h {}, c {}]",
+            params.rpad,
+            params.f,
+            params.h,
+            params.c,
+            d.rpad,
+            d.f,
+            d.h,
+            d.c
+        );
+        self.lane_params[lane] = Some(params.clone());
+        Ok(())
+    }
+
+    /// The parameters lane `lane` currently serves with: its hot-refreshed
+    /// set if one is installed, the group's shared set otherwise.
+    pub fn lane_serving_params(&self, lane: usize) -> &Params {
+        self.lane_params.get(lane).and_then(|p| p.as_ref()).unwrap_or(&self.params)
     }
 }
 
@@ -619,8 +833,36 @@ where
     /// never semantic ones (pinned by `tests/serve_parity.rs`).
     ///
     /// Returns per-batch `[NS, C]` logits plus the wall service time of
-    /// the assemble+forward step, in batch order.
+    /// the assemble+forward step, in batch order. Thin wrapper over
+    /// [`Self::serve_forward_churn`] with no refresh events and the
+    /// default probation — bitwise identical schedules when the attached
+    /// fault plan has no [`FaultSite::LaneHard`] entries.
     pub fn serve_forward(&mut self, batches: &[Vec<u32>]) -> Result<Vec<(HostTensor, Duration)>> {
+        Ok(self.serve_forward_churn(batches, &[], DEFAULT_PROBATION)?.stepped)
+    }
+
+    /// [`Self::serve_forward`] under churn (DESIGN.md §10): the same
+    /// forward-only drive, plus
+    ///
+    /// * **hot refresh** — `refreshes` (sorted here by `at_batch`) switch
+    ///   every lane to new parameters as it crosses the event's global
+    ///   batch boundary, so batch `bi` is served by the latest event with
+    ///   `at_batch <= bi` (or the lane's base set) *regardless of which
+    ///   lane runs it*; device-resident lanes re-stage their device params
+    ///   at the boundary;
+    /// * **quarantine** — [`FaultSite::LaneHard`] firings resolved by
+    ///   [`plan_churn`] before any thread spawns: quarantined lanes leave
+    ///   the rotation, their batches re-dispatch to the next healthy lane
+    ///   in global batch order (bitwise-identical predictions), and they
+    ///   shadow `probation` batches (output discarded, no fault cursor —
+    ///   dispatch-fault accounting is churn-invariant) before re-admission.
+    ///   Zero healthy lanes is the typed [`NoHealthyLanes`] error.
+    pub fn serve_forward_churn(
+        &mut self,
+        batches: &[Vec<u32>],
+        refreshes: &[RefreshEvent],
+        probation: usize,
+    ) -> Result<ServeDrive> {
         let d = self.d;
         let opt = self.opt;
         let model = self.model;
@@ -632,17 +874,44 @@ where
         let rng = self.rng.clone();
         let schema: &SchemaTensors = &self.schema;
         let params: &Params = &self.params;
+        let lane_params: &[Option<Params>] = &self.lane_params;
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
         let caches: &[CacheHandle<B>] = &self.caches;
         let dev_schemas: &[DevSchema<B>] = &self.dev_schemas;
         let cache_store = caches.first().map(|h| h.store.clone());
 
-        // Round-robin lane schedule: a pure function of the batch index
-        // alone, so demux order never depends on the lane count.
-        let sched: Vec<Vec<usize>> = (0..n_lanes)
-            .map(|l| (l..batches.len()).step_by(n_lanes.max(1)).collect())
-            .collect();
+        for ev in refreshes {
+            let p = &ev.params;
+            ensure!(
+                p.rpad == d.rpad && p.f == d.f && p.h == d.h && p.c == d.c,
+                "refresh event at batch {} has params dims [rpad {}, f {}, h {}, c {}] \
+                 but the group profile is [rpad {}, f {}, h {}, c {}]",
+                ev.at_batch,
+                p.rpad,
+                p.f,
+                p.h,
+                p.c,
+                d.rpad,
+                d.f,
+                d.h,
+                d.c
+            );
+        }
+        // Boundary order is global-batch order; sort so each lane walks
+        // the timeline with one monotone cursor.
+        let refs: Vec<RefreshEvent> = {
+            let mut v = refreshes.to_vec();
+            v.sort_by_key(|r| r.at_batch);
+            v
+        };
+        let refs: &[RefreshEvent] = &refs;
+
+        // Quarantine churn resolved up front into per-lane slot lists — a
+        // pure function of (fault plan, batch count, lane count), never of
+        // thread interleaving. Without LaneHard entries this is exactly
+        // the historical `bi % n_lanes` round-robin.
+        let sched = plan_churn(batches.len(), n_lanes, self.fault.as_deref(), probation)?;
 
         let mut results: Vec<Option<(HostTensor, Duration)>> =
             (0..batches.len()).map(|_| None).collect();
@@ -651,7 +920,7 @@ where
         std::thread::scope(|s| {
             let mut consumers = Vec::new();
             let mut state_rxs: Vec<(usize, Receiver<ProducerState>)> = Vec::new();
-            for (li, (eng, lane_sched)) in engines.iter_mut().zip(&sched).enumerate() {
+            for (li, (eng, lane_sched)) in engines.iter_mut().zip(&sched.lanes).enumerate() {
                 if lane_sched.is_empty() {
                     continue;
                 }
@@ -660,12 +929,17 @@ where
                 let lane_ds = dev_schemas.get(li);
                 let lane_rng = rng.clone();
                 let lane_store = cache_store.clone();
+                // Lane base set: a prior `refresh_lane` override, else the
+                // shared params. Refresh events supersede both.
+                let base: &Params = lane_params[li].as_ref().unwrap_or(params);
                 let (stx, srx) = mpsc::channel::<ProducerState>();
                 state_rxs.push((li, srx));
                 if opt.pipeline {
                     // Depth-bounded lane queue: the producer thread stays
                     // at most PIPELINE_DEPTH batches ahead; consumed
-                    // buffers return through the recycle channel.
+                    // buffers return through the recycle channel. Shadow
+                    // slots flow through the same queue — same prep bits,
+                    // same seq — so probation exercises the full path.
                     let (tx, rx) = mpsc::sync_channel::<PreparedCpu>(PIPELINE_DEPTH);
                     let (btx, brx) = mpsc::channel::<BatchBufs>();
                     s.spawn(move || {
@@ -675,7 +949,7 @@ where
                         // Fixed circulating population: never fresh-allocate
                         // mid-stream because a return raced the schedule.
                         p.preallocate(PIPELINE_DEPTH + 1);
-                        for &bi in lane_sched {
+                        for &(bi, _) in lane_sched {
                             while let Ok(b) = brx.try_recv() {
                                 p.reclaim(b);
                             }
@@ -694,32 +968,53 @@ where
                     consumers.push(s.spawn(
                         move || -> Result<Vec<(usize, HostTensor, Duration)>> {
                             let exec = StepExecutor::new(&*eng, model, opt);
-                            // Device-resident serve: stage the frozen params
-                            // once per lane, before the batch loop.
+                            // Device-resident serve: stage the lane's params
+                            // before the batch loop; re-staged whenever a
+                            // refresh boundary is crossed.
+                            let mut cur: &Params = base;
+                            let mut ri = 0usize;
                             let mut dev_params = match lane_ds {
-                                Some(_) => Some(exec.upload_params_peer(params)?),
+                                Some(_) => Some(exec.upload_params_peer(cur)?),
                                 None => None,
                             };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
-                            for &bi in lane_sched {
+                            for &(bi, shadow) in lane_sched {
                                 let prep = rx.recv().map_err(|_| {
                                     anyhow!("serve producer for lane {li} exited early")
                                 })?;
-                                eng.fault_cursor(0, bi as u64);
+                                let mut swapped = false;
+                                while ri < refs.len() && refs[ri].at_batch <= bi {
+                                    cur = &refs[ri].params;
+                                    ri += 1;
+                                    swapped = true;
+                                }
+                                if swapped {
+                                    if let Some(dp) = dev_params.take() {
+                                        exec.recycle_dev_params(dp);
+                                    }
+                                    if lane_ds.is_some() {
+                                        dev_params = Some(exec.upload_params_peer(cur)?);
+                                    }
+                                }
+                                if !shadow {
+                                    eng.fault_cursor(0, bi as u64);
+                                }
                                 let t0 = Instant::now();
                                 let (logits, bufs) = serve_one(
                                     &*eng,
                                     &exec,
                                     &d,
                                     schema,
-                                    params,
+                                    cur,
                                     cache,
                                     dev_params.as_ref().zip(lane_ds),
                                     &mut assemble,
                                     prep,
                                 )?;
-                                out.push((bi, logits, t0.elapsed()));
+                                if !shadow {
+                                    out.push((bi, logits, t0.elapsed()));
+                                }
                                 let _ = btx.send(bufs);
                             }
                             if let Some(dp) = dev_params.take() {
@@ -735,23 +1030,47 @@ where
                                 graph, scfg, d, opt, pool, lane_rng, lane_store, seed,
                             );
                             let exec = StepExecutor::new(&*eng, model, opt);
+                            let mut cur: &Params = base;
+                            let mut ri = 0usize;
                             let mut dev_params = match lane_ds {
-                                Some(_) => Some(exec.upload_params_peer(params)?),
+                                Some(_) => Some(exec.upload_params_peer(cur)?),
                                 None => None,
                             };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
                             let mut err = None;
-                            for &bi in lane_sched {
+                            for &(bi, shadow) in lane_sched {
                                 let prep = p.produce_request(bi as u64, &batches[bi]);
-                                eng.fault_cursor(0, bi as u64);
+                                let mut swapped = false;
+                                while ri < refs.len() && refs[ri].at_batch <= bi {
+                                    cur = &refs[ri].params;
+                                    ri += 1;
+                                    swapped = true;
+                                }
+                                if swapped {
+                                    if let Some(dp) = dev_params.take() {
+                                        exec.recycle_dev_params(dp);
+                                    }
+                                    if lane_ds.is_some() {
+                                        match exec.upload_params_peer(cur) {
+                                            Ok(dp) => dev_params = Some(dp),
+                                            Err(e) => {
+                                                err = Some(e);
+                                                break;
+                                            }
+                                        }
+                                    }
+                                }
+                                if !shadow {
+                                    eng.fault_cursor(0, bi as u64);
+                                }
                                 let t0 = Instant::now();
                                 let step = serve_one(
                                     &*eng,
                                     &exec,
                                     &d,
                                     schema,
-                                    params,
+                                    cur,
                                     cache,
                                     dev_params.as_ref().zip(lane_ds),
                                     &mut assemble,
@@ -759,7 +1078,9 @@ where
                                 );
                                 match step {
                                     Ok((logits, bufs)) => {
-                                        out.push((bi, logits, t0.elapsed()));
+                                        if !shadow {
+                                            out.push((bi, logits, t0.elapsed()));
+                                        }
                                         p.reclaim(bufs);
                                     }
                                     Err(e) => {
@@ -799,10 +1120,11 @@ where
             }
         });
         lane_err?;
-        Ok(results
+        let stepped = results
             .into_iter()
             .map(|r| r.expect("serve batch missing from lane output"))
-            .collect())
+            .collect();
+        Ok(ServeDrive { stepped, primary_lane: sched.primary, stats: sched.stats })
     }
 }
 
@@ -1221,5 +1543,63 @@ mod tests {
         assert_eq!(replica_thread_budget(4, 4), 1);
         assert_eq!(replica_thread_budget(2, 4), 1);
         assert_eq!(replica_thread_budget(0, 0), 1);
+    }
+
+    #[test]
+    fn churn_plan_without_lane_hard_is_exactly_round_robin() {
+        for (n, lanes) in [(10usize, 2usize), (7, 3), (5, 1), (0, 2)] {
+            let sched = plan_churn(n, lanes, None, DEFAULT_PROBATION).unwrap();
+            assert!(sched.stats.is_quiet());
+            assert_eq!(sched.primary, (0..n).map(|b| b % lanes).collect::<Vec<_>>());
+            for (l, slots) in sched.lanes.iter().enumerate() {
+                let expect: Vec<ServeSlot> =
+                    (l..n).step_by(lanes).map(|bi| (bi, false)).collect();
+                assert_eq!(slots, &expect, "n={n} lanes={lanes} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_plan_quarantines_shadows_and_readmits() {
+        // `lane!` at batch 1 on 2 lanes: lane 1 (the round-robin owner of
+        // batch 1) is quarantined, batch 1 re-dispatches to lane 0, lane 1
+        // shadows batches 2..2+probation and then owns batch bi%2 again.
+        let plan = FaultPlan::parse("lane!@0:1", 7).unwrap();
+        let sched = plan_churn(6, 2, Some(&plan), 2).unwrap();
+        assert_eq!(sched.primary, vec![0, 0, 0, 0, 0, 1]);
+        assert_eq!(sched.lanes[0], vec![(0, false), (1, false), (2, false), (3, false), (4, false)]);
+        assert_eq!(sched.lanes[1], vec![(2, true), (3, true), (5, false)]);
+        let s = sched.stats;
+        assert_eq!(
+            (s.lane_quarantines, s.lane_readmissions, s.shadow_batches, s.lane_redispatches),
+            (1, 1, 2, 1)
+        );
+    }
+
+    #[test]
+    fn churn_plan_cascading_kills_hit_successive_lanes() {
+        // x2 multiplicity at one seq kills two successive candidates; with
+        // 3 lanes one survivor remains and takes the batch.
+        let plan = FaultPlan::parse("lane!@0:0x2", 7).unwrap();
+        let sched = plan_churn(2, 3, Some(&plan), 1).unwrap();
+        assert_eq!(sched.primary[0], 2);
+        assert_eq!(sched.stats.lane_quarantines, 2);
+        assert_eq!(sched.stats.lane_redispatches, 2);
+        // Probation 1: both quarantined lanes shadow batch 1 and re-admit.
+        assert_eq!(sched.stats.shadow_batches, 2);
+        assert_eq!(sched.stats.lane_readmissions, 2);
+
+        // The same multiplicity against 2 lanes leaves nothing healthy:
+        // the typed error names the stranded batch.
+        let err = plan_churn(2, 2, Some(&plan), 1).unwrap_err();
+        let no = err.downcast_ref::<NoHealthyLanes>().expect("typed error");
+        assert_eq!(*no, NoHealthyLanes { batch: 0, lanes: 2 });
+    }
+
+    #[test]
+    fn churn_plan_single_lane_kill_is_unservable() {
+        let plan = FaultPlan::parse("lane!@0:0", 7).unwrap();
+        let err = plan_churn(1, 1, Some(&plan), 1).unwrap_err();
+        assert!(err.downcast_ref::<NoHealthyLanes>().is_some());
     }
 }

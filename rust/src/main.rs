@@ -3,9 +3,11 @@
 //! Subcommands:
 //!   datasets                       print Table 2 (generator statistics)
 //!   train `[flags]`                train a model, print per-epoch metrics
-//!   serve `[flags]`                online inference: coalesce an open-loop
-//!                                  request stream into batches, report
-//!                                  latency percentiles (DESIGN.md §8)
+//!   serve `[flags]`                online inference: coalesce an open- or
+//!                                  closed-loop request stream into batches,
+//!                                  report latency percentiles; survives
+//!                                  churn — hot model refresh + lane
+//!                                  quarantine (DESIGN.md §8, §10)
 //!   counts `[flags]`               measured vs predicted kernel counts
 //!   calibrate `[flags]`            machine peaks (compute / bandwidth / launch)
 //!   profile `[flags]`              per-module time breakdown of one step
@@ -40,6 +42,15 @@
 //!   recovered trajectory stays bit-identical — DESIGN.md §9)
 //!   --max-queue N (serve: admission-control bound on the virtual batch
 //!   queue; overflowing batches are shed deterministically)
+//!   --refresh-at TICK[:PATH][,TICK[:PATH]...] (serve: hot model refresh —
+//!   at the first admitted batch closing at or after TICK, every lane
+//!   swaps to the checkpoint at PATH (default: the --load-ckpt path); a
+//!   failed load is counted, never fatal — DESIGN.md §10)
+//!   --closed-loop N (serve: N virtual clients re-issuing only after
+//!   their previous response completes, instead of the open-loop Poisson
+//!   stream; offered load becomes a pure function of (seed, N))
+//!   --probation N (serve: shadow batches a lane quarantined by a `lane!`
+//!   fault must complete before re-admission; default 2)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
@@ -92,8 +103,9 @@ fn print_usage() {
          subcommands:\n\
          \x20 datasets    print Table 2 (generator statistics)\n\
          \x20 train       train a model, print per-epoch metrics\n\
-         \x20 serve       online inference over an open-loop request stream:\n\
-         \x20             coalesced batches, latency p50/p95/p99, trace replay\n\
+         \x20 serve       online inference over an open- or closed-loop\n\
+         \x20             request stream: coalesced batches, latency\n\
+         \x20             p50/p95/p99, trace replay, hot refresh, quarantine\n\
          \x20 counts      measured vs predicted kernel counts\n\
          \x20 calibrate   machine peaks (compute / bandwidth / launch overhead)\n\
          \x20 profile     per-module time breakdown of one training step\n\
@@ -124,6 +136,13 @@ fn print_usage() {
          \x20               parallelism — DESIGN.md §8)\n\
          \x20 --max-queue N (admission control: deterministically shed\n\
          \x20               batches beyond this virtual-queue depth)\n\
+         \x20 --refresh-at TICK[:PATH],... (hot model refresh at a trace\n\
+         \x20               tick; PATH defaults to --load-ckpt; failed\n\
+         \x20               loads counted, never fatal — DESIGN.md §10)\n\
+         \x20 --closed-loop N (N virtual clients, each re-issuing only\n\
+         \x20               after its previous response completes)\n\
+         \x20 --probation N (shadow batches a `lane!`-quarantined lane\n\
+         \x20               completes before re-admission; default 2)\n\
          see README.md and DESIGN.md for details"
     );
 }
@@ -191,6 +210,17 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
     }
     if cfg.max_queue.is_some() && !matches!(action, Action::Serve) {
         bail!("--max-queue is only supported by the `serve` subcommand");
+    }
+    if !cfg.refresh_at.is_empty() && !matches!(action, Action::Serve) {
+        bail!("--refresh-at is only supported by the `serve` subcommand");
+    }
+    if cfg.closed_loop.is_some() && !matches!(action, Action::Serve) {
+        bail!("--closed-loop is only supported by the `serve` subcommand");
+    }
+    if cfg.probation != hifuse::coordinator::DEFAULT_PROBATION
+        && !matches!(action, Action::Serve)
+    {
+        bail!("--probation is only supported by the `serve` subcommand");
     }
     if matches!(action, Action::Serve) {
         if cfg.backend != BackendKind::Sim {
@@ -311,12 +341,14 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
     Ok(())
 }
 
-/// Online inference over an open-loop request stream (DESIGN.md §8):
-/// generate or replay an arrival trace, coalesce it into static-shape
-/// batches, run them forward-only across the replica lanes, and report
-/// per-request latency percentiles + throughput. Always the replica path
-/// (`--replicas` defaults to 1) so serving and replica training share one
-/// execution engine.
+/// Online inference over an open- or closed-loop request stream
+/// (DESIGN.md §8, §10): generate or replay an arrival trace, coalesce it
+/// into static-shape batches, run them forward-only across the replica
+/// lanes — hot-refreshing parameters at `--refresh-at` boundaries and
+/// quarantining `lane!`-faulted lanes — and report per-request latency
+/// percentiles, queue-depth accounting, churn counters, and a prediction
+/// digest. Always the replica path (`--replicas` defaults to 1) so
+/// serving and replica training share one execution engine.
 fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     let round = hifuse::coordinator::DEFAULT_ROUND;
     let n = cfg.replicas.unwrap_or(1);
@@ -357,13 +389,22 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         }
         // Requests carry 1..=min(4, batch_size) seeds: small like real
         // point queries, large enough to exercise multi-seed demux.
-        None => serving::trace::generate(
-            &graph,
-            cfg.train.seed,
-            cfg.rate,
-            cfg.requests,
-            cfg.train.batch_size.clamp(1, 4),
-        ),
+        None => match cfg.closed_loop {
+            Some(clients) => serving::trace::generate_closed_loop(
+                &graph,
+                cfg.train.seed,
+                clients,
+                cfg.requests,
+                cfg.train.batch_size.clamp(1, 4),
+            ),
+            None => serving::trace::generate(
+                &graph,
+                cfg.train.seed,
+                cfg.rate,
+                cfg.requests,
+                cfg.train.batch_size.clamp(1, 4),
+            ),
+        },
     };
     if let Some(p) = &cfg.record_trace {
         serving::trace::save(&trace, p)?;
@@ -382,12 +423,35 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         cfg.coalesce_window,
         trace.requests.len(),
     );
-    let out = serving::serve_bounded(
+    if let Some(clients) = cfg.closed_loop {
+        println!(
+            "closed-loop: {clients} virtual clients, think time ~{} ticks",
+            serving::trace::CLOSED_LOOP_THINK_MEAN,
+        );
+    }
+    // Resolve every refresh event to a concrete checkpoint path now, so a
+    // missing fallback is a CLI error, not a silent failed refresh.
+    let mut refreshes: Vec<(u64, PathBuf)> = Vec::with_capacity(cfg.refresh_at.len());
+    for (tick, path) in &cfg.refresh_at {
+        match path.clone().or_else(|| cfg.load_ckpt.clone()) {
+            Some(p) => refreshes.push((*tick, p)),
+            None => bail!(
+                "--refresh-at {tick} names no checkpoint and there is no \
+                 --load-ckpt to fall back to"
+            ),
+        }
+    }
+    let opts = serving::ServeOptions {
+        max_queue: cfg.max_queue,
+        refreshes,
+        probation: cfg.probation,
+    };
+    let out = serving::serve_churn(
         &mut group,
         &trace,
         cfg.train.batch_size,
         cfg.coalesce_window,
-        cfg.max_queue,
+        &opts,
     )?;
     let (mut h2d, mut d2h, mut retries) = (0u64, 0u64, 0u64);
     for e in group.engines() {
@@ -404,15 +468,30 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         String::new()
     };
     println!(
-        "served {} requests as {} coalesced batches{} | wall {:>8.1?}",
+        "served {} requests as {} coalesced batches{} | mean queue depth {:.2} | wall {:>8.1?}",
         h.count(),
         out.batches.len(),
         shed_note,
+        out.mean_queue_depth,
         out.wall,
     );
     if cfg.fault_spec.is_some() {
         println!("faults: dispatch retries {retries}");
     }
+    if !out.churn.is_quiet() || !cfg.refresh_at.is_empty() || cfg.fault_spec.is_some() {
+        let s = &out.churn;
+        println!(
+            "churn: refreshes {} | failed refreshes {} | lane_quarantines {} | \
+             readmissions {} | shadow batches {} | redispatches {}",
+            s.refreshes,
+            s.failed_refreshes,
+            s.lane_quarantines,
+            s.lane_readmissions,
+            s.shadow_batches,
+            s.lane_redispatches,
+        );
+    }
+    println!("predictions digest 0x{:016x}", out.prediction_digest()?);
     println!(
         "latency p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | {:.0} req/s (virtual)",
         h.percentile(50.0) as f64 / 1e3,

@@ -186,6 +186,14 @@ pub fn save_at(params: &Params, cursor: Cursor, path: &Path) -> Result<()> {
 }
 
 /// Load parameters from `path`; dims must match the running profile.
+///
+/// This is also the serve plane's hot-refresh loader (DESIGN.md §10):
+/// `serving::serve_churn` runs every `--refresh-at` checkpoint through it
+/// *before* the drive starts, and because each failure mode below is an
+/// error — not a panic, and never a partially-applied parameter set — a
+/// corrupt refresh leaves the old model serving, demoted to a
+/// `failed_refreshes` count. Refresh atomicity is pinned by
+/// `tests/churn_matrix.rs`.
 pub fn load(path: &Path) -> Result<Params> {
     Ok(load_with_cursor(path)?.0)
 }

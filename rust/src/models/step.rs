@@ -992,6 +992,14 @@ impl<'e, B: ExecBackend> StepExecutor<'e, B> {
     /// [`StepExecutor::upload_params`] over the modeled replica interconnect
     /// (the per-round parameter broadcast of the data-parallel path —
     /// counted in `Counters::p2p_bytes`).
+    ///
+    /// Also the serve plane's lane param swap primitive (DESIGN.md §10):
+    /// a device-resident lane crossing a hot-refresh boundary recycles its
+    /// staged set ([`StepExecutor::recycle_dev_params`] — the buffers drop
+    /// back into the arena, so a swap allocates nothing in steady state)
+    /// and re-stages the new parameters through this call. The p2p charge
+    /// makes refresh traffic visible in the same counter the training
+    /// broadcast uses.
     pub fn upload_params_peer(&self, params: &Params) -> Result<DevParams<B>> {
         self.upload_params_impl(params, true)
     }

@@ -9,6 +9,15 @@
 //! setting. A batch closes when (a) the next request would overflow the
 //! seed capacity, (b) the batch fills exactly, or (c) the next arrival
 //! falls outside the batch's coalescing window.
+//!
+//! The coalescer is schedule-agnostic: a closed-loop trace
+//! ([`super::trace::generate_closed_loop`]) folds exactly like an
+//! open-loop one — arrival ticks are arrival ticks, wherever they came
+//! from. `close_tick` additionally anchors the serve plane's churn
+//! boundaries: hot-refresh ticks map to the first admitted batch closing
+//! at or after them, and the admission model's queue-depth accounting
+//! integrates from each batch's close to its virtual departure
+//! (DESIGN.md §10).
 
 use anyhow::{ensure, Result};
 

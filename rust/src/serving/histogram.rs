@@ -70,6 +70,18 @@ impl LatencyHistogram {
         self.total
     }
 
+    /// Smallest recorded latency in ticks (`None` when empty). Exact —
+    /// not bucket-resolution — so closed-loop concurrency sweeps can
+    /// report true best-case service time next to the tail percentiles.
+    pub fn observed_min(&self) -> Option<u64> {
+        (self.total > 0).then_some(self.min)
+    }
+
+    /// Largest recorded latency in ticks (`None` when empty). Exact.
+    pub fn observed_max(&self) -> Option<u64> {
+        (self.total > 0).then_some(self.max)
+    }
+
     /// Mean latency in ticks (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
@@ -131,6 +143,18 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.percentile(50.0), 0);
         assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.observed_min(), None);
+        assert_eq!(h.observed_max(), None);
+    }
+
+    #[test]
+    fn observed_extremes_are_exact_not_bucketed() {
+        let mut h = LatencyHistogram::default();
+        for v in [7u64, 1000, 13] {
+            h.record(v);
+        }
+        assert_eq!(h.observed_min(), Some(7));
+        assert_eq!(h.observed_max(), Some(1000));
     }
 
     #[test]

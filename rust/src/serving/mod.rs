@@ -1,38 +1,47 @@
-//! Online inference serving (DESIGN.md §8): an open-loop request
-//! front-end over the training stack's batch machinery.
+//! Online inference serving (DESIGN.md §8, §10): open- and closed-loop
+//! request front-ends over the training stack's batch machinery.
 //!
 //! `repro serve` drives four stages, each reusing a training-path
 //! subsystem rather than duplicating it:
 //!
 //! 1. **Arrival stream** ([`trace`]) — a seeded schedule of per-request
 //!    seed-vertex sets on an integer virtual clock (1 tick = 1 µs),
-//!    recordable to and replayable from a small binary codec.
+//!    recordable to and replayable from a small binary codec. Open-loop
+//!    (Poisson offered load) or closed-loop (`--closed-loop N` virtual
+//!    clients, [`trace::generate_closed_loop`]).
 //! 2. **Coalescer** ([`coalesce`]) — folds pending requests into the same
 //!    static-shape mini-batches the trainer runs, purely from the stream,
 //!    so batch membership is independent of all parallelism knobs.
-//! 3. **Forward drive** (`ReplicaGroup::serve_forward`) — round-robins
-//!    the coalesced batches over the replica lanes, sampling through
-//!    `NeighborSampler::sample_request_into` and executing the
+//! 3. **Forward drive** (`ReplicaGroup::serve_forward_churn`) —
+//!    round-robins the coalesced batches over the replica lanes, sampling
+//!    through `NeighborSampler::sample_request_into` and executing the
 //!    `StepExecutor::forward_step` split of `grad_step`; producer
 //!    arsenals, `BatchBufs` recycling, and the `--cache-frac` resident
-//!    cache all carry over, so the steady state allocates nothing.
-//! 4. **Demux + metrology** ([`serve`]) — maps each batch's slot rows
-//!    back to per-request predictions and folds per-request latencies
-//!    into a fixed-footprint [`LatencyHistogram`].
+//!    cache all carry over, so the steady state allocates nothing. Under
+//!    churn the drive additionally hot-swaps parameters at refresh
+//!    boundaries and quarantines/re-admits lanes (DESIGN.md §10).
+//! 4. **Demux + metrology** ([`serve_churn`]) — maps each batch's slot
+//!    rows back to typed per-request outcomes ([`RequestOutcome`]) and
+//!    folds per-request latencies into a fixed-footprint
+//!    [`LatencyHistogram`].
 //!
 //! Determinism contract: predictions and coalescing are bitwise functions
-//! of `(params, trace, batch_size, window)` — pinned across
-//! `--replicas`/`--producers`/`--threads`/pipeline by
-//! `tests/serve_parity.rs`. Latency *values* are performance metrology
-//! (each batch's measured service time replayed onto the virtual clock)
-//! and are not part of the bitwise contract; the histogram's shape
-//! invariants are.
+//! of `(params timeline, trace, batch_size, window, max_queue)` — pinned
+//! across `--replicas`/`--producers`/`--threads`/pipeline *and across
+//! churn* (refresh, quarantine, closed-loop) by `tests/serve_parity.rs`
+//! and `tests/churn_matrix.rs`. Latency *values* are performance
+//! metrology (each batch's measured service time replayed onto the
+//! virtual clock) and are not part of the bitwise contract; the
+//! histogram's shape invariants and the admission model's queue-depth
+//! accounting are.
 
 pub mod coalesce;
 pub mod histogram;
 pub mod trace;
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
@@ -41,7 +50,8 @@ pub use coalesce::{coalesce, BatchMember, CoalescedBatch};
 pub use histogram::LatencyHistogram;
 pub use trace::{Request, Trace};
 
-use crate::coordinator::ReplicaGroup;
+use crate::coordinator::{ChurnStats, RefreshEvent, ReplicaGroup, DEFAULT_PROBATION};
+use crate::models::{checkpoint, Params};
 use crate::runtime::ExecBackend;
 use crate::util::HostTensor;
 
@@ -49,17 +59,66 @@ use crate::util::HostTensor;
 /// model, in ticks. Admission must be a pure function of the trace — the
 /// *measured* per-batch service times feeding the latency histogram are
 /// wall-clock and would make the shed set nondeterministic — so
-/// [`serve_bounded`] queues batches on a single virtual server at this
+/// [`serve_churn`] queues batches on a single virtual server at this
 /// constant rate and sheds only against that model (DESIGN.md §9).
 pub const VIRT_SERVICE_PER_BATCH: u64 = 50;
 
+/// What one request got out of a serve run: its logit rows, or a typed
+/// shed marker. Replaces the old ambiguous `[0, C]` placeholder — a shed
+/// is now distinguishable from any served prediction by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestOutcome {
+    /// The request's `[seeds, C]` logit rows, bitwise-deterministic in
+    /// (params timeline, trace, batch_size, window).
+    Served(HostTensor),
+    /// Dropped whole by admission control; no rows were ever computed.
+    Shed,
+}
+
+impl RequestOutcome {
+    /// The served logits, if any.
+    pub fn served(&self) -> Option<&HostTensor> {
+        match self {
+            RequestOutcome::Served(t) => Some(t),
+            RequestOutcome::Shed => None,
+        }
+    }
+
+    /// `true` iff admission control shed this request.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, RequestOutcome::Shed)
+    }
+}
+
+/// Knobs for one [`serve_churn`] pass beyond the coalescing geometry.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Admission bound on the virtual batch queue; `None` = never shed.
+    pub max_queue: Option<usize>,
+    /// Hot model refreshes: `(tick, checkpoint path)` — at the first
+    /// admitted batch closing at or after `tick`, every lane switches to
+    /// the checkpoint's parameters. A failed load (bad CRC, truncation,
+    /// shape mismatch) is counted in [`ChurnStats::failed_refreshes`] and
+    /// the old parameters keep serving — never fatal.
+    pub refreshes: Vec<(u64, PathBuf)>,
+    /// Shadow batches a quarantined lane must complete before re-admission
+    /// (`0` is clamped to `1`); see `ReplicaGroup::serve_forward_churn`.
+    pub probation: usize,
+}
+
+impl ServeOptions {
+    /// Quiescent defaults: no bound, no refreshes, default probation.
+    pub fn quiescent() -> Self {
+        ServeOptions { max_queue: None, refreshes: Vec::new(), probation: DEFAULT_PROBATION }
+    }
+}
+
 /// Everything one serve run produces.
 pub struct ServeOutcome {
-    /// Per-request `[seeds, C]` logit rows, in trace order — bitwise
-    /// identical for a given (params, trace, batch_size, window) whatever
-    /// the parallelism. A request shed by admission control gets a `[0, C]`
-    /// placeholder (no rows were computed for it).
-    pub predictions: Vec<HostTensor>,
+    /// Per-request outcomes in trace order — bitwise identical for a given
+    /// (params timeline, trace, batch_size, window, max_queue) whatever
+    /// the parallelism or churn.
+    pub predictions: Vec<RequestOutcome>,
     /// Per-request latency in virtual ticks (completion − arrival); 0 for
     /// shed requests (they never complete).
     pub latencies: Vec<u64>,
@@ -71,12 +130,20 @@ pub struct ServeOutcome {
     pub wall: Duration,
     /// Virtual span: first arrival tick → last completion tick.
     pub span_ticks: u64,
-    /// Requests shed by admission control ([`serve_bounded`]), ascending
-    /// trace order. Always empty without a queue bound.
+    /// Requests shed by admission control, ascending trace order. Always
+    /// empty without a queue bound.
     pub shed: Vec<u32>,
-    /// Peak admitted-batch backlog the admission model observed (0 without
-    /// a queue bound).
+    /// Peak admitted-batch backlog the virtual admission model observed
+    /// (queued + in service). Computed for bounded *and* unbounded runs.
     pub max_backlog: usize,
+    /// Time-weighted mean admitted-batch queue depth over the virtual
+    /// busy span (Little's-law `L`): Σ(departure − close) / span. 0.0 for
+    /// an empty span.
+    pub mean_queue_depth: f64,
+    /// Churn accounting: quarantines, re-admissions, shadow batches,
+    /// re-dispatches, refreshes, failed refreshes. All-zero for a
+    /// quiescent run.
+    pub churn: ChurnStats,
 }
 
 impl ServeOutcome {
@@ -87,19 +154,35 @@ impl ServeOutcome {
         }
         self.predictions.len() as f64 * 1e6 / self.span_ticks as f64
     }
+
+    /// Order-sensitive FNV-1a digest over every request outcome — shed
+    /// markers and the bit patterns of served logit rows — so two runs
+    /// can be compared for bitwise prediction parity from their report
+    /// lines alone (the CI churn smoke compares churn vs quiescent).
+    pub fn prediction_digest(&self) -> Result<u64> {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for p in &self.predictions {
+            match p {
+                RequestOutcome::Shed => {
+                    h = (h ^ 0x5EED_0DD1).wrapping_mul(PRIME);
+                }
+                RequestOutcome::Served(t) => {
+                    h = (h ^ t.shape()[0] as u64).wrapping_mul(PRIME);
+                    for &v in t.as_f32()? {
+                        h = (h ^ v.to_bits() as u64).wrapping_mul(PRIME);
+                    }
+                }
+            }
+        }
+        Ok(h)
+    }
 }
 
-/// Run one serve pass: coalesce `trace`, drive the batches forward-only
-/// across the group's lanes, then demultiplex predictions and account
-/// per-request latency on the virtual clock.
-///
-/// The latency model replays each batch's measured service time onto
-/// virtual time: batch `i` runs on lane `i % replicas` (mirroring
-/// `serve_forward`'s schedule), starting at
-/// `max(close_tick, lane_free)` and completing `service` ticks later;
-/// a request's latency is its batch's completion minus its own arrival.
-/// Queueing delay from lane contention is therefore visible in the
-/// histogram, while the predictions stay schedule-independent.
+/// Run one quiescent serve pass: coalesce `trace`, drive the batches
+/// forward-only across the group's lanes, then demultiplex predictions
+/// and account per-request latency on the virtual clock. Equivalent to
+/// [`serve_churn`] with [`ServeOptions::quiescent`].
 pub fn serve<B>(
     group: &mut ReplicaGroup<B>,
     trace: &Trace,
@@ -117,8 +200,8 @@ where
 /// queue. Every coalesced batch is offered to a single-server admission
 /// model ([`VIRT_SERVICE_PER_BATCH`] ticks per batch); a batch arriving
 /// while `max_queue` admitted batches are still pending is **shed whole** —
-/// its requests get `[0, C]` placeholder predictions, zero latency, and a
-/// shed mark in the histogram instead of a sample. The shed set is a pure
+/// its requests get [`RequestOutcome::Shed`], zero latency, and a shed
+/// mark in the histogram instead of a sample. The shed set is a pure
 /// function of `(trace, batch_size, window, max_queue)` — independent of
 /// replicas, producers, threads, and measured service times — so bounded
 /// runs replay bitwise too. `None` is exactly [`serve`].
@@ -133,15 +216,61 @@ where
     B: ExecBackend + Send,
     B::Dev: Sync,
 {
+    let opts = ServeOptions { max_queue, ..ServeOptions::quiescent() };
+    serve_churn(group, trace, batch_size, window, &opts)
+}
+
+/// The full churn-tolerant serve pass (DESIGN.md §10): [`serve_bounded`]
+/// plus hot model refresh and lane quarantine/re-admission.
+///
+/// **Refresh.** Each `(tick, path)` in [`ServeOptions::refreshes`] is
+/// loaded through the checkpoint codec (CRC-verified, v1/v2) *before* the
+/// drive starts, mapped to the first admitted batch closing at or after
+/// `tick`, and applied at that global batch boundary by every lane. A
+/// load failure or profile shape mismatch increments
+/// [`ChurnStats::failed_refreshes`] and the event is dropped — the old
+/// parameters keep serving. The latest successful refresh is installed
+/// into every lane (`ReplicaGroup::refresh_lane`) so it persists past
+/// this call.
+///
+/// **Quarantine.** `lane!` entries in the group's attached fault plan
+/// quarantine lanes mid-trace; their batches re-dispatch in global batch
+/// order and predictions stay bitwise-quiescent (see
+/// `ReplicaGroup::serve_forward_churn`).
+///
+/// **Latency model.** Batch `si` runs on its churn-resolved primary lane,
+/// starting at `max(close_tick, lane_free)` and completing `service`
+/// measured ticks later; a request's latency is its batch's completion
+/// minus its own arrival. Queueing delay from lane contention is
+/// therefore visible in the histogram, while the predictions stay
+/// schedule-independent.
+pub fn serve_churn<B>(
+    group: &mut ReplicaGroup<B>,
+    trace: &Trace,
+    batch_size: usize,
+    window: u64,
+    opts: &ServeOptions,
+) -> Result<ServeOutcome>
+where
+    B: ExecBackend + Send,
+    B::Dev: Sync,
+{
     ensure!(!trace.requests.is_empty(), "serving an empty trace");
     let batches = coalesce(trace, batch_size, window)?;
 
     // Admission pass: walk the batches in close order against the virtual
     // single-server queue, deciding shed/admit before any compute runs.
+    // The pass always runs — backlog depth and the time-weighted mean
+    // queue depth are reported for unbounded runs too; only shedding is
+    // gated on the bound.
+    let q = opts.max_queue.unwrap_or(usize::MAX);
     let mut admitted = vec![true; batches.len()];
     let mut shed: Vec<u32> = Vec::new();
     let mut max_backlog = 0usize;
-    if let Some(q) = max_queue {
+    let mut queue_area = 0u64; // Σ (departure − close) over admitted batches
+    let mut first_close: Option<u64> = None;
+    let mut last_virt_done = 0u64;
+    {
         let mut pending: VecDeque<u64> = VecDeque::new();
         let mut virt_free = 0u64;
         for (bi, b) in batches.iter().enumerate() {
@@ -159,24 +288,78 @@ where
             virt_free = done;
             pending.push_back(done);
             max_backlog = max_backlog.max(pending.len());
+            queue_area += done - b.close_tick;
+            first_close.get_or_insert(b.close_tick);
+            last_virt_done = done;
         }
         shed.sort_unstable();
     }
+    let mean_queue_depth = match first_close {
+        Some(fc) if last_virt_done > fc => queue_area as f64 / (last_virt_done - fc) as f64,
+        _ => 0.0,
+    };
 
+    // Admitted-batch close ticks, in drive order: the refresh tick →
+    // batch-boundary mapping and the seed sets both index this subset.
+    let admitted_closes: Vec<u64> = batches
+        .iter()
+        .zip(&admitted)
+        .filter(|&(_, &a)| a)
+        .map(|(b, _)| b.close_tick)
+        .collect();
     let seed_sets: Vec<Vec<u32>> = batches
         .iter()
         .zip(&admitted)
         .filter(|&(_, &a)| a)
         .map(|(b, _)| b.seeds.clone())
         .collect();
-    let t0 = Instant::now();
-    let stepped = group.serve_forward(&seed_sets)?;
-    let wall = t0.elapsed();
 
-    let c_dim = group.dims().c;
+    // Load every refresh checkpoint up front (never mid-drive — a slow or
+    // failing disk must not perturb lane timing), demoting failures to a
+    // counter. Events map to admitted-batch boundaries so the applied
+    // parameter timeline is a pure function of the trace.
+    let d = group.dims();
+    let mut events: Vec<RefreshEvent> = Vec::new();
+    let mut latest: Option<(u64, Arc<Params>)> = None;
+    let mut refreshes_ok = 0u64;
+    let mut refreshes_failed = 0u64;
+    for (tick, path) in &opts.refreshes {
+        let loaded = checkpoint::load(path);
+        match loaded {
+            Ok(p) if p.rpad == d.rpad && p.f == d.f && p.h == d.h && p.c == d.c => {
+                let at_batch = admitted_closes
+                    .iter()
+                    .position(|&c| c >= *tick)
+                    .unwrap_or(admitted_closes.len());
+                let params = Arc::new(p);
+                if latest.as_ref().map_or(true, |(t, _)| *tick >= *t) {
+                    latest = Some((*tick, params.clone()));
+                }
+                events.push(RefreshEvent { at_batch, params });
+                refreshes_ok += 1;
+            }
+            _ => refreshes_failed += 1,
+        }
+    }
+
+    let t0 = Instant::now();
+    let drive = group.serve_forward_churn(&seed_sets, &events, opts.probation)?;
+    let wall = t0.elapsed();
+    let mut churn = drive.stats;
+    churn.refreshes = refreshes_ok;
+    churn.failed_refreshes = refreshes_failed;
+
+    // Sticky refresh: the latest applied model keeps serving after this
+    // pass (subsequent drives see it as every lane's base set).
+    if let Some((_, p)) = latest {
+        for l in 0..group.replicas() {
+            group.refresh_lane(l, &p)?;
+        }
+    }
+
     let n_lanes = group.replicas().max(1);
     let mut lane_free = vec![0u64; n_lanes];
-    let mut predictions: Vec<Option<HostTensor>> =
+    let mut predictions: Vec<Option<RequestOutcome>> =
         (0..trace.requests.len()).map(|_| None).collect();
     let mut latencies = vec![0u64; trace.requests.len()];
     let mut hist = LatencyHistogram::default();
@@ -186,8 +369,8 @@ where
     // logits row slot_idx[i].
     let mut slots: Vec<u32> = Vec::with_capacity(batch_size);
     let mut slot_idx: Vec<usize> = Vec::with_capacity(batch_size);
-    // `si` indexes the admitted (served) batches — the order serve_forward
-    // saw them and the index its round-robin lane schedule used.
+    // `si` indexes the admitted (served) batches — the order the drive
+    // saw them and the index its churn-resolved lane schedule used.
     let mut si = 0usize;
     for (b, adm) in batches.iter().zip(&admitted) {
         if !*adm {
@@ -197,13 +380,13 @@ where
                     "request {} demuxed twice",
                     m.req
                 );
-                predictions[m.req] = Some(HostTensor::f32(Vec::new(), &[0, c_dim]));
+                predictions[m.req] = Some(RequestOutcome::Shed);
                 hist.record_shed();
             }
             continue;
         }
-        let (logits, dur) = &stepped[si];
-        let lane = si % n_lanes;
+        let (logits, dur) = &drive.stepped[si];
+        let lane = drive.primary_lane[si];
         si += 1;
         let shape = logits.shape();
         ensure!(shape.len() == 2, "forward logits must be [NS, C], got {shape:?}");
@@ -236,7 +419,7 @@ where
                 "request {} demuxed twice",
                 m.req
             );
-            predictions[m.req] = Some(HostTensor::f32(data, &[m.len, c]));
+            predictions[m.req] = Some(RequestOutcome::Served(HostTensor::f32(data, &[m.len, c])));
             let lat = done - trace.requests[m.req].arrival_tick;
             latencies[m.req] = lat;
             hist.record(lat);
@@ -257,5 +440,7 @@ where
         span_ticks: last_done.saturating_sub(first_arrival),
         shed,
         max_backlog,
+        mean_queue_depth,
+        churn,
     })
 }

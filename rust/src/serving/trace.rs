@@ -1,5 +1,5 @@
-//! Arrival traces: open-loop request schedules in **virtual time**, plus
-//! the record/replay codec (DESIGN.md §8).
+//! Arrival traces: open- and closed-loop request schedules in **virtual
+//! time**, plus the record/replay codec (DESIGN.md §8, §10).
 //!
 //! A trace is the serving subsystem's unit of determinism: request ids,
 //! per-request seed-vertex sets, and integer *arrival ticks* (1 tick =
@@ -7,6 +7,14 @@
 //! `(seed, rate, n_requests)` — no wall clock anywhere — so a generated
 //! schedule, a recorded file, and a replayed file all coalesce
 //! identically on any machine at any parallelism (`tests/serve_parity.rs`).
+//!
+//! [`generate`] produces the open-loop form (arrivals ignore completions);
+//! [`generate_closed_loop`] produces the closed-loop form (`--closed-loop
+//! N`): `N` virtual clients that each re-issue only after their previous
+//! response completes under the virtual service model, so offered load is
+//! a pure function of `(seed, N, service times)` rather than a free-running
+//! rate. Both forms emit plain [`Trace`]s — coalescing, admission control,
+//! and the latency histogram downstream are loop-shape-agnostic.
 //!
 //! The on-disk format follows `models/checkpoint.rs`: a magic tag, a
 //! version word, then length-prefixed little-endian payloads — small,
@@ -26,6 +34,18 @@ use crate::util::Rng;
 /// serving traffic never perturbs a training trajectory run from the same
 /// root seed.
 const TRACE_STREAM: u64 = 0xA221_7A1E;
+
+/// Fork stream of the closed-loop generator — disjoint from
+/// [`TRACE_STREAM`] so open- and closed-loop schedules from one root seed
+/// never share draws.
+const CLOSED_LOOP_STREAM: u64 = 0xC105_ED10;
+
+/// Mean virtual think time between a closed-loop client's response and its
+/// next request, in ticks: gaps are drawn uniformly from
+/// `[1, 2·CLOSED_LOOP_THINK_MEAN]`. A constant (not a flag) so the
+/// tail-latency-vs-concurrency curve has exactly one independent variable,
+/// the client count.
+pub const CLOSED_LOOP_THINK_MEAN: usize = 50;
 
 const MAGIC: &[u8; 8] = b"HIFUSEtr";
 const VERSION: u32 = 1;
@@ -74,6 +94,56 @@ pub fn generate(
         let n = 1 + rng.below(max_seeds);
         let seeds = (0..n).map(|_| pool[rng.below(pool.len())]).collect();
         requests.push(Request { id: id as u32, arrival_tick: tick, seeds });
+    }
+    Trace { requests }
+}
+
+/// Generate a seeded **closed-loop** trace (`--closed-loop N`,
+/// DESIGN.md §10): `clients` virtual clients each keep exactly one request
+/// in flight — a client re-issues only after its previous response
+/// completes under the virtual response model (a single server at
+/// [`super::VIRT_SERVICE_PER_BATCH`] ticks per request, the same constant
+/// the admission model uses), plus a think gap drawn uniformly from
+/// `[1, 2·`[`CLOSED_LOOP_THINK_MEAN`]`]`. Offered load is therefore a pure
+/// function of `(seed, clients, service times)`: adding clients raises
+/// concurrency until the virtual server saturates, which is what makes
+/// tail-latency-vs-concurrency sweeps well-defined. Arrival ticks are
+/// non-decreasing by construction (each emission is the minimum pending
+/// issue time, and every re-issue lands strictly later), so the result
+/// coalesces, records, and replays exactly like an open-loop trace.
+pub fn generate_closed_loop(
+    graph: &HeteroGraph,
+    seed: u64,
+    clients: usize,
+    n_requests: usize,
+    max_seeds: usize,
+) -> Trace {
+    assert!(clients >= 1, "--closed-loop needs at least one client");
+    assert!(max_seeds >= 1, "a request carries at least one seed");
+    let pool = &graph.train_idx;
+    assert!(!pool.is_empty(), "graph has no labeled target vertices to serve");
+    let mut rng = Rng::new(seed).fork(CLOSED_LOOP_STREAM);
+    // Staggered starts (client c issues first at tick c+1) so the initial
+    // burst is ordered without an arbitrary tie-break.
+    let mut next: Vec<u64> = (0..clients as u64).map(|c| 1 + c).collect();
+    let mut server_free = 0u64;
+    let mut requests = Vec::with_capacity(n_requests);
+    for id in 0..n_requests {
+        // Deterministic argmin over (next issue tick, client index).
+        let mut c = 0usize;
+        for k in 1..clients {
+            if next[k] < next[c] {
+                c = k;
+            }
+        }
+        let arrival_tick = next[c];
+        let n = 1 + rng.below(max_seeds);
+        let seeds = (0..n).map(|_| pool[rng.below(pool.len())]).collect();
+        requests.push(Request { id: id as u32, arrival_tick, seeds });
+        // Virtual response: FIFO on one server at the admission-model rate.
+        let done = arrival_tick.max(server_free) + super::VIRT_SERVICE_PER_BATCH;
+        server_free = done;
+        next[c] = done + 1 + rng.below(2 * CLOSED_LOOP_THINK_MEAN) as u64;
     }
     Trace { requests }
 }
@@ -255,6 +325,55 @@ mod tests {
             assert!((1..=3).contains(&r.seeds.len()));
             assert!(r.seeds.iter().all(|s| g.train_idx.contains(s)));
         }
+    }
+
+    #[test]
+    fn closed_loop_generation_is_pure_ordered_and_seed_sensitive() {
+        let g = tiny_graph(1);
+        let a = generate_closed_loop(&g, 42, 4, 32, 3);
+        let b = generate_closed_loop(&g, 42, 4, 32, 3);
+        assert_eq!(a, b, "closed-loop generation must be pure in its arguments");
+        assert_eq!(a.requests.len(), 32);
+        let c = generate_closed_loop(&g, 43, 4, 32, 3);
+        assert_ne!(a, c, "seed must steer the schedule");
+        for w in a.requests.windows(2) {
+            assert!(w[1].arrival_tick >= w[0].arrival_tick, "arrivals out of order");
+        }
+        for r in &a.requests {
+            assert!((1..=3).contains(&r.seeds.len()));
+            assert!(r.seeds.iter().all(|s| g.train_idx.contains(s)));
+        }
+    }
+
+    #[test]
+    fn closed_loop_concurrency_compresses_the_schedule() {
+        // One client paces at service + think per request; eight clients
+        // saturate the virtual server, so the same request count spans
+        // far fewer ticks. The exact spans are seed-deterministic; the
+        // ordering between them is the model's defining property.
+        let g = tiny_graph(1);
+        let span = |clients: usize| -> u64 {
+            let t = generate_closed_loop(&g, 42, clients, 64, 3);
+            t.requests.last().unwrap().arrival_tick - t.requests[0].arrival_tick
+        };
+        assert!(
+            span(8) < span(1),
+            "more closed-loop clients must compress the arrival span \
+             (got span(8)={} >= span(1)={})",
+            span(8),
+            span(1)
+        );
+    }
+
+    #[test]
+    fn closed_loop_traces_roundtrip_the_codec() {
+        let g = tiny_graph(2);
+        let t = generate_closed_loop(&g, 7, 3, 20, 4);
+        let path = std::env::temp_dir().join("hifuse_trace_closed_roundtrip.bin");
+        save(&t, &path).unwrap();
+        let u = load(&path).unwrap();
+        assert_eq!(t, u);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

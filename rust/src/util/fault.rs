@@ -19,6 +19,15 @@
 //! * [`FaultSite::Lane`] — a replica lane's engine dies before computing
 //!   the addressed batch. Surviving lanes absorb its remaining slots; the
 //!   fixed-order all-reduce keeps the trajectory bitwise fault-free.
+//! * [`FaultSite::LaneHard`] (spelled `lane!`) — a *persistent* lane
+//!   failure on the serve path (DESIGN.md §10): the lane owning the
+//!   addressed coalesced batch exhausts its dispatch retry budget and is
+//!   quarantined. The batch re-dispatches to the next healthy lane in
+//!   global batch order (predictions are lane-independent, so re-dispatch
+//!   is bitwise invisible); the quarantined lane shadows subsequent
+//!   batches and is re-admitted after a probation of successes. `xN`
+//!   cascades the failure across `N` successive lanes at that batch.
+//!   Consumed by the serve scheduler, never by the engine dispatch path.
 //!
 //! Spec grammar (comma-separated entries):
 //! * `site@EPOCH:SEQ` — one failure at that address.
@@ -44,6 +53,8 @@ pub enum FaultSite {
     Dispatch,
     Producer,
     Lane,
+    /// Persistent lane failure (`lane!`): serve-path quarantine trigger.
+    LaneHard,
 }
 
 impl FaultSite {
@@ -52,6 +63,7 @@ impl FaultSite {
             FaultSite::Dispatch => "dispatch",
             FaultSite::Producer => "producer",
             FaultSite::Lane => "lane",
+            FaultSite::LaneHard => "lane!",
         }
     }
 
@@ -60,6 +72,7 @@ impl FaultSite {
             FaultSite::Dispatch => 0xD15B,
             FaultSite::Producer => 0xB0D0,
             FaultSite::Lane => 0x1A9E,
+            FaultSite::LaneHard => 0x1AFE,
         }
     }
 
@@ -68,8 +81,9 @@ impl FaultSite {
             "dispatch" => Ok(FaultSite::Dispatch),
             "producer" => Ok(FaultSite::Producer),
             "lane" => Ok(FaultSite::Lane),
+            "lane!" => Ok(FaultSite::LaneHard),
             other => bail!(
-                "unknown fault site {other:?} (expected dispatch, producer, or lane)"
+                "unknown fault site {other:?} (expected dispatch, producer, lane, or lane!)"
             ),
         }
     }
@@ -238,6 +252,23 @@ mod tests {
         assert!(hits(&a)
             .iter()
             .all(|&(e, s)| a.fires(FaultSite::Producer, e, s) == 0));
+    }
+
+    #[test]
+    fn lane_hard_parses_distinctly_from_lane() {
+        let p = FaultPlan::parse("lane!@0:2x2,lane@0:2", 0).unwrap();
+        assert_eq!(p.fires(FaultSite::LaneHard, 0, 2), 2);
+        assert_eq!(p.fires(FaultSite::Lane, 0, 2), 1);
+        assert_eq!(p.planned(FaultSite::LaneHard), 2);
+        assert!(p.has_site(FaultSite::LaneHard));
+        let q = FaultPlan::parse("lane@0:2", 0).unwrap();
+        assert!(!q.has_site(FaultSite::LaneHard), "lane must not imply lane!");
+        // The sprinkle form works for lane! too, and stays site-disjoint.
+        let r = FaultPlan::parse("lane!~4", 9).unwrap();
+        let hard: Vec<u64> =
+            (0..64).filter(|&s| r.fires(FaultSite::LaneHard, 0, s) > 0).collect();
+        assert!(!hard.is_empty(), "period 4 over 64 addresses should fire");
+        assert!(hard.iter().all(|&s| r.fires(FaultSite::Lane, 0, s) == 0));
     }
 
     #[test]

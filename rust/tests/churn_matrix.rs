@@ -1,0 +1,446 @@
+//! Churn matrix (DESIGN.md §10): the serving analog of `fault_matrix.rs`.
+//! Serving churn — hot model refresh, lane quarantine with re-admission,
+//! closed-loop clients — is *metrology*, never semantics. Across the grid
+//! {refresh, quarantine, closed-loop} × replicas {1, 2} × pipeline on/off
+//! × cache-frac {0, 0.25}:
+//!
+//! * per-request predictions are bitwise identical to the quiescent run
+//!   (same trace, no churn) — quarantine re-dispatch preserves global
+//!   batch order, refresh boundaries are global-batch-indexed, and a
+//!   same-bits refresh is a no-op;
+//! * churn counters account for exactly the injected events: one `lane!`
+//!   firing is one quarantine, one re-dispatch, `probation` shadow
+//!   batches, one re-admission;
+//! * refresh failure is atomic: a truncated / bit-flipped / garbage
+//!   checkpoint leaves the old parameters serving bitwise-identically and
+//!   lands in `failed_refreshes`;
+//! * dispatch-fault retry accounting is churn-invariant (shadow batches
+//!   never arm the fault cursor);
+//! * all lanes quarantined at once is the typed [`NoHealthyLanes`] error;
+//! * the zero-allocation steady state survives churn.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, ChurnStats, NoHealthyLanes, OptConfig,
+    ReplicaGroup, TrainCfg, DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::models::{checkpoint, ModelKind, Params};
+use hifuse::runtime::{ExecBackend, ResidentStore, SimBackend};
+use hifuse::serving::{self, ServeOptions, ServeOutcome, Trace};
+use hifuse::util::FaultPlan;
+
+const WINDOW: u64 = 2_000;
+
+fn cfg() -> TrainCfg {
+    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4, producers: 2 }
+}
+
+/// Open-loop burst: 24 requests of 1..=3 seeds — a dozen-odd coalesced
+/// batches, enough to put churn events mid-trace with quiet batches on
+/// both sides.
+fn test_trace() -> Trace {
+    serving::trace::generate(&tiny_graph(1), 42, 1000.0, 24, 3)
+}
+
+fn plan(spec: &str) -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse(spec, 0).unwrap())
+}
+
+fn group_for(
+    g: &hifuse::graph::HeteroGraph,
+    replicas: usize,
+    pipeline: bool,
+    frac: f64,
+    spec: Option<&str>,
+) -> ReplicaGroup<'_, SimBackend> {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let t = replica_thread_budget(4, replicas);
+    let engines: Vec<SimBackend> =
+        (0..replicas).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect();
+    let mut grp =
+        ReplicaGroup::new(engines, g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    if frac > 0.0 {
+        grp.attach_cache(Arc::new(ResidentStore::build(g, frac, 160, 42))).unwrap();
+    }
+    if let Some(s) = spec {
+        grp.set_fault_plan(plan(s));
+    }
+    grp
+}
+
+/// One serve pass; returns the outcome plus the summed engine dispatch
+/// retries (churn must not perturb them).
+fn serve_once(
+    trace: &Trace,
+    replicas: usize,
+    pipeline: bool,
+    frac: f64,
+    spec: Option<&str>,
+    opts: &ServeOptions,
+) -> (ServeOutcome, u64) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp = group_for(&g, replicas, pipeline, frac, spec);
+    let out = serving::serve_churn(&mut grp, trace, cfg().batch_size, WINDOW, opts).unwrap();
+    let retries: u64 =
+        grp.engines().iter().map(|e| e.counters().borrow().dispatch_retries).sum();
+    (out, retries)
+}
+
+fn quiescent() -> ServeOptions {
+    ServeOptions::quiescent()
+}
+
+/// A scratch checkpoint path unique to this test binary + name.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hifuse_churn_{}_{}.ckpt", std::process::id(), name))
+}
+
+/// A parameter set provably different from the serving group's (same
+/// profile dims, different init stream).
+fn other_params() -> Params {
+    let d = dims();
+    Params::init(d.0, d.1, d.2, d.3, 0xA1FA)
+}
+
+/// (rpad, f, h, c) of the tiny profile, read off a probe group.
+fn dims() -> (usize, usize, usize, usize) {
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &OptConfig::hifuse());
+    let grp = group_for(&g, 1, false, 0.0, None);
+    let d = grp.dims();
+    (d.rpad, d.f, d.h, d.c)
+}
+
+// ----------------------------------------------------------- quarantine --
+
+/// The headline contract, quarantine edition: a `lane!` firing mid-trace
+/// moves work, not bits. Predictions match the quiescent run across the
+/// whole grid and the counters account for exactly one quarantine cycle.
+#[test]
+fn quarantine_keeps_predictions_bitwise_quiescent() {
+    let trace = test_trace();
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    assert!(reference.churn.is_quiet());
+    for pipeline in [false, true] {
+        for frac in [0.0f64, 0.25] {
+            let (out, _) =
+                serve_once(&trace, 2, pipeline, frac, Some("lane!@0:1"), &quiescent());
+            assert_eq!(
+                out.predictions, reference.predictions,
+                "pipeline={pipeline} frac={frac}: quarantined serve diverged"
+            );
+            assert_eq!(out.batches, reference.batches);
+            assert_eq!(
+                out.churn,
+                ChurnStats {
+                    lane_quarantines: 1,
+                    lane_readmissions: 1,
+                    shadow_batches: 2, // DEFAULT_PROBATION
+                    lane_redispatches: 1,
+                    refreshes: 0,
+                    failed_refreshes: 0,
+                },
+                "pipeline={pipeline} frac={frac}: counter accounting"
+            );
+        }
+    }
+}
+
+/// A longer probation stretches the shadow phase and delays re-admission
+/// by exactly the configured count — nothing else moves.
+#[test]
+fn probation_length_is_respected_exactly() {
+    let trace = test_trace();
+    let (reference, _) = serve_once(&trace, 2, false, 0.0, None, &quiescent());
+    let opts = ServeOptions { probation: 4, ..ServeOptions::quiescent() };
+    let (out, _) = serve_once(&trace, 2, false, 0.0, Some("lane!@0:1"), &opts);
+    assert_eq!(out.predictions, reference.predictions, "probation=4: predictions diverged");
+    assert_eq!(out.churn.shadow_batches, 4);
+    assert_eq!(out.churn.lane_readmissions, 1);
+}
+
+/// Dispatch-fault retry accounting is churn-invariant: a batch that
+/// re-dispatches to another lane carries its dispatch fault with it (the
+/// address is the global batch index), and shadow batches never arm the
+/// cursor — so total retries match the quarantine-free run exactly.
+#[test]
+fn dispatch_fault_accounting_is_churn_invariant() {
+    let trace = test_trace();
+    let spec_dispatch = "dispatch@0:1x2,dispatch@0:2";
+    let (base, base_retries) = serve_once(&trace, 2, true, 0.0, Some(spec_dispatch), &quiescent());
+    assert_eq!(base_retries, 3, "two faults at seq 1, one at seq 2");
+    let spec_both = "dispatch@0:1x2,dispatch@0:2,lane!@0:1";
+    let (out, retries) = serve_once(&trace, 2, true, 0.0, Some(spec_both), &quiescent());
+    assert_eq!(out.predictions, base.predictions, "churned serve diverged");
+    assert_eq!(retries, base_retries, "quarantine perturbed dispatch retry accounting");
+    assert_eq!(out.churn.lane_quarantines, 1);
+}
+
+/// Every lane quarantined at once is the typed error, not a hang or a
+/// generic failure.
+#[test]
+fn all_lanes_quarantined_is_a_typed_error() {
+    let trace = test_trace();
+    for (replicas, spec) in [(2usize, "lane!@0:0x2"), (1, "lane!@0:0")] {
+        let opt = OptConfig::hifuse();
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp = group_for(&g, replicas, false, 0.0, Some(spec));
+        let err = serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &quiescent())
+            .unwrap_err();
+        let no = err.downcast_ref::<NoHealthyLanes>().unwrap_or_else(|| {
+            panic!("replicas={replicas}: expected NoHealthyLanes, got {err:#}")
+        });
+        assert_eq!(*no, NoHealthyLanes { batch: 0, lanes: replicas });
+    }
+}
+
+// -------------------------------------------------------------- refresh --
+
+/// Refreshing with a bitwise-identical checkpoint is invisible: the swap
+/// machinery runs (counted) but every prediction matches the quiescent
+/// run on every grid cell.
+#[test]
+fn same_bits_refresh_is_invisible() {
+    let trace = test_trace();
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    // The group's initial params are Params::init(seed) — write exactly
+    // those to the refresh checkpoint.
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &OptConfig::hifuse());
+    let grp = group_for(&g, 1, false, 0.0, None);
+    let path = tmp("same_bits");
+    checkpoint::save(&grp.params, &path).unwrap();
+    drop(grp);
+    let mid = reference.batches[reference.batches.len() / 2].close_tick;
+    let opts =
+        ServeOptions { refreshes: vec![(mid, path.clone())], ..ServeOptions::quiescent() };
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25] {
+                let (out, _) = serve_once(&trace, replicas, pipeline, frac, None, &opts);
+                assert_eq!(
+                    out.predictions, reference.predictions,
+                    "replicas={replicas} pipeline={pipeline} frac={frac}: \
+                     same-bits refresh changed predictions"
+                );
+                assert_eq!(out.churn.refreshes, 1);
+                assert_eq!(out.churn.failed_refreshes, 0);
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A real refresh applies at its global batch boundary, identically on
+/// every grid cell: requests coalesced before the boundary serve the old
+/// model, requests at or after it serve the new one — bitwise equal to
+/// the runs that used each model exclusively.
+#[test]
+fn refresh_applies_at_the_batch_boundary_for_any_schedule() {
+    let trace = test_trace();
+    let (old, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    let path = tmp("new_model");
+    checkpoint::save(&other_params(), &path).unwrap();
+    // Refresh from tick 0: every batch serves the new model.
+    let all_opts =
+        ServeOptions { refreshes: vec![(0, path.clone())], ..ServeOptions::quiescent() };
+    let (new, _) = serve_once(&trace, 1, false, 0.0, None, &all_opts);
+    assert_ne!(
+        new.predictions, old.predictions,
+        "a different parameter set must (generically) change predictions"
+    );
+    // Boundary = close tick of the middle batch.
+    let mid = old.batches.len() / 2;
+    let boundary = old.batches[mid].close_tick;
+    let opts =
+        ServeOptions { refreshes: vec![(boundary, path.clone())], ..ServeOptions::quiescent() };
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &opts);
+    // Each request takes old/new according to its batch's position.
+    for (bi, b) in old.batches.iter().enumerate() {
+        let want = if b.close_tick < boundary { &old } else { &new };
+        for m in &b.members {
+            assert_eq!(
+                reference.predictions[m.req], want.predictions[m.req],
+                "batch {bi} request {}: wrong side of the refresh boundary",
+                m.req
+            );
+        }
+    }
+    assert!(old.batches[mid].close_tick >= boundary && mid > 0, "boundary must split the trace");
+    // And the split run itself is schedule-invariant across the grid.
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25] {
+                let (out, _) = serve_once(&trace, replicas, pipeline, frac, None, &opts);
+                assert_eq!(
+                    out.predictions, reference.predictions,
+                    "replicas={replicas} pipeline={pipeline} frac={frac}: \
+                     refreshed serve diverged"
+                );
+                assert_eq!(out.churn.refreshes, 1);
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Refresh + quarantine in one trace: the composed churn still serves
+/// bitwise-identically to the refresh-only run, and both counter families
+/// account independently.
+#[test]
+fn refresh_and_quarantine_compose() {
+    let trace = test_trace();
+    let path = tmp("compose");
+    checkpoint::save(&other_params(), &path).unwrap();
+    let (old, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    let boundary = old.batches[old.batches.len() / 2].close_tick;
+    let opts =
+        ServeOptions { refreshes: vec![(boundary, path.clone())], ..ServeOptions::quiescent() };
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &opts);
+    let (out, _) = serve_once(&trace, 2, true, 0.25, Some("lane!@0:1"), &opts);
+    assert_eq!(out.predictions, reference.predictions, "composed churn diverged");
+    assert_eq!(out.churn.refreshes, 1);
+    assert_eq!(out.churn.lane_quarantines, 1);
+    assert_eq!(out.churn.lane_readmissions, 1);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Hot-swap failure atomicity: corrupt refresh checkpoints — truncated,
+/// bit-flipped payload (CRC mismatch), garbage magic, wrong-shape params —
+/// leave the old parameters serving bitwise-identically, with each
+/// failure counted and none fatal.
+#[test]
+fn refresh_failure_is_atomic_and_counted() {
+    let trace = test_trace();
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    let good = tmp("atomic_good");
+    checkpoint::save(&other_params(), &good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // Truncated mid-tensor.
+    let truncated = tmp("atomic_trunc");
+    std::fs::write(&truncated, &bytes[..bytes.len() / 2]).unwrap();
+    // One payload bit flipped: decodes structurally but fails the CRC.
+    let flipped = tmp("atomic_flip");
+    let mut fb = bytes.clone();
+    let mid = fb.len() / 2;
+    fb[mid] ^= 0x40;
+    std::fs::write(&flipped, &fb).unwrap();
+    // Garbage magic.
+    let garbage = tmp("atomic_garbage");
+    std::fs::write(&garbage, b"not a checkpoint at all").unwrap();
+    // Wrong dims: a structurally valid checkpoint for a different profile.
+    let wrong_shape = tmp("atomic_shape");
+    let (rpad, f, h, c) = dims();
+    checkpoint::save(&Params::init(rpad + 8, f, h, c, 1), &wrong_shape).unwrap();
+
+    let boundary = reference.batches[reference.batches.len() / 2].close_tick;
+    let corrupt = [&truncated, &flipped, &garbage, &wrong_shape];
+    for path in corrupt {
+        let opts = ServeOptions {
+            refreshes: vec![(boundary, path.clone())],
+            ..ServeOptions::quiescent()
+        };
+        let (out, _) = serve_once(&trace, 2, true, 0.0, None, &opts);
+        assert_eq!(
+            out.predictions, reference.predictions,
+            "{path:?}: a failed refresh must leave the old params serving"
+        );
+        assert_eq!(out.churn.refreshes, 0, "{path:?}: failed refresh counted as applied");
+        assert_eq!(out.churn.failed_refreshes, 1, "{path:?}: failure not counted");
+    }
+    // All four at once: still never fatal, still bitwise old-model.
+    let opts = ServeOptions {
+        refreshes: corrupt.iter().map(|p| (boundary, (*p).clone())).collect(),
+        ..ServeOptions::quiescent()
+    };
+    let (out, _) = serve_once(&trace, 1, false, 0.0, None, &opts);
+    assert_eq!(out.predictions, reference.predictions);
+    assert_eq!(out.churn.failed_refreshes, 4);
+
+    for p in [&good, &truncated, &flipped, &garbage, &wrong_shape] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ---------------------------------------------------------- closed loop --
+
+/// Closed-loop serving is as deterministic as open-loop: the generated
+/// schedule is a pure function of (seed, clients), and serving it is
+/// parallelism-invariant across the grid.
+#[test]
+fn closed_loop_serve_is_parallelism_invariant() {
+    let g = tiny_graph(1);
+    let trace = serving::trace::generate_closed_loop(&g, 42, 4, 24, 3);
+    assert_eq!(trace, serving::trace::generate_closed_loop(&g, 42, 4, 24, 3));
+    let (reference, _) = serve_once(&trace, 1, false, 0.0, None, &quiescent());
+    assert_eq!(reference.hist.count(), trace.requests.len() as u64);
+    for replicas in [1usize, 2] {
+        for pipeline in [false, true] {
+            for frac in [0.0f64, 0.25] {
+                let (out, _) = serve_once(&trace, replicas, pipeline, frac, None, &quiescent());
+                assert_eq!(
+                    out.predictions, reference.predictions,
+                    "replicas={replicas} pipeline={pipeline} frac={frac}: \
+                     closed-loop serve diverged"
+                );
+                assert_eq!(out.batches, reference.batches);
+            }
+        }
+    }
+}
+
+/// Closed-loop + churn: quarantine under a closed-loop schedule still
+/// matches the quiescent closed-loop run bit for bit.
+#[test]
+fn closed_loop_survives_quarantine() {
+    let g = tiny_graph(1);
+    let trace = serving::trace::generate_closed_loop(&g, 42, 4, 24, 3);
+    let (reference, _) = serve_once(&trace, 2, true, 0.0, None, &quiescent());
+    let (out, _) = serve_once(&trace, 2, true, 0.0, Some("lane!@0:1"), &quiescent());
+    assert_eq!(out.predictions, reference.predictions, "closed-loop quarantine diverged");
+    assert_eq!(out.churn.lane_quarantines, 1);
+}
+
+// ------------------------------------------------------------ zero alloc --
+
+/// The zero-allocation steady state survives churn: with a quarantine
+/// cycle and a hot refresh in *every* pass, post-warm-up serves still
+/// miss the arena zero times and construct/grow zero producer buffers.
+#[test]
+fn churn_steady_state_allocates_nothing() {
+    let path = tmp("steady");
+    checkpoint::save(&other_params(), &path).unwrap();
+    for pipeline in [false, true] {
+        let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+        let mut g = tiny_graph(1);
+        prepare_graph_layout(&mut g, &opt);
+        let mut grp = group_for(&g, 2, pipeline, 0.25, Some("lane!@0:1"));
+        let trace = test_trace();
+        let opts =
+            ServeOptions { refreshes: vec![(1_000, path.clone())], ..ServeOptions::quiescent() };
+        let snapshot = |grp: &ReplicaGroup<'_, SimBackend>| -> (u64, u64, u64, u64) {
+            let arena: u64 =
+                grp.engines().iter().map(|e| e.counters().borrow().arena.misses).sum();
+            let p = grp.producer_stats();
+            (arena, p.fresh, p.grown, p.reused)
+        };
+        serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &opts).unwrap();
+        let warm = snapshot(&grp);
+        let out = serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &opts).unwrap();
+        let steady = snapshot(&grp);
+        assert_eq!(out.churn.lane_quarantines, 1, "churn must actually run in steady state");
+        assert_eq!(out.churn.refreshes, 1);
+        assert_eq!(steady.0, warm.0, "pipeline {pipeline}: churned serve missed the arena");
+        assert_eq!(steady.1, warm.1, "pipeline {pipeline}: churned serve built a buffer set");
+        assert_eq!(steady.2, warm.2, "pipeline {pipeline}: churned serve grew a pooled buffer");
+        assert!(steady.3 > warm.3, "pipeline {pipeline}: churned serve never reused the pool");
+    }
+    std::fs::remove_file(&path).ok();
+}

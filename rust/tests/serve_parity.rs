@@ -169,7 +169,8 @@ fn histogram_is_well_formed() {
     }
     assert!(seen.iter().all(|&c| c == 1), "coalescing lost or duplicated a request");
     for (r, p) in trace.requests.iter().zip(&out.predictions) {
-        assert_eq!(p.shape()[0], r.seeds.len(), "prediction rows != request seeds");
+        let t = p.served().expect("unbounded serve sheds nothing");
+        assert_eq!(t.shape()[0], r.seeds.len(), "prediction rows != request seeds");
     }
 }
 
@@ -189,9 +190,11 @@ fn duplicate_seeds_share_one_slot_row() {
     };
     let out = serve_once(&trace, 1, false, 0.0);
     assert_eq!(out.batches.len(), 1, "both requests fit one window and batch");
-    let a = out.predictions[0].as_f32().unwrap();
-    let b = out.predictions[1].as_f32().unwrap();
-    let c = out.predictions[1].shape()[1];
+    let ta = out.predictions[0].served().unwrap();
+    let tb = out.predictions[1].served().unwrap();
+    let a = ta.as_f32().unwrap();
+    let b = tb.as_f32().unwrap();
+    let c = tb.shape()[1];
     assert_eq!(&a[..c], b, "the shared vertex must produce identical rows");
     assert_ne!(&a[c..], b, "distinct vertices should (generically) differ");
 }
