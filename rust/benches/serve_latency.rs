@@ -1,15 +1,22 @@
-//! Serve latency sweep (`make bench-serve`): open-loop arrival rate vs
-//! latency percentiles + throughput for `repro serve` on RGCN/aifb with
-//! the full HiFuse plan over 2 replica lanes, written to
+//! Serve latency sweep (`make bench-serve`): offered load vs latency
+//! percentiles + throughput for `repro serve` on RGCN/aifb with the full
+//! HiFuse plan over 2 replica lanes, written to
 //! `results/serve_latency.{md,csv}`.
+//!
+//! One table, two load families, keyed by the leading `load` column:
+//! `open@RATE` rows sweep an open-loop Poisson arrival rate (req/s of
+//! virtual time); `closed@N` rows sweep N closed-loop virtual clients,
+//! each re-issuing only after its previous response completes — the
+//! tail-latency-vs-concurrency view the open-loop sweep cannot show
+//! (ROADMAP serving item (b), DESIGN.md §10).
 //!
 //! Latency lives on the virtual clock (1 tick = 1 µs): each batch's
 //! measured service time is replayed onto the arrival schedule, so the
-//! sweep shows the coalescing/queueing trade-off — low rates pay the
-//! coalescing window, high rates pay lane queueing — while predictions
-//! stay bitwise rate-independent (DESIGN.md §8).
+//! sweep shows the coalescing/queueing trade-off — low load pays the
+//! coalescing window, high load pays lane queueing — while predictions
+//! stay bitwise load-independent (DESIGN.md §8).
 //!
-//! HIFUSE_BENCH_QUICK=1 shrinks the dataset and the request count.
+//! HIFUSE_BENCH_QUICK=1 shrinks the dataset, request count, and sweep.
 
 use std::time::Duration;
 
@@ -20,6 +27,22 @@ use hifuse::models::ModelKind;
 use hifuse::report::{f2, write_csv, write_md_table};
 use hifuse::runtime::{ExecBackend, SimBackend};
 use hifuse::serving;
+
+/// One point of the sweep: an open-loop arrival rate or a closed-loop
+/// client count.
+enum Load {
+    Open(f64),
+    Closed(usize),
+}
+
+impl Load {
+    fn label(&self) -> String {
+        match self {
+            Load::Open(rate) => format!("open@{rate}"),
+            Load::Closed(clients) => format!("closed@{clients}"),
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("HIFUSE_BENCH_QUICK").is_ok();
@@ -38,10 +61,16 @@ fn main() -> anyhow::Result<()> {
     let requests = if quick { 64 } else { 512 };
     let window = 1_000u64; // 1 ms coalescing window
 
+    let mut points: Vec<Load> =
+        [250.0f64, 1000.0, 4000.0, 16000.0].into_iter().map(Load::Open).collect();
+    let clients: &[usize] = if quick { &[4, 16] } else { &[4, 16, 64, 256] };
+    points.extend(clients.iter().map(|&c| Load::Closed(c)));
+
     let mut rows = Vec::new();
-    for rate in [250.0f64, 1000.0, 4000.0, 16000.0] {
-        eprintln!("[serve-latency] rate {rate} req/s ...");
-        // Fresh lanes per point: independent arenas/counters per rate.
+    for point in &points {
+        let label = point.label();
+        eprintln!("[serve-latency] {label} ...");
+        // Fresh lanes per point: independent arenas/counters per load.
         let probe = SimBackend::builtin("bench")?;
         let d = Dims::from_backend(&probe);
         let mut g = generate(&spec, d.f, scale, cfg.seed);
@@ -56,7 +85,12 @@ fn main() -> anyhow::Result<()> {
             cfg,
             DEFAULT_ROUND,
         )?;
-        let trace = serving::trace::generate(&g, cfg.seed, rate, requests, 4);
+        let trace = match point {
+            Load::Open(rate) => serving::trace::generate(&g, cfg.seed, *rate, requests, 4),
+            Load::Closed(clients) => {
+                serving::trace::generate_closed_loop(&g, cfg.seed, *clients, requests, 4)
+            }
+        };
         let out = serving::serve(&mut group, &trace, cfg.batch_size, window)?;
         let mut h2d = 0u64;
         for e in group.engines() {
@@ -64,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         }
         let h = &out.hist;
         rows.push(vec![
-            format!("{rate}"),
+            label,
             out.batches.len().to_string(),
             format!("{:.3}", h.percentile(50.0) as f64 / 1e3),
             format!("{:.3}", h.percentile(95.0) as f64 / 1e3),
@@ -76,14 +110,15 @@ fn main() -> anyhow::Result<()> {
     }
     write_md_table(
         "serve_latency.md",
-        "Serve latency — open-loop rate sweep (RGCN/aifb, hifuse, 2 lanes, 1 ms window)",
-        &["rate req/s", "batches", "p50 ms", "p95 ms", "p99 ms", "throughput req/s",
+        "Serve latency — open-loop rate + closed-loop client sweep \
+         (RGCN/aifb, hifuse, 2 lanes, 1 ms window)",
+        &["load", "batches", "p50 ms", "p95 ms", "p99 ms", "throughput req/s",
           "mean queue", "h2d MiB"],
         &rows,
     )?;
     write_csv(
         "serve_latency.csv",
-        &["rate", "batches", "p50_ms", "p95_ms", "p99_ms", "throughput_rps",
+        &["load", "batches", "p50_ms", "p95_ms", "p99_ms", "throughput_rps",
           "mean_queue_depth", "h2d_mib"],
         &rows,
     )?;

@@ -91,8 +91,9 @@ pub struct RunConfig {
     pub save_ckpt: Option<PathBuf>,
     /// Deterministic fault-injection schedule (`--fault-spec`, DESIGN.md
     /// §9): comma-separated `site@EPOCH:SEQ[xN]` / `site~PERIOD` entries
-    /// over the sites `dispatch`, `producer`, `lane`. `None` (default) =
-    /// the fault plane is off and zero-cost.
+    /// over the crash sites `dispatch`, `producer`, `lane`, `lane!` and
+    /// the corruption sites `flip!`, `nan!`, `wire!` (DESIGN.md §11).
+    /// `None` (default) = the fault plane is off and zero-cost.
     pub fault_spec: Option<String>,
     /// Seed steering `site~PERIOD` sprinkle rules in `--fault-spec`; inert
     /// without one.
@@ -114,6 +115,17 @@ pub struct RunConfig {
     /// Serve: shadow batches a quarantined lane must complete before
     /// re-admission (`--probation`, DESIGN.md §10).
     pub probation: usize,
+    /// Per-batch numeric guard rails (`--guard`, DESIGN.md §11): verify
+    /// staged features against their digest before the step and require
+    /// a finite loss + gradient after it; a violation enters the
+    /// recompute-or-rollback ladder. Bare flag — an optional
+    /// `0|1|true|false` value is also accepted. Off (default) = zero
+    /// extra dispatches and a bitwise-unchanged trajectory.
+    pub guard: bool,
+    /// Audit the parameter state (plus cache slab and replica lane
+    /// overrides) every N batches (`--audit-every N`, train only;
+    /// DESIGN.md §11). `0` (default) = no audits.
+    pub audit_every: u64,
 }
 
 impl Default for RunConfig {
@@ -144,6 +156,8 @@ impl Default for RunConfig {
             refresh_at: Vec::new(),
             closed_loop: None,
             probation: DEFAULT_PROBATION,
+            guard: false,
+            audit_every: 0,
         }
     }
 }
@@ -174,13 +188,29 @@ impl RunConfig {
     /// Parse `--key value` style flags.
     pub fn from_args(args: &[String]) -> Result<RunConfig> {
         let mut kv = HashMap::new();
-        let mut it = args.iter();
+        let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
             let key = a
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got {a:?}"))?;
-            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
-            kv.insert(key.to_string(), val.clone());
+            // `--guard` is a bare flag: consume a value only when the
+            // next token is an explicit boolean, so `--guard --epochs 3`
+            // does not swallow `--epochs`.
+            let val = if key == "guard" {
+                match it.peek().map(|s| s.as_str()) {
+                    Some(v @ ("0" | "1" | "true" | "false")) => {
+                        let v = v.to_string();
+                        it.next();
+                        v
+                    }
+                    _ => "true".to_string(),
+                }
+            } else {
+                it.next()
+                    .with_context(|| format!("--{key} needs a value"))?
+                    .clone()
+            };
+            kv.insert(key.to_string(), val);
         }
         let mut cfg = RunConfig::default();
         for (k, v) in kv {
@@ -283,6 +313,21 @@ impl RunConfig {
                     }
                     cfg.probation = n;
                 }
+                "guard" => {
+                    // The flag loop normalised a bare `--guard` to "true".
+                    cfg.guard = match v.as_str() {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        other => bail!("--guard takes no value (or 0|1|true|false), got {other:?}"),
+                    };
+                }
+                "audit-every" => {
+                    let n: u64 = v.parse().context("--audit-every")?;
+                    if n == 0 {
+                        bail!("--audit-every must be >= 1 (omit the flag to disable audits)");
+                    }
+                    cfg.audit_every = n;
+                }
                 other => bail!("unknown flag --{other}"),
             }
         }
@@ -298,6 +343,19 @@ impl RunConfig {
             bail!(
                 "--closed-loop and --replay-trace conflict: a replayed schedule \
                  already fixes every arrival tick (pick one)"
+            );
+        }
+        if (cfg.guard || cfg.audit_every > 0) && cfg.backend == BackendKind::Pjrt {
+            bail!(
+                "--guard/--audit-every need the sim backend: the integrity plane \
+                 instruments the host-staged step (DESIGN.md §11)"
+            );
+        }
+        if (cfg.guard || cfg.audit_every > 0) && cfg.opt.dev_resident {
+            bail!(
+                "--guard/--audit-every need the host-staged step: the fused device \
+                 SGD cannot split the gradient check from the parameter apply \
+                 (pick a non-resident --mode)"
             );
         }
         Ok(cfg)
@@ -519,6 +577,43 @@ mod tests {
         assert_eq!(c.probation, 5);
         assert!(RunConfig::from_args(&argv("--probation 0")).is_err());
         assert!(RunConfig::from_args(&argv("--probation x")).is_err());
+    }
+
+    #[test]
+    fn guard_and_audit_flags_parse() {
+        let c = RunConfig::from_args(&[]).unwrap();
+        assert!(!c.guard);
+        assert_eq!(c.audit_every, 0);
+        // Bare flag, with and without trailing flags to swallow.
+        let c = RunConfig::from_args(&argv("--guard")).unwrap();
+        assert!(c.guard);
+        let c = RunConfig::from_args(&argv("--guard --epochs 3 --audit-every 4")).unwrap();
+        assert!(c.guard);
+        assert_eq!(c.train.epochs, 3);
+        assert_eq!(c.audit_every, 4);
+        // Explicit boolean values are consumed.
+        let c = RunConfig::from_args(&argv("--guard 0 --epochs 2")).unwrap();
+        assert!(!c.guard);
+        assert_eq!(c.train.epochs, 2);
+        let c = RunConfig::from_args(&argv("--guard true")).unwrap();
+        assert!(c.guard);
+        assert!(RunConfig::from_args(&argv("--audit-every 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--audit-every x")).is_err());
+        // The integrity plane is sim-only and host-staged-only.
+        assert!(RunConfig::from_args(&argv("--guard --backend pjrt")).is_err());
+        assert!(RunConfig::from_args(&argv("--audit-every 2 --backend pjrt")).is_err());
+        assert!(RunConfig::from_args(&argv("--guard --mode resident")).is_err());
+    }
+
+    #[test]
+    fn corruption_sites_parse_in_fault_spec() {
+        let c = RunConfig::from_args(&argv("--fault-spec flip!@0:2,nan!~5,wire!@1:0x2"))
+            .unwrap();
+        let plan = c.fault_plan().unwrap().expect("spec => plan");
+        assert_eq!(plan.fires(crate::util::FaultSite::Flip, 0, 2), 1);
+        assert_eq!(plan.fires(crate::util::FaultSite::Wire, 1, 0), 2);
+        assert!(plan.has_integrity_site());
+        assert!(RunConfig::from_args(&argv("--fault-spec flip@0:0")).is_err());
     }
 
     #[test]

@@ -20,10 +20,11 @@ pub use replica::{
     ServeDrive, DEFAULT_PROBATION, DEFAULT_ROUND,
 };
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::graph::{HeteroGraph, Layout};
 use crate::models::step::{
@@ -40,7 +41,7 @@ use crate::sampler::{
     MiniBatch, NeighborSampler, RelEdges, SamplerCfg, SamplerScratch, TaggedEdges,
 };
 use crate::semantic;
-use crate::util::{FaultPlan, HostTensor, Rng, WorkerPool};
+use crate::util::{fnv1a_f32, FaultPlan, FaultSite, HostTensor, Rng, WorkerPool};
 
 /// Training-run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -173,6 +174,23 @@ pub struct EpochMetrics {
     /// Replica lanes lost mid-epoch whose remaining slots the surviving
     /// lanes absorbed (counted once per lost lane, on the group metrics).
     pub lane_failovers: u64,
+    /// Data-integrity violations detected this epoch (DESIGN.md §11):
+    /// guard-caught corrupt feature payloads or non-finite loss/gradients,
+    /// audit-caught non-finite parameters or corrupt cache slabs, and
+    /// guarded-upload retransmits. 0 on every fault-free run.
+    pub integrity_violations: u64,
+    /// Corrupted H2D/p2p payloads the guarded upload path dropped and
+    /// re-sent clean (the `wire!` site's recovery; always ≤ violations).
+    pub integrity_retransmits: u64,
+    /// Batches recomputed from their `(epoch_perm, seq)` address after a
+    /// pre-apply integrity violation (first rung of the recovery ladder).
+    pub integrity_recomputes: u64,
+    /// Rollbacks to the last-good parameter snapshot followed by a bitwise
+    /// replay forward (second rung; post-apply corruption only).
+    pub integrity_rollbacks: u64,
+    /// Digest/finiteness audit points executed (`--audit-every`, plus the
+    /// mandatory epoch-end audit of every audited epoch).
+    pub audits: u64,
 }
 
 impl EpochMetrics {
@@ -194,6 +212,8 @@ impl EpochMetrics {
         self.time_by_stage = c.time_by_stage();
         self.arena = c.arena;
         self.dispatch_retries = c.dispatch_retries;
+        self.integrity_violations = c.integrity_violations;
+        self.integrity_retransmits = c.integrity_retransmits;
     }
 
     /// Fraction of batch-slot feature reads served by the resident cache
@@ -235,6 +255,11 @@ impl EpochMetrics {
         self.dispatch_retries += other.dispatch_retries;
         self.producer_recoveries += other.producer_recoveries;
         self.lane_failovers += other.lane_failovers;
+        self.integrity_violations += other.integrity_violations;
+        self.integrity_retransmits += other.integrity_retransmits;
+        self.integrity_recomputes += other.integrity_recomputes;
+        self.integrity_rollbacks += other.integrity_rollbacks;
+        self.audits += other.audits;
     }
 }
 
@@ -918,6 +943,17 @@ pub(crate) struct DevState<B: ExecBackend> {
     pub(crate) schema: DevSchema<B>,
 }
 
+/// Outcome of one integrity-checked batch attempt (DESIGN.md §11). Both
+/// arms hand the batch's buffers back so the circulating population stays
+/// fixed across recomputes. `Violation` means the guard refused to apply —
+/// the parameters are untouched, so a recompute from the same
+/// `(epoch_perm, seq)` address (with the injection budget now consumed)
+/// reproduces the fault-free step bitwise.
+pub(crate) enum Attempt {
+    Clean { loss: f32, ncorrect: f32, n_seed: usize, bufs: BatchBufs },
+    Violation(BatchBufs),
+}
+
 pub struct Trainer<'g, 'e, B: ExecBackend> {
     pub eng: &'e B,
     pub graph: &'g HeteroGraph,
@@ -946,6 +982,31 @@ pub struct Trainer<'g, 'e, B: ExecBackend> {
     /// Deterministic fault-injection plan (DESIGN.md §9); `None` (default)
     /// keeps every probe site a single `Option` check.
     pub(crate) fault: Option<Arc<FaultPlan>>,
+    /// Per-batch numeric guard (`--guard`, DESIGN.md §11): checksum the
+    /// feature payload across injection, scan loss/gradients for
+    /// non-finites *before* the SGD apply. Guarded-but-clean runs are
+    /// bitwise identical to unguarded ones (same dispatches, same bits).
+    guard: bool,
+    /// Parameter/cache audit cadence in batches (`--audit-every`); 0 = off.
+    /// Every audited epoch also audits at its final batch, so the snapshot
+    /// carried into the next epoch is always verified-good.
+    audit_every: u64,
+    /// Injection attempts already made per integrity-site address
+    /// `(site, epoch, seq)`: a plan multiplicity of `N` corrupts the first
+    /// `N` attempts at that address, so a recompute or rollback replay
+    /// re-derives *clean* data once the budget is spent — the property that
+    /// makes recovery converge. Cleared each integrity epoch (replays never
+    /// cross an epoch); stays unallocated on fault-free runs.
+    consumed: HashMap<(FaultSite, u64, u64), u32>,
+    /// Last-known-good parameter snapshot (the rollback target), refreshed
+    /// at every clean audit point; `None` until the first integrity epoch.
+    last_good: Option<Params>,
+    /// Per-batch `(loss, ncorrect, n_seed)` of the integrity paths, folded
+    /// in batch order at epoch end — replays overwrite their slot instead
+    /// of double-counting, keeping the f64 accumulation order (and thus
+    /// the reported loss bits) identical to the classic incremental sum.
+    /// Kept across epochs so the steady state stays allocation-free.
+    batch_results: Vec<(f64, f64, usize)>,
 }
 
 impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
@@ -987,6 +1048,11 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             assemble: AssembleScratch::default(),
             dev,
             fault: None,
+            guard: false,
+            audit_every: 0,
+            consumed: HashMap::new(),
+            last_good: None,
+            batch_results: Vec::new(),
         })
     }
 
@@ -998,6 +1064,336 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
     pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
         self.eng.set_fault_plan(plan.clone());
         self.fault = Some(plan);
+    }
+
+    /// Arm the per-batch numeric guard (DESIGN.md §11): feature-payload
+    /// checksums across the injection window, a non-finite scan of
+    /// loss/gradients *before* the SGD apply, and clean retransmission of
+    /// corrupted uploads inside the backend. A guarded-but-clean run is
+    /// bitwise identical to an unguarded one — the guard only ever refuses
+    /// to apply corrupt data, it never changes clean data or adds
+    /// dispatches. Incompatible with the fused device-resident step, whose
+    /// single SGD module cannot split the check from the apply.
+    pub fn set_guard(&mut self, on: bool) -> Result<()> {
+        ensure!(
+            !(on && self.opt.dev_resident),
+            "--guard needs the host-staged step: the fused device SGD cannot \
+             split the gradient check from the parameter apply"
+        );
+        self.guard = on;
+        self.eng.set_integrity_guard(on);
+        Ok(())
+    }
+
+    /// Audit every `n` batches (plus at every audited epoch's end):
+    /// parameter finiteness scan, cache-slab digest verification, and a
+    /// refresh of the rollback snapshot at each clean point. `0` disables.
+    pub fn set_audit_every(&mut self, n: u64) -> Result<()> {
+        ensure!(
+            !(n > 0 && self.opt.dev_resident),
+            "--audit-every needs host-authoritative parameters \
+             (disable the device-resident mode)"
+        );
+        self.audit_every = n;
+        Ok(())
+    }
+
+    /// Whether this run needs the integrity-checked epoch loop: a guard or
+    /// audit cadence is set, or the fault plan carries data-corruption
+    /// sites. Everything else takes the classic loop untouched.
+    pub(crate) fn integrity_active(&self) -> bool {
+        self.guard
+            || self.audit_every > 0
+            || self.fault.as_ref().is_some_and(|p| p.has_integrity_site())
+    }
+
+    /// Reset per-epoch integrity state: clear the injection budgets (a
+    /// rollback never replays across an epoch boundary) and snapshot the
+    /// current parameters as the epoch's first rollback target. The
+    /// snapshot reuses its allocation after the first epoch.
+    pub(crate) fn begin_integrity_epoch(&mut self) {
+        self.consumed.clear();
+        match &mut self.last_good {
+            Some(s) => s.copy_from(&self.params),
+            None => self.last_good = Some(self.params.clone()),
+        }
+    }
+
+    /// FNV-1a over the batch's feature payload — the full collected slab
+    /// with the cache off, the packed miss rows with it on (`None` when a
+    /// fully-hit cached batch ships no feature bytes at all). Models the
+    /// producer-side source checksum that travels with the payload.
+    fn feature_digest(&self, prep: &PreparedCpu) -> Option<u64> {
+        let c = &prep.collected;
+        if self.cache.is_some() {
+            let n = c.n_miss * self.exec.d.f;
+            if n == 0 {
+                return None;
+            }
+            Some(fnv1a_f32(&c.miss_rows.as_f32().ok()?[..n]))
+        } else {
+            Some(fnv1a_f32(c.xs.as_f32().ok()?))
+        }
+    }
+
+    /// `flip!` injection: silently flip one mantissa bit of the batch's
+    /// feature payload — the value stays finite, so nothing downstream
+    /// errors; only a checksum can tell. Budgeted per address via
+    /// `consumed` so recomputes re-derive clean data. Skips (without
+    /// consuming) batches whose cached payload is empty.
+    fn inject_flip(&mut self, prep: &mut PreparedCpu, epoch: u64, seq: u64) {
+        let Some(plan) = self.fault.clone() else { return };
+        let n = plan.fires(FaultSite::Flip, epoch, seq);
+        if n == 0 {
+            return;
+        }
+        let cached = self.cache.is_some();
+        let f = self.exec.d.f;
+        let c = &mut prep.collected;
+        let payload: &mut [f32] = if cached {
+            let len = c.n_miss * f;
+            if len == 0 {
+                return;
+            }
+            match c.miss_rows.as_f32_mut() {
+                Ok(s) => &mut s[..len],
+                Err(_) => return,
+            }
+        } else {
+            match c.xs.as_f32_mut() {
+                Ok(s) => s,
+                Err(_) => return,
+            }
+        };
+        let used = self.consumed.entry((FaultSite::Flip, epoch, seq)).or_insert(0);
+        if *used >= n {
+            return;
+        }
+        *used += 1;
+        let h = plan.target_hash(FaultSite::Flip, epoch, seq);
+        let elem = (h % payload.len() as u64) as usize;
+        let bit = ((h >> 40) % 23) as u32;
+        payload[elem] = f32::from_bits(payload[elem].to_bits() ^ (1 << bit));
+    }
+
+    /// `nan!` injection: drop a quiet NaN into the freshly computed
+    /// gradient, after the backward pass and before the guard scan / SGD
+    /// apply — the "activation/gradient goes non-finite" failure class.
+    /// Same per-address budget discipline as [`Self::inject_flip`].
+    fn inject_nan(&mut self, grads: &mut Params, epoch: u64, seq: u64) {
+        let Some(plan) = self.fault.clone() else { return };
+        let n = plan.fires(FaultSite::Nan, epoch, seq);
+        if n == 0 {
+            return;
+        }
+        let used = self.consumed.entry((FaultSite::Nan, epoch, seq)).or_insert(0);
+        if *used >= n {
+            return;
+        }
+        *used += 1;
+        let h = plan.target_hash(FaultSite::Nan, epoch, seq);
+        let i = (h % grads.w0.len() as u64) as usize;
+        grads.w0[i] = f32::NAN;
+    }
+
+    /// One integrity-checked attempt at a batch: inject (budget
+    /// permitting), detect, and — only if everything is clean or the guard
+    /// is off — apply the SGD update. Mirrors [`Self::compute_batch`]'s
+    /// host-staged path exactly (`train_step` ≡ `grad_step` + host SGD),
+    /// so a clean guarded attempt is bitwise and dispatch-count identical
+    /// to the classic loop.
+    pub(crate) fn attempt_batch(
+        &mut self,
+        mut prep: PreparedCpu,
+        epoch: u64,
+        seq: u64,
+    ) -> Result<Attempt> {
+        let expect = if self.guard { self.feature_digest(&prep) } else { None };
+        self.inject_flip(&mut prep, epoch, seq);
+        if let Some(e) = expect {
+            if self.feature_digest(&prep) != Some(e) {
+                return Ok(Attempt::Violation(prep.into_bufs()));
+            }
+        }
+        self.eng.fault_cursor(epoch, seq);
+        let d = self.exec.d;
+        let (batch, spent) = assemble_batch(
+            self.eng,
+            &d,
+            &self.schema,
+            self.cache.as_ref(),
+            &mut self.assemble,
+            prep,
+        )?;
+        let (res, mut grads) = self.exec.grad_step(&self.params, &self.schema, &batch)?;
+        self.inject_nan(&mut grads, epoch, seq);
+        if self.guard && !(res.loss.is_finite() && grads.is_finite()) {
+            return Ok(Attempt::Violation(spent.reclaim(batch)));
+        }
+        self.params.sgd(&grads, self.cfg.lr);
+        Ok(Attempt::Clean {
+            loss: res.loss,
+            ncorrect: res.ncorrect,
+            n_seed: res.n_seed,
+            bufs: spent.reclaim(batch),
+        })
+    }
+
+    /// The recovery ladder for one scheduled batch (DESIGN.md §11):
+    /// attempt → recompute from `(epoch_perm, seq)` → rollback to the last
+    /// good snapshot and replay forward → give up. Returns the *first*
+    /// attempt's buffers for the caller to route (feed ring or inline
+    /// producer); retry buffers cycle through `standby`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_batch_recovering(
+        &mut self,
+        standby: &mut CpuProducer<'g>,
+        results: &mut [(f64, f64, usize)],
+        prep: PreparedCpu,
+        epoch: u64,
+        b: usize,
+        first: usize,
+        snap_batch: usize,
+        m: &mut EpochMetrics,
+    ) -> Result<BatchBufs> {
+        let mut first_bufs: Option<BatchBufs> = None;
+        let mut prep = Some(prep);
+        let mut attempt = 0u32;
+        loop {
+            let p = match prep.take() {
+                Some(p) => p,
+                None => standby.produce(epoch, b),
+            };
+            let (bufs, clean) = match self.attempt_batch(p, epoch, b as u64)? {
+                Attempt::Clean { loss, ncorrect, n_seed, bufs } => {
+                    results[b - first] = (loss as f64, ncorrect as f64, n_seed);
+                    (bufs, true)
+                }
+                Attempt::Violation(bufs) => (bufs, false),
+            };
+            if attempt == 0 {
+                first_bufs = Some(bufs);
+            } else {
+                standby.reclaim(bufs);
+            }
+            if clean {
+                return Ok(first_bufs.expect("first attempt banked its buffers"));
+            }
+            self.eng.counters().borrow_mut().integrity_violations += 1;
+            match attempt {
+                0 => m.integrity_recomputes += 1,
+                1 => {
+                    m.integrity_rollbacks += 1;
+                    self.rollback_and_replay(standby, results, epoch, snap_batch, first, b, m)?;
+                }
+                _ => bail!(
+                    "batch (epoch {epoch}, batch {b}) failed its integrity check \
+                     after recompute and rollback; giving up"
+                ),
+            }
+            attempt += 1;
+        }
+    }
+
+    /// Restore the last-good snapshot and replay `[snap_batch, upto)`
+    /// forward: every replayed batch re-derives from its `(epoch_perm,
+    /// seq)` address — bitwise the data the feed delivered — and lands in
+    /// its `results` slot, so the epoch's folded metrics are those of the
+    /// uninterrupted run. A replayed batch gets one recompute; persistent
+    /// corruption under replay is a hard error.
+    #[allow(clippy::too_many_arguments)]
+    fn rollback_and_replay(
+        &mut self,
+        standby: &mut CpuProducer<'g>,
+        results: &mut [(f64, f64, usize)],
+        epoch: u64,
+        snap_batch: usize,
+        first: usize,
+        upto: usize,
+        m: &mut EpochMetrics,
+    ) -> Result<()> {
+        self.params
+            .copy_from(self.last_good.as_ref().expect("integrity epochs snapshot up front"));
+        for rb in snap_batch..upto {
+            let mut ok = false;
+            for retry in 0..2u32 {
+                let p = standby.produce(epoch, rb);
+                match self.attempt_batch(p, epoch, rb as u64)? {
+                    Attempt::Clean { loss, ncorrect, n_seed, bufs } => {
+                        standby.reclaim(bufs);
+                        results[rb - first] = (loss as f64, ncorrect as f64, n_seed);
+                        ok = true;
+                    }
+                    Attempt::Violation(bufs) => {
+                        standby.reclaim(bufs);
+                        self.eng.counters().borrow_mut().integrity_violations += 1;
+                        if retry == 0 {
+                            m.integrity_recomputes += 1;
+                        }
+                    }
+                }
+                if ok {
+                    break;
+                }
+            }
+            ensure!(
+                ok,
+                "replayed batch (epoch {epoch}, batch {rb}) failed its \
+                 integrity check twice; giving up"
+            );
+        }
+        Ok(())
+    }
+
+    /// The periodic audit point (DESIGN.md §11): after batch `b`, when the
+    /// cadence (or the epoch end) says so, verify the cache slab digest
+    /// (independent restage repair), scan the parameters for non-finites —
+    /// post-apply corruption that only a rollback can undo — and, once
+    /// clean, refresh the rollback snapshot so later rollbacks replay from
+    /// here. Two failed rollback replays abort the epoch.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn maybe_audit(
+        &mut self,
+        standby: &mut CpuProducer<'g>,
+        results: &mut [(f64, f64, usize)],
+        epoch: u64,
+        first: usize,
+        b: usize,
+        last: usize,
+        snap_batch: &mut usize,
+        m: &mut EpochMetrics,
+    ) -> Result<()> {
+        if self.audit_every == 0 {
+            return Ok(());
+        }
+        let done = (b + 1 - first) as u64;
+        if done % self.audit_every != 0 && b + 1 != last {
+            return Ok(());
+        }
+        m.audits += 1;
+        if let Some(handle) = self.cache.as_mut() {
+            if !handle.verify_or_restage(self.eng)? {
+                self.eng.counters().borrow_mut().integrity_violations += 1;
+            }
+        }
+        let mut attempts = 0u32;
+        while !self.params.is_finite() {
+            self.eng.counters().borrow_mut().integrity_violations += 1;
+            ensure!(
+                attempts < 2,
+                "parameters still non-finite after {attempts} rollback \
+                 replay(s) at (epoch {epoch}, batch {b}); giving up"
+            );
+            attempts += 1;
+            m.integrity_rollbacks += 1;
+            self.rollback_and_replay(standby, results, epoch, *snap_batch, first, b + 1, m)?;
+        }
+        match &mut self.last_good {
+            Some(s) => s.copy_from(&self.params),
+            None => self.last_good = Some(self.params.clone()),
+        }
+        *snap_batch = b + 1;
+        Ok(())
     }
 
     /// Pin a resident feature store on this trainer's backend (DESIGN.md
@@ -1106,6 +1502,8 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
         let first = first.min(last);
         if self.opt.pipeline {
             pipeline::train_epoch_pipelined(self, epoch, first, last)
+        } else if !self.opt.dev_resident && self.integrity_active() {
+            self.train_epoch_sequential_integrity(epoch, first, last)
         } else {
             self.train_epoch_sequential(epoch, first, last)
         }
@@ -1159,6 +1557,93 @@ impl<'g, 'e, B: ExecBackend> Trainer<'g, 'e, B> {
             }
         }
         self.arsenal.checkin(producer.into_state());
+        result?;
+        self.finish_metrics(&mut m, wall0, total_correct, total_seed);
+        m.producer = self.arsenal.stats;
+        Ok(m)
+    }
+
+    /// [`Self::train_epoch_sequential`] with the integrity plane armed
+    /// (DESIGN.md §11): each batch runs the detect/recompute/rollback
+    /// ladder, audits fire on their cadence, and per-batch results fold at
+    /// epoch end so replays overwrite instead of double-count. Taken only
+    /// when [`Self::integrity_active`]; the fault-free classic loop is
+    /// untouched (zero extra dispatches, zero extra allocations).
+    fn train_epoch_sequential_integrity(
+        &mut self,
+        epoch: u64,
+        first: usize,
+        last: usize,
+    ) -> Result<EpochMetrics> {
+        let scfg = self.sampler_cfg();
+        let d = self.exec.d;
+        let graph = self.graph;
+        let wall0 = Instant::now();
+        let mut m = EpochMetrics { batches: last - first, ..Default::default() };
+        self.eng.reset_counters(false);
+        self.begin_integrity_epoch();
+        let seed = self.arsenal.checkout(graph, 1).pop().expect("one seed");
+        let cache_store = self.cache.as_ref().map(|h| h.store.clone());
+        let mut producer = CpuProducer::from_seed(
+            graph,
+            scfg,
+            d,
+            self.opt,
+            self.pool,
+            self.rng.clone(),
+            cache_store,
+            seed,
+        );
+        let mut results = std::mem::take(&mut self.batch_results);
+        results.clear();
+        results.resize(last - first, (0.0, 0.0, 0));
+        let mut snap_batch = first;
+        let mut result: Result<()> = Ok(());
+        for b in first..last {
+            let prep = producer.produce(epoch, b);
+            m.cpu_time += prep.cpu_time;
+            m.cpu_by_stage += prep.cpu_by_stage;
+            m.dropped_nodes += prep.dropped_nodes();
+            m.dropped_edges += prep.dropped_edges();
+            match self.run_batch_recovering(
+                &mut producer,
+                &mut results,
+                prep,
+                epoch,
+                b,
+                first,
+                snap_batch,
+                &mut m,
+            ) {
+                Ok(bufs) => producer.reclaim(bufs),
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+            if let Err(e) = self.maybe_audit(
+                &mut producer,
+                &mut results,
+                epoch,
+                first,
+                b,
+                last,
+                &mut snap_batch,
+                &mut m,
+            ) {
+                result = Err(e);
+                break;
+            }
+        }
+        self.arsenal.checkin(producer.into_state());
+        let mut total_correct = 0.0f64;
+        let mut total_seed = 0usize;
+        for &(l, c, s) in &results {
+            m.loss += l;
+            total_correct += c;
+            total_seed += s;
+        }
+        self.batch_results = results;
         result?;
         self.finish_metrics(&mut m, wall0, total_correct, total_seed);
         m.producer = self.arsenal.stats;
@@ -1243,6 +1728,11 @@ mod tests {
             dispatch_retries: 2,
             producer_recoveries: 1,
             lane_failovers: 1,
+            integrity_violations: 2,
+            integrity_retransmits: 1,
+            integrity_recomputes: 1,
+            integrity_rollbacks: 1,
+            audits: 2,
         };
         let b = EpochMetrics {
             loss: 9.0,
@@ -1273,6 +1763,11 @@ mod tests {
             dispatch_retries: 3,
             producer_recoveries: 0,
             lane_failovers: 2,
+            integrity_violations: 3,
+            integrity_retransmits: 0,
+            integrity_recomputes: 2,
+            integrity_rollbacks: 0,
+            audits: 1,
         };
         a.absorb(&b);
         // Additive counters sum ...
@@ -1302,6 +1797,11 @@ mod tests {
         assert_eq!(a.dispatch_retries, 5);
         assert_eq!(a.producer_recoveries, 1);
         assert_eq!(a.lane_failovers, 3);
+        assert_eq!(a.integrity_violations, 5);
+        assert_eq!(a.integrity_retransmits, 1);
+        assert_eq!(a.integrity_recomputes, 3);
+        assert_eq!(a.integrity_rollbacks, 1);
+        assert_eq!(a.audits, 3);
         // ... stage rows merge by stage, appending unseen stages ...
         assert!(a.kernels_by_stage.contains(&(Stage::Projection, 5)));
         assert!(a.kernels_by_stage.contains(&(Stage::Head, 1)));

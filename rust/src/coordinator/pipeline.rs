@@ -338,6 +338,25 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
     let mut total_correct = 0.0f64;
     let mut total_seed = 0usize;
 
+    // Integrity plane (DESIGN.md §11): the consumer runs every delivered
+    // batch through the detect/recompute/rollback ladder against a standby
+    // producer (recomputes re-derive from `(epoch_perm, seq)`, never from
+    // the feed — the ring stays aligned), and per-batch results fold at
+    // epoch end so replays overwrite instead of double-count. Off (the
+    // default), this block costs one branch.
+    let integrity = !opt.dev_resident && tr.integrity_active();
+    if integrity {
+        tr.begin_integrity_epoch();
+    }
+    let mut results = if integrity {
+        let mut r = std::mem::take(&mut tr.batch_results);
+        r.clear();
+        r.resize(n_batches, (0.0, 0.0, 0));
+        r
+    } else {
+        Vec::new()
+    };
+
     let fault = tr.fault.clone();
     let mut result: Result<()> = Ok(());
     let mut leftover: Vec<BatchBufs> = Vec::new();
@@ -360,8 +379,27 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
         );
         // Standby producer for re-deriving batches a dead worker never
         // delivered — built lazily from an arsenal seed on the first hole,
-        // so the fault-free path allocates nothing for it.
+        // so the fault-free path allocates nothing for it. The integrity
+        // ladder needs it for recomputes/replays at any batch, so an
+        // integrity epoch arms it up front (its scratch checks back into
+        // the arsenal at teardown and is reused every epoch after).
         let mut standby: Option<CpuProducer<'_>> = None;
+        if integrity {
+            let mut seed =
+                tr.arsenal.checkout(graph, 1).pop().expect("arsenal always deals a seed");
+            seed.scratch.install_epoch_perm(perm.clone(), &rng, epoch);
+            standby = Some(CpuProducer::from_seed(
+                graph,
+                scfg,
+                d,
+                opt,
+                pool,
+                rng.clone(),
+                cache_store.clone(),
+                seed,
+            ));
+        }
+        let mut snap_batch = first;
         for pos in 0..n_batches {
             let (prep, recovered) = match feed.recv_next() {
                 Ok(FeedSlot::Batch(p)) => (p, false),
@@ -397,6 +435,49 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
             m.cpu_by_stage += prep.cpu_by_stage;
             m.dropped_nodes += prep.dropped_nodes();
             m.dropped_edges += prep.dropped_edges();
+            if integrity {
+                // The ladder owns the fault cursor and the apply; first-
+                // attempt buffers come back for feed routing, retry
+                // buffers cycle through the standby internally.
+                let b = batches[pos];
+                let sb = standby.as_mut().expect("integrity epochs arm the standby");
+                match tr.run_batch_recovering(
+                    sb,
+                    &mut results,
+                    prep,
+                    epoch,
+                    b,
+                    first,
+                    snap_batch,
+                    &mut m,
+                ) {
+                    Ok(bufs) => {
+                        if recovered {
+                            sb.reclaim(bufs);
+                        } else {
+                            feed.recycle(pos, bufs);
+                        }
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                if let Err(e) = tr.maybe_audit(
+                    sb,
+                    &mut results,
+                    epoch,
+                    first,
+                    b,
+                    last,
+                    &mut snap_batch,
+                    &mut m,
+                ) {
+                    result = Err(e);
+                    break;
+                }
+                continue;
+            }
             tr.eng.fault_cursor(epoch, batches[pos] as u64);
             match tr.compute_batch(prep) {
                 Ok((loss, ncorrect, n_seed, bufs)) => {
@@ -431,6 +512,14 @@ pub fn train_epoch_pipelined<B: ExecBackend>(
         tr.arsenal.checkin(state);
     }
     tr.arsenal.checkin_bufs(leftover);
+    if integrity {
+        for &(l, c, s) in &results {
+            m.loss += l;
+            total_correct += c;
+            total_seed += s;
+        }
+        tr.batch_results = results;
+    }
     result?;
     tr.finish_metrics(&mut m, wall0, total_correct, total_seed);
     m.producer = tr.arsenal.stats;

@@ -71,12 +71,13 @@
 //! participate. The `Rc`-based PJRT engine is `!Send` and stays
 //! single-backend.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::mpsc::{self, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use super::pipeline::{spawn_feed, BatchFeed, FeedSlot};
 use super::{
@@ -91,7 +92,7 @@ use crate::models::step::{
 use crate::models::{ModelKind, Params};
 use crate::runtime::{CacheHandle, CpuStageTimes, ExecBackend, ResidentStore, SimBackend};
 use crate::sampler::{epoch_perm, NeighborSampler};
-use crate::util::{FaultPlan, FaultSite, HostTensor, Rng, WorkerPool};
+use crate::util::{fnv1a_f32, FaultPlan, FaultSite, HostTensor, Rng, WorkerPool};
 
 /// Default round width (global batches per synchronous update). A constant
 /// — *not* derived from the replica count — so the trajectory is invariant
@@ -127,6 +128,11 @@ pub struct ChurnStats {
     /// Refresh attempts rejected (load error or shape mismatch); the old
     /// parameters kept serving.
     pub failed_refreshes: u64,
+    /// Guarded integrity violations (non-finite logits) caught on serve
+    /// lanes this drive (DESIGN.md §11).
+    pub integrity_violations: u64,
+    /// Serve batches recomputed after a guarded integrity violation.
+    pub integrity_recomputes: u64,
 }
 
 impl ChurnStats {
@@ -184,6 +190,11 @@ pub struct ServeDrive {
     /// Quarantine/shadow/re-dispatch accounting (refresh counters are
     /// filled by the serving layer, which owns checkpoint loading).
     pub stats: ChurnStats,
+    /// Lanes that hit 2+ guarded integrity violations this drive
+    /// (DESIGN.md §11): the group remembers them and the *next* churn
+    /// drive starts them quarantined (probation shadowing before
+    /// re-admission), closing the loop with the §10 churn plane.
+    pub suspect_lanes: Vec<usize>,
 }
 
 /// One scheduled slot of a serve lane: the global coalesced-batch index
@@ -210,12 +221,18 @@ struct ChurnSchedule {
 /// * A quarantined lane shadows every subsequent batch (same prep, same
 ///   seq, output discarded) until it has completed `probation` of them,
 ///   then re-enters the rotation from the next batch.
+/// * `pre_quarantined` lanes — flagged suspect by a previous drive's
+///   integrity guard (DESIGN.md §11) — start outside the rotation with a
+///   full probation to shadow, exactly as if a [`FaultSite::LaneHard`]
+///   entry had fired before batch 0 (counted as a quarantine, but not as
+///   a re-dispatch: no batch was ever placed on them).
 /// * Zero healthy lanes is the typed [`NoHealthyLanes`] error.
 fn plan_churn(
     n_batches: usize,
     n_lanes: usize,
     plan: Option<&FaultPlan>,
     probation: usize,
+    pre_quarantined: &[usize],
 ) -> Result<ChurnSchedule> {
     let hard = plan.filter(|p| p.has_site(FaultSite::LaneHard));
     let probation = probation.max(1);
@@ -224,6 +241,13 @@ fn plan_churn(
     let mut stats = ChurnStats::default();
     let mut healthy = vec![true; n_lanes];
     let mut shadow_left = vec![0usize; n_lanes];
+    for &l in pre_quarantined {
+        if l < n_lanes && healthy[l] {
+            healthy[l] = false;
+            shadow_left[l] = probation;
+            stats.lane_quarantines += 1;
+        }
+    }
     for bi in 0..n_batches {
         // Lanes already quarantined when this batch arrives shadow it;
         // snapshot before any kill this batch triggers.
@@ -321,6 +345,32 @@ pub struct ReplicaGroup<'g, B: ExecBackend> {
     /// host-authoritative so the fixed-order all-reduce and the round SGD
     /// run unchanged, bitwise (DESIGN.md §4/§7).
     dev_schemas: Vec<DevSchema<B>>,
+    /// Numeric guard rails on (DESIGN.md §11): lanes digest-check their
+    /// feature payloads and finite-check loss/gradients before any result
+    /// enters the round merge.
+    guard: bool,
+    /// Group digest-audit cadence in batches; `0` = off. Audits run at the
+    /// first round boundary at/past each multiple, plus epoch end.
+    audit_every: u64,
+    /// Shared injection budgets for the integrity corruption sites
+    /// (`flip!`/`nan!`), keyed by `(site, epoch, seq)`: every lane attempt
+    /// — first run, recompute, group replay — consumes from the same
+    /// per-address budget, so recovery converges instead of re-poisoning
+    /// itself forever. Locked only when the plan has integrity sites;
+    /// empty (never allocated into) otherwise.
+    consumed: Mutex<HashMap<(FaultSite, u64, u64), u32>>,
+    /// Last round-boundary parameter snapshot that passed an audit (or the
+    /// epoch-start state); the group rollback target. `None` until the
+    /// first integrity-active epoch.
+    last_good: Option<Params>,
+    /// Per-global-batch `(loss, ncorrect, n_seed)` scratch for integrity
+    /// epochs — replays overwrite in place and the epoch folds once in
+    /// batch order, keeping the f64 metric sums bitwise identical to a
+    /// fault-free run. Kept across epochs for the zero-alloc steady state.
+    batch_results: Vec<(f64, f64, usize)>,
+    /// Serve lanes flagged by the integrity guard (2+ violations in one
+    /// drive); consumed — pre-quarantined — by the next churn drive.
+    suspects: Vec<usize>,
     rng: Rng,
     d: Dims,
 }
@@ -383,6 +433,12 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             fault: None,
             lane_params,
             dev_schemas,
+            guard: false,
+            audit_every: 0,
+            consumed: Mutex::new(HashMap::new()),
+            last_good: None,
+            batch_results: Vec::new(),
+            suspects: Vec::new(),
             rng: Rng::new(cfg.seed),
             d,
         })
@@ -398,6 +454,54 @@ impl<'g, B: ExecBackend> ReplicaGroup<'g, B> {
             e.set_fault_plan(plan.clone());
         }
         self.fault = Some(plan);
+    }
+
+    /// Toggle the numeric guard rails (DESIGN.md §11): lanes digest-check
+    /// feature payloads and finite-check loss/gradients before any result
+    /// enters the round merge, serve lanes finite-check their logits, and
+    /// every backend verifies `wire!`-corrupted transfers at delivery. A
+    /// guarded clean run is bitwise identical to an unguarded one.
+    pub fn set_guard(&mut self, on: bool) -> Result<()> {
+        ensure!(
+            !(on && self.opt.dev_resident),
+            "--guard needs the host-staged step: the fused device SGD cannot \
+             split the gradient check from the parameter apply"
+        );
+        self.guard = on;
+        for e in &self.engines {
+            e.set_integrity_guard(on);
+        }
+        Ok(())
+    }
+
+    /// Set the group digest-audit cadence (DESIGN.md §11): every `n`
+    /// admitted batches (checked at round boundaries, plus epoch end) the
+    /// main thread audits the merged parameters and any hot-refreshed lane
+    /// overrides, rolling back to the last good round-boundary snapshot on
+    /// a violation. `0` = off.
+    pub fn set_audit_every(&mut self, n: u64) -> Result<()> {
+        ensure!(
+            !(n > 0 && self.opt.dev_resident),
+            "--audit-every needs the host-staged step (host-authoritative \
+             parameters between rounds)"
+        );
+        self.audit_every = n;
+        Ok(())
+    }
+
+    /// Whether any part of the integrity plane is live this run.
+    fn integrity_active(&self) -> bool {
+        self.guard
+            || self.audit_every > 0
+            || self.fault.as_ref().is_some_and(|p| p.has_integrity_site())
+    }
+
+    /// FNV-1a digest of each lane's *serving* parameter set (hot-refreshed
+    /// override where installed, the shared set otherwise) — the
+    /// cross-lane divergence witness: fault-free lanes either share the
+    /// group digest or match the checkpoint their refresh loaded.
+    pub fn lane_digests(&self) -> Vec<u64> {
+        (0..self.engines.len()).map(|l| self.lane_serving_params(l).digest()).collect()
     }
 
     /// Pin one shared resident feature store across every replica backend:
@@ -552,11 +656,35 @@ where
             e.reset_counters(false);
         }
 
+        // Integrity plane (DESIGN.md §11): reset the shared injection
+        // budgets and refresh the rollback snapshot up front, so every
+        // epoch recovers toward a known-good state. The guard and audit
+        // setters reject dev_resident, so an active plane implies the
+        // host-staged step.
+        let integrity = !opt.dev_resident && self.integrity_active();
+        if integrity {
+            self.consumed.lock().expect("integrity budget lock").clear();
+            match &mut self.last_good {
+                Some(s) => s.copy_from(&self.params),
+                None => self.last_good = Some(self.params.clone()),
+            }
+        }
+        let audit_every = if integrity { self.audit_every } else { 0 };
+        let guard = self.guard;
+
         let params: &mut Params = &mut self.params;
         let schema: &SchemaTensors = &self.schema;
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
         let caches: &[CacheHandle<B>] = &self.caches;
+        let consumed: &Mutex<HashMap<(FaultSite, u64, u64), u32>> = &self.consumed;
+        let last_good: &mut Option<Params> = &mut self.last_good;
+        let lane_overrides: &mut [Option<Params>] = &mut self.lane_params;
+        // Lanes consult the shared budgets only when the plan can inject.
+        let lane_consumed = match &fault {
+            Some(p) if integrity && p.has_integrity_site() => Some(consumed),
+            _ => None,
+        };
         let dev_schemas: &[DevSchema<B>] = &self.dev_schemas;
         // One shared epoch permutation + resident-store index across every
         // lane's producers (DESIGN.md §5/§7).
@@ -567,6 +695,17 @@ where
         let mut loss_sum = 0.0f64;
         let mut total_correct = 0.0f64;
         let mut total_seed = 0usize;
+        // Integrity epochs record per-batch metrics by global index so a
+        // rollback replay overwrites in place; the fold at epoch end runs
+        // once in batch order, keeping the f64 sums bitwise identical to
+        // the incremental fault-free accumulation.
+        let mut results = std::mem::take(&mut self.batch_results);
+        if integrity {
+            results.clear();
+            results.resize(n_batches, (0.0, 0.0, 0));
+        }
+        let mut audits = 0u64;
+        let mut rollbacks = 0u64;
         let mut lane_tallies: Vec<LaneTally> = Vec::new();
         // Which lanes are still alive; an injected lane fault flips this
         // for the rest of the epoch (and brands the lane's metrics with a
@@ -619,10 +758,14 @@ where
                     // arms one standby producer to re-derive lost batches
                     // from `(epoch_perm, seq)`; its state checks back into
                     // the arsenal at teardown so the steady state stays
-                    // zero-alloc. Off-plan runs skip it entirely.
+                    // zero-alloc. Off-plan runs skip it entirely. Plans
+                    // with integrity corruption sites arm it too: a
+                    // guarded recompute re-derives the offending batch
+                    // from the same address (DESIGN.md §11).
                     let standby = match (&src, &fault) {
                         (LaneSource::Feed { .. }, Some(p))
-                            if p.has_site(FaultSite::Producer) =>
+                            if p.has_site(FaultSite::Producer)
+                                || (integrity && p.has_integrity_site()) =>
                         {
                             let mut seed =
                                 arsenals[i].checkout(graph, 1).pop().expect("one seed");
@@ -650,6 +793,9 @@ where
                         assemble: AssembleScratch::default(),
                         pos: 0,
                         recoveries: 0,
+                        guard,
+                        consumed: lane_consumed,
+                        recomputes: 0,
                         cpu_time: Duration::ZERO,
                         cpu_by_stage: CpuStageTimes::default(),
                         batches: 0,
@@ -658,6 +804,13 @@ where
                     }
                 })
                 .collect();
+
+            // Group-side recovery state: the next audit mark, the first
+            // batch not covered by the current snapshot, and a lazily
+            // armed replay producer (recovery is allowed to allocate).
+            let mut snap_mark = 0usize;
+            let mut next_audit = audit_every;
+            let mut replayer: Option<CpuProducer<'_>> = None;
 
             'rounds: for r0 in (0..n_batches).step_by(round.max(1)) {
                 let len = round.min(n_batches - r0);
@@ -738,13 +891,20 @@ where
                 // the same bits no matter how many lanes computed them.
                 let mut gsum: Option<Params> = None;
                 let mut count = 0usize;
-                for lane_res in round_out.into_iter().flatten() {
+                for (li, lane_res) in round_out.into_iter().enumerate() {
+                    let Some(lane_res) = lane_res else { continue };
                     match lane_res {
                         Ok(r) => {
-                            for (res, g) in r.items {
-                                loss_sum += res.loss as f64;
-                                total_correct += res.ncorrect as f64;
-                                total_seed += res.n_seed;
+                            let (a, _) = split[li];
+                            for (k, (res, g)) in r.items.into_iter().enumerate() {
+                                if integrity {
+                                    results[r0 + a + k] =
+                                        (res.loss as f64, res.ncorrect as f64, res.n_seed);
+                                } else {
+                                    loss_sum += res.loss as f64;
+                                    total_correct += res.ncorrect as f64;
+                                    total_seed += res.n_seed;
+                                }
                                 match gsum.as_mut() {
                                     Some(acc) => acc.add_assign(&g),
                                     None => gsum = Some(g),
@@ -762,6 +922,87 @@ where
                 // params are re-broadcast to the next round by reborrow.
                 if let Some(g) = gsum {
                     params.sgd(&g, cfg.lr / count as f32);
+                }
+
+                // Round-boundary group audit (DESIGN.md §11). The merge is
+                // the only place corruption can reach the shared
+                // parameters, so auditing here bounds the damage to the
+                // rounds since the last good snapshot. A violation rolls
+                // back and replays those rounds sequentially on lane 0 —
+                // same round structure, same merge order, so a clean
+                // replay is bitwise identical to the fault-free
+                // trajectory. Poisoned hot-refresh lane overrides are
+                // divergence the shared trajectory never sees: clear them
+                // back to the shared set (a re-broadcast) and count the
+                // violation.
+                let done = r0 + len;
+                if audit_every > 0 && (done as u64 >= next_audit || done == n_batches) {
+                    audits += 1;
+                    for lp in lane_overrides.iter_mut() {
+                        if lp.as_ref().is_some_and(|p| !p.is_finite()) {
+                            lanes[0].eng.counters().borrow_mut().integrity_violations += 1;
+                            *lp = None;
+                        }
+                    }
+                    let mut attempts = 0u32;
+                    while !params.is_finite() {
+                        lanes[0].eng.counters().borrow_mut().integrity_violations += 1;
+                        if attempts >= 2 {
+                            epoch_result = Err(anyhow!(
+                                "group parameters still non-finite after 2 rollback \
+                                 replays (epoch {epoch}, batch {done}): fault exceeds \
+                                 the recovery budget"
+                            ));
+                            break 'rounds;
+                        }
+                        attempts += 1;
+                        rollbacks += 1;
+                        if replayer.is_none() {
+                            // Recovery path: arming a replay producer here
+                            // may allocate — the zero-alloc contract covers
+                            // the fault-free steady state only.
+                            let mut seed =
+                                arsenals[0].checkout(graph, 1).pop().expect("one seed");
+                            seed.scratch.install_epoch_perm(perm.clone(), &rng, epoch);
+                            replayer = Some(CpuProducer::from_seed(
+                                graph,
+                                scfg,
+                                d,
+                                opt,
+                                pool,
+                                rng.clone(),
+                                cache_store.clone(),
+                                seed,
+                            ));
+                        }
+                        if let Err(e) = group_rollback_replay(
+                            &mut lanes[0],
+                            replayer.as_mut().expect("just armed"),
+                            d,
+                            opt,
+                            model,
+                            schema,
+                            params,
+                            last_good.as_ref().expect("integrity epochs snapshot up front"),
+                            &mut results,
+                            epoch,
+                            snap_mark,
+                            done,
+                            round,
+                            cfg.lr,
+                        ) {
+                            epoch_result = Err(e);
+                            break 'rounds;
+                        }
+                    }
+                    last_good
+                        .as_mut()
+                        .expect("integrity epochs snapshot up front")
+                        .copy_from(params);
+                    snap_mark = done;
+                    while next_audit <= done as u64 {
+                        next_audit += audit_every;
+                    }
                 }
             }
 
@@ -784,7 +1025,18 @@ where
                     arsenals[i].checkin(sb.into_state());
                 }
             }
+            if let Some(rp) = replayer {
+                arsenals[0].checkin(rp.into_state());
+            }
         });
+        if integrity {
+            for &(l, c, n) in &results {
+                loss_sum += l;
+                total_correct += c;
+                total_seed += n;
+            }
+        }
+        self.batch_results = results;
         epoch_result?;
 
         let mut per_replica: Vec<EpochMetrics> = Vec::with_capacity(n_lanes);
@@ -798,6 +1050,7 @@ where
                 dropped_edges: t.dropped_edges,
                 producer_recoveries: t.recoveries as u64,
                 lane_failovers: u64::from(!alive[i]),
+                integrity_recomputes: t.recomputes as u64,
                 ..Default::default()
             };
             pm.fill_from_counters(&eng.counters().borrow());
@@ -807,6 +1060,10 @@ where
         for pr in &per_replica {
             group.absorb(pr);
         }
+        // Group-side recovery work (audits, rollbacks) belongs to the
+        // group view — no single lane performed it.
+        group.audits += audits;
+        group.integrity_rollbacks += rollbacks;
         group.wall = wall0.elapsed();
         group.loss = loss_sum / n_batches.max(1) as f64;
         group.acc = total_correct / total_seed.max(1) as f64;
@@ -875,6 +1132,22 @@ where
         let schema: &SchemaTensors = &self.schema;
         let params: &Params = &self.params;
         let lane_params: &[Option<Params>] = &self.lane_params;
+        // Serve integrity plane (DESIGN.md §11): `nan!` entries poison the
+        // admitted execution's logits at `(epoch 0, seq bi)`; the guard
+        // scans them and recomputes once through the lane's own producer.
+        // Budgets reset per drive so repeated drives replay identically.
+        let guard = self.guard;
+        let serve_consumed = match &self.fault {
+            Some(p) if p.has_integrity_site() => {
+                self.consumed.lock().expect("integrity budget lock").clear();
+                Some(&self.consumed)
+            }
+            _ => None,
+        };
+        let fault = self.fault.clone();
+        // Lanes flagged suspect by the previous drive's guard start this
+        // drive quarantined (probation shadowing before re-admission).
+        let pre_quarantined = std::mem::take(&mut self.suspects);
         let engines: &mut Vec<B> = &mut self.engines;
         let arsenals: &mut Vec<ProducerArsenal> = &mut self.arsenals;
         let caches: &[CacheHandle<B>] = &self.caches;
@@ -911,15 +1184,18 @@ where
         // pure function of (fault plan, batch count, lane count), never of
         // thread interleaving. Without LaneHard entries this is exactly
         // the historical `bi % n_lanes` round-robin.
-        let sched = plan_churn(batches.len(), n_lanes, self.fault.as_deref(), probation)?;
+        let sched = plan_churn(batches.len(), n_lanes, fault.as_deref(), probation, &pre_quarantined)?;
 
         let mut results: Vec<Option<(HostTensor, Duration)>> =
             (0..batches.len()).map(|_| None).collect();
         let mut lane_err: Result<()> = Ok(());
+        // Per-lane guarded-violation tallies, gathered at join: feeds the
+        // drive stats and the suspect list for the next drive.
+        let mut lane_violations: Vec<(usize, u64, u64)> = Vec::new();
 
         std::thread::scope(|s| {
             let mut consumers = Vec::new();
-            let mut state_rxs: Vec<(usize, Receiver<ProducerState>)> = Vec::new();
+            let mut state_rxs: Vec<(usize, Receiver<ProducerState>, usize)> = Vec::new();
             for (li, (eng, lane_sched)) in engines.iter_mut().zip(&sched.lanes).enumerate() {
                 if lane_sched.is_empty() {
                     continue;
@@ -929,12 +1205,24 @@ where
                 let lane_ds = dev_schemas.get(li);
                 let lane_rng = rng.clone();
                 let lane_store = cache_store.clone();
+                let lane_plan = fault.clone();
                 // Lane base set: a prior `refresh_lane` override, else the
                 // shared params. Refresh events supersede both.
                 let base: &Params = lane_params[li].as_ref().unwrap_or(params);
                 let (stx, srx) = mpsc::channel::<ProducerState>();
-                state_rxs.push((li, srx));
                 if opt.pipeline {
+                    // A guarded pipelined lane arms a standby producer for
+                    // integrity recomputes — the feed producer cannot be
+                    // asked to re-derive out of sequence (DESIGN.md §11).
+                    let serve_standby = if guard && serve_consumed.is_some() {
+                        Some(arsenals[li].checkout(graph, 1).pop().expect("one seed"))
+                    } else {
+                        None
+                    };
+                    state_rxs.push((li, srx, 1 + usize::from(serve_standby.is_some())));
+                    let stx2 = stx.clone();
+                    let sb_rng = rng.clone();
+                    let sb_store = cache_store.clone();
                     // Depth-bounded lane queue: the producer thread stays
                     // at most PIPELINE_DEPTH batches ahead; consumed
                     // buffers return through the recycle channel. Shadow
@@ -965,9 +1253,15 @@ where
                         state.returns = Some(brx);
                         let _ = stx.send(state);
                     });
-                    consumers.push(s.spawn(
-                        move || -> Result<Vec<(usize, HostTensor, Duration)>> {
+                    consumers.push((
+                        li,
+                        s.spawn(move || -> Result<(Vec<(usize, HostTensor, Duration)>, u64, u64)> {
                             let exec = StepExecutor::new(&*eng, model, opt);
+                            let mut standby = serve_standby.map(|seed| {
+                                CpuProducer::from_seed(
+                                    graph, scfg, d, opt, pool, sb_rng, sb_store, seed,
+                                )
+                            });
                             // Device-resident serve: stage the lane's params
                             // before the batch loop; re-staged whenever a
                             // refresh boundary is crossed.
@@ -979,6 +1273,8 @@ where
                             };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
+                            let mut violations = 0u64;
+                            let mut recomputes = 0u64;
                             for &(bi, shadow) in lane_sched {
                                 let prep = rx.recv().map_err(|_| {
                                     anyhow!("serve producer for lane {li} exited early")
@@ -1001,7 +1297,7 @@ where
                                     eng.fault_cursor(0, bi as u64);
                                 }
                                 let t0 = Instant::now();
-                                let (logits, bufs) = serve_one(
+                                let (mut logits, bufs) = serve_one(
                                     &*eng,
                                     &exec,
                                     &d,
@@ -1012,20 +1308,73 @@ where
                                     &mut assemble,
                                     prep,
                                 )?;
+                                let mut bufs = Some(bufs);
                                 if !shadow {
+                                    inject_logit_nan(
+                                        lane_plan.as_deref(),
+                                        serve_consumed,
+                                        &mut logits,
+                                        bi,
+                                    );
+                                    if guard && !logits_finite(&logits) {
+                                        violations += 1;
+                                        recomputes += 1;
+                                        eng.counters().borrow_mut().integrity_violations += 1;
+                                        // First attempt's buffers keep the
+                                        // feed credits flowing; the retry
+                                        // cycles through the standby.
+                                        let _ = btx.send(bufs.take().expect("first attempt"));
+                                        let sb = standby
+                                            .as_mut()
+                                            .expect("guarded serve lanes arm a standby");
+                                        let p2 = sb.produce_request(bi as u64, &batches[bi]);
+                                        let (l2, b2) = serve_one(
+                                            &*eng,
+                                            &exec,
+                                            &d,
+                                            schema,
+                                            cur,
+                                            cache,
+                                            dev_params.as_ref().zip(lane_ds),
+                                            &mut assemble,
+                                            p2,
+                                        )?;
+                                        logits = l2;
+                                        sb.reclaim(b2);
+                                        inject_logit_nan(
+                                            lane_plan.as_deref(),
+                                            serve_consumed,
+                                            &mut logits,
+                                            bi,
+                                        );
+                                        if !logits_finite(&logits) {
+                                            eng.counters().borrow_mut().integrity_violations += 1;
+                                            bail!(
+                                                "serve batch {bi} still non-finite after a \
+                                                 recompute: persistent corruption"
+                                            );
+                                        }
+                                    }
                                     out.push((bi, logits, t0.elapsed()));
                                 }
-                                let _ = btx.send(bufs);
+                                if let Some(b) = bufs {
+                                    let _ = btx.send(b);
+                                }
                             }
                             if let Some(dp) = dev_params.take() {
                                 exec.recycle_dev_params(dp);
                             }
-                            Ok(out)
-                        },
+                            if let Some(sb) = standby.take() {
+                                let _ = stx2.send(sb.into_state());
+                            }
+                            Ok((out, violations, recomputes))
+                        }),
                     ));
                 } else {
-                    consumers.push(s.spawn(
-                        move || -> Result<Vec<(usize, HostTensor, Duration)>> {
+                    state_rxs.push((li, srx, 1));
+                    consumers.push((
+                        li,
+                        s.spawn(move || -> Result<(Vec<(usize, HostTensor, Duration)>, u64, u64)> {
                             let mut p = CpuProducer::from_seed(
                                 graph, scfg, d, opt, pool, lane_rng, lane_store, seed,
                             );
@@ -1038,6 +1387,8 @@ where
                             };
                             let mut assemble = AssembleScratch::default();
                             let mut out = Vec::with_capacity(lane_sched.len());
+                            let mut violations = 0u64;
+                            let mut recomputes = 0u64;
                             let mut err = None;
                             for &(bi, shadow) in lane_sched {
                                 let prep = p.produce_request(bi as u64, &batches[bi]);
@@ -1077,11 +1428,63 @@ where
                                     prep,
                                 );
                                 match step {
-                                    Ok((logits, bufs)) => {
+                                    Ok((mut logits, bufs)) => {
+                                        p.reclaim(bufs);
                                         if !shadow {
+                                            inject_logit_nan(
+                                                lane_plan.as_deref(),
+                                                serve_consumed,
+                                                &mut logits,
+                                                bi,
+                                            );
+                                            if guard && !logits_finite(&logits) {
+                                                violations += 1;
+                                                recomputes += 1;
+                                                eng.counters()
+                                                    .borrow_mut()
+                                                    .integrity_violations += 1;
+                                                let p2 = p
+                                                    .produce_request(bi as u64, &batches[bi]);
+                                                match serve_one(
+                                                    &*eng,
+                                                    &exec,
+                                                    &d,
+                                                    schema,
+                                                    cur,
+                                                    cache,
+                                                    dev_params.as_ref().zip(lane_ds),
+                                                    &mut assemble,
+                                                    p2,
+                                                ) {
+                                                    Ok((l2, b2)) => {
+                                                        logits = l2;
+                                                        p.reclaim(b2);
+                                                        inject_logit_nan(
+                                                            lane_plan.as_deref(),
+                                                            serve_consumed,
+                                                            &mut logits,
+                                                            bi,
+                                                        );
+                                                        if !logits_finite(&logits) {
+                                                            eng.counters()
+                                                                .borrow_mut()
+                                                                .integrity_violations += 1;
+                                                            err = Some(anyhow!(
+                                                                "serve batch {bi} still \
+                                                                 non-finite after a recompute: \
+                                                                 persistent corruption"
+                                                            ));
+                                                            break;
+                                                        }
+                                                    }
+                                                    Err(e) => {
+                                                        err = Some(e);
+                                                        break;
+                                                    }
+                                                }
+                                            }
                                             out.push((bi, logits, t0.elapsed()));
                                         }
-                                        p.reclaim(bufs);
                                     }
                                     Err(e) => {
                                         err = Some(e);
@@ -1095,36 +1498,53 @@ where
                             let _ = stx.send(p.into_state());
                             match err {
                                 Some(e) => Err(e),
-                                None => Ok(out),
+                                None => Ok((out, violations, recomputes)),
                             }
-                        },
+                        }),
                     ));
                 }
             }
-            for h in consumers {
+            for (li, h) in consumers {
                 match h.join().expect("serve lane panicked") {
-                    Ok(items) => {
+                    Ok((items, violations, recomputes)) => {
                         for (bi, logits, dur) in items {
                             results[bi] = Some((logits, dur));
+                        }
+                        if violations > 0 || recomputes > 0 {
+                            lane_violations.push((li, violations, recomputes));
                         }
                     }
                     Err(e) => lane_err = Err(e),
                 }
             }
             // Recover every lane's producer state (blocking: the send
-            // happens on every exit path, including consumer aborts).
-            for (li, srx) in state_rxs {
-                for state in srx.iter().take(1) {
+            // happens on every exit path, including consumer aborts; a
+            // lane that errored before sending its standby state just
+            // yields fewer items — the channel closes with the senders).
+            for (li, srx, n) in state_rxs {
+                for state in srx.iter().take(n) {
                     arsenals[li].checkin(state);
                 }
             }
         });
+        let mut stats = sched.stats;
+        let mut suspect_lanes = Vec::new();
+        for &(li, violations, recomputes) in &lane_violations {
+            stats.integrity_violations += violations;
+            stats.integrity_recomputes += recomputes;
+            // Repeated guarded violations brand the lane suspect: the
+            // next churn drive starts it quarantined (DESIGN.md §11).
+            if violations >= 2 {
+                suspect_lanes.push(li);
+            }
+        }
+        self.suspects = suspect_lanes.clone();
         lane_err?;
         let stepped = results
             .into_iter()
             .map(|r| r.expect("serve batch missing from lane output"))
             .collect();
-        Ok(ServeDrive { stepped, primary_lane: sched.primary, stats: sched.stats })
+        Ok(ServeDrive { stepped, primary_lane: sched.primary, stats, suspect_lanes })
     }
 }
 
@@ -1192,6 +1612,15 @@ struct Lane<'e, 'g, B: ExecBackend> {
     pos: usize,
     /// Batches re-derived on the standby after an injected producer death.
     recoveries: usize,
+    /// Numeric guard rails on (DESIGN.md §11): digest-check features,
+    /// finite-check loss/gradients, recompute once on a violation.
+    guard: bool,
+    /// Shared `(site, epoch, seq)` injection budgets, present iff the
+    /// attached plan has integrity corruption sites. Every attempt — lane
+    /// step, recompute, group replay — draws from the same budget.
+    consumed: Option<&'e Mutex<HashMap<(FaultSite, u64, u64), u32>>>,
+    /// Batches recomputed after a guarded integrity violation.
+    recomputes: usize,
     cpu_time: Duration,
     cpu_by_stage: CpuStageTimes,
     batches: usize,
@@ -1207,6 +1636,7 @@ struct LaneTally {
     dropped_nodes: usize,
     dropped_edges: usize,
     recoveries: usize,
+    recomputes: usize,
 }
 
 impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
@@ -1225,6 +1655,13 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
         epoch: u64,
         batches: &[usize],
     ) -> RoundOutput {
+        // Integrity plane (DESIGN.md §11): the host-staged step gains the
+        // inject → guard → recompute-once ladder. Device-resident lanes
+        // keep the classic path — the guard/audit setters reject
+        // dev_resident, and the corruption sites do not inject there.
+        if self.dev_schema.is_none() && (self.guard || self.consumed.is_some()) {
+            return self.run_round_integrity(d, opt, model, schema, params, epoch, batches);
+        }
         let exec = StepExecutor::new(&*self.eng, model, opt);
         // Device-resident round state (DESIGN.md §7): the round's parameter
         // snapshot broadcast over the modeled interconnect (p2p), dropped
@@ -1296,6 +1733,48 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
         Ok(LaneRound { items: out, died_at })
     }
 
+    /// [`Self::run_round`] with the lane-side integrity ladder
+    /// (DESIGN.md §11). Gradients computed here have not entered the round
+    /// merge yet — the shared parameters are never at risk from a batch
+    /// this path is still chewing on — so one recompute from the lane's
+    /// own source is the entire lane-side recovery; rollback is the
+    /// group's job, at round boundaries.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round_integrity(
+        &mut self,
+        d: Dims,
+        opt: OptConfig,
+        model: ModelKind,
+        schema: &SchemaTensors,
+        params: &Params,
+        epoch: u64,
+        batches: &[usize],
+    ) -> RoundOutput {
+        let mut out = Vec::with_capacity(batches.len());
+        let mut died_at = None;
+        for (off, &b) in batches.iter().enumerate() {
+            if let Some(p) = &self.fault {
+                if p.fires(FaultSite::Lane, epoch, b as u64) > 0 {
+                    died_at = Some(off);
+                    break;
+                }
+            }
+            let (prep, from_standby) =
+                next_prep(&mut self.src, &mut self.standby, &mut self.recoveries, epoch, b)?;
+            self.cpu_time += prep.cpu_time;
+            self.cpu_by_stage += prep.cpu_by_stage;
+            self.dropped_nodes += prep.dropped_nodes();
+            self.dropped_edges += prep.dropped_edges();
+            self.batches += 1;
+            let (res, bufs) = integrity_step_host(self, d, opt, model, schema, params, epoch, b, prep)?;
+            let pos = self.pos;
+            self.pos += 1;
+            route_bufs(&mut self.src, &mut self.standby, pos, bufs, from_standby);
+            out.push(res);
+        }
+        Ok(LaneRound { items: out, died_at })
+    }
+
     fn tally(&self) -> LaneTally {
         LaneTally {
             cpu_time: self.cpu_time,
@@ -1304,6 +1783,7 @@ impl<'e, 'g, B: ExecBackend> Lane<'e, 'g, B> {
             dropped_nodes: self.dropped_nodes,
             dropped_edges: self.dropped_edges,
             recoveries: self.recoveries,
+            recomputes: self.recomputes,
         }
     }
 }
@@ -1351,6 +1831,342 @@ fn route_bufs(
         LaneSource::Feed { feed, .. } => feed.recycle(pos, bufs),
         LaneSource::Inline(p) => p.reclaim(bufs),
     }
+}
+
+/// Re-derive one batch from `(epoch_perm, seq)` for an integrity
+/// recompute: inline lanes re-run their own producer (pure in the
+/// address), feed-backed lanes use the standby armed at lane
+/// construction.
+fn reproduce<'g>(
+    src: &mut LaneSource<'g>,
+    standby: &mut Option<CpuProducer<'g>>,
+    epoch: u64,
+    b: usize,
+) -> Result<PreparedCpu> {
+    match src {
+        LaneSource::Inline(p) => Ok(p.produce(epoch, b)),
+        LaneSource::Feed { .. } => {
+            let sb = standby
+                .as_mut()
+                .ok_or_else(|| anyhow!("integrity recompute needs the armed standby producer"))?;
+            Ok(sb.produce(epoch, b))
+        }
+    }
+}
+
+/// Return a recompute attempt's buffers to whichever producer
+/// [`reproduce`] drew them from.
+fn reclaim_retry<'g>(
+    src: &mut LaneSource<'g>,
+    standby: &mut Option<CpuProducer<'g>>,
+    bufs: BatchBufs,
+) {
+    match src {
+        LaneSource::Inline(p) => p.reclaim(bufs),
+        LaneSource::Feed { .. } => {
+            standby.as_mut().expect("standby produced this retry").reclaim(bufs);
+        }
+    }
+}
+
+/// FNV-1a over the feature payload a `flip!` entry can corrupt: the miss
+/// rows when the resident cache is on (the hit rows never leave the
+/// read-only store), the full gathered matrix otherwise. `None` = nothing
+/// to digest (all-hit batch).
+fn lane_feature_digest(cached: bool, f: usize, prep: &PreparedCpu) -> Option<u64> {
+    let c = &prep.collected;
+    if cached {
+        let n = c.n_miss * f;
+        if n == 0 {
+            return None;
+        }
+        Some(fnv1a_f32(&c.miss_rows.as_f32().ok()?[..n]))
+    } else {
+        Some(fnv1a_f32(c.xs.as_f32().ok()?))
+    }
+}
+
+/// Consume one unit of the shared `(site, epoch, seq)` injection budget.
+/// Returns `false` when the plan's multiplicity at that address is spent —
+/// which is exactly what lets recompute and replay converge instead of
+/// re-poisoning themselves forever.
+fn take_budget(
+    consumed: &Mutex<HashMap<(FaultSite, u64, u64), u32>>,
+    site: FaultSite,
+    epoch: u64,
+    seq: u64,
+    planned: u32,
+) -> bool {
+    let mut map = consumed.lock().expect("integrity budget lock");
+    let used = map.entry((site, epoch, seq)).or_insert(0);
+    if *used >= planned {
+        return false;
+    }
+    *used += 1;
+    true
+}
+
+/// Deterministic `flip!` corruption of a lane's feature payload
+/// (DESIGN.md §11): XOR one mantissa bit of one element — finite, silent,
+/// detectable only by digest. Budgeted through the shared consumed map.
+fn inject_lane_flip<B: ExecBackend>(
+    lane: &mut Lane<'_, '_, B>,
+    f: usize,
+    prep: &mut PreparedCpu,
+    epoch: u64,
+    seq: u64,
+) {
+    let Some(consumed) = lane.consumed else { return };
+    let Some(plan) = lane.fault.clone() else { return };
+    let planned = plan.fires(FaultSite::Flip, epoch, seq);
+    if planned == 0 {
+        return;
+    }
+    let cached = lane.cache.is_some();
+    let c = &mut prep.collected;
+    let payload: &mut [f32] = if cached {
+        let n = c.n_miss * f;
+        if n == 0 {
+            return; // all-hit batch: nothing staged host-side to corrupt
+        }
+        match c.miss_rows.as_f32_mut() {
+            Ok(s) => &mut s[..n],
+            Err(_) => return,
+        }
+    } else {
+        match c.xs.as_f32_mut() {
+            Ok(s) => s,
+            Err(_) => return,
+        }
+    };
+    if payload.is_empty() || !take_budget(consumed, FaultSite::Flip, epoch, seq, planned) {
+        return;
+    }
+    let h = plan.target_hash(FaultSite::Flip, epoch, seq);
+    let i = (h % payload.len() as u64) as usize;
+    let bit = ((h >> 40) % 23) as u32;
+    payload[i] = f32::from_bits(payload[i].to_bits() ^ (1u32 << bit));
+}
+
+/// Deterministic `nan!` corruption of a lane's computed gradient
+/// (DESIGN.md §11): one element of `w0` becomes NaN — non-finite, so the
+/// guard's scan (or a later group audit) can see it. Budgeted through the
+/// shared consumed map.
+fn inject_lane_nan<B: ExecBackend>(
+    lane: &mut Lane<'_, '_, B>,
+    grads: &mut Params,
+    epoch: u64,
+    seq: u64,
+) {
+    let Some(consumed) = lane.consumed else { return };
+    let Some(plan) = lane.fault.clone() else { return };
+    let planned = plan.fires(FaultSite::Nan, epoch, seq);
+    if planned == 0 || grads.w0.is_empty() {
+        return;
+    }
+    if !take_budget(consumed, FaultSite::Nan, epoch, seq, planned) {
+        return;
+    }
+    let h = plan.target_hash(FaultSite::Nan, epoch, seq);
+    grads.w0[(h % grads.w0.len() as u64) as usize] = f32::NAN;
+}
+
+/// One host-staged lane attempt: inject the planned corruptions, run the
+/// guard checks, compute. `Violation` means the guard refused the result
+/// before it could enter the round merge — nothing shared was touched.
+enum LaneAttempt {
+    Clean((StepResult, Params), BatchBufs),
+    Violation(BatchBufs),
+}
+
+fn lane_attempt<B: ExecBackend>(
+    lane: &mut Lane<'_, '_, B>,
+    d: Dims,
+    opt: OptConfig,
+    model: ModelKind,
+    schema: &SchemaTensors,
+    params: &Params,
+    epoch: u64,
+    b: usize,
+    mut prep: PreparedCpu,
+) -> Result<LaneAttempt> {
+    let guard = lane.guard;
+    let expect = if guard { lane_feature_digest(lane.cache.is_some(), d.f, &prep) } else { None };
+    inject_lane_flip(lane, d.f, &mut prep, epoch, b as u64);
+    if let Some(e) = expect {
+        if lane_feature_digest(lane.cache.is_some(), d.f, &prep) != Some(e) {
+            return Ok(LaneAttempt::Violation(prep.into_bufs()));
+        }
+    }
+    lane.eng.fault_cursor(epoch, b as u64);
+    let exec = StepExecutor::new(&*lane.eng, model, opt);
+    let (batch, spent) =
+        assemble_batch(&*lane.eng, &d, schema, lane.cache, &mut lane.assemble, prep)?;
+    let (sres, mut g) = exec.grad_step(params, schema, &batch)?;
+    inject_lane_nan(lane, &mut g, epoch, b as u64);
+    if guard && !(sres.loss.is_finite() && g.is_finite()) {
+        return Ok(LaneAttempt::Violation(spent.reclaim(batch)));
+    }
+    Ok(LaneAttempt::Clean((sres, g), spent.reclaim(batch)))
+}
+
+/// The lane-side integrity ladder (DESIGN.md §11): attempt the batch; on a
+/// guarded violation recompute it once from the lane's own source (shared
+/// budgets make a single-multiplicity fault vanish on retry); a second
+/// violation at the same address is a hard error — persistent corruption,
+/// not a transient. Returns the **first** attempt's buffers so the caller
+/// routes them exactly as the classic path would (feed credit accounting
+/// must not notice recovery); retry buffers go back to the recompute
+/// source internally.
+#[allow(clippy::too_many_arguments)]
+fn integrity_step_host<B: ExecBackend>(
+    lane: &mut Lane<'_, '_, B>,
+    d: Dims,
+    opt: OptConfig,
+    model: ModelKind,
+    schema: &SchemaTensors,
+    params: &Params,
+    epoch: u64,
+    b: usize,
+    prep: PreparedCpu,
+) -> Result<((StepResult, Params), BatchBufs)> {
+    let mut prep = Some(prep);
+    let mut banked: Option<BatchBufs> = None;
+    for attempt in 0..2u32 {
+        let p = match prep.take() {
+            Some(p) => p,
+            None => reproduce(&mut lane.src, &mut lane.standby, epoch, b)?,
+        };
+        match lane_attempt(lane, d, opt, model, schema, params, epoch, b, p)? {
+            LaneAttempt::Clean(res, bufs) => {
+                if attempt == 0 {
+                    banked = Some(bufs);
+                } else {
+                    reclaim_retry(&mut lane.src, &mut lane.standby, bufs);
+                }
+                return Ok((res, banked.expect("first attempt banked its buffers")));
+            }
+            LaneAttempt::Violation(bufs) => {
+                if attempt == 0 {
+                    banked = Some(bufs);
+                } else {
+                    reclaim_retry(&mut lane.src, &mut lane.standby, bufs);
+                }
+                lane.eng.counters().borrow_mut().integrity_violations += 1;
+                if attempt == 0 {
+                    lane.recomputes += 1;
+                }
+            }
+        }
+    }
+    bail!(
+        "lane batch (epoch {epoch}, batch {b}) failed its integrity check even after \
+         a recompute: persistent corruption, not a transient"
+    )
+}
+
+/// Group rollback + replay (DESIGN.md §11): restore the last good
+/// round-boundary snapshot and re-run rounds `[snap_mark, upto)`
+/// sequentially on one lane — same round boundaries, same batch-ordered
+/// merge, same mean-gradient SGD — so a clean replay lands bitwise on the
+/// fault-free trajectory (replicas are a scheduling choice, §4). Replayed
+/// injections draw from the same shared budgets as the original attempts;
+/// a still-planned multiplicity re-poisons the replay and the caller's
+/// audit loop goes around again until the budget is spent or exhausted.
+#[allow(clippy::too_many_arguments)]
+fn group_rollback_replay<'g, B: ExecBackend>(
+    lane: &mut Lane<'_, 'g, B>,
+    replayer: &mut CpuProducer<'g>,
+    d: Dims,
+    opt: OptConfig,
+    model: ModelKind,
+    schema: &SchemaTensors,
+    params: &mut Params,
+    snapshot: &Params,
+    results: &mut [(f64, f64, usize)],
+    epoch: u64,
+    snap_mark: usize,
+    upto: usize,
+    round: usize,
+    lr: f32,
+) -> Result<()> {
+    params.copy_from(snapshot);
+    let round = round.max(1);
+    let mut r0 = snap_mark;
+    while r0 < upto {
+        let len = round.min(upto - r0);
+        let mut gsum: Option<Params> = None;
+        let mut count = 0usize;
+        for b in r0..r0 + len {
+            let mut done = false;
+            for retry in 0..2u32 {
+                let prep = replayer.produce(epoch, b);
+                match lane_attempt(lane, d, opt, model, schema, params, epoch, b, prep)? {
+                    LaneAttempt::Clean((sres, g), bufs) => {
+                        replayer.reclaim(bufs);
+                        results[b] = (sres.loss as f64, sres.ncorrect as f64, sres.n_seed);
+                        match gsum.as_mut() {
+                            Some(acc) => acc.add_assign(&g),
+                            None => gsum = Some(g),
+                        }
+                        count += 1;
+                        done = true;
+                    }
+                    LaneAttempt::Violation(bufs) => {
+                        replayer.reclaim(bufs);
+                        lane.eng.counters().borrow_mut().integrity_violations += 1;
+                        if retry == 0 {
+                            lane.recomputes += 1;
+                        }
+                    }
+                }
+                if done {
+                    break;
+                }
+            }
+            ensure!(
+                done,
+                "replayed batch (epoch {epoch}, batch {b}) failed its integrity check \
+                 even after a recompute: persistent corruption, not a transient"
+            );
+        }
+        if let Some(g) = gsum {
+            params.sgd(&g, lr / count as f32);
+        }
+        r0 += len;
+    }
+    Ok(())
+}
+
+/// Deterministic `nan!` corruption of a serve batch's logits
+/// (DESIGN.md §11), addressed at `(epoch 0, seq = coalesced batch index)`
+/// and budgeted through the shared consumed map. Only the admitted
+/// (non-shadow) execution of a batch injects — shadow lanes recompute the
+/// same batch concurrently, and racing them for the budget would make the
+/// injection site depend on thread interleaving.
+fn inject_logit_nan(
+    plan: Option<&FaultPlan>,
+    consumed: Option<&Mutex<HashMap<(FaultSite, u64, u64), u32>>>,
+    logits: &mut HostTensor,
+    bi: usize,
+) {
+    let (Some(plan), Some(consumed)) = (plan, consumed) else { return };
+    let planned = plan.fires(FaultSite::Nan, 0, bi as u64);
+    if planned == 0 {
+        return;
+    }
+    let Ok(s) = logits.as_f32_mut() else { return };
+    if s.is_empty() || !take_budget(consumed, FaultSite::Nan, 0, bi as u64, planned) {
+        return;
+    }
+    let h = plan.target_hash(FaultSite::Nan, 0, bi as u64);
+    let i = (h % s.len() as u64) as usize;
+    s[i] = f32::NAN;
+}
+
+/// The serve guard's scan: every logit finite.
+fn logits_finite(t: &HostTensor) -> bool {
+    t.as_f32().map(|s| s.iter().all(|x| x.is_finite())).unwrap_or(true)
 }
 
 /// Compute the global batches `slots` that a dead lane left behind: preps
@@ -1548,7 +2364,7 @@ mod tests {
     #[test]
     fn churn_plan_without_lane_hard_is_exactly_round_robin() {
         for (n, lanes) in [(10usize, 2usize), (7, 3), (5, 1), (0, 2)] {
-            let sched = plan_churn(n, lanes, None, DEFAULT_PROBATION).unwrap();
+            let sched = plan_churn(n, lanes, None, DEFAULT_PROBATION, &[]).unwrap();
             assert!(sched.stats.is_quiet());
             assert_eq!(sched.primary, (0..n).map(|b| b % lanes).collect::<Vec<_>>());
             for (l, slots) in sched.lanes.iter().enumerate() {
@@ -1565,7 +2381,7 @@ mod tests {
         // batch 1) is quarantined, batch 1 re-dispatches to lane 0, lane 1
         // shadows batches 2..2+probation and then owns batch bi%2 again.
         let plan = FaultPlan::parse("lane!@0:1", 7).unwrap();
-        let sched = plan_churn(6, 2, Some(&plan), 2).unwrap();
+        let sched = plan_churn(6, 2, Some(&plan), 2, &[]).unwrap();
         assert_eq!(sched.primary, vec![0, 0, 0, 0, 0, 1]);
         assert_eq!(sched.lanes[0], vec![(0, false), (1, false), (2, false), (3, false), (4, false)]);
         assert_eq!(sched.lanes[1], vec![(2, true), (3, true), (5, false)]);
@@ -1581,7 +2397,7 @@ mod tests {
         // x2 multiplicity at one seq kills two successive candidates; with
         // 3 lanes one survivor remains and takes the batch.
         let plan = FaultPlan::parse("lane!@0:0x2", 7).unwrap();
-        let sched = plan_churn(2, 3, Some(&plan), 1).unwrap();
+        let sched = plan_churn(2, 3, Some(&plan), 1, &[]).unwrap();
         assert_eq!(sched.primary[0], 2);
         assert_eq!(sched.stats.lane_quarantines, 2);
         assert_eq!(sched.stats.lane_redispatches, 2);
@@ -1591,15 +2407,34 @@ mod tests {
 
         // The same multiplicity against 2 lanes leaves nothing healthy:
         // the typed error names the stranded batch.
-        let err = plan_churn(2, 2, Some(&plan), 1).unwrap_err();
+        let err = plan_churn(2, 2, Some(&plan), 1, &[]).unwrap_err();
         let no = err.downcast_ref::<NoHealthyLanes>().expect("typed error");
         assert_eq!(*no, NoHealthyLanes { batch: 0, lanes: 2 });
     }
 
     #[test]
+    fn churn_plan_pre_quarantines_suspect_lanes() {
+        // A lane branded suspect by the previous drive's integrity guard
+        // starts quarantined: batch 0 re-routes around it, it shadows a
+        // probation and then re-enters the rotation. Counted as a
+        // quarantine but not a re-dispatch (no batch was placed on it).
+        let sched = plan_churn(5, 2, None, 2, &[0]).unwrap();
+        assert_eq!(sched.primary, vec![1, 1, 1, 1, 0]);
+        assert_eq!(sched.lanes[0], vec![(0, true), (1, true), (4, false)]);
+        let s = sched.stats;
+        assert_eq!(
+            (s.lane_quarantines, s.lane_readmissions, s.shadow_batches, s.lane_redispatches),
+            (1, 1, 2, 0)
+        );
+        // Out-of-range and duplicate suspects are ignored, not errors.
+        let sched = plan_churn(2, 2, None, 1, &[7, 1, 1]).unwrap();
+        assert_eq!(sched.stats.lane_quarantines, 1);
+    }
+
+    #[test]
     fn churn_plan_single_lane_kill_is_unservable() {
         let plan = FaultPlan::parse("lane!@0:0", 7).unwrap();
-        let err = plan_churn(1, 1, Some(&plan), 1).unwrap_err();
+        let err = plan_churn(1, 1, Some(&plan), 1, &[]).unwrap_err();
         assert!(err.downcast_ref::<NoHealthyLanes>().is_some());
     }
 }

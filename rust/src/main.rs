@@ -11,6 +11,9 @@
 //!   counts `[flags]`               measured vs predicted kernel counts
 //!   calibrate `[flags]`            machine peaks (compute / bandwidth / launch)
 //!   profile `[flags]`              per-module time breakdown of one step
+//!   verify-ckpt PATH               audit a checkpoint offline: CRC, header,
+//!                                  shape table, params digest — no graph
+//!                                  or backend is loaded (DESIGN.md §11)
 //!
 //! Common flags: --dataset aifb|mutag|bgs|am|tiny --model rgcn|rgat
 //!   --mode base|R|R+M|R+O+P|hifuse|hifuse+stacked|resident --epochs N
@@ -51,6 +54,12 @@
 //!   stream; offered load becomes a pure function of (seed, N))
 //!   --probation N (serve: shadow batches a lane quarantined by a `lane!`
 //!   fault must complete before re-admission; default 2)
+//!   --guard (train + serve, sim backend: per-batch numeric guard rails —
+//!   feature-digest check before the step, finite loss/grad after it;
+//!   violations enter the recompute-or-rollback ladder — DESIGN.md §11)
+//!   --audit-every N (train, sim backend: periodic FNV-1a digest audits of
+//!   params, cache slab, and replica lane overrides every N batches;
+//!   a failed audit rolls back to the last good snapshot and replays)
 //!
 //! The default `sim` backend is fully self-contained (no AOT artifacts, no
 //! Python); `--backend pjrt` needs a build with `--features pjrt` plus
@@ -87,6 +96,7 @@ fn main() -> Result<()> {
         "counts" => dispatch(rest, Action::Counts),
         "calibrate" => dispatch(rest, Action::Calibrate),
         "profile" => dispatch(rest, Action::Profile),
+        "verify-ckpt" => cmd_verify_ckpt(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -99,6 +109,7 @@ fn print_usage() {
     println!(
         "repro — HiFuse-RS launcher\n\
          usage: repro <datasets|train|serve|counts|calibrate|profile> [--flag value ...]\n\
+         \x20      repro verify-ckpt PATH\n\
          \n\
          subcommands:\n\
          \x20 datasets    print Table 2 (generator statistics)\n\
@@ -109,6 +120,8 @@ fn print_usage() {
          \x20 counts      measured vs predicted kernel counts\n\
          \x20 calibrate   machine peaks (compute / bandwidth / launch overhead)\n\
          \x20 profile     per-module time breakdown of one training step\n\
+         \x20 verify-ckpt audit a checkpoint offline: CRC, header, shape\n\
+         \x20             table, params digest — no graph load\n\
          \n\
          common flags:\n\
          \x20 --dataset aifb|mutag|bgs|am|tiny    --model rgcn|rgat\n\
@@ -127,8 +140,16 @@ fn print_usage() {
          \x20               checkpoints; env vars remain as fallback)\n\
          \x20 --fault-spec S --fault-seed N (train + serve, sim: seeded\n\
          \x20               fault injection — site@E:S[xN] / site~P over\n\
-         \x20               dispatch|producer|lane; recovery keeps the\n\
-         \x20               trajectory bit-identical — DESIGN.md §9)\n\
+         \x20               crash sites dispatch|producer|lane|lane! and\n\
+         \x20               corruption sites flip!|nan!|wire!; recovery\n\
+         \x20               keeps the trajectory bit-identical — DESIGN.md\n\
+         \x20               §9, §11)\n\
+         \x20 --guard (train + serve, sim: per-batch numeric guard rails —\n\
+         \x20               digest-checked staging, finite loss/grad;\n\
+         \x20               violations recompute, then roll back)\n\
+         \x20 --audit-every N (train, sim: periodic digest audits of\n\
+         \x20               params / cache slab / replica lanes; failed\n\
+         \x20               audits roll back to the last good snapshot)\n\
          serve flags:\n\
          \x20 --rate F (virtual req/s)  --requests N  --coalesce-window T\n\
          \x20 --record-trace P  --replay-trace P (deterministic replay:\n\
@@ -208,6 +229,12 @@ fn dispatch(args: &[String], action: Action) -> Result<()> {
             );
         }
     }
+    if cfg.guard && !matches!(action, Action::Train | Action::Serve) {
+        bail!("--guard is only supported by the `train` and `serve` subcommands");
+    }
+    if cfg.audit_every > 0 && !matches!(action, Action::Train) {
+        bail!("--audit-every is only supported by the `train` subcommand");
+    }
     if cfg.max_queue.is_some() && !matches!(action, Action::Serve) {
         bail!("--max-queue is only supported by the `serve` subcommand");
     }
@@ -286,6 +313,15 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
     if let Some(plan) = cfg.fault_plan()? {
         group.set_fault_plan(Arc::new(plan));
     }
+    if cfg.guard {
+        group.set_guard(true)?;
+    }
+    if cfg.audit_every > 0 {
+        group.set_audit_every(cfg.audit_every)?;
+    }
+    let integrity_on = cfg.guard
+        || cfg.audit_every > 0
+        || cfg.fault_plan()?.is_some_and(|p| p.has_integrity_site());
     let threads_per = replica_thread_budget(cfg.train.threads, group.replicas());
     load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
     println!(
@@ -323,8 +359,18 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
                 m.group.dispatch_retries, m.group.producer_recoveries, m.group.lane_failovers,
             );
         }
+        if integrity_on {
+            println!(
+                "  integrity: violations {} | retransmits {} | recomputes {} | rollbacks {} | audits {}",
+                m.group.integrity_violations,
+                m.group.integrity_retransmits,
+                m.group.integrity_recomputes,
+                m.group.integrity_rollbacks,
+                m.group.audits,
+            );
+        }
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {} (per replica: {})",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | params 0x{:016x} | kernels {} (per replica: {})",
             m.group.loss,
             m.group.acc,
             m.group.wall,
@@ -333,10 +379,12 @@ fn cmd_train_replicas(cfg: &RunConfig, n: usize) -> Result<()> {
             m.group.h2d_bytes as f64 / (1024.0 * 1024.0),
             m.group.d2h_bytes as f64 / (1024.0 * 1024.0),
             format!("{cache_note}{p2p_note}"),
+            group.params.digest(),
             m.group.kernels_total,
             per_rep.join("/"),
         );
     }
+    println!("final params digest 0x{:016x}", group.params.digest());
     save_ckpt(cfg.save_ckpt.as_deref(), &group.params)?;
     Ok(())
 }
@@ -379,6 +427,9 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     }
     if let Some(plan) = cfg.fault_plan()? {
         group.set_fault_plan(Arc::new(plan));
+    }
+    if cfg.guard {
+        group.set_guard(true)?;
     }
     load_ckpt(cfg.load_ckpt.as_deref(), &mut group.params)?;
     let trace = match &cfg.replay_trace {
@@ -491,6 +542,14 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
             s.lane_redispatches,
         );
     }
+    if cfg.guard || out.churn.integrity_violations > 0 {
+        println!(
+            "integrity: violations {} | recomputes {} | suspect lanes {:?}",
+            out.churn.integrity_violations,
+            out.churn.integrity_recomputes,
+            out.suspect_lanes,
+        );
+    }
     println!("predictions digest 0x{:016x}", out.prediction_digest()?);
     println!(
         "latency p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | {:.0} req/s (virtual)",
@@ -509,6 +568,31 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         ps.grown,
     );
     save_ckpt(cfg.save_ckpt.as_deref(), &group.params)?;
+    Ok(())
+}
+
+/// `repro verify-ckpt PATH` — offline checkpoint audit (DESIGN.md §11):
+/// the exact validation a load runs (magic, version, truncation, shapes,
+/// CRC) plus the header, shape table, and params digest, with no graph or
+/// backend construction. Exits nonzero on any corruption.
+fn cmd_verify_ckpt(args: &[String]) -> Result<()> {
+    let [path] = args else {
+        bail!("usage: repro verify-ckpt PATH (exactly one path, no flags)");
+    };
+    let r = hifuse::models::checkpoint::inspect(Path::new(path))?;
+    let (rpad, f, h, c) = r.dims;
+    println!(
+        "checkpoint {path}: v{} | {} bytes | crc {}",
+        r.version,
+        r.bytes,
+        if r.crc_checked { "ok" } else { "absent (v1 predates the trailer)" },
+    );
+    println!("cursor: epoch {} batch {}", r.cursor.epoch, r.cursor.batch);
+    println!("dims: rpad {rpad} | f {f} | h {h} | c {c}");
+    for (name, len) in &r.tensors {
+        println!("  {name:8} {len:>10} f32");
+    }
+    println!("params digest 0x{:016x}", r.params_digest);
     Ok(())
 }
 
@@ -639,6 +723,15 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
     if let Some(plan) = cfg.fault_plan()? {
         tr.set_fault_plan(Arc::new(plan));
     }
+    if cfg.guard {
+        tr.set_guard(true)?;
+    }
+    if cfg.audit_every > 0 {
+        tr.set_audit_every(cfg.audit_every)?;
+    }
+    let integrity_on = cfg.guard
+        || cfg.audit_every > 0
+        || cfg.fault_plan()?.is_some_and(|p| p.has_integrity_site());
     load_ckpt(cfg.load_ckpt.as_deref(), &mut tr.params)?;
     for epoch in 0..cfg.train.epochs as u64 {
         let m = tr.train_epoch(epoch)?;
@@ -647,14 +740,31 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
         } else {
             String::new()
         };
+        // Resident runs keep authoritative params on-device; the host
+        // mirror is stale mid-run, so the per-epoch digest would lie.
+        let digest_note = if cfg.opt.dev_resident {
+            String::new()
+        } else {
+            format!(" | params 0x{:016x}", tr.params.digest())
+        };
         if cfg.fault_spec.is_some() {
             println!(
                 "  faults: dispatch retries {} | producer recoveries {}",
                 m.dispatch_retries, m.producer_recoveries,
             );
         }
+        if integrity_on {
+            println!(
+                "  integrity: violations {} | retransmits {} | recomputes {} | rollbacks {} | audits {}",
+                m.integrity_violations,
+                m.integrity_retransmits,
+                m.integrity_recomputes,
+                m.integrity_rollbacks,
+                m.audits,
+            );
+        }
         println!(
-            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{} | kernels {}",
+            "epoch {epoch:>3} | loss {:.4} | acc {:.3} | wall {:>8.1?} | cpu {:>8.1?} (s/s/c {:.1?}/{:.1?}/{:.1?}) | gpu {:>8.1?} | h2d {:.1} MiB | d2h {:.1} MiB{}{} | kernels {}",
             m.loss,
             m.acc,
             m.wall,
@@ -666,12 +776,14 @@ fn cmd_train<B: ExecBackend>(eng: &B, cfg: &RunConfig) -> Result<()> {
             m.h2d_bytes as f64 / (1024.0 * 1024.0),
             m.d2h_bytes as f64 / (1024.0 * 1024.0),
             cache_note,
+            digest_note,
             m.kernels_total
         );
     }
     // Device-resident runs keep the authoritative parameters on-device;
     // read them back before checkpointing (no-op in host-staged modes).
     tr.sync_params()?;
+    println!("final params digest 0x{:016x}", tr.params.digest());
     save_ckpt(cfg.save_ckpt.as_deref(), &tr.params)?;
     Ok(())
 }

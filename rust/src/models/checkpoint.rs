@@ -207,6 +207,59 @@ pub fn load_with_cursor(path: &Path) -> Result<(Params, Cursor)> {
     decode(&data).with_context(|| format!("loading checkpoint {path:?}"))
 }
 
+/// Offline audit report from [`inspect`] (`repro verify-ckpt`, DESIGN.md
+/// §11): everything the file claims about itself plus the derived params
+/// digest — produced without loading a graph or a backend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InspectReport {
+    /// Format version of the file (1 or 2).
+    pub version: u32,
+    /// `true` iff the file carries — and passed — a CRC32 trailer (v2+).
+    pub crc_checked: bool,
+    /// Resume cursor (v1 files report the default).
+    pub cursor: Cursor,
+    /// The stored dims `(rpad, f, h, c)`.
+    pub dims: (usize, usize, usize, usize),
+    /// Name and element count of each parameter tensor, in file order.
+    pub tensors: Vec<(&'static str, usize)>,
+    /// FNV-1a digest over every tensor in checkpoint order — the same
+    /// digest `repro train` prints, so a saved checkpoint can be matched
+    /// to the run that produced it.
+    pub params_digest: u64,
+    /// Total image size in bytes.
+    pub bytes: usize,
+}
+
+/// Audit a checkpoint without touching graph or backend state: run the
+/// exact validation [`load`] runs (magic, version, truncation, per-tensor
+/// shapes, CRC) and report the header, shape table, and params digest.
+/// Any corruption is the same typed [`CheckpointError`] a load would hit.
+pub fn inspect(path: &Path) -> Result<InspectReport> {
+    let data = std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+    let bytes = data.len();
+    let (p, cursor) = decode(&data).with_context(|| format!("auditing checkpoint {path:?}"))?;
+    // decode() validated the header, so the version field is present.
+    let version = u32::from_le_bytes(
+        data[MAGIC.len()..MAGIC.len() + 4].try_into().expect("four version bytes"),
+    );
+    Ok(InspectReport {
+        version,
+        crc_checked: version >= 2,
+        cursor,
+        dims: (p.rpad, p.f, p.h, p.c),
+        tensors: vec![
+            ("w0", p.w0.len()),
+            ("w1", p.w1.len()),
+            ("a_src0", p.a_src0.len()),
+            ("a_dst0", p.a_dst0.len()),
+            ("a_src1", p.a_src1.len()),
+            ("a_dst1", p.a_dst1.len()),
+        ],
+        params_digest: p.digest(),
+        bytes,
+    })
+}
+
 fn decode(data: &[u8]) -> Result<(Params, Cursor)> {
     let mut r = Reader { data, at: 0 };
     if r.take(MAGIC.len(), "magic").map_err(anyhow::Error::new)? != MAGIC {
@@ -283,6 +336,37 @@ mod tests {
         let mut tmp = path.as_os_str().to_os_string();
         tmp.push(".tmp");
         assert!(!std::path::Path::new(&tmp).exists(), "atomic save left its tmp file");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn inspect_reports_header_shapes_and_digest() {
+        let p = Params::init(2, 4, 8, 2, 31);
+        let path = std::env::temp_dir().join("hifuse_ckpt_inspect.bin");
+        save_at(&p, Cursor { epoch: 1, batch: 5 }, &path).unwrap();
+        let r = inspect(&path).unwrap();
+        assert_eq!(r.version, 2);
+        assert!(r.crc_checked);
+        assert_eq!(r.cursor, Cursor { epoch: 1, batch: 5 });
+        assert_eq!(r.dims, (2, 4, 8, 2));
+        assert_eq!(r.tensors[0], ("w0", 2 * 4 * 8));
+        assert_eq!(r.tensors.len(), 6);
+        assert_eq!(r.params_digest, p.digest(), "inspect digest == live params digest");
+        assert_eq!(r.bytes, std::fs::read(&path).unwrap().len());
+
+        // A flipped bit inside a tensor must fail the audit, typed.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = inspect(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CheckpointError>(),
+                Some(CheckpointError::CrcMismatch { .. })
+            ),
+            "expected CRC mismatch, got {err:#}"
+        );
         std::fs::remove_file(path).ok();
     }
 

@@ -146,6 +146,46 @@ impl Params {
             .sum();
         s.sqrt()
     }
+
+    /// Order-sensitive FNV-1a digest over every tensor's bit patterns, in
+    /// the fixed order `w0, w1, a_src0, a_dst0, a_src1, a_dst1` — the same
+    /// order the checkpoint codec serializes. Two parameter sets digest
+    /// equal iff they are bitwise equal, so `repro train`'s per-epoch
+    /// `params digest` line, `repro verify-ckpt`, and the replica
+    /// cross-lane audit (DESIGN.md §11) are all one-grep comparable.
+    pub fn digest(&self) -> u64 {
+        let mut h = crate::util::digest::FNV_OFFSET;
+        for t in [&self.w0, &self.w1, &self.a_src0, &self.a_dst0, &self.a_src1, &self.a_dst1] {
+            h = crate::util::fnv1a_extend(h, t);
+        }
+        h
+    }
+
+    /// `true` iff every element of every tensor is finite — the
+    /// `--audit-every` parameter scan (a NaN/Inf gradient that reached the
+    /// optimizer spreads here, and nowhere cheaper to catch post-apply).
+    pub fn is_finite(&self) -> bool {
+        [&self.w0, &self.w1, &self.a_src0, &self.a_dst0, &self.a_src1, &self.a_dst1]
+            .iter()
+            .all(|t| t.iter().all(|x| x.is_finite()))
+    }
+
+    /// Copy `other`'s values into `self`, reusing every existing
+    /// allocation (`Vec::clone_from` keeps capacity) — the rollback
+    /// snapshot/restore primitive, allocation-free once the snapshot
+    /// exists.
+    pub fn copy_from(&mut self, other: &Params) {
+        self.rpad = other.rpad;
+        self.f = other.f;
+        self.h = other.h;
+        self.c = other.c;
+        self.w0.clone_from(&other.w0);
+        self.w1.clone_from(&other.w1);
+        self.a_src0.clone_from(&other.a_src0);
+        self.a_dst0.clone_from(&other.a_dst0);
+        self.a_src1.clone_from(&other.a_src1);
+        self.a_dst1.clone_from(&other.a_dst1);
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +231,25 @@ mod tests {
         }
         // Untouched params stay put.
         assert_eq!(p.a_src0, Params::init(2, 4, 8, 2, 3).a_src0);
+    }
+
+    #[test]
+    fn digest_finiteness_and_copy_from_track_bit_identity() {
+        let p = Params::init(2, 4, 8, 2, 3);
+        let q = Params::init(2, 4, 8, 2, 3);
+        assert_eq!(p.digest(), q.digest(), "equal params must digest equal");
+        let mut r = p.clone();
+        r.a_dst1[0] = f32::from_bits(r.a_dst1[0].to_bits() ^ 1);
+        assert_ne!(p.digest(), r.digest(), "one flipped bit must move the digest");
+        assert!(p.is_finite());
+        r.w1[3] = f32::NAN;
+        assert!(!r.is_finite());
+        // copy_from restores bit identity without reallocating.
+        let cap = r.w0.capacity();
+        r.copy_from(&p);
+        assert_eq!(r.digest(), p.digest());
+        assert!(r.is_finite());
+        assert_eq!(r.w0.capacity(), cap, "copy_from must reuse the allocation");
     }
 
     #[test]

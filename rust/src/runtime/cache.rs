@@ -31,7 +31,7 @@ use anyhow::{ensure, Result};
 use crate::graph::HeteroGraph;
 use crate::util::HostTensor;
 
-use super::ExecBackend;
+use super::{DevBuf, ExecBackend};
 
 /// The backend-agnostic half of the cache: packed hot-vertex rows plus the
 /// dense vertex→cache-slot index. Immutable and `Sync`; shared via `Arc`.
@@ -180,6 +180,26 @@ impl<B: ExecBackend> CacheHandle<B> {
         let dev = eng.upload(&staged, store.rows_cached() * store.f)?;
         Ok(CacheHandle { store, dev })
     }
+
+    /// `--audit-every` slab audit (DESIGN.md §11): FNV-1a digest of the
+    /// device copy's occupied prefix against the immutable host store. On a
+    /// mismatch the slab is re-staged from the store (one fresh H2D upload
+    /// replaces the corrupted device copy) and `Ok(false)` is returned so
+    /// the caller can count the violation; a clean slab returns `Ok(true)`.
+    /// Modeled as a device-side digest kernel: the readback is not charged
+    /// to the D2H channel, matching the residency contract.
+    pub fn verify_or_restage(&mut self, eng: &B) -> Result<bool> {
+        let occupied = self.store.rows_cached() * self.store.f;
+        let host = self.dev.to_host()?;
+        let dev_rows = host.as_f32()?;
+        let expect = crate::util::fnv1a_f32(&self.store.rows[..occupied]);
+        if crate::util::fnv1a_f32(&dev_rows[..occupied]) == expect {
+            return Ok(true);
+        }
+        let staged = self.store.as_tensor();
+        self.dev = eng.upload(&staged, occupied)?;
+        Ok(false)
+    }
 }
 
 /// SplitMix64 of `(seed, type, vertex)` — the seeded tiebreak of the
@@ -259,6 +279,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn verify_or_restage_detects_and_repairs_slab_corruption() {
+        use crate::runtime::{SimBackend, SimDev};
+        let g = tiny_graph(5);
+        let eng = SimBackend::builtin("tiny").unwrap();
+        let store = Arc::new(ResidentStore::build(&g, 0.25, eng.cst("CSLOTS"), 42));
+        assert!(store.rows_cached() > 0);
+        let mut handle = CacheHandle::upload(&eng, store.clone()).unwrap();
+        assert!(handle.verify_or_restage(&eng).unwrap(), "fresh slab must verify clean");
+        // Corrupt one mantissa bit of the device copy, as a wire fault
+        // landing after the one-time staging upload would.
+        let mut slab = handle.dev.to_host().unwrap().as_f32().unwrap().to_vec();
+        slab[3] = f32::from_bits(slab[3].to_bits() ^ 1);
+        let shape = [store.cslots(), store.feat_dim()];
+        handle.dev = SimDev(HostTensor::f32(slab, &shape));
+        assert!(!handle.verify_or_restage(&eng).unwrap(), "flipped bit must be caught");
+        // The restage replaced the device copy with clean store bytes.
+        assert!(handle.verify_or_restage(&eng).unwrap());
+        let repaired = handle.dev.to_host().unwrap();
+        let occupied = store.rows_cached() * store.feat_dim();
+        assert_eq!(&repaired.as_f32().unwrap()[..occupied], &store.rows[..occupied]);
     }
 
     #[test]

@@ -153,6 +153,20 @@ pub struct Counters {
     /// `--fault-spec` this equals the number of planned dispatch failures
     /// actually exercised; it is 0 on every fault-free run.
     pub dispatch_retries: u64,
+    /// Data-integrity violations detected since the last reset (DESIGN.md
+    /// §11): non-finite loss/gradient scans tripped by the per-batch
+    /// `--guard`, digest mismatches found by `--audit-every` parameter /
+    /// cache-slab / cross-lane audits, and corrupted-payload detections on
+    /// the upload channel. Like `dispatch_retries`, only injected faults
+    /// (`flip!`/`nan!`/`wire!`) produce these today, so under a fault spec
+    /// this equals the number of corruptions actually caught; 0 on every
+    /// clean run.
+    pub integrity_violations: u64,
+    /// Corrupted H2D/p2p payloads the guarded upload path dropped and
+    /// re-sent clean (the `wire!` site's recovery action). Always ≤
+    /// `integrity_violations`; 0 when the guard is off (corruption then
+    /// lands silently) or no wire faults fired.
+    pub integrity_retransmits: u64,
     /// Snapshot of the backend's buffer-arena traffic (cumulative since
     /// backend construction; refreshed by the sim backend on every
     /// dispatch, all-zero on backends without an arena).
@@ -176,6 +190,8 @@ impl Counters {
         self.cache_hits = 0;
         self.cache_misses = 0;
         self.dispatch_retries = 0;
+        self.integrity_violations = 0;
+        self.integrity_retransmits = 0;
         self.epoch_start = Some(std::time::Instant::now());
     }
 
@@ -328,6 +344,17 @@ mod tests {
         assert!((c.cache_hit_rate() - 0.75).abs() < 1e-12);
         c.reset();
         assert_eq!((c.cache_hits, c.cache_misses), (0, 0));
+    }
+
+    #[test]
+    fn integrity_counters_reset_with_the_window() {
+        let mut c = Counters::new(false);
+        c.reset();
+        c.integrity_violations += 3;
+        c.integrity_retransmits += 1;
+        assert_eq!((c.integrity_violations, c.integrity_retransmits), (3, 1));
+        c.reset();
+        assert_eq!((c.integrity_violations, c.integrity_retransmits), (0, 0));
     }
 
     #[test]

@@ -199,6 +199,14 @@ pub trait ExecBackend {
     /// without an attached plan (the default implementation is empty).
     fn fault_cursor(&self, _epoch: u64, _seq: u64) {}
 
+    /// Arm or disarm the backend-side integrity guard (DESIGN.md §11).
+    /// With the guard on, a planned `wire!` corruption of an upload payload
+    /// is caught by the transfer-level checksum and the payload is re-sent
+    /// clean ([`Counters::integrity_retransmits`]); with it off the
+    /// corrupted payload lands silently. No-op on backends without fault
+    /// injection (the default implementation is empty).
+    fn set_integrity_guard(&self, _on: bool) {}
+
     /// Place a host tensor on the device as an explicit H2D copy outside
     /// any dispatch, transferring only the leading `valid_elems` elements —
     /// the static-shape analogue of a partial `cudaMemcpyH2D` into a

@@ -15,7 +15,7 @@
 //! functions; they were validated against `jax.vjp` of the Python oracles
 //! to f32 round-off, and the finite-difference tests below pin them down.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -79,6 +79,10 @@ pub struct SimBackend {
     /// `None` (the default) keeps the per-dispatch probe to one borrow and
     /// an `Option` check — the plane is zero-cost when off.
     fault: RefCell<Option<FaultState>>,
+    /// Transfer-level integrity guard (DESIGN.md §11): with it on, a
+    /// planned `wire!` corruption is caught by the modeled payload checksum
+    /// and re-sent clean; off, the corrupted payload lands silently.
+    integrity_guard: Cell<bool>,
 }
 
 /// Where the next dispatches are addressed for injection, and whether the
@@ -88,6 +92,10 @@ struct FaultState {
     epoch: u64,
     seq: u64,
     armed: bool,
+    /// A planned `wire!` corruption targets the first f32 upload payload
+    /// after the cursor moves (i32 index uploads are skipped: corrupting an
+    /// index is a loud OOB, not silent data damage).
+    wire_armed: bool,
 }
 
 impl SimBackend {
@@ -118,6 +126,7 @@ impl SimBackend {
             pool,
             arena: RefCell::new(Arena::new()),
             fault: RefCell::new(None),
+            integrity_guard: Cell::new(false),
         }
     }
 
@@ -199,13 +208,19 @@ impl SimBackend {
     }
 
     /// Shared copy body of `upload` / `upload_peer`: only the channel the
-    /// bytes are charged to differs between the two entry points.
-    fn upload_impl(&self, t: &HostTensor, valid_elems: usize) -> (SimDev, usize) {
+    /// bytes are charged to differs between the two entry points. This is
+    /// also the `wire!` injection point (DESIGN.md §11): a planned wire
+    /// fault corrupts the first f32 payload transferred after the fault
+    /// cursor moved — silently when the integrity guard is off, caught by
+    /// the modeled payload checksum and re-sent clean
+    /// ([`Counters::integrity_retransmits`]) when it is on.
+    fn upload_impl(&self, t: &HostTensor, valid_elems: usize) -> Result<(SimDev, usize)> {
         let valid = valid_elems.min(t.len());
         let dev = match t {
             HostTensor::F32(d, s) => {
                 let mut buf = self.take_f32(d.len());
                 buf[..valid].copy_from_slice(&d[..valid]);
+                self.wire_preflight(&mut buf, valid)?;
                 HostTensor::f32(buf, s)
             }
             HostTensor::I32(d, s) => {
@@ -214,7 +229,49 @@ impl SimBackend {
                 HostTensor::i32(buf, s)
             }
         };
-        (SimDev(dev), valid)
+        Ok((SimDev(dev), valid))
+    }
+
+    /// `wire!` probe for one f32 upload payload. The first non-empty f32
+    /// payload after the cursor moved consumes the arming; each planned
+    /// corruption at the address then either flips one mantissa bit of one
+    /// element (guard off — the silent-corruption case the digest audits
+    /// exist to catch) or is detected and retransmitted clean (guard on),
+    /// bailing past [`MAX_DISPATCH_RETRIES`] like the dispatch-fault path.
+    fn wire_preflight(&self, buf: &mut [f32], valid: usize) -> Result<()> {
+        let mut guard = self.fault.borrow_mut();
+        let Some(f) = guard.as_mut() else { return Ok(()) };
+        if !f.wire_armed || valid == 0 {
+            return Ok(());
+        }
+        f.wire_armed = false;
+        let planned = f.plan.fires(FaultSite::Wire, f.epoch, f.seq);
+        if planned == 0 {
+            return Ok(());
+        }
+        let h = f.plan.target_hash(FaultSite::Wire, f.epoch, f.seq);
+        let (epoch, seq) = (f.epoch, f.seq);
+        drop(guard);
+        if !self.integrity_guard.get() {
+            // Silent corruption: one mantissa bit of one payload element.
+            let elem = (h % valid as u64) as usize;
+            let bit = ((h >> 40) % 23) as u32;
+            buf[elem] = f32::from_bits(buf[elem].to_bits() ^ (1 << bit));
+            return Ok(());
+        }
+        if planned > MAX_DISPATCH_RETRIES {
+            bail!(
+                "upload payload at (epoch {epoch}, seq {seq}) still corrupt after {} retransmits",
+                MAX_DISPATCH_RETRIES
+            );
+        }
+        // Guarded: every corrupt transfer is detected (violation) and
+        // re-sent (retransmit); the buffer the caller receives is clean, so
+        // downstream state is bitwise identical to a fault-free run.
+        let mut c = self.counters.borrow_mut();
+        c.integrity_violations += planned as u64;
+        c.integrity_retransmits += planned as u64;
+        Ok(())
     }
 
     /// Dispatch core: check args, interpret, verify outputs against the
@@ -331,7 +388,7 @@ impl ExecBackend for SimBackend {
     /// the arena, whose checkouts are zeroed, so the untransferred tail is
     /// deterministically zero — callers must still never address it.
     fn upload(&self, t: &HostTensor, valid_elems: usize) -> Result<SimDev> {
-        let (dev, valid) = self.upload_impl(t, valid_elems);
+        let (dev, valid) = self.upload_impl(t, valid_elems)?;
         self.counters.borrow_mut().add_h2d(valid as u64 * 4);
         Ok(dev)
     }
@@ -340,7 +397,7 @@ impl ExecBackend for SimBackend {
     /// same partial copy, counted in [`Counters::p2p_bytes`] instead of the
     /// PCIe channel.
     fn upload_peer(&self, t: &HostTensor, valid_elems: usize) -> Result<SimDev> {
-        let (dev, valid) = self.upload_impl(t, valid_elems);
+        let (dev, valid) = self.upload_impl(t, valid_elems)?;
         self.counters.borrow_mut().add_p2p(valid as u64 * 4);
         Ok(dev)
     }
@@ -354,7 +411,8 @@ impl ExecBackend for SimBackend {
     }
 
     fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
-        *self.fault.borrow_mut() = Some(FaultState { plan, epoch: 0, seq: 0, armed: false });
+        *self.fault.borrow_mut() =
+            Some(FaultState { plan, epoch: 0, seq: 0, armed: false, wire_armed: false });
     }
 
     fn fault_cursor(&self, epoch: u64, seq: u64) {
@@ -362,7 +420,12 @@ impl ExecBackend for SimBackend {
             f.epoch = epoch;
             f.seq = seq;
             f.armed = true;
+            f.wire_armed = true;
         }
+    }
+
+    fn set_integrity_guard(&self, on: bool) {
+        self.integrity_guard.set(on);
     }
 }
 

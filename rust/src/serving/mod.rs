@@ -141,9 +141,13 @@ pub struct ServeOutcome {
     /// an empty span.
     pub mean_queue_depth: f64,
     /// Churn accounting: quarantines, re-admissions, shadow batches,
-    /// re-dispatches, refreshes, failed refreshes. All-zero for a
-    /// quiescent run.
+    /// re-dispatches, refreshes, failed refreshes, and guarded integrity
+    /// violations/recomputes (DESIGN.md §11). All-zero for a quiescent
+    /// run.
     pub churn: ChurnStats,
+    /// Lanes flagged suspect by the integrity guard (2+ violations this
+    /// pass); the group pre-quarantines them on its next churn drive.
+    pub suspect_lanes: Vec<usize>,
 }
 
 impl ServeOutcome {
@@ -442,5 +446,6 @@ where
         max_backlog,
         mean_queue_depth,
         churn,
+        suspect_lanes: drive.suspect_lanes,
     })
 }

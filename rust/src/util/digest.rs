@@ -1,0 +1,57 @@
+//! FNV-1a digests over f32 bit patterns (DESIGN.md §11).
+//!
+//! The integrity plane compares *bytes*, not values: a digest folds every
+//! element's `f32::to_bits()` into a 64-bit FNV-1a state, so two buffers
+//! digest equal iff they are bitwise equal — `-0.0` vs `0.0` and NaN
+//! payloads all count. The same constants back the serve plane's
+//! `prediction_digest` (two report lines compare equal iff the runs are
+//! bitwise identical), and every consumer (`Params::digest`, the cache
+//! slab audit, the collected-slab source checksum) goes through these two
+//! helpers so "params digest" means one thing everywhere.
+
+/// FNV-1a offset basis (64-bit).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold a slice of f32 bit patterns into an existing digest state.
+#[inline]
+pub fn fnv1a_extend(mut h: u64, xs: &[f32]) -> u64 {
+    for &v in xs {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Digest one f32 slice from the offset basis.
+#[inline]
+pub fn fnv1a_f32(xs: &[f32]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_bit_sensitive_and_order_sensitive() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(fnv1a_f32(&a), fnv1a_f32(&[1.0, 2.0, 3.0]));
+        assert_ne!(fnv1a_f32(&a), fnv1a_f32(&[1.0, 3.0, 2.0]), "order must matter");
+        // One mantissa bit moves the digest (the flip!/wire! detection
+        // primitive: value-near, bitwise-far).
+        let mut b = a;
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1);
+        assert_ne!(fnv1a_f32(&a), fnv1a_f32(&b));
+        // Sign of zero is a bit pattern too.
+        assert_ne!(fnv1a_f32(&[0.0]), fnv1a_f32(&[-0.0]));
+    }
+
+    #[test]
+    fn extend_chains_like_one_pass() {
+        let xs = [4.0f32, -1.5, 0.25, 9.0];
+        let whole = fnv1a_f32(&xs);
+        let split = fnv1a_extend(fnv1a_extend(FNV_OFFSET, &xs[..2]), &xs[2..]);
+        assert_eq!(whole, split);
+    }
+}

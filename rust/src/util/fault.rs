@@ -29,6 +29,26 @@
 //!   cascades the failure across `N` successive lanes at that batch.
 //!   Consumed by the serve scheduler, never by the engine dispatch path.
 //!
+//! Data-corruption sites (DESIGN.md §11) — these inject *wrong bytes*, not
+//! scheduling failures, and exist to exercise the integrity plane
+//! (`--guard`, `--audit-every`):
+//! * [`FaultSite::Flip`] (spelled `flip!`) — flip one mantissa bit of one
+//!   f32 in the addressed batch's collected feature slab between produce
+//!   and consume. The value stays finite: only the source checksum
+//!   (`--guard`) can catch it. `xN` re-corrupts the first `N`
+//!   re-derivations too (recompute → rollback → bail ladder).
+//! * [`FaultSite::Nan`] (spelled `nan!`) — poison the addressed batch's
+//!   gradient with a NaN after the backward pass. Caught pre-apply by the
+//!   `--guard` non-finite scan, or post-apply by the `--audit-every`
+//!   parameter audit (the rollback exerciser).
+//! * [`FaultSite::Wire`] (spelled `wire!`) — flip one mantissa bit of the
+//!   first f32 H2D/p2p payload uploaded after the addressed cursor
+//!   (miss-row slabs, parameter broadcasts). With the backend integrity
+//!   guard on, the copy is digest-verified against its source and
+//!   retransmitted (`Counters::integrity_retransmits`); without it the
+//!   corrupt payload lands silently. `xN` corrupts `N` successive
+//!   transmissions (past [`MAX_DISPATCH_RETRIES`] = hard error).
+//!
 //! Spec grammar (comma-separated entries):
 //! * `site@EPOCH:SEQ` — one failure at that address.
 //! * `site@EPOCH:SEQxN` — `N` back-to-back failures at that address
@@ -55,6 +75,12 @@ pub enum FaultSite {
     Lane,
     /// Persistent lane failure (`lane!`): serve-path quarantine trigger.
     LaneHard,
+    /// Feature-slab bit flip (`flip!`): silent host-buffer corruption.
+    Flip,
+    /// Gradient NaN poisoning (`nan!`): numeric-divergence injection.
+    Nan,
+    /// H2D/p2p payload corruption (`wire!`): transfer-channel bit flip.
+    Wire,
 }
 
 impl FaultSite {
@@ -64,6 +90,9 @@ impl FaultSite {
             FaultSite::Producer => "producer",
             FaultSite::Lane => "lane",
             FaultSite::LaneHard => "lane!",
+            FaultSite::Flip => "flip!",
+            FaultSite::Nan => "nan!",
+            FaultSite::Wire => "wire!",
         }
     }
 
@@ -73,7 +102,28 @@ impl FaultSite {
             FaultSite::Producer => 0xB0D0,
             FaultSite::Lane => 0x1A9E,
             FaultSite::LaneHard => 0x1AFE,
+            FaultSite::Flip => 0xF11B,
+            FaultSite::Nan => 0x7FC0, // the quiet-NaN exponent bits
+
+            FaultSite::Wire => 0x3157,
         }
+    }
+
+    /// Every site, in grammar-table order (docs and round-trip tests).
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::Dispatch,
+        FaultSite::Producer,
+        FaultSite::Lane,
+        FaultSite::LaneHard,
+        FaultSite::Flip,
+        FaultSite::Nan,
+        FaultSite::Wire,
+    ];
+
+    /// `true` for the data-corruption sites (`flip!`/`nan!`/`wire!`) —
+    /// the sites the integrity plane (DESIGN.md §11) injects and recovers.
+    pub fn is_integrity(self) -> bool {
+        matches!(self, FaultSite::Flip | FaultSite::Nan | FaultSite::Wire)
     }
 
     fn parse(s: &str) -> Result<Self> {
@@ -82,8 +132,12 @@ impl FaultSite {
             "producer" => Ok(FaultSite::Producer),
             "lane" => Ok(FaultSite::Lane),
             "lane!" => Ok(FaultSite::LaneHard),
+            "flip!" => Ok(FaultSite::Flip),
+            "nan!" => Ok(FaultSite::Nan),
+            "wire!" => Ok(FaultSite::Wire),
             other => bail!(
-                "unknown fault site {other:?} (expected dispatch, producer, lane, or lane!)"
+                "unknown fault site {other:?} (expected dispatch, producer, lane, lane!, \
+                 flip!, nan!, or wire!)"
             ),
         }
     }
@@ -197,6 +251,24 @@ impl FaultPlan {
         })
     }
 
+    /// Whether the plan carries any data-corruption site (`flip!`/`nan!`/
+    /// `wire!`) — the integrity plane arms its consume-time injection and
+    /// standby producers only when this is true, so plans without
+    /// corruption sites keep the classic zero-cost paths.
+    pub fn has_integrity_site(&self) -> bool {
+        FaultSite::ALL.iter().any(|&s| s.is_integrity() && self.has_site(s))
+    }
+
+    /// Deterministic corruption-target selector for `site` at
+    /// `(epoch, seq)`: which element / which bit a `flip!`/`wire!` rule
+    /// perturbs is derived from this hash, so the corruption — like the
+    /// schedule — is a pure function of `(--fault-spec, --fault-seed)`.
+    /// Salted away from the firing hash so target choice never correlates
+    /// with `site~PERIOD` selection.
+    pub fn target_hash(&self, site: FaultSite, epoch: u64, seq: u64) -> u64 {
+        mix(self.seed ^ 0x7A26_E7B1_D00D_FEED, site.tag(), epoch, seq)
+    }
+
     /// Total explicit (`site@e:s`) failures planned for `site` — the
     /// expected counter value when only explicit rules are used.
     pub fn planned(&self, site: FaultSite) -> u64 {
@@ -296,5 +368,58 @@ mod tests {
         let p = FaultPlan::default();
         assert_eq!(p.fires(FaultSite::Dispatch, 0, 0), 0);
         assert!(!p.has_site(FaultSite::Lane));
+        assert!(!p.has_integrity_site());
+    }
+
+    /// Every documented site round-trips through both grammar forms: its
+    /// printed name parses back to the same site, addresses exactly, and
+    /// never bleeds into another site (the README grammar table's
+    /// contract).
+    #[test]
+    fn every_site_round_trips_through_both_grammar_forms() {
+        for &site in &FaultSite::ALL {
+            let name = site.name();
+            // Explicit form, with a count.
+            let spec = format!("{name}@2:7x3");
+            let p = FaultPlan::parse(&spec, 11).unwrap();
+            assert_eq!(p.fires(site, 2, 7), 3, "{name}: explicit address");
+            assert_eq!(p.fires(site, 2, 6), 0, "{name}: wrong seq");
+            assert_eq!(p.fires(site, 1, 7), 0, "{name}: wrong epoch");
+            assert_eq!(p.planned(site), 3, "{name}: planned count");
+            assert!(p.has_site(site), "{name}: has_site");
+            for &other in &FaultSite::ALL {
+                if other != site {
+                    assert_eq!(p.fires(other, 2, 7), 0, "{name} bled into {}", other.name());
+                    assert!(!p.has_site(other));
+                }
+            }
+            // Sprinkle form fires somewhere in a modest address window.
+            let q = FaultPlan::parse(&format!("{name}~4"), 5).unwrap();
+            let hits = (0..4u64)
+                .flat_map(|e| (0..64u64).map(move |s| (e, s)))
+                .filter(|&(e, s)| q.fires(site, e, s) > 0)
+                .count();
+            assert!(hits > 0, "{name}~4 never fired over 256 addresses");
+            assert!(q.has_site(site));
+        }
+    }
+
+    #[test]
+    fn integrity_sites_are_flagged_and_target_hash_is_pure() {
+        let p = FaultPlan::parse("flip!@0:2,nan!~8,wire!@1:0x2", 3).unwrap();
+        assert!(p.has_integrity_site());
+        assert!(FaultSite::Flip.is_integrity());
+        assert!(FaultSite::Nan.is_integrity());
+        assert!(FaultSite::Wire.is_integrity());
+        assert!(!FaultSite::Dispatch.is_integrity());
+        assert!(!FaultSite::LaneHard.is_integrity());
+        let q = FaultPlan::parse("dispatch~4,lane!@0:1", 3).unwrap();
+        assert!(!q.has_integrity_site(), "scheduling sites must not arm integrity");
+        // Target selection: pure in (plan, address), distinct across
+        // addresses and sites, and stable across calls.
+        let a = p.target_hash(FaultSite::Flip, 0, 2);
+        assert_eq!(a, p.target_hash(FaultSite::Flip, 0, 2));
+        assert_ne!(a, p.target_hash(FaultSite::Flip, 0, 3));
+        assert_ne!(a, p.target_hash(FaultSite::Wire, 0, 2));
     }
 }

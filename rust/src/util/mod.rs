@@ -2,12 +2,14 @@
 //! `serde`, or `criterion`, so the PRNG, stats, and timing helpers live
 //! here).
 
+pub mod digest;
 pub mod fault;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod tensor;
 
+pub use digest::{fnv1a_extend, fnv1a_f32};
 pub use fault::{FaultPlan, FaultSite, MAX_DISPATCH_RETRIES};
 pub use pool::WorkerPool;
 pub use rng::Rng;

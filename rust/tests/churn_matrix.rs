@@ -142,8 +142,7 @@ fn quarantine_keeps_predictions_bitwise_quiescent() {
                     lane_readmissions: 1,
                     shadow_batches: 2, // DEFAULT_PROBATION
                     lane_redispatches: 1,
-                    refreshes: 0,
-                    failed_refreshes: 0,
+                    ..ChurnStats::default()
                 },
                 "pipeline={pipeline} frac={frac}: counter accounting"
             );

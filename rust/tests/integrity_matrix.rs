@@ -1,0 +1,572 @@
+//! Data-integrity matrix (DESIGN.md §11): silent corruption is injected
+//! at schedule-addressed sites (`flip!` feature payloads, `nan!`
+//! gradients/logits, `wire!` transfers) and the guard/audit plane must
+//! detect and repair it *bitwise*. Across the grid
+//! {site × train/serve × replicas {1, 2} × pipeline on/off × cache-frac
+//! {0, 0.25}}:
+//!
+//! * a guarded-but-clean run is bitwise identical to an unguarded one,
+//!   with the same kernel count — detection adds zero dispatches;
+//! * every injected corruption under the guard is detected and counted
+//!   exactly: one violation per firing, recompute first, rollback+replay
+//!   on persistence, a typed error past the budget;
+//! * both recovery tiers converge bitwise to the fault-free trajectory
+//!   (re-derivation from `(epoch_perm, seq)` is why this is possible);
+//! * the same corruptions *without* the guard are silent — zero counters
+//!   — and (where the payload is live) visibly diverge: the divergence
+//!   witness that proves the guard is load-bearing;
+//! * serve lanes recompute guarded violations, and repeat offenders feed
+//!   the §10 quarantine plane as suspects on the next drive;
+//! * recovery preserves the zero-allocation steady state.
+
+use std::sync::Arc;
+
+use hifuse::coordinator::{
+    prepare_graph_layout, replica_thread_budget, ChurnStats, EpochMetrics, OptConfig,
+    ReplicaGroup, ReplicaMetrics, TrainCfg, Trainer, DEFAULT_ROUND,
+};
+use hifuse::graph::datasets::tiny_graph;
+use hifuse::graph::HeteroGraph;
+use hifuse::models::{ModelKind, Params};
+use hifuse::runtime::{ResidentStore, SimBackend};
+use hifuse::serving::{self, ServeOptions, Trace};
+use hifuse::util::{FaultPlan, FaultSite};
+
+/// 6 batches/epoch on tiny's 24 train seeds (audit cadence math below
+/// depends on this).
+fn cfg() -> TrainCfg {
+    TrainCfg { epochs: 1, batch_size: 4, fanout: 3, lr: 0.05, seed: 42, threads: 4, producers: 2 }
+}
+
+fn plan(spec: &str) -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse(spec, 0).unwrap())
+}
+
+fn assert_params_eq(a: &Params, b: &Params, ctx: &str) {
+    assert_eq!(a.w0, b.w0, "{ctx}: w0 diverged");
+    assert_eq!(a.w1, b.w1, "{ctx}: w1 diverged");
+    assert_eq!(a.a_src0, b.a_src0, "{ctx}: a_src0 diverged");
+    assert_eq!(a.a_dst0, b.a_dst0, "{ctx}: a_dst0 diverged");
+    assert_eq!(a.a_src1, b.a_src1, "{ctx}: a_src1 diverged");
+    assert_eq!(a.a_dst1, b.a_dst1, "{ctx}: a_dst1 diverged");
+}
+
+fn params_differ(a: &Params, b: &Params) -> bool {
+    a.w0 != b.w0
+        || a.w1 != b.w1
+        || a.a_src0 != b.a_src0
+        || a.a_dst0 != b.a_dst0
+        || a.a_src1 != b.a_src1
+        || a.a_dst1 != b.a_dst1
+}
+
+/// One single-backend run with the integrity plane configured; returns
+/// the trajectory, final params, and every epoch's metrics.
+fn run_trainer(
+    pipeline: bool,
+    frac: f64,
+    guard: bool,
+    audit_every: u64,
+    spec: Option<&str>,
+    epochs: u64,
+) -> (Vec<(f64, f64)>, Params, Vec<EpochMetrics>) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    if frac > 0.0 {
+        tr.attach_cache(Arc::new(ResidentStore::build(&g, frac, 160, 42))).unwrap();
+    }
+    if let Some(s) = spec {
+        tr.set_fault_plan(plan(s));
+    }
+    tr.set_guard(guard).unwrap();
+    tr.set_audit_every(audit_every).unwrap();
+    let ms: Vec<EpochMetrics> = (0..epochs).map(|e| tr.train_epoch(e).unwrap()).collect();
+    let traj = ms.iter().map(|m| (m.loss, m.acc)).collect();
+    (traj, tr.params.clone(), ms)
+}
+
+/// `true` iff epoch 0 of the configured run errors (budget-exhaustion
+/// cases: corruption must be a typed failure, never a wrong answer).
+fn trainer_epoch0_errs(pipeline: bool, guard: bool, audit_every: u64, spec: &str) -> bool {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    tr.set_fault_plan(plan(spec));
+    tr.set_guard(guard).unwrap();
+    tr.set_audit_every(audit_every).unwrap();
+    tr.train_epoch(0).is_err()
+}
+
+/// (violations, retransmits, recomputes, rollbacks, audits) summed over
+/// the run.
+fn isum(ms: &[EpochMetrics]) -> (u64, u64, u64, u64, u64) {
+    (
+        ms.iter().map(|m| m.integrity_violations).sum(),
+        ms.iter().map(|m| m.integrity_retransmits).sum(),
+        ms.iter().map(|m| m.integrity_recomputes).sum(),
+        ms.iter().map(|m| m.integrity_rollbacks).sum(),
+        ms.iter().map(|m| m.audits).sum(),
+    )
+}
+
+fn engines(n: usize) -> Vec<SimBackend> {
+    let t = replica_thread_budget(4, n);
+    (0..n).map(|_| SimBackend::builtin_threaded("tiny", t).unwrap()).collect()
+}
+
+/// Replica-group analog of [`run_trainer`].
+fn run_group(
+    replicas: usize,
+    pipeline: bool,
+    guard: bool,
+    audit_every: u64,
+    spec: Option<&str>,
+    epochs: u64,
+) -> (Vec<(f64, f64)>, Params, Vec<ReplicaMetrics>) {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+            .unwrap();
+    if let Some(s) = spec {
+        grp.set_fault_plan(plan(s));
+    }
+    grp.set_guard(guard).unwrap();
+    grp.set_audit_every(audit_every).unwrap();
+    let ms: Vec<ReplicaMetrics> = (0..epochs).map(|e| grp.train_epoch(e).unwrap()).collect();
+    let traj = ms.iter().map(|m| (m.group.loss, m.group.acc)).collect();
+    (traj, grp.params.clone(), ms)
+}
+
+fn group_epoch0_errs(replicas: usize, guard: bool, audit_every: u64, spec: &str) -> bool {
+    let opt = OptConfig::hifuse();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let mut grp =
+        ReplicaGroup::new(engines(replicas), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+            .unwrap();
+    grp.set_fault_plan(plan(spec));
+    grp.set_guard(guard).unwrap();
+    grp.set_audit_every(audit_every).unwrap();
+    grp.train_epoch(0).is_err()
+}
+
+/// The headline invisibility contract: arming the guard on a clean run
+/// changes *nothing* — bitwise trajectory and parameters, identical
+/// kernel counts (zero added dispatches), zero integrity counters on both
+/// sides — across pipeline, cache, and replica cells.
+#[test]
+fn guard_on_a_clean_run_is_bitwise_invisible_and_dispatch_neutral() {
+    for pipeline in [false, true] {
+        for frac in [0.0f64, 0.25] {
+            let ctx = format!("pipeline={pipeline} frac={frac}");
+            let (base_t, base_p, base_ms) = run_trainer(pipeline, frac, false, 0, None, 2);
+            assert_eq!(isum(&base_ms), (0, 0, 0, 0, 0), "{ctx}: default-off run counted");
+            let (t, p, ms) = run_trainer(pipeline, frac, true, 0, None, 2);
+            assert_eq!(t, base_t, "{ctx}: guarded trajectory diverged");
+            assert_params_eq(&p, &base_p, &ctx);
+            assert_eq!(isum(&ms), (0, 0, 0, 0, 0), "{ctx}: clean guarded run counted");
+            for (e, (gm, bm)) in ms.iter().zip(&base_ms).enumerate() {
+                assert_eq!(
+                    gm.kernels_total, bm.kernels_total,
+                    "{ctx} epoch {e}: the guard added dispatches"
+                );
+            }
+        }
+    }
+    for (replicas, pipeline) in [(1usize, false), (2, false), (2, true)] {
+        let ctx = format!("replicas={replicas} pipeline={pipeline}");
+        let (base_t, base_p, base_ms) = run_group(replicas, pipeline, false, 0, None, 2);
+        let (t, p, ms) = run_group(replicas, pipeline, true, 0, None, 2);
+        assert_eq!(t, base_t, "{ctx}: guarded group trajectory diverged");
+        assert_params_eq(&p, &base_p, &ctx);
+        for (e, (gm, bm)) in ms.iter().zip(&base_ms).enumerate() {
+            assert_eq!(gm.group.integrity_violations, 0, "{ctx} epoch {e}");
+            assert_eq!(gm.group.integrity_recomputes, 0, "{ctx} epoch {e}");
+            assert_eq!(
+                gm.group.kernels_total, bm.group.kernels_total,
+                "{ctx} epoch {e}: the guard added dispatches"
+            );
+        }
+    }
+}
+
+/// Audit-only runs (no guard, no faults) are pure metrology: bitwise
+/// parity with the classic loop, audits counted at exactly the cadence
+/// boundaries, nothing else moves. 6 batches at `--audit-every 2` =
+/// audits after batches 1, 3, 5 (the last doubling as the epoch-end
+/// audit); a 2-replica group at cadence 4 audits at round boundaries
+/// `done = 4` and `done = 6`.
+#[test]
+fn audit_only_runs_are_parity_and_counted_at_the_cadence() {
+    for pipeline in [false, true] {
+        for frac in [0.0f64, 0.25] {
+            let ctx = format!("pipeline={pipeline} frac={frac}");
+            let (base_t, base_p, _) = run_trainer(pipeline, frac, false, 0, None, 2);
+            let (t, p, ms) = run_trainer(pipeline, frac, false, 2, None, 2);
+            assert_eq!(t, base_t, "{ctx}: audited trajectory diverged");
+            assert_params_eq(&p, &base_p, &ctx);
+            assert_eq!(isum(&ms), (0, 0, 0, 0, 6), "{ctx}: 3 audits per epoch");
+            for (e, m) in ms.iter().enumerate() {
+                assert_eq!(m.audits, 3, "{ctx} epoch {e}: audit cadence");
+            }
+        }
+    }
+    let (base_t, base_p, _) = run_group(2, false, false, 0, None, 2);
+    let (t, p, ms) = run_group(2, false, false, 4, None, 2);
+    assert_eq!(t, base_t, "audited group trajectory diverged");
+    assert_params_eq(&p, &base_p, "group audit-only");
+    let audits: u64 = ms.iter().map(|m| m.group.audits).sum();
+    assert_eq!(audits, 4, "2 round-boundary audits per epoch");
+}
+
+/// The guarded `flip!` ladder, with exact accounting at every rung: one
+/// firing is caught by the feature digest and recomputed; a second firing
+/// of the same address survives the recompute, forcing rollback + replay;
+/// a third exhausts the budget into a typed error. Rungs one and two land
+/// bitwise on the fault-free run.
+#[test]
+fn guarded_flip_recomputes_then_rolls_back_then_bails() {
+    for pipeline in [false, true] {
+        let ctx = format!("pipeline={pipeline}");
+        let (base_t, base_p, _) = run_trainer(pipeline, 0.0, false, 0, None, 1);
+        let (t, p, ms) = run_trainer(pipeline, 0.0, true, 0, Some("flip!@0:2"), 1);
+        assert_eq!(t, base_t, "{ctx}: recomputed run diverged");
+        assert_params_eq(&p, &base_p, &format!("{ctx} flip x1"));
+        assert_eq!(isum(&ms), (1, 0, 1, 0, 0), "{ctx}: one flip = one recompute");
+        let (t, p, ms) = run_trainer(pipeline, 0.0, true, 0, Some("flip!@0:2x2"), 1);
+        assert_eq!(t, base_t, "{ctx}: rolled-back run diverged");
+        assert_params_eq(&p, &base_p, &format!("{ctx} flip x2"));
+        assert_eq!(isum(&ms), (2, 0, 1, 1, 0), "{ctx}: persistent flip escalates");
+    }
+    assert!(
+        trainer_epoch0_errs(false, true, 0, "flip!@0:2x3"),
+        "a flip outliving recompute and rollback must be a typed error"
+    );
+}
+
+/// The same corruption without the guard is *silent*: zero integrity
+/// counters, and the run walks off the fault-free trajectory — the
+/// divergence witness that makes the guard's parity meaningful.
+#[test]
+fn unguarded_flip_diverges_silently() {
+    let (_, base_p, _) = run_trainer(false, 0.0, false, 0, None, 1);
+    let (_, p, ms) = run_trainer(false, 0.0, false, 0, Some("flip!~1"), 1);
+    assert_eq!(isum(&ms), (0, 0, 0, 0, 0), "unguarded corruption must count nothing");
+    assert!(params_differ(&p, &base_p), "an unguarded flip sprinkle must diverge");
+}
+
+/// `flip!` against the resident feature cache: corrupted *miss* payloads
+/// are caught by the same digest and recomputed, bitwise — one violation
+/// and one recompute per firing batch that actually had misses.
+#[test]
+fn guarded_flip_recovers_through_the_cache_path() {
+    let (base_t, base_p, _) = run_trainer(false, 0.25, false, 0, None, 1);
+    let (t, p, ms) = run_trainer(false, 0.25, true, 0, Some("flip!~1"), 1);
+    assert_eq!(t, base_t, "cached guarded flips diverged");
+    assert_params_eq(&p, &base_p, "cache-frac 0.25 flip sprinkle");
+    let (v, rt, r, rb, _) = isum(&ms);
+    assert!(v >= 1, "the sprinkle must land on at least one miss payload");
+    assert_eq!((v, rt, rb), (r, 0, 0), "every cached violation is one recompute");
+}
+
+/// `nan!` in the gradients: the guard's pre-apply finite scan catches it
+/// and recomputes; without the guard the poison reaches the parameters
+/// and only the periodic digest audit can see it — rollback to the last
+/// good snapshot and replay forward, still bitwise. Past the replay
+/// budget it's a typed error.
+#[test]
+fn nan_is_caught_pre_apply_or_rolled_back_by_the_audit() {
+    for pipeline in [false, true] {
+        let ctx = format!("pipeline={pipeline}");
+        let (base_t, base_p, _) = run_trainer(pipeline, 0.0, false, 0, None, 1);
+        let (t, p, ms) = run_trainer(pipeline, 0.0, true, 0, Some("nan!@0:3"), 1);
+        assert_eq!(t, base_t, "{ctx}: guarded nan run diverged");
+        assert_params_eq(&p, &base_p, &format!("{ctx} guarded nan"));
+        assert_eq!(isum(&ms), (1, 0, 1, 0, 0), "{ctx}: pre-apply catch is a recompute");
+    }
+    // Unguarded: the audit at batch 3's cadence boundary finds non-finite
+    // params, rolls back to the batch-1 snapshot, and replays; the
+    // re-fired injection costs a second rollback before converging.
+    let (base_t, base_p, _) = run_trainer(false, 0.0, false, 0, None, 1);
+    let (t, p, ms) = run_trainer(false, 0.0, false, 2, Some("nan!@0:3x2"), 1);
+    assert_eq!(t, base_t, "audit-recovered nan run diverged");
+    assert_params_eq(&p, &base_p, "unguarded nan + audit");
+    assert_eq!(isum(&ms), (2, 0, 0, 2, 3), "audit rollback accounting");
+    assert!(
+        trainer_epoch0_errs(false, false, 2, "nan!@0:3x3"),
+        "nan outliving both replays must be a typed error"
+    );
+}
+
+/// `wire!` on the H2D path. Guarded, the backend verifies the payload at
+/// delivery and retransmits clean — violations == retransmits == the
+/// plan's multiplicity, zero recomputes, bitwise parity — and a burst
+/// past the retry budget bails. Unguarded with the cache attached the
+/// corrupt miss payload silently diverges; unguarded *without* the cache
+/// it lands in the accounting-only staging copy (the batch computes from
+/// host features), which the §11 docs call out as the one dead site.
+#[test]
+fn wire_corruption_is_retransmitted_or_silently_diverges() {
+    for frac in [0.0f64, 0.25] {
+        let ctx = format!("frac={frac}");
+        let (base_t, base_p, _) = run_trainer(false, frac, false, 0, None, 1);
+        let (t, p, ms) = run_trainer(false, frac, true, 0, Some("wire!@0:2x2"), 1);
+        assert_eq!(t, base_t, "{ctx}: retransmitted run diverged");
+        assert_params_eq(&p, &base_p, &format!("{ctx} guarded wire"));
+        let (v, rt, r, rb, _) = isum(&ms);
+        assert_eq!((v, rt, r, rb), (2, 2, 0, 0), "{ctx}: retransmit accounting");
+    }
+    assert!(
+        trainer_epoch0_errs(false, true, 0, "wire!@0:2x4"),
+        "a wire burst past the retransmit budget must be a typed error"
+    );
+    // Divergence witness: live (cached) payload, no guard.
+    let (_, base_p, _) = run_trainer(false, 0.25, false, 0, None, 1);
+    let (_, p, ms) = run_trainer(false, 0.25, false, 0, Some("wire!~1"), 1);
+    assert_eq!(isum(&ms), (0, 0, 0, 0, 0), "unguarded wire must count nothing");
+    assert!(params_differ(&p, &base_p), "unguarded cached wire corruption must diverge");
+    // Dead site: cache off, the corrupted upload is staging-only.
+    let (base_t, base_p, _) = run_trainer(false, 0.0, false, 0, None, 1);
+    let (t, p, ms) = run_trainer(false, 0.0, false, 0, Some("wire!@0:2"), 1);
+    assert_eq!(isum(&ms), (0, 0, 0, 0, 0));
+    assert_eq!(t, base_t, "cache-off wire must be trajectory-neutral");
+    assert_params_eq(&p, &base_p, "cache-off wire hits the discarded staging copy");
+}
+
+/// Integrity recovery preserves the zero-allocation steady state: with a
+/// guarded flip recomputed in the warm-up epoch *and* in a post-warm-up
+/// epoch, the recovery epoch still never misses the arena.
+#[test]
+fn integrity_recovery_keeps_the_zero_alloc_steady_state() {
+    let (base_t, base_p, _) = run_trainer(false, 0.0, false, 0, None, 4);
+    let (t, p, ms) = run_trainer(false, 0.0, true, 0, Some("flip!@0:2,flip!@3:3"), 4);
+    assert_eq!(t, base_t, "steady-state integrity run diverged");
+    assert_params_eq(&p, &base_p, "steady-state integrity run");
+    assert_eq!(ms[0].integrity_recomputes, 1, "warm-up epoch recompute");
+    assert_eq!(ms[3].integrity_recomputes, 1, "steady-state epoch recompute");
+    assert_eq!(
+        ms[3].arena.misses, ms[2].arena.misses,
+        "recovery epoch allocated ({:?} -> {:?})",
+        ms[2].arena, ms[3].arena
+    );
+    assert!(ms[3].arena.hits > ms[2].arena.hits, "arena unused");
+}
+
+/// Replica lanes guard their own batches: a lane-side flip is recomputed
+/// on the lane before its gradients enter the round merge, the counters
+/// roll up per-lane → group, and a flip surviving the lane's recompute is
+/// a typed error (lanes have no rollback tier — the group audit does).
+#[test]
+fn replica_lane_guard_recovers_and_rolls_up() {
+    for replicas in [1usize, 2] {
+        let ctx = format!("replicas={replicas}");
+        let (base_t, base_p, _) = run_group(replicas, false, false, 0, None, 1);
+        let (t, p, ms) = run_group(replicas, false, true, 0, Some("flip!@0:1"), 1);
+        assert_eq!(t, base_t, "{ctx}: lane-recovered trajectory diverged");
+        assert_params_eq(&p, &base_p, &ctx);
+        let m = &ms[0];
+        assert_eq!(m.group.integrity_violations, 1, "{ctx}: violation accounting");
+        assert_eq!(m.group.integrity_recomputes, 1, "{ctx}: recompute accounting");
+        assert_eq!(m.group.integrity_rollbacks, 0, "{ctx}: no rollback tier on lanes");
+        let per: u64 = m.per_replica.iter().map(|r| r.integrity_recomputes).sum();
+        assert_eq!(m.group.integrity_recomputes, per, "{ctx}: per-lane rollup");
+    }
+    assert!(
+        group_epoch0_errs(2, true, 0, "flip!@0:1x2"),
+        "a flip surviving the lane recompute must be a typed error"
+    );
+}
+
+/// The group-level audit tier: an unguarded `nan!` poisons the merged
+/// parameters; the round-boundary digest audit detects it, rolls the
+/// group back to the last good round snapshot, and replays the rounds in
+/// merge order — bitwise. Outliving both replays is a typed error.
+#[test]
+fn replica_group_audit_rolls_back_poisoned_rounds() {
+    let (base_t, base_p, _) = run_group(2, false, false, 0, None, 1);
+    let (t, p, ms) = run_group(2, false, false, 4, Some("nan!@0:1x2"), 1);
+    assert_eq!(t, base_t, "group-rollback trajectory diverged");
+    assert_params_eq(&p, &base_p, "group audit rollback");
+    let m = &ms[0];
+    assert_eq!(m.group.integrity_violations, 2, "violation accounting");
+    assert_eq!(m.group.integrity_rollbacks, 2, "rollback accounting");
+    assert_eq!(m.group.integrity_recomputes, 0, "no lane guard in this run");
+    assert_eq!(m.group.audits, 2, "round-boundary audit cadence");
+    assert!(
+        group_epoch0_errs(2, false, 4, "nan!@0:1x3"),
+        "nan outliving both group replays must be a typed error"
+    );
+}
+
+// ---------------------------------------------------------------- serve --
+
+const WINDOW: u64 = 2_000;
+
+/// Open-loop trace of 24 requests — a dozen-odd coalesced batches, enough
+/// to outlast a probation cycle.
+fn test_trace() -> Trace {
+    serving::trace::generate(&tiny_graph(1), 42, 1000.0, 24, 3)
+}
+
+fn serve_group<'g>(
+    g: &'g HeteroGraph,
+    replicas: usize,
+    pipeline: bool,
+    guard: bool,
+    spec: Option<&str>,
+) -> ReplicaGroup<'g, SimBackend> {
+    let opt = OptConfig { pipeline, ..OptConfig::hifuse() };
+    let mut grp =
+        ReplicaGroup::new(engines(replicas), g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND)
+            .unwrap();
+    if let Some(s) = spec {
+        grp.set_fault_plan(plan(s));
+    }
+    grp.set_guard(guard).unwrap();
+    grp
+}
+
+/// Serve-side guard: non-finite logits are caught and the batch is
+/// recomputed on its lane, bitwise; a lane that does it twice in one
+/// drive is branded *suspect*, and the next drive on the same group
+/// starts it pre-quarantined (probation shadowing, then re-admission) —
+/// the §11 → §10 closed loop. The injections re-fire on the re-routed
+/// batches, branding the surviving lane in turn.
+#[test]
+fn serve_guard_recomputes_and_suspects_feed_the_quarantine_loop() {
+    let trace = test_trace();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &OptConfig::hifuse());
+    let mut refg = serve_group(&g, 2, false, false, None);
+    let reference = serving::serve_churn(
+        &mut refg,
+        &trace,
+        cfg().batch_size,
+        WINDOW,
+        &ServeOptions::quiescent(),
+    )
+    .unwrap();
+    assert!(reference.churn.is_quiet());
+    assert!(reference.suspect_lanes.is_empty());
+    assert!(reference.batches.len() >= 5, "trace must outlast a probation cycle");
+
+    // Drive 1: both injections land on lane 0 (batches 0 and 2 of the
+    // all-healthy bi % 2 rotation) — two guarded violations brand it.
+    let mut grp = serve_group(&g, 2, false, true, Some("nan!@0:0,nan!@0:2"));
+    let opts = ServeOptions::quiescent();
+    let d1 = serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &opts).unwrap();
+    assert_eq!(d1.predictions, reference.predictions, "guarded serve diverged");
+    assert_eq!(
+        d1.churn,
+        ChurnStats { integrity_violations: 2, integrity_recomputes: 2, ..ChurnStats::default() },
+        "drive 1 accounting"
+    );
+    assert_eq!(d1.suspect_lanes, vec![0], "twice-violating lane 0 must be suspect");
+
+    // Drive 2, same group: lane 0 starts quarantined (counted, not
+    // re-dispatched), shadows its probation, and re-enters at batch 4.
+    // The injected batches re-route to lane 1 — which now takes both
+    // violations and becomes the next suspect.
+    let d2 = serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &opts).unwrap();
+    assert_eq!(d2.predictions, reference.predictions, "pre-quarantined serve diverged");
+    assert_eq!(
+        d2.churn,
+        ChurnStats {
+            lane_quarantines: 1,
+            lane_readmissions: 1,
+            shadow_batches: 2, // DEFAULT_PROBATION
+            integrity_violations: 2,
+            integrity_recomputes: 2,
+            ..ChurnStats::default()
+        },
+        "drive 2 accounting"
+    );
+    assert_eq!(d2.suspect_lanes, vec![1], "re-routed injections brand lane 1");
+
+    // Drive 3: the loop keeps closing — lane 1 pre-quarantined now.
+    let d3 = serving::serve_churn(&mut grp, &trace, cfg().batch_size, WINDOW, &opts).unwrap();
+    assert_eq!(d3.predictions, reference.predictions, "drive 3 diverged");
+    assert_eq!(d3.churn.lane_quarantines, 1);
+}
+
+/// The serve-side guard composes with pipelined lanes: a single guarded
+/// `nan!` recomputes on its lane with exact accounting and no suspects.
+#[test]
+fn serve_guard_parity_holds_with_pipeline_lanes() {
+    let trace = test_trace();
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &OptConfig { pipeline: true, ..OptConfig::hifuse() });
+    let mut refg = serve_group(&g, 2, true, false, None);
+    let reference = serving::serve_churn(
+        &mut refg,
+        &trace,
+        cfg().batch_size,
+        WINDOW,
+        &ServeOptions::quiescent(),
+    )
+    .unwrap();
+    let mut grp = serve_group(&g, 2, true, true, Some("nan!@0:1"));
+    let out = serving::serve_churn(
+        &mut grp,
+        &trace,
+        cfg().batch_size,
+        WINDOW,
+        &ServeOptions::quiescent(),
+    )
+    .unwrap();
+    assert_eq!(out.predictions, reference.predictions, "pipelined guarded serve diverged");
+    assert_eq!(
+        out.churn,
+        ChurnStats { integrity_violations: 1, integrity_recomputes: 1, ..ChurnStats::default() }
+    );
+    assert!(out.suspect_lanes.is_empty(), "one violation must not brand a lane");
+}
+
+// ----------------------------------------------------------- guard rails --
+
+/// The integrity plane refuses the fused device-resident step up front
+/// (its single SGD module cannot split the check from the apply); turning
+/// the plane *off* is always accepted.
+#[test]
+fn integrity_setters_reject_the_fused_resident_step() {
+    let opt = OptConfig { stacked_proj: true, dev_resident: true, ..OptConfig::hifuse() };
+    let mut g = tiny_graph(1);
+    prepare_graph_layout(&mut g, &opt);
+    let eng = SimBackend::builtin_threaded("tiny", 4).unwrap();
+    let mut tr = Trainer::new(&eng, &g, ModelKind::Rgcn, opt, cfg()).unwrap();
+    assert!(tr.set_guard(true).is_err());
+    assert!(tr.set_audit_every(2).is_err());
+    assert!(tr.set_guard(false).is_ok());
+    assert!(tr.set_audit_every(0).is_ok());
+    let mut grp =
+        ReplicaGroup::new(engines(2), &g, ModelKind::Rgcn, opt, cfg(), DEFAULT_ROUND).unwrap();
+    assert!(grp.set_guard(true).is_err());
+    assert!(grp.set_audit_every(4).is_err());
+    assert!(grp.set_guard(false).is_ok());
+}
+
+/// Every fault site — crash and corruption alike — is documented where
+/// operators look for it: the README grammar table and flag docs. The
+/// spec-grammar round-trip itself is pinned in `util/fault.rs` unit
+/// tests; this guards the human-facing half.
+#[test]
+fn readme_documents_every_site_and_integrity_flag() {
+    let readme = include_str!("../../README.md");
+    for site in FaultSite::ALL {
+        assert!(
+            readme.contains(site.name()),
+            "README fault grammar table is missing `{}`",
+            site.name()
+        );
+    }
+    for needle in ["--guard", "--audit-every", "verify-ckpt", "--fault-spec"] {
+        assert!(readme.contains(needle), "README is missing `{needle}`");
+    }
+}
